@@ -1,0 +1,54 @@
+//! Bottleneck case study (paper §V-C): timing *and* numerics.
+//!
+//! * Simulated: Fig. 9 (perf / energy-eff / area-eff of the five mappings)
+//!   and Fig. 10 (Amdahl breakdown).
+//! * Functional: the fused L2 Bottleneck artifact (Pallas crossbar jobs +
+//!   dw-engine tiles + residual, lowered as ONE HLO module) runs on real
+//!   data and is checked bit-exactly against the JAX golden output.
+//!
+//! Run with:  make artifacts && cargo run --release --example bottleneck_study
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::report::{fig10_breakdown, fig9_bottleneck};
+use imcc::runtime::golden;
+use imcc::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let cfg = SystemConfig::paper();
+    let pm = PowerModel::paper();
+
+    // ---- simulated: Figs. 9 & 10 ----------------------------------------
+    fig9_bottleneck::generate(&cfg, &pm).print();
+    println!();
+    fig10_breakdown::generate(&cfg, &pm).print();
+
+    // ---- functional: the fused L2 artifact vs golden ---------------------
+    let rt = Runtime::load(&dir)?;
+    let x = golden::load_i8(&format!("{dir}/golden/bottleneck_x.bin"))?;
+    let w1 = golden::load_i8(&format!("{dir}/golden/bottleneck_w1.bin"))?;
+    let wd = golden::load_i8(&format!("{dir}/golden/bottleneck_wd.bin"))?;
+    let w2 = golden::load_i8(&format!("{dir}/golden/bottleneck_w2.bin"))?;
+    let shifts_raw = golden::load_i32(&format!("{dir}/golden/bottleneck_shifts.bin"))?;
+    let want = golden::load_i8(&format!("{dir}/golden/bottleneck_y.bin"))?;
+
+    let t0 = std::time::Instant::now();
+    let got = rt.bottleneck(&x, &w1, &wd, &w2, &[shifts_raw[0], shifts_raw[1], shifts_raw[2]])?;
+    let dt = t0.elapsed();
+
+    match golden::first_mismatch(&got, &want) {
+        None => println!(
+            "\n[functional] fused Bottleneck artifact: {} outputs bit-exact vs JAX \
+             golden (checksum {}), {:.1} ms on the CPU PJRT client",
+            got.len(),
+            golden::checksum_i8(&got),
+            dt.as_secs_f64() * 1e3
+        ),
+        Some(i) => anyhow::bail!(
+            "fused Bottleneck diverges at element {i}: {} vs {}",
+            got[i],
+            want[i]
+        ),
+    }
+    Ok(())
+}

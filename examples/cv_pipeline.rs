@@ -1,0 +1,65 @@
+//! Heterogeneous CV pipeline (paper §VII / Fig. 13 discussion).
+//!
+//! The paper argues its SW+IMA+DIG.ACC model extends beyond a single DNN to
+//! "modern computer vision pipelines" that mix AI with classic linear
+//! algebra — PCA, FFT, filtering, inverse kinematics — which fixed-function
+//! IMC architectures cannot host at all. This example quantifies that
+//! claim: a drone-style perception pipeline
+//!
+//!     FIR pre-filter → MobileNetV2 (IMA + DW accel) → PCA on the
+//!     1280-d features → 6-DOF inverse kinematics
+//!
+//! where every non-DNN stage runs on the programmable cores.
+//!
+//! Run with:  cargo run --release --example cv_pipeline
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::coordinator::{run_network, Strategy};
+use imcc::cores::DspKernels;
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::util::units;
+
+fn main() {
+    let cfg = SystemConfig::scaled_up(33);
+    let pm = PowerModel::paper();
+    let dsp = DspKernels::new(&cfg);
+    let net = mobilenet_v2(224);
+
+    let fir = dsp.fir(224 * 224, 16);
+    let dnn = run_network(&net, Strategy::ImaDw, &cfg, &pm);
+    let pca = dsp.pca_project(1280, 64);
+    let ik = dsp.inverse_kinematics(6, 20);
+
+    let stages: [(&str, u64, f64); 4] = [
+        ("FIR 16-tap pre-filter (cores)", fir.cycles, fir.energy.total_j(&pm, &cfg)),
+        ("MobileNetV2 (IMA + DW accel)", dnn.cycles, dnn.energy_j),
+        ("PCA 1280→64 (cores)", pca.cycles, pca.energy.total_j(&pm, &cfg)),
+        ("IK 6-DOF ×20 iters (cores)", ik.cycles, ik.energy.total_j(&pm, &cfg)),
+    ];
+    let total_cy: u64 = stages.iter().map(|s| s.1).sum();
+    let total_j: f64 = stages.iter().map(|s| s.2).sum();
+
+    println!("heterogeneous CV pipeline on the 33-crossbar cluster @500 MHz:\n");
+    for (name, cy, j) in &stages {
+        println!(
+            "  {:<32} {:>10} cy  {:>10}  {:>10}  ({:.1}%)",
+            name,
+            cy,
+            units::fmt_time(*cy as f64 * cfg.freq.cycle_ns() * 1e-9),
+            units::fmt_energy(*j),
+            100.0 * *cy as f64 / total_cy as f64
+        );
+    }
+    println!(
+        "\n  pipeline total: {} / {} per frame → {:.0} fps",
+        units::fmt_time(total_cy as f64 * cfg.freq.cycle_ns() * 1e-9),
+        units::fmt_energy(total_j),
+        1.0 / (total_cy as f64 * cfg.freq.cycle_ns() * 1e-9)
+    );
+    println!(
+        "\nreading: the classic-DSP glue costs {:.1}% of the frame — programmable\n\
+         cores make the pipeline possible (IMA+DIG.ACC-only systems cannot run\n\
+         it at all, Fig. 13) at negligible performance cost.",
+        100.0 * (total_cy - dnn.cycles) as f64 / total_cy as f64
+    );
+}

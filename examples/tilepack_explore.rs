@@ -1,0 +1,74 @@
+//! TILE&PACK exploration (paper Alg. 1 / Fig. 12b) + packing ablations.
+//!
+//! Regenerates the MobileNetV2 mapping, then quantifies what the paper's
+//! choices cost: rotation on/off, bin size, and width-multiplier scaling
+//! (how many crossbars would a 0.5× or 1.4× MobileNetV2 need?).
+//!
+//! Run with:  cargo run --release --example tilepack_explore
+
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::tilepack::{pack, tile_network, Packing};
+use imcc::util::table::{f, Table};
+
+fn main() {
+    let net = mobilenet_v2(224);
+    let tiles = tile_network(&net, 256);
+
+    // ---- the paper's mapping --------------------------------------------
+    let p = pack(&tiles, 256, false);
+    let mut utils = p.utilizations();
+    utils.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    println!(
+        "MobileNetV2: {} tiles, {} devices -> {} crossbars (paper: 34), \
+         lower bound {}",
+        tiles.len(),
+        p.total_devices(),
+        p.n_bins(),
+        Packing::area_lower_bound(&tiles, 256),
+    );
+    for (i, u) in utils.iter().enumerate() {
+        println!("  bin {i:>2}: {:>5.1}%", u * 100.0);
+    }
+
+    // ---- ablation: rotation ----------------------------------------------
+    let rot = pack(&tiles, 256, true);
+    println!(
+        "\nrotation ablation: {} bins without, {} with 90° tile rotation",
+        p.n_bins(),
+        rot.n_bins()
+    );
+
+    // ---- ablation: crossbar size ------------------------------------------
+    let mut t = Table::new(
+        "crossbar-size ablation (same network)",
+        &["array", "tiles", "bins", "total devices", "waste %"],
+    );
+    for s in [128usize, 256, 512] {
+        let tl = tile_network(&net, s);
+        let pk = pack(&tl, s, false);
+        let capacity = pk.n_bins() * s * s;
+        let waste = 100.0 * (1.0 - pk.total_devices() as f64 / capacity as f64);
+        t.row([
+            format!("{s}x{s}"),
+            tl.len().to_string(),
+            pk.n_bins().to_string(),
+            pk.total_devices().to_string(),
+            f(waste, 1),
+        ]);
+    }
+    t.print();
+
+    // ---- ablation: width multiplier ----------------------------------------
+    println!("\nwidth-multiplier scaling (input 224, array 256x256):");
+    for res in [96usize, 160, 224] {
+        let n = mobilenet_v2(res);
+        let tl = tile_network(&n, 256);
+        let pk = pack(&tl, 256, false);
+        println!(
+            "  {res:>3}px input: {:>3} crossbars ({} conv weights)",
+            pk.n_bins(),
+            tl.iter().map(|x| x.devices()).sum::<usize>()
+        );
+    }
+    println!("(weights are resolution-independent; the bin count is too — the\n sweep demonstrates the packer is shape-stable, not a paper figure)");
+}

@@ -1,0 +1,250 @@
+"""AOT compile path: lower every kernel/model to HLO *text* artifacts.
+
+Python runs ONCE (``make artifacts``); the Rust coordinator is self-contained
+afterwards. Interchange format is HLO text, NOT ``.serialize()`` — jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  * ``*.hlo.txt``            — one per PJRT executable (see ARTIFACTS below);
+  * ``weights.bin``          — concatenated per-layer int8/int4 weights;
+  * ``manifest.json``        — full MobileNetV2 layer list + shifts + golden
+                               checksums + weight offsets (single source of
+                               truth replayed by Rust);
+  * ``manifest_tiny.json`` / ``weights_tiny.bin`` — scaled-down net for fast
+                               integration tests;
+  * ``golden/*.bin``         — golden inputs/outputs (bottleneck I/O, logits).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, netspec, qnn
+from .kernels import ancillary, dw_conv, imc_mvm
+
+SEED = 20220717  # arXiv date of the paper's final version; fully arbitrary
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+I8, I32 = jnp.int8, jnp.int32
+P = imc_mvm.PIXELS_PER_CALL
+XB = imc_mvm.XBAR_ROWS
+T = dw_conv.TILE
+CB = dw_conv.CH_BLOCK
+
+
+def artifact_specs():
+    """name -> (fn, example_arg_specs). Shapes are the runtime ABI."""
+    return {
+        "imc_mvm": (
+            lambda x, w, s, r: (imc_mvm.imc_mvm(x, w, s, r),),
+            [
+                _spec((P, XB), I8),
+                _spec((XB, XB), I8),
+                _spec((1,), I32),
+                _spec((1,), I32),
+            ],
+        ),
+        "imc_mvm_raw": (
+            lambda x, w: (imc_mvm.imc_mvm_raw(x, w),),
+            [_spec((P, XB), I8), _spec((XB, XB), I8)],
+        ),
+        # 128-pixel batched variants: same jobs, amortized per-call overhead
+        # for large layers (EXPERIMENTS.md §Perf, L3 iteration 2)
+        "imc_mvm_b128": (
+            lambda x, w, s, r: (imc_mvm.imc_mvm(x, w, s, r, pixels=8 * P),),
+            [
+                _spec((8 * P, XB), I8),
+                _spec((XB, XB), I8),
+                _spec((1,), I32),
+                _spec((1,), I32),
+            ],
+        ),
+        "imc_mvm_raw_b128": (
+            lambda x, w: (imc_mvm.imc_mvm_raw(x, w, pixels=8 * P),),
+            [_spec((8 * P, XB), I8), _spec((XB, XB), I8)],
+        ),
+        "requant": (
+            lambda a, s, r: (ancillary.requant(a, s, r),),
+            [_spec((P, XB), I32), _spec((1,), I32), _spec((1,), I32)],
+        ),
+        "requant_b128": (
+            lambda a, s, r: (ancillary.requant(a, s, r),),
+            [_spec((8 * P, XB), I32), _spec((1,), I32), _spec((1,), I32)],
+        ),
+        "residual": (
+            lambda a, b: (ancillary.residual_add(a, b),),
+            [
+                _spec((ancillary.RESIDUAL_CHUNK,), I8),
+                _spec((ancillary.RESIDUAL_CHUNK,), I8),
+            ],
+        ),
+        "dw3x3_s1": (
+            lambda x, w, s, r: (dw_conv.dw3x3_tile(x, w, s, r, stride=1),),
+            [
+                _spec((T + 2, T + 2, CB), I8),
+                _spec((3, 3, CB), I8),
+                _spec((1,), I32),
+                _spec((1,), I32),
+            ],
+        ),
+        "dw3x3_s2": (
+            lambda x, w, s, r: (dw_conv.dw3x3_tile(x, w, s, r, stride=2),),
+            [
+                _spec((2 * T + 1, 2 * T + 1, CB), I8),
+                _spec((3, 3, CB), I8),
+                _spec((1,), I32),
+                _spec((1,), I32),
+            ],
+        ),
+        "bottleneck": (
+            lambda x, w1, wd, w2, s: (model.bottleneck_fused(x, w1, wd, w2, s),),
+            [
+                _spec((16, 16, netspec.BOTTLENECK_C), I8),
+                _spec((netspec.BOTTLENECK_C, netspec.BOTTLENECK_HID), I8),
+                _spec((3, 3, netspec.BOTTLENECK_HID), I8),
+                _spec((netspec.BOTTLENECK_HID, netspec.BOTTLENECK_C), I8),
+                _spec((3,), I32),
+            ],
+        ),
+    }
+
+
+def emit_artifacts(outdir: str) -> None:
+    specs = artifact_specs()
+    for name, (fn, args) in specs.items():
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {name}.hlo.txt  ({len(text) / 1024:.0f} kB, {time.time() - t0:.1f}s)")
+
+
+def build_golden(outdir: str, layers, tag: str, weights_name: str, manifest_name: str):
+    """Synthesize weights, run golden inference, write manifest + binaries."""
+    weights = model.synth_weights(layers, SEED)
+    x = model.synth_input(layers[0], SEED)
+
+    logits, shifts, checksums = model.run_network(layers, weights, x)
+
+    # serialize weights and fill layer records
+    blobs = []
+    offset = 0
+    for idx, l in enumerate(layers):
+        l.shift = shifts[idx]
+        l.out_checksum = checksums[idx]
+        if idx in weights:
+            raw = weights[idx].tobytes()
+            l.weight_offset = offset
+            l.weight_len = len(raw)
+            offset += len(raw)
+            blobs.append(raw)
+    with open(os.path.join(outdir, weights_name), "wb") as f:
+        f.write(b"".join(blobs))
+
+    gold = os.path.join(outdir, "golden")
+    os.makedirs(gold, exist_ok=True)
+    x.tofile(os.path.join(gold, f"{tag}_input.bin"))
+    logits.astype(np.int32).tofile(os.path.join(gold, f"{tag}_logits.bin"))
+
+    manifest = {
+        "version": 1,
+        "seed": SEED,
+        "network": tag,
+        "input": {
+            "shape": [layers[0].hin, layers[0].win, layers[0].cin],
+            "file": f"golden/{tag}_input.bin",
+        },
+        "logits": {
+            "file": f"golden/{tag}_logits.bin",
+            "len": int(logits.size),
+            "argmax": int(np.argmax(logits)),
+            "checksum": qnn.checksum_i64(logits),
+        },
+        "weights_file": weights_name,
+        "total_macs": netspec.total_macs(layers),
+        "layers": netspec.to_manifest_dict(layers),
+    }
+    with open(os.path.join(outdir, manifest_name), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"  {manifest_name}: {len(layers)} layers, "
+        f"{netspec.total_macs(layers) / 1e6:.1f} MMAC, argmax={np.argmax(logits)}"
+    )
+
+
+def build_bottleneck_golden(outdir: str):
+    """Golden I/O for the fused bottleneck artifact (bit-exact vs ref)."""
+    rng = np.random.default_rng(SEED + 7)
+    cc, hid = netspec.BOTTLENECK_C, netspec.BOTTLENECK_HID
+    x = rng.integers(-128, 128, size=(16, 16, cc)).astype(np.int8)
+    w1 = rng.integers(-8, 8, size=(cc, hid)).astype(np.int8)
+    wd = rng.integers(-8, 8, size=(3, 3, hid)).astype(np.int8)
+    w2 = rng.integers(-8, 8, size=(hid, cc)).astype(np.int8)
+    # representative shifts (expand/dw/proj) — chosen like _auto_shift would
+    shifts = np.array([9, 9, 10], dtype=np.int32)
+    y = np.asarray(model.bottleneck_ref(x, w1, wd, w2, shifts))
+
+    gold = os.path.join(outdir, "golden")
+    os.makedirs(gold, exist_ok=True)
+    x.tofile(os.path.join(gold, "bottleneck_x.bin"))
+    w1.tofile(os.path.join(gold, "bottleneck_w1.bin"))
+    wd.tofile(os.path.join(gold, "bottleneck_wd.bin"))
+    w2.tofile(os.path.join(gold, "bottleneck_w2.bin"))
+    shifts.tofile(os.path.join(gold, "bottleneck_shifts.bin"))
+    y.tofile(os.path.join(gold, "bottleneck_y.bin"))
+    print(f"  bottleneck golden: checksum={qnn.checksum_i64(y)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument(
+        "--skip-mnv2",
+        action="store_true",
+        help="skip the full-size MobileNetV2 golden (slowest step)",
+    )
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    print("[aot] lowering kernels to HLO text")
+    emit_artifacts(outdir)
+    print("[aot] golden: fused bottleneck")
+    build_bottleneck_golden(outdir)
+    print("[aot] golden: tiny network")
+    build_golden(
+        outdir, netspec.tiny_mobilenet(), "tiny", "weights_tiny.bin", "manifest_tiny.json"
+    )
+    if not args.skip_mnv2:
+        print("[aot] golden: MobileNetV2 224x224 (full)")
+        build_golden(
+            outdir, netspec.mobilenet_v2(), "mnv2", "weights.bin", "manifest.json"
+        )
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

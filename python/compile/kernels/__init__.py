@@ -1,0 +1,1 @@
+# L1: Pallas kernels (imc_mvm, dw_conv, ancillary) + pure-jnp oracles (ref).

@@ -1,0 +1,54 @@
+"""L1 Pallas kernels: the cluster cores' ancillary operations.
+
+The paper offloads MVMs to the IMA and depth-wise layers to the digital
+accelerator; the 8 RISC-V cores keep the "glue" compute: requantization of
+digitally-accumulated partials (row-split layers) and residual connections.
+These are small, bandwidth-bound kernels; they exist as artifacts so the Rust
+request path never computes tensor math outside PJRT executables.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import qnn
+
+RESIDUAL_CHUNK = 4096
+REQUANT_ROWS = 16
+REQUANT_COLS = 256
+
+
+def _requant_kernel(acc_ref, shift_ref, relu_ref, y_ref):
+    y_ref[...] = qnn.requantize(acc_ref[...], shift_ref[0], relu_ref[0])
+
+
+@jax.jit
+def requant(acc, shift, relu):
+    """Digital requantization of summed int32 partials.
+
+    acc [P, 256] i32 (P = 16 or 128 for the batched variant),
+    shift/relu [1] i32 -> y [P, 256] i8.
+    """
+    return pl.pallas_call(
+        _requant_kernel,
+        out_shape=jax.ShapeDtypeStruct(acc.shape, jnp.int8),
+        interpret=True,
+    )(acc, shift, relu)
+
+
+def _residual_kernel(a_ref, b_ref, y_ref):
+    y_ref[...] = qnn.saturating_add_i8(a_ref[...], b_ref[...])
+
+
+@jax.jit
+def residual_add(a, b):
+    """int8 saturating residual add over a fixed 4096-element chunk."""
+    return pl.pallas_call(
+        _residual_kernel,
+        out_shape=jax.ShapeDtypeStruct((RESIDUAL_CHUNK,), jnp.int8),
+        interpret=True,
+    )(a, b)

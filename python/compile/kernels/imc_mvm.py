@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: the PCM crossbar matrix-vector-multiply job.
+
+One *job* on the paper's IMA computes, for a batch of output pixels, the dot
+product of an (up to) 256-element int8 input slice against a 256x256 crossbar
+of int4 conductances, with the bit-line ADCs performing the requantization to
+int8 (HERMES core, Khaddam-Aljameh et al. 2021). Here the job is a Pallas
+block:
+
+  * ``x``   [P, 256]  int8 — P = `PIXELS_PER_CALL` output pixels' im2col rows
+                        (the HWPE streamer's "virtual IM2COL");
+  * ``w``   [256, 256] int8 in [-8, 7] — the programmed crossbar;
+  * ``acc`` analog bit-line integration, modeled as an exact int32 dot
+            (a Gaussian conductance-noise study perturbs ``w`` host-side);
+  * ``y``   [P, 256] int8 — ADC output: round-shift, optional ReLU, clip.
+
+Hardware adaptation (DESIGN.md §2): the 256-wide crossbar job is shaped for
+the MXU — a single [16,256]x[256,256] int8 dot with a fused epilogue; the
+BlockSpec HBM->VMEM staging plays the role of the TCDM->DAC-buffer streamer.
+VMEM footprint per job ~= 90 kB. ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom calls.
+
+Two variants:
+  * ``imc_mvm``      — ADC inside (single-row-tile layers);
+  * ``imc_mvm_raw``  — int32 partials out (row-split layers accumulate
+                        digitally on the cluster cores, see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import qnn
+
+XBAR_ROWS = 256
+XBAR_COLS = 256
+PIXELS_PER_CALL = 16
+
+
+def _bitline_dot(x_i8, w_i8):
+    """The analog bit-line integration: one 256-deep dot per (pixel, column).
+
+    Carried in f32 — bit-exact, because every partial sum is bounded by
+    256 · 127 · 8 = 260,096 < 2²⁴ (f32 integers are exact below 2²⁴), and it
+    maps on the fast XLA GEMM path instead of the slow integer dot
+    (EXPERIMENTS.md §Perf, L1 iteration 1). On a real TPU the same dot maps
+    on the MXU at int8/bf16 rate.
+    """
+    acc = jax.lax.dot_general(
+        x_i8.astype(jnp.float32),
+        w_i8.astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return acc.astype(jnp.int32)
+
+
+def _mvm_kernel(x_ref, w_ref, shift_ref, relu_ref, y_ref):
+    """Crossbar job with the ADC epilogue fused in."""
+    acc = _bitline_dot(x_ref[...], w_ref[...])
+    y_ref[...] = qnn.requantize(acc, shift_ref[0], relu_ref[0])
+
+
+def _mvm_raw_kernel(x_ref, w_ref, acc_ref):
+    """Crossbar job in raw-partial mode (int32 out, no ADC quantization)."""
+    acc_ref[...] = _bitline_dot(x_ref[...], w_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("pixels",))
+def imc_mvm(x, w, shift, relu, *, pixels=PIXELS_PER_CALL):
+    """ADC-quantizing crossbar job. Shapes: x [P,256] i8, w [256,256] i8,
+    shift/relu [1] i32 -> y [P,256] i8."""
+    return pl.pallas_call(
+        _mvm_kernel,
+        out_shape=jax.ShapeDtypeStruct((pixels, XBAR_COLS), jnp.int8),
+        interpret=True,
+    )(x, w, shift, relu)
+
+
+@functools.partial(jax.jit, static_argnames=("pixels",))
+def imc_mvm_raw(x, w, *, pixels=PIXELS_PER_CALL):
+    """Raw-partial crossbar job. x [P,256] i8, w [256,256] i8 -> acc [P,256] i32."""
+    return pl.pallas_call(
+        _mvm_raw_kernel,
+        out_shape=jax.ShapeDtypeStruct((pixels, XBAR_COLS), jnp.int32),
+        interpret=True,
+    )(x, w)
+
+
+def mvm_tiled(x2d, w2d, shift, relu, *, col_tile=XBAR_COLS):
+    """A whole linear layer as a grid of crossbar jobs (used by the fused
+    Bottleneck artifact, L2). ``x2d`` [P, R<=256] i8, ``w2d`` [R, C] i8.
+
+    Rows are padded to 256 (zero devices contribute no current); columns are
+    split over ``ceil(C / 256)`` crossbar column tiles via the Pallas grid —
+    exactly the job stream the Rust coordinator issues.
+    """
+    p, r = x2d.shape
+    rw, c = w2d.shape
+    assert r == rw and r <= XBAR_ROWS, (r, rw)
+    x_pad = jnp.pad(x2d, ((0, 0), (0, XBAR_ROWS - r)))
+    n_col_tiles = -(-c // col_tile)
+    w_pad = jnp.pad(w2d, ((0, XBAR_ROWS - r), (0, n_col_tiles * col_tile - c)))
+
+    grid = (n_col_tiles,)
+    y = pl.pallas_call(
+        _mvm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, XBAR_ROWS), lambda j: (0, 0)),
+            pl.BlockSpec((XBAR_ROWS, col_tile), lambda j: (0, j)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((p, col_tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((p, n_col_tiles * col_tile), jnp.int8),
+        interpret=True,
+    )(x_pad, w_pad, shift, relu)
+    return y[:, :c]

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+No Pallas here: these are straight-line jnp implementations of the numeric
+contract (qnn.py). pytest/hypothesis sweeps assert the Pallas kernels match
+these bit-exactly under interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import qnn
+
+
+def imc_mvm_ref(x, w, shift, relu):
+    """x [P,R] i8, w [R,C] i8 -> i8 [P,C]; ADC requant fused."""
+    acc = x.astype(jnp.int32) @ w.astype(jnp.int32)
+    return qnn.requantize(acc, shift, relu)
+
+
+def imc_mvm_raw_ref(x, w):
+    """x [P,R] i8, w [R,C] i8 -> i32 [P,C] raw partials."""
+    return x.astype(jnp.int32) @ w.astype(jnp.int32)
+
+
+def requant_ref(acc, shift, relu):
+    return qnn.requantize(acc, shift, relu)
+
+
+def residual_ref(a, b):
+    return qnn.saturating_add_i8(a, b)
+
+
+def dw3x3_ref(x, w, shift, relu, *, stride=1):
+    """Depth-wise 3x3 over an HWC tensor.
+
+    x [Hin, Win, C] i8 (already padded), w [3, 3, C] i8.
+    Output [ (Hin-3)//stride + 1, (Win-3)//stride + 1, C ] i8.
+    """
+    hin, win, c = x.shape
+    hout = (hin - 3) // stride + 1
+    wout = (win - 3) // stride + 1
+    xi = x.astype(jnp.int32)
+    wi = w.astype(jnp.int32)
+    acc = jnp.zeros((hout, wout, c), jnp.int32)
+    for ki in range(3):
+        for kj in range(3):
+            sl = xi[
+                ki : ki + (hout - 1) * stride + 1 : stride,
+                kj : kj + (wout - 1) * stride + 1 : stride,
+                :,
+            ]
+            acc = acc + sl * wi[ki, kj][None, None, :]
+    return qnn.requantize(acc, shift, relu)
+
+
+def conv2d_ref(x, w, shift, relu, *, k, stride, pad):
+    """Standard conv via explicit im2col (the streamer's "virtual IM2COL").
+
+    x [H, W, Cin] i8; w [k*k*Cin, Cout] i8 in crossbar layout, i.e. row index
+    r = (ki*k + kj)*Cin + ci (must match `rust/src/runtime/functional.rs`).
+    """
+    cols = im2col(x, k=k, stride=stride, pad=pad)  # [Npx, k*k*Cin]
+    acc = cols.astype(jnp.int32) @ w.astype(jnp.int32)
+    h, wdt, cin = x.shape
+    hout = (h + 2 * pad - k) // stride + 1
+    wout = (wdt + 2 * pad - k) // stride + 1
+    y = qnn.requantize(acc, shift, relu)
+    return y.reshape(hout, wout, -1)
+
+
+def im2col(x, *, k, stride, pad):
+    """HWC im2col with the crossbar row ordering r = (ki*k + kj)*Cin + ci."""
+    h, w, cin = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    hout = (h + 2 * pad - k) // stride + 1
+    wout = (w + 2 * pad - k) // stride + 1
+    patches = []
+    for ki in range(k):
+        for kj in range(k):
+            sl = xp[
+                ki : ki + (hout - 1) * stride + 1 : stride,
+                kj : kj + (wout - 1) * stride + 1 : stride,
+                :,
+            ]
+            patches.append(sl.reshape(hout * wout, cin))
+    return jnp.concatenate(patches, axis=1)
+
+
+def avgpool_ref(x):
+    """Global average pool, integer semantics shared with Rust:
+    q = floor((sum + area//2) / area), clipped to int8."""
+    h, w, c = x.shape
+    area = h * w
+    s = x.astype(jnp.int32).sum(axis=(0, 1)) + area // 2
+    q = jnp.floor_divide(s, area)
+    return jnp.clip(q, qnn.INT8_MIN, qnn.INT8_MAX).astype(jnp.int8)

@@ -1,0 +1,215 @@
+"""L2: the paper's compute graph in JAX, calling the L1 Pallas kernels.
+
+Two roles:
+
+1. `bottleneck_fused` — the case-study Bottleneck block (paper §V-C) as a
+   single JAX function composed of Pallas crossbar jobs + depth-wise engine
+   tiles + the residual kernel. `aot.py` lowers it to one HLO artifact; it is
+   the L2 showcase exercised by `examples/bottleneck_study.rs`.
+
+2. `run_network` — the *golden* integer inference of any `netspec` network
+   (pure jnp via ref oracles, vectorized, fast). It fixes per-layer shifts and
+   produces the golden activations/logits the Rust functional runtime must
+   reproduce bit-exactly.
+
+Numeric semantics are identical between the two paths and with Rust by
+construction (everything funnels through `qnn.py` / the contract in
+DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import netspec, qnn
+from .kernels import ancillary, dw_conv, imc_mvm, ref
+
+XBAR = imc_mvm.XBAR_ROWS
+
+
+# --------------------------------------------------------------------------
+# Synthetic quantized weights (seeded — the paper's evaluation is perf/energy,
+# not accuracy; see DESIGN.md §3).
+# --------------------------------------------------------------------------
+
+
+def synth_weights(layers: List[netspec.Layer], seed: int) -> Dict[int, np.ndarray]:
+    """Deterministic int4 weights per layer, in the serialized layout."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for idx, l in enumerate(layers):
+        if l.n_weights == 0:
+            continue
+        w = rng.integers(qnn.INT4_MIN, qnn.INT4_MAX + 1, size=l.weight_shape)
+        out[idx] = w.astype(np.int8)
+    return out
+
+
+def synth_input(layer0: netspec.Layer, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed + 0x5EED)
+    return rng.integers(-128, 128, size=(layer0.hin, layer0.win, layer0.cin)).astype(
+        np.int8
+    )
+
+
+# --------------------------------------------------------------------------
+# Golden inference (pure jnp, also selects per-layer shifts).
+# --------------------------------------------------------------------------
+
+
+def _auto_shift(acc: jnp.ndarray) -> int:
+    """Smallest shift that keeps |round_shift(acc, s)| within int8.
+
+    Guarantees the golden path never clips (except rounding at the boundary),
+    so ADC-in-artifact vs raw+digital-requant are interchangeable.
+    """
+    maxabs = int(jnp.max(jnp.abs(acc)))
+    s = 0
+    while ((maxabs + ((1 << s) >> 1)) >> s) > qnn.INT8_MAX:
+        s += 1
+    return s
+
+
+def run_network(
+    layers: List[netspec.Layer],
+    weights: Dict[int, np.ndarray],
+    x: np.ndarray,
+    shifts: Optional[List[int]] = None,
+) -> Tuple[np.ndarray, List[int], List[int]]:
+    """Integer inference. Returns (logits_i32, per-layer shifts, checksums).
+
+    When ``shifts`` is None they are chosen per layer (_auto_shift) and
+    returned for the manifest; pass them back in to re-run deterministically.
+    """
+    acts: List[jnp.ndarray] = []  # per-layer int8 outputs (for residuals)
+    cur = jnp.asarray(x, jnp.int8)
+    out_shifts: List[int] = []
+    checksums: List[int] = []
+    logits = None
+
+    for idx, l in enumerate(layers):
+        if l.kind == "conv":
+            w = jnp.asarray(weights[idx])
+            cols = ref.im2col(cur, k=l.k, stride=l.stride, pad=l.pad)
+            acc = cols.astype(jnp.int32) @ w.astype(jnp.int32)
+            s = shifts[idx] if shifts is not None else _auto_shift(acc)
+            y = qnn.requantize(acc, s, int(l.relu)).reshape(l.hout, l.wout, l.cout)
+        elif l.kind == "dw":
+            w = jnp.asarray(weights[idx])
+            xp = jnp.pad(cur, ((l.pad, l.pad), (l.pad, l.pad), (0, 0)))
+            xi = xp.astype(jnp.int32)
+            wi = w.astype(jnp.int32)
+            acc = jnp.zeros((l.hout, l.wout, l.cout), jnp.int32)
+            for ki in range(3):
+                for kj in range(3):
+                    sl = xi[
+                        ki : ki + (l.hout - 1) * l.stride + 1 : l.stride,
+                        kj : kj + (l.wout - 1) * l.stride + 1 : l.stride,
+                        :,
+                    ]
+                    acc = acc + sl * wi[ki, kj][None, None, :]
+            s = shifts[idx] if shifts is not None else _auto_shift(acc)
+            y = qnn.requantize(acc, s, int(l.relu))
+        elif l.kind == "add":
+            src = acts[l.residual_from]
+            s = 0
+            y = qnn.saturating_add_i8(cur, src)
+        elif l.kind == "pool":
+            s = 0
+            y = ref.avgpool_ref(cur)[None, None, :]
+        elif l.kind == "fc":
+            w = jnp.asarray(weights[idx])
+            acc = cur.reshape(1, -1).astype(jnp.int32) @ w.astype(jnp.int32)
+            s = 0  # logits stay int32
+            logits = acc.reshape(-1)
+            y = logits  # terminal
+        else:
+            raise ValueError(l.kind)
+
+        out_shifts.append(s)
+        checksums.append(qnn.checksum_i64(y))
+        if l.kind != "fc":
+            acts.append(y)
+            cur = y
+
+    assert logits is not None, "network must end with an fc layer"
+    return np.asarray(logits), out_shifts, checksums
+
+
+# --------------------------------------------------------------------------
+# Fused case-study Bottleneck built from the Pallas kernels (the artifact).
+# --------------------------------------------------------------------------
+
+
+def bottleneck_fused(x, w_exp, w_dw, w_proj, shifts):
+    """The paper's Bottleneck as crossbar jobs + DW engine tiles + residual.
+
+    x       [16, 16, 128] i8
+    w_exp   [128, 768]    i8   (pw expand,  IMA: 1 row tile x 3 col tiles)
+    w_dw    [3, 3, 768]   i8   (depth-wise, digital accelerator: 48 blocks)
+    w_proj  [768, 128]    i8   (pw project, IMA: 3 row tiles, digital accum)
+    shifts  [3]           i32
+    returns [16, 16, 128] i8 (with the residual connection applied)
+    """
+    hw = netspec.BOTTLENECK_HW
+    cc = netspec.BOTTLENECK_C
+    hid = netspec.BOTTLENECK_HID
+    px = hw * hw
+
+    one = jnp.ones((1,), jnp.int32)
+    zero = jnp.zeros((1,), jnp.int32)
+
+    # pw expand on the IMA: rows = 128 <= 256 -> ADC-fused jobs.
+    x2d = x.reshape(px, cc)
+    h1 = imc_mvm.mvm_tiled(x2d, w_exp, shifts[0:1], one)
+    h1 = h1.reshape(hw, hw, hid)
+
+    # depth-wise on the digital accelerator (HWC in/out, no marshaling).
+    h1p = jnp.pad(h1, ((1, 1), (1, 1), (0, 0)))
+    h2 = dw_conv.dw3x3_layer(h1p, w_dw, shifts[1:2], one, stride=1)
+
+    # pw project: rows = 768 -> 3 row tiles of raw partials + digital requant.
+    h2d = h2.reshape(px, hid)
+    n_row_tiles = hid // XBAR
+    acc = jnp.zeros((px, cc), jnp.int32)
+    for rt in range(n_row_tiles):
+        xt = h2d[:, rt * XBAR : (rt + 1) * XBAR]
+        wt = w_proj[rt * XBAR : (rt + 1) * XBAR, :]
+        wt = jnp.pad(wt, ((0, 0), (0, XBAR - cc)))
+        # issue the raw jobs in 16-pixel chunks like the coordinator does
+        for pc in range(px // imc_mvm.PIXELS_PER_CALL):
+            lo = pc * imc_mvm.PIXELS_PER_CALL
+            hi = lo + imc_mvm.PIXELS_PER_CALL
+            part = imc_mvm.imc_mvm_raw(xt[lo:hi], wt)
+            acc = acc.at[lo:hi].add(part[:, :cc])
+    y = qnn.requantize(acc, shifts[2], zero[0])
+
+    # residual on the cores.
+    flat_y = y.reshape(-1)
+    flat_x = x.reshape(-1)
+    out = jnp.zeros_like(flat_y)
+    chunk = ancillary.RESIDUAL_CHUNK
+    for c0 in range(0, flat_y.size, chunk):
+        out = out.at[c0 : c0 + chunk].set(
+            ancillary.residual_add(flat_y[c0 : c0 + chunk], flat_x[c0 : c0 + chunk])
+        )
+    return out.reshape(hw, hw, cc)
+
+
+def bottleneck_ref(x, w_exp, w_dw, w_proj, shifts):
+    """Oracle for `bottleneck_fused` (pure jnp)."""
+    hw, cc, hid = netspec.BOTTLENECK_HW, netspec.BOTTLENECK_C, netspec.BOTTLENECK_HID
+    x = jnp.asarray(x)
+    x2d = x.reshape(hw * hw, cc)
+    h1 = ref.imc_mvm_ref(x2d, jnp.asarray(w_exp), int(shifts[0]), 1)
+    h1 = h1.reshape(hw, hw, hid)
+    h1p = jnp.pad(h1, ((1, 1), (1, 1), (0, 0)))
+    h2 = ref.dw3x3_ref(h1p, jnp.asarray(w_dw), int(shifts[1]), 1, stride=1)
+    acc = h2.reshape(hw * hw, hid).astype(jnp.int32) @ jnp.asarray(w_proj).astype(
+        jnp.int32
+    )
+    y = qnn.requantize(acc, int(shifts[2]), 0).reshape(hw, hw, cc)
+    return qnn.saturating_add_i8(y, x)

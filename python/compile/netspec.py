@@ -1,0 +1,238 @@
+"""Network specification — the single source of truth for layer shapes.
+
+`aot.py` serializes this spec into `artifacts/manifest.json`; the Rust
+coordinator replays inference from the manifest, so Python and Rust can never
+disagree on shapes/strides/shifts. `rust/src/net/mobilenetv2.rs` builds the
+same network independently for the *timing* model and an integration test
+cross-checks the two.
+
+Layer kinds:
+  * ``conv``  — standard KxK convolution, mapped on the IMA via virtual
+                im2col (rows = K*K*Cin, cols = Cout);
+  * ``dw``    — 3x3 depth-wise, mapped on the dedicated digital accelerator;
+  * ``add``   — int8 saturating residual add with the output of a previous
+                layer (``residual_from``);
+  * ``pool``  — global average pool (cores);
+  * ``fc``    — fully connected (IMA, rows = Cin, cols = Cout).
+
+Point-wise convolutions are ``conv`` with k=1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class Layer:
+    name: str
+    kind: str  # conv | dw | add | pool | fc
+    hin: int
+    win: int
+    cin: int
+    cout: int
+    k: int = 1
+    stride: int = 1
+    pad: int = 0
+    relu: bool = False
+    residual_from: Optional[int] = None  # layer index whose output is added
+    # Filled during golden generation:
+    shift: int = 0
+    weight_offset: int = 0
+    weight_len: int = 0
+    out_checksum: int = 0
+
+    @property
+    def hout(self) -> int:
+        if self.kind in ("add",):
+            return self.hin
+        if self.kind in ("pool", "fc"):
+            return 1
+        return (self.hin + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def wout(self) -> int:
+        if self.kind in ("add",):
+            return self.win
+        if self.kind in ("pool", "fc"):
+            return 1
+        return (self.win + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def weight_shape(self):
+        """Weight tensor shape in the serialized layout."""
+        if self.kind in ("conv", "fc"):
+            return (self.k * self.k * self.cin, self.cout)  # crossbar layout
+        if self.kind == "dw":
+            return (3, 3, self.cin)
+        return ()
+
+    @property
+    def n_weights(self) -> int:
+        s = self.weight_shape
+        n = 1
+        for d in s:
+            n *= d
+        return n if s else 0
+
+    @property
+    def macs(self) -> int:
+        if self.kind in ("conv", "fc"):
+            return self.hout * self.wout * self.k * self.k * self.cin * self.cout
+        if self.kind == "dw":
+            return self.hout * self.wout * 9 * self.cout
+        return 0
+
+
+# MobileNetV2 inverted-residual settings (t = expansion, c = out channels,
+# n = repeats, s = first-block stride), Sandler et al. 2018, width 1.0.
+MNV2_BLOCKS = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+]
+
+
+def mobilenet_v2(resolution: int = 224, width: float = 1.0) -> List[Layer]:
+    """Full MobileNetV2 as a flat layer list with explicit residual edges."""
+
+    def c(ch: int) -> int:
+        scaled = int(round(ch * width / 8.0) * 8)
+        return max(8, scaled) if width != 1.0 else ch
+
+    layers: List[Layer] = []
+    h = w = resolution
+    cin = 3
+
+    def out_idx() -> int:
+        return len(layers) - 1
+
+    # conv1: 3x3 s2
+    layers.append(
+        Layer("conv1", "conv", h, w, cin, c(32), k=3, stride=2, pad=1, relu=True)
+    )
+    h, w, cin = layers[-1].hout, layers[-1].wout, c(32)
+
+    for bi, (t, ch, n, s) in enumerate(MNV2_BLOCKS):
+        cout = c(ch)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            prefix = f"bneck{bi + 1}_{i}"
+            block_in_idx = out_idx()
+            hid = cin * t
+            if t != 1:
+                layers.append(
+                    Layer(f"{prefix}_exp", "conv", h, w, cin, hid, k=1, relu=True)
+                )
+            layers.append(
+                Layer(
+                    f"{prefix}_dw",
+                    "dw",
+                    h,
+                    w,
+                    hid,
+                    hid,
+                    k=3,
+                    stride=stride,
+                    pad=1,
+                    relu=True,
+                )
+            )
+            h, w = layers[-1].hout, layers[-1].wout
+            layers.append(Layer(f"{prefix}_proj", "conv", h, w, hid, cout, k=1))
+            if stride == 1 and cin == cout:
+                layers.append(
+                    Layer(
+                        f"{prefix}_add",
+                        "add",
+                        h,
+                        w,
+                        cout,
+                        cout,
+                        residual_from=block_in_idx,
+                    )
+                )
+            cin = cout
+
+    layers.append(Layer("conv_last", "conv", h, w, cin, c(1280), k=1, relu=True))
+    cin = c(1280)
+    layers.append(Layer("pool", "pool", h, w, cin, cin))
+    layers.append(Layer("fc", "fc", 1, 1, cin, 1000))
+    return layers
+
+
+# Case-study Bottleneck (paper Fig. 8 reconstruction, DESIGN.md §5):
+# Cin = Cout = 128, expansion 6 (hidden 768), 16x16, stride 1, residual.
+BOTTLENECK_C = 128
+BOTTLENECK_HID = 768
+BOTTLENECK_HW = 16
+
+
+def bottleneck_case_study() -> List[Layer]:
+    hw, cc, hid = BOTTLENECK_HW, BOTTLENECK_C, BOTTLENECK_HID
+    return [
+        Layer("bneck_exp", "conv", hw, hw, cc, hid, k=1, relu=True),
+        Layer("bneck_dw", "dw", hw, hw, hid, hid, k=3, stride=1, pad=1, relu=True),
+        Layer("bneck_proj", "conv", hw, hw, hid, cc, k=1),
+        Layer("bneck_add", "add", hw, hw, cc, cc, residual_from=-1),
+    ]
+
+
+def tiny_mobilenet(resolution: int = 32) -> List[Layer]:
+    """A scaled-down MobileNetV2-style net for fast integration tests."""
+    layers = [
+        Layer("conv1", "conv", resolution, resolution, 3, 16, k=3, stride=2, pad=1, relu=True)
+    ]
+    h = layers[-1].hout
+    layers.append(Layer("b1_exp", "conv", h, h, 16, 96, k=1, relu=True))
+    layers.append(Layer("b1_dw", "dw", h, h, 96, 96, k=3, stride=1, pad=1, relu=True))
+    layers.append(Layer("b1_proj", "conv", h, h, 96, 16, k=1))
+    layers.append(Layer("b1_add", "add", h, h, 16, 16, residual_from=0))
+    layers.append(Layer("b2_exp", "conv", h, h, 16, 96, k=1, relu=True))
+    layers.append(
+        Layer("b2_dw", "dw", h, h, 96, 96, k=3, stride=2, pad=1, relu=True)
+    )
+    h2 = layers[-1].hout
+    layers.append(Layer("b2_proj", "conv", h2, h2, 96, 24, k=1))
+    layers.append(Layer("conv_last", "conv", h2, h2, 24, 64, k=1, relu=True))
+    layers.append(Layer("pool", "pool", h2, h2, 64, 64))
+    layers.append(Layer("fc", "fc", 1, 1, 64, 10))
+    return layers
+
+
+def total_macs(layers: List[Layer]) -> int:
+    return sum(l.macs for l in layers)
+
+
+def to_manifest_dict(layers: List[Layer]) -> list:
+    out = []
+    for idx, l in enumerate(layers):
+        out.append(
+            {
+                "id": idx,
+                "name": l.name,
+                "kind": l.kind,
+                "hin": l.hin,
+                "win": l.win,
+                "cin": l.cin,
+                "cout": l.cout,
+                "k": l.k,
+                "stride": l.stride,
+                "pad": l.pad,
+                "relu": int(l.relu),
+                "residual_from": -1 if l.residual_from is None else l.residual_from,
+                "shift": l.shift,
+                "weight_offset": l.weight_offset,
+                "weight_len": l.weight_len,
+                "out_checksum": l.out_checksum,
+                "hout": l.hout,
+                "wout": l.wout,
+                "macs": l.macs,
+            }
+        )
+    return out

@@ -1,0 +1,78 @@
+"""Shared quantized-arithmetic primitives (the repo-wide numeric contract).
+
+These functions define the bit-exact semantics shared by:
+  * the Pallas kernels (L1, `kernels/`),
+  * the JAX model (L2, `model.py`),
+  * the Rust coordinator's functional runtime (L3, `rust/src/runtime/`).
+
+Contract (see DESIGN.md §4):
+  * activations int8, weights int4 (stored int8 in [-8, 7]), accumulators int32;
+  * ADC/requant: ``y = clip(round_shift(acc, s), -128, 127)`` with
+    ``round_shift(a, s) = (a + (1 << (s-1))) >> s`` for ``s > 0`` (arithmetic
+    shift, round-half-up), identity at ``s = 0``;
+  * optional ReLU before the clip;
+  * residual connections are int8 saturating adds.
+
+Anything that changes here must change in `rust/src/runtime/functional.rs`
+and in the kernels, or the golden-vector integration tests will fail.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MIN = -128
+INT8_MAX = 127
+INT4_MIN = -8
+INT4_MAX = 7
+
+
+def round_shift(acc, shift):
+    """Round-half-up arithmetic right shift of an int32 accumulator.
+
+    ``shift`` may be a Python int or a traced int32 scalar. ``shift == 0`` is
+    the identity (no rounding term).
+    """
+    acc = acc.astype(jnp.int32)
+    shift = jnp.asarray(shift, dtype=jnp.int32)
+    rnd = jnp.where(
+        shift > 0,
+        jnp.left_shift(jnp.int32(1), jnp.maximum(shift - 1, 0)),
+        jnp.int32(0),
+    )
+    return jnp.right_shift(acc + rnd, shift)
+
+
+def requantize(acc, shift, relu):
+    """ADC output stage: round-shift, optional ReLU, clip to int8.
+
+    ``relu`` may be a Python bool/int or a traced int32 scalar (!= 0 = on).
+    Returns int8.
+    """
+    y = round_shift(acc, shift)
+    relu = jnp.asarray(relu, dtype=jnp.int32)
+    y = jnp.where(relu != 0, jnp.maximum(y, 0), y)
+    return jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def saturating_add_i8(a, b):
+    """int8 + int8 -> int8 with saturation (the residual connection)."""
+    s = a.astype(jnp.int32) + b.astype(jnp.int32)
+    return jnp.clip(s, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def clip_int4(w):
+    """Clamp weights to the signed 4-bit range the PCM devices store."""
+    return jnp.clip(w, INT4_MIN, INT4_MAX).astype(jnp.int8)
+
+
+def checksum_i64(x) -> int:
+    """Order-independent checksum used to pinpoint layer divergence from Rust.
+
+    Must match `rust/src/runtime/golden.rs::checksum`: sum of elements as i64
+    plus 31 * element count.
+    """
+    import numpy as np
+
+    arr = np.asarray(x).astype(np.int64)
+    return int(arr.sum() + 31 * arr.size)

@@ -1,0 +1,56 @@
+"""Ancillary Pallas kernels (requant, residual) vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ancillary, ref
+
+P, C = ancillary.REQUANT_ROWS, ancillary.REQUANT_COLS
+
+
+@given(seed=st.integers(0, 2**31 - 1), shift=st.integers(0, 16), relu=st.integers(0, 1))
+@settings(max_examples=30, deadline=None)
+def test_requant_matches_ref(seed, shift, relu):
+    rng = np.random.default_rng(seed)
+    acc = rng.integers(-(2**20), 2**20, size=(P, C)).astype(np.int32)
+    got = ancillary.requant(
+        jnp.asarray(acc), jnp.array([shift], jnp.int32), jnp.array([relu], jnp.int32)
+    )
+    want = ref.requant_ref(jnp.asarray(acc), shift, relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_requant_saturation_corners():
+    acc = np.zeros((P, C), np.int32)
+    acc[0, 0] = 2**30
+    acc[0, 1] = -(2**30)
+    got = np.asarray(
+        ancillary.requant(
+            jnp.asarray(acc), jnp.array([0], jnp.int32), jnp.array([0], jnp.int32)
+        )
+    )
+    assert got[0, 0] == 127 and got[0, 1] == -128
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_residual_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, size=ancillary.RESIDUAL_CHUNK).astype(np.int8)
+    b = rng.integers(-128, 128, size=ancillary.RESIDUAL_CHUNK).astype(np.int8)
+    got = ancillary.residual_add(jnp.asarray(a), jnp.asarray(b))
+    want = ref.residual_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_residual_saturates():
+    a = np.full(ancillary.RESIDUAL_CHUNK, 127, np.int8)
+    b = np.full(ancillary.RESIDUAL_CHUNK, 127, np.int8)
+    got = np.asarray(ancillary.residual_add(jnp.asarray(a), jnp.asarray(b)))
+    assert (got == 127).all()
+    got2 = np.asarray(
+        ancillary.residual_add(jnp.asarray(-a - 1), jnp.asarray(-b - 1))
+    )
+    assert (got2 == -128).all()

@@ -1,0 +1,73 @@
+"""AOT path tests: every artifact lowers to parseable HLO text with the
+shapes the Rust runtime hard-codes (the ABI contract of client.rs)."""
+
+import re
+
+import jax
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def specs():
+    return aot.artifact_specs()
+
+
+def test_all_artifacts_present(specs):
+    assert set(specs) == {
+        "imc_mvm",
+        "imc_mvm_raw",
+        "imc_mvm_b128",
+        "imc_mvm_raw_b128",
+        "requant",
+        "requant_b128",
+        "residual",
+        "dw3x3_s1",
+        "dw3x3_s2",
+        "bottleneck",
+    }
+
+
+@pytest.mark.parametrize(
+    "name", ["imc_mvm", "imc_mvm_raw", "requant", "residual", "dw3x3_s1", "dw3x3_s2"]
+)
+def test_artifact_lowers_to_hlo_text(specs, name):
+    fn, args = specs[name]
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    # HLO text, with a tuple-returning entry (the Rust loader calls
+    # to_tuple1) and no serialized-proto artifacts
+    assert text.startswith("HloModule"), text[:40]
+    assert "ENTRY" in text
+    root_tuple = re.search(r"ROOT .* tuple\(", text)
+    assert root_tuple, "entry must return a tuple (return_tuple=True)"
+
+
+def test_mvm_abi_shapes(specs):
+    fn, args = specs["imc_mvm"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    # the exact parameter shapes rust/src/runtime/client.rs relies on
+    assert "s8[16,256]" in text
+    assert "s8[256,256]" in text
+    assert "s32[1]" in text
+
+
+def test_dw_abi_shapes(specs):
+    fn, args = specs["dw3x3_s1"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "s8[18,18,16]" in text
+    assert "s8[16,16,16]" in text
+    fn2, args2 = specs["dw3x3_s2"]
+    text2 = aot.to_hlo_text(jax.jit(fn2).lower(*args2))
+    assert "s8[33,33,16]" in text2
+
+
+def test_no_custom_calls_in_artifacts(specs):
+    """interpret=True must lower Pallas to plain HLO — a Mosaic custom-call
+    would be unloadable by the CPU PJRT client."""
+    for name, (fn, args) in specs.items():
+        if name == "bottleneck":
+            continue  # covered implicitly; lowering it twice is slow
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert "custom-call" not in text, f"{name} contains a custom-call"

@@ -1,0 +1,71 @@
+"""Depth-wise engine kernel vs oracle (strides 1 and 2, tiles and layers)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import dw_conv, ref
+
+T = dw_conv.TILE
+CB = dw_conv.CH_BLOCK
+
+
+def _tile_args(seed, stride):
+    rng = np.random.default_rng(seed)
+    hin = (T - 1) * stride + 3
+    x = rng.integers(-128, 128, size=(hin, hin, CB)).astype(np.int8)
+    w = rng.integers(-8, 8, size=(3, 3, CB)).astype(np.int8)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("shift,relu", [(0, 0), (6, 1), (9, 0)])
+def test_dw_tile_matches_ref(stride, seed, shift, relu):
+    x, w = _tile_args(seed, stride)
+    got = dw_conv.dw3x3_tile(
+        x, w, jnp.array([shift], jnp.int32), jnp.array([relu], jnp.int32), stride=stride
+    )
+    want = ref.dw3x3_ref(x, w, shift, relu, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("stride,hw,c", [(1, 32, 32), (2, 64, 16), (1, 16, 48)])
+def test_dw_layer_matches_ref(stride, hw, c):
+    rng = np.random.default_rng(hw * 7 + c)
+    x = rng.integers(-128, 128, size=(hw + 2, hw + 2, c)).astype(np.int8)
+    w = rng.integers(-8, 8, size=(3, 3, c)).astype(np.int8)
+    s = jnp.array([7], jnp.int32)
+    r = jnp.array([1], jnp.int32)
+    got = dw_conv.dw3x3_layer(jnp.asarray(x), jnp.asarray(w), s, r, stride=stride)
+    want = ref.dw3x3_ref(jnp.asarray(x), jnp.asarray(w), 7, 1, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(seed=st.integers(0, 2**31 - 1), stride=st.sampled_from([1, 2]))
+@settings(max_examples=15, deadline=None)
+def test_dw_tile_random_sweep(seed, stride):
+    x, w = _tile_args(seed, stride)
+    s = seed % 12
+    got = dw_conv.dw3x3_tile(
+        x, w, jnp.array([s], jnp.int32), jnp.array([1], jnp.int32), stride=stride
+    )
+    want = ref.dw3x3_ref(x, w, s, 1, stride=stride)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dw_channel_independence():
+    """Depth-wise contract: each output channel depends only on its own
+    input channel (what makes IMA mapping so wasteful, paper Fig. 8)."""
+    rng = np.random.default_rng(3)
+    x1 = rng.integers(-128, 128, size=(T + 2, T + 2, CB)).astype(np.int8)
+    w = rng.integers(-8, 8, size=(3, 3, CB)).astype(np.int8)
+    x2 = x1.copy()
+    x2[:, :, 1:] = rng.integers(-128, 128, size=(T + 2, T + 2, CB - 1))
+    s = jnp.array([5], jnp.int32)
+    r = jnp.array([0], jnp.int32)
+    y1 = np.asarray(dw_conv.dw3x3_tile(jnp.asarray(x1), jnp.asarray(w), s, r))
+    y2 = np.asarray(dw_conv.dw3x3_tile(jnp.asarray(x2), jnp.asarray(w), s, r))
+    np.testing.assert_array_equal(y1[:, :, 0], y2[:, :, 0])

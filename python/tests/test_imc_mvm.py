@@ -1,0 +1,124 @@
+"""Pallas crossbar kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import imc_mvm, ref
+
+P = imc_mvm.PIXELS_PER_CALL
+XB = imc_mvm.XBAR_ROWS
+
+
+def _rand(rng, shape, lo, hi):
+    return rng.integers(lo, hi, size=shape).astype(np.int8)
+
+
+def _args(seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (P, XB), -128, 128)
+    w = _rand(rng, (XB, XB), -8, 8)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("shift", [0, 4, 9, 12])
+@pytest.mark.parametrize("relu", [0, 1])
+def test_imc_mvm_matches_ref(seed, shift, relu):
+    x, w = _args(seed)
+    s = jnp.array([shift], jnp.int32)
+    r = jnp.array([relu], jnp.int32)
+    got = imc_mvm.imc_mvm(x, w, s, r)
+    want = ref.imc_mvm_ref(x, w, shift, relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_imc_mvm_raw_matches_ref(seed):
+    x, w = _args(seed)
+    got = imc_mvm.imc_mvm_raw(x, w)
+    want = ref.imc_mvm_raw_ref(x, w)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_zero_padding_rows_are_inert():
+    """Rows beyond the layer's K^2*Cin must not change the output — the
+    contract the Rust tiler relies on when padding to 256."""
+    rng = np.random.default_rng(42)
+    rows = 100
+    x_small = _rand(rng, (P, rows), -128, 128)
+    w_small = _rand(rng, (rows, XB), -8, 8)
+    x = np.zeros((P, XB), np.int8)
+    x[:, :rows] = x_small
+    w = np.zeros((XB, XB), np.int8)
+    w[:rows, :] = w_small
+    # garbage in padded *weight* rows must be masked by zero activations
+    w[rows:, :] = _rand(rng, (XB - rows, XB), -8, 8)
+    s = jnp.array([7], jnp.int32)
+    r = jnp.array([0], jnp.int32)
+    got = imc_mvm.imc_mvm(jnp.asarray(x), jnp.asarray(w), s, r)
+    want = ref.imc_mvm_ref(jnp.asarray(x_small), jnp.asarray(w_small), 7, 0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rows=st.integers(1, XB),
+    cols=st.integers(1, XB),
+    shift=st.integers(0, 16),
+    relu=st.integers(0, 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_mvm_tiled_arbitrary_shapes(seed, rows, cols, shift, relu):
+    """mvm_tiled (the L2 building block) over ragged row/col sizes."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(_rand(rng, (P, rows), -128, 128))
+    w = jnp.asarray(_rand(rng, (rows, cols), -8, 8))
+    got = imc_mvm.mvm_tiled(
+        x, w, jnp.array([shift], jnp.int32), jnp.array([relu], jnp.int32)
+    )
+    want = ref.imc_mvm_ref(x, w, shift, relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_raw_plus_requant_equals_fused():
+    """Row-split contract: raw partial sums + digital requant == fused ADC."""
+    from compile.kernels import ancillary
+
+    rng = np.random.default_rng(7)
+    x = _rand(rng, (P, XB), -128, 128)
+    w = _rand(rng, (XB, XB), -8, 8)
+    s = jnp.array([9], jnp.int32)
+    r = jnp.array([1], jnp.int32)
+    fused = imc_mvm.imc_mvm(jnp.asarray(x), jnp.asarray(w), s, r)
+    raw = imc_mvm.imc_mvm_raw(jnp.asarray(x), jnp.asarray(w))
+    requant = ancillary.requant(raw, s, r)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(requant))
+
+
+@pytest.mark.parametrize("pixels", [16, 128])
+def test_batched_pixel_variants_match_ref(pixels):
+    """The 16- and 128-pixel job variants are the same math (§Perf L3-2)."""
+    rng = np.random.default_rng(99)
+    x = jnp.asarray(rng.integers(-128, 128, size=(pixels, XB)).astype(np.int8))
+    w = jnp.asarray(rng.integers(-8, 8, size=(XB, XB)).astype(np.int8))
+    s = jnp.array([9], jnp.int32)
+    r = jnp.array([1], jnp.int32)
+    got = imc_mvm.imc_mvm(x, w, s, r, pixels=pixels)
+    want = ref.imc_mvm_ref(x, w, 9, 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    raw = imc_mvm.imc_mvm_raw(x, w, pixels=pixels)
+    np.testing.assert_array_equal(np.asarray(raw), np.asarray(ref.imc_mvm_raw_ref(x, w)))
+
+
+def test_f32_carrier_is_exact_at_worst_case():
+    """§Perf L1-1 safety proof, executed: the worst-case bit-line sum
+    (256 rows of ±127×∓8) is below 2^24, so the f32-carrier dot is exact."""
+    x = jnp.full((16, XB), -128, jnp.int8)
+    w = jnp.full((XB, XB), -8, jnp.int8)
+    raw = np.asarray(imc_mvm.imc_mvm_raw(x, w))
+    assert (raw == 128 * 8 * 256).all()  # 262144 < 2**24
+    assert abs(raw[0, 0]) < 2**24

@@ -1,0 +1,79 @@
+"""Unit tests for the shared quantization contract (qnn.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import qnn
+
+
+def test_round_shift_zero_is_identity():
+    a = jnp.array([-5, 0, 7, 1000, -1000], jnp.int32)
+    assert (qnn.round_shift(a, 0) == a).all()
+
+
+def test_round_shift_rounds_half_up():
+    # (3 + 2) >> 2 = 1 ; (2 + 2) >> 2 = 1 ; (1 + 2) >> 2 = 0
+    a = jnp.array([3, 2, 1, -2, -3, -1], jnp.int32)
+    got = qnn.round_shift(a, 2)
+    # round-half-up on the shifted value: 3/4 -> 1, 2/4 -> 1, 1/4 -> 0,
+    # -2/4 -> 0, -3/4 -> 0 (since -3+2=-1 >> 2 = -1? arithmetic: -1>>2 = -1)
+    expect = [(v + 2) >> 2 for v in [3, 2, 1, -2, -3, -1]]
+    assert got.tolist() == expect
+
+
+@given(
+    st.lists(st.integers(-(2**28), 2**28), min_size=1, max_size=64),
+    st.integers(0, 20),
+)
+@settings(max_examples=200, deadline=None)
+def test_round_shift_matches_python_model(vals, s):
+    a = jnp.array(vals, jnp.int32)
+    got = qnn.round_shift(a, s).tolist()
+    if s == 0:
+        expect = vals
+    else:
+        expect = [(v + (1 << (s - 1))) >> s for v in vals]
+    assert got == expect
+
+
+@given(
+    st.lists(st.integers(-(2**28), 2**28), min_size=1, max_size=64),
+    st.integers(0, 20),
+    st.booleans(),
+)
+@settings(max_examples=100, deadline=None)
+def test_requantize_range_and_relu(vals, s, relu):
+    a = jnp.array(vals, jnp.int32)
+    y = np.asarray(qnn.requantize(a, s, int(relu)))
+    assert y.dtype == np.int8
+    assert y.min() >= (0 if relu else -128)
+    assert y.max() <= 127
+
+
+@given(
+    st.lists(st.integers(-128, 127), min_size=1, max_size=128),
+    st.lists(st.integers(-128, 127), min_size=1, max_size=128),
+)
+@settings(max_examples=100, deadline=None)
+def test_saturating_add(a_vals, b_vals):
+    n = min(len(a_vals), len(b_vals))
+    a = jnp.array(a_vals[:n], jnp.int8)
+    b = jnp.array(b_vals[:n], jnp.int8)
+    y = np.asarray(qnn.saturating_add_i8(a, b))
+    for i in range(n):
+        s = a_vals[i] + b_vals[i]
+        assert y[i] == max(-128, min(127, s))
+
+
+def test_clip_int4_range():
+    w = jnp.arange(-20, 20, dtype=jnp.int32)
+    c = np.asarray(qnn.clip_int4(w))
+    assert c.min() == -8 and c.max() == 7
+
+
+def test_checksum_matches_rust_formula():
+    x = np.array([1, -2, 3], dtype=np.int32)
+    assert qnn.checksum_i64(x) == (1 - 2 + 3) + 31 * 3

@@ -1,0 +1,27 @@
+//! Bench: Fig. 9/10 Bottleneck case study — regenerates the paper rows and
+//! times the per-strategy simulation cost.
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::coordinator::{run_network, Strategy};
+use imcc::net::bottleneck::bottleneck;
+use imcc::report::{fig10_breakdown, fig9_bottleneck};
+use imcc::util::bench::bench;
+
+fn main() {
+    println!("== bench_bottleneck (Fig. 9 / Fig. 10) ==");
+    let cfg = SystemConfig::paper();
+    let pm = PowerModel::paper();
+    let net = bottleneck();
+
+    for s in Strategy::paper_lineup() {
+        bench(&format!("simulate_{}", s.label()), 100, 300, || {
+            run_network(&net, s, &cfg, &pm)
+        });
+    }
+    bench("fig9_full", 20, 500, || fig9_bottleneck::generate(&cfg, &pm));
+    bench("fig10_full", 20, 500, || fig10_breakdown::generate(&cfg, &pm));
+
+    // the experiment rows (cargo bench log carries the reproduction)
+    let rep = fig9_bottleneck::generate(&cfg, &pm);
+    println!("{}", rep.text);
+}

@@ -1,0 +1,28 @@
+//! Bench: Fig. 12 / Table I end-to-end MobileNetV2 — regenerates the
+//! headline result and times the whole-network simulation.
+
+use imcc::arch::PowerModel;
+use imcc::report::{fig12_e2e, fig13_models, table1};
+use imcc::util::bench::bench;
+
+fn main() {
+    println!("== bench_e2e (Fig. 12 / Table I / Fig. 13) ==");
+    let pm = PowerModel::paper();
+
+    bench("e2e_config_and_pack", 10, 1000, fig12_e2e::e2e_config);
+    let (cfg, _) = fig12_e2e::e2e_config();
+    bench("e2e_simulate_64_layers", 10, 1000, || {
+        fig12_e2e::run(&cfg, &pm)
+    });
+    bench("fig12_full_report", 5, 2000, || fig12_e2e::generate(&pm));
+    bench("table1_full", 5, 2000, || table1::generate(&pm));
+    bench("fig13_full", 5, 2000, || fig13_models::generate(&pm));
+
+    let rep = fig12_e2e::generate(&pm);
+    println!(
+        "result: {:.2} ms, {:.0} µJ, {:.0} inf/s (paper: 10.1 ms, 482 µJ, 99 inf/s)",
+        rep.data.req("total_time_s").as_f64().unwrap() * 1e3,
+        rep.data.req("total_energy_j").as_f64().unwrap() * 1e6,
+        rep.data.req("inf_per_s").as_f64().unwrap()
+    );
+}

@@ -1,0 +1,29 @@
+//! Bench: remaining exhibits (Fig. 6b area, baselines) + report plumbing
+//! (table rendering, JSON round-trip) — cheap but tracked so regressions in
+//! the reporting layer are visible.
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::baselines::{all_baselines, Vega};
+use imcc::report::fig6_area;
+use imcc::util::bench::bench;
+use imcc::util::json::Json;
+
+fn main() {
+    println!("== bench_reports (Fig. 6b / Table I baselines) ==");
+    let cfg = SystemConfig::paper();
+    let pm = PowerModel::paper();
+    let _ = pm;
+
+    bench("fig6_area", 100, 300, || fig6_area::generate(&cfg));
+    bench("vega_baseline_model", 10, 1500, || Vega::default().mnv2());
+    bench("all_baseline_rows", 10, 1500, || {
+        all_baselines().iter().map(|b| b.row()).count()
+    });
+
+    let rep = fig6_area::generate(&cfg);
+    bench("json_roundtrip_report", 200, 300, || {
+        Json::parse(&rep.data.to_string_pretty()).unwrap()
+    });
+
+    println!("result:\n{}", rep.text);
+}

@@ -1,0 +1,34 @@
+//! Bench: Fig. 7 roofline regeneration + the underlying per-point cost.
+//!
+//! Regenerates the paper's roofline (the experiment itself) and reports how
+//! long the simulator takes per roofline point and per full figure — the L3
+//! hot path for design-space exploration.
+
+use imcc::arch::{FreqPoint, PowerModel, SystemConfig};
+use imcc::ima::ImaSubsystem;
+use imcc::report::fig7_roofline;
+use imcc::util::bench::bench;
+
+fn main() {
+    println!("== bench_roofline (Fig. 7) ==");
+    let pm = PowerModel::paper();
+    let cfg = SystemConfig::paper().with_freq(FreqPoint::LOW);
+
+    bench("roofline_point_full_util", 50, 300, || {
+        let ima = ImaSubsystem::new(&cfg, &pm);
+        ima.roofline_point(256, 65536)
+    });
+
+    bench("roofline_point_low_util", 50, 300, || {
+        let ima = ImaSubsystem::new(&cfg, &pm);
+        ima.roofline_point(57, 65536)
+    });
+
+    let r = bench("fig7_all_panels", 5, 2000, fig7_roofline::generate);
+    let _ = r;
+
+    // the experiment result itself (printed so `cargo bench` logs carry it)
+    let rep = fig7_roofline::generate();
+    let peak = rep.data.req("peak_gops").as_f64().unwrap();
+    println!("result: peak {peak:.0} GOPS (paper: 958)");
+}

@@ -1,0 +1,45 @@
+//! Bench: Alg. 1 TILE&PACK — packing quality and packer throughput
+//! (MaxRects-BSSF is O(tiles × bins × free-rects); this tracks the constant).
+
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::tilepack::{pack, tile_network, Tile};
+use imcc::util::bench::bench;
+use imcc::util::rng::SplitMix64;
+
+fn synthetic_tiles(n: usize, seed: u64) -> Vec<Tile> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|i| Tile {
+            layer: i,
+            name: format!("t{i}"),
+            row0: 0,
+            col0: 0,
+            rows: rng.range_i64(8, 256) as usize,
+            cols: rng.range_i64(8, 256) as usize,
+        })
+        .collect()
+}
+
+fn main() {
+    println!("== bench_tilepack (Alg. 1 / Fig. 12b) ==");
+    let net = mobilenet_v2(224);
+    let tiles = tile_network(&net, 256);
+
+    bench("tile_mobilenetv2", 100, 300, || tile_network(&net, 256));
+    bench("pack_mobilenetv2", 20, 1000, || pack(&tiles, 256, false));
+    bench("pack_mobilenetv2_rotate", 20, 1000, || pack(&tiles, 256, true));
+
+    for n in [100usize, 400, 1600] {
+        let synth = synthetic_tiles(n, 42);
+        bench(&format!("pack_synthetic_{n}"), 5, 1500, || {
+            pack(&synth, 256, false)
+        });
+    }
+
+    let p = pack(&tiles, 256, false);
+    println!(
+        "result: {} crossbars for MobileNetV2 (paper: 34), min util {:.0}%",
+        p.n_bins(),
+        p.utilizations().iter().cloned().fold(f64::INFINITY, f64::min) * 100.0
+    );
+}

@@ -1,0 +1,126 @@
+//! Area model — reproduces the Fig. 6(b) breakdown of the 2.5 mm² cluster
+//! and the §VI scaled-up system area (~30 mm² with 34 crossbars).
+
+use super::params::SystemConfig;
+
+/// Component areas in mm² at GF 22FDX (paper Fig. 6b: ~1/3 IMA, ~1/3 TCDM,
+/// 1/3 rest; DW accelerator = 2.1 %; total 2.5 mm²).
+#[derive(Clone, Debug)]
+pub struct AreaModel {
+    pub ima_subsystem: f64,
+    pub tcdm: f64,
+    pub cores: f64,
+    pub icache: f64,
+    pub interconnect: f64,
+    pub dw_accel: f64,
+    pub dma: f64,
+    pub periph: f64,
+}
+
+impl AreaModel {
+    /// The single-crossbar publication floorplan.
+    pub fn paper() -> Self {
+        AreaModel {
+            ima_subsystem: 0.83,
+            tcdm: 0.83,
+            cores: 0.33,
+            icache: 0.12,
+            interconnect: 0.09,
+            dw_accel: 0.0525, // 2.1 % of 2.5 mm²
+            dma: 0.05,
+            periph: 0.1975,
+        }
+    }
+
+    /// Scale to a configuration: crossbar count multiplies the IMA macro
+    /// area; TCDM scales linearly with capacity; the interconnect grows
+    /// linearly with the IMA bus width (paper §V-B: "interconnect area
+    /// scales linearly with the bit-width of the system bus").
+    pub fn for_config(cfg: &SystemConfig) -> Self {
+        let base = Self::paper();
+        let ima_digital = 0.10; // streamer/controller/buffers share
+        let ima_analog = base.ima_subsystem - ima_digital;
+        AreaModel {
+            ima_subsystem: ima_digital + ima_analog * cfg.n_crossbars as f64,
+            tcdm: base.tcdm * cfg.tcdm_kb as f64 / 512.0,
+            interconnect: base.interconnect * (cfg.ima_bus_bits as f64 / 128.0).max(0.5),
+            cores: base.cores * cfg.n_cores as f64 / 8.0,
+            ..base
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.ima_subsystem
+            + self.tcdm
+            + self.cores
+            + self.icache
+            + self.interconnect
+            + self.dw_accel
+            + self.dma
+            + self.periph
+    }
+
+    /// (label, mm², % of total) rows for the Fig. 6b report.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let t = self.total();
+        vec![
+            ("IMA subsystem", self.ima_subsystem, 100.0 * self.ima_subsystem / t),
+            ("TCDM (L1)", self.tcdm, 100.0 * self.tcdm / t),
+            ("RISC-V cores", self.cores, 100.0 * self.cores / t),
+            ("I$ hierarchy", self.icache, 100.0 * self.icache / t),
+            ("Interconnect", self.interconnect, 100.0 * self.interconnect / t),
+            ("DW accelerator", self.dw_accel, 100.0 * self.dw_accel / t),
+            ("DMA", self.dma, 100.0 * self.dma / t),
+            ("Peripherals", self.periph, 100.0 * self.periph / t),
+        ]
+    }
+
+    /// Effective PCM-array area charged to a workload that uses
+    /// `devices_used` crossbar cells (the paper's "area utilization
+    /// efficiency" in Fig. 9c charges only the arrays the Bottleneck maps,
+    /// padding included).
+    pub fn effective_pcm_mm2(&self, cfg: &SystemConfig, devices_used: usize) -> f64 {
+        let per_xbar_analog = (Self::paper().ima_subsystem - 0.10).max(1e-9);
+        let cells = (cfg.xbar_rows * cfg.xbar_cols) as f64;
+        per_xbar_analog * devices_used as f64 / cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_total_is_2_5mm2() {
+        let a = AreaModel::paper();
+        assert!((a.total() - 2.5).abs() < 1e-9, "{}", a.total());
+    }
+
+    #[test]
+    fn thirds_rule_and_dw_share() {
+        let a = AreaModel::paper();
+        let t = a.total();
+        assert!((a.ima_subsystem / t - 0.333).abs() < 0.01);
+        assert!((a.tcdm / t - 0.333).abs() < 0.01);
+        assert!((a.dw_accel / t - 0.021).abs() < 0.001);
+    }
+
+    #[test]
+    fn scaled_up_34_crossbars_is_about_30mm2() {
+        let cfg = SystemConfig::scaled_up(34);
+        let a = AreaModel::for_config(&cfg);
+        // paper §VI: "minimum area of ~30 mm², since the area of the single
+        // IMA is 0.83 mm²"
+        assert!((26.0..32.0).contains(&a.total()), "{}", a.total());
+    }
+
+    #[test]
+    fn effective_pcm_area_scales_with_devices() {
+        let cfg = SystemConfig::paper();
+        let a = AreaModel::paper();
+        let full = a.effective_pcm_mm2(&cfg, 65536);
+        let half = a.effective_pcm_mm2(&cfg, 32768);
+        assert!((full - 0.73).abs() < 1e-9);
+        assert!((half * 2.0 - full).abs() < 1e-12);
+    }
+}

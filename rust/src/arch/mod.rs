@@ -1,0 +1,15 @@
+//! Architecture models: technology scaling, system parameters, area, power.
+//!
+//! The paper's silicon results (GF 22FDX place&route + PrimeTime power +
+//! HERMES-core measurements) enter the reproduction exclusively through the
+//! constants and analytical models in this module — see DESIGN.md §3 for the
+//! substitution argument and §5 for every calibration target.
+
+pub mod area;
+pub mod params;
+pub mod power;
+pub mod technology;
+
+pub use area::AreaModel;
+pub use params::{ExecModel, FreqPoint, SystemConfig};
+pub use power::{EnergyAccount, PowerModel};

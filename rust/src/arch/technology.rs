@@ -1,0 +1,115 @@
+//! Technology scaling rules (paper §V-A).
+//!
+//! The IMA macro is measured silicon in 14 nm (HERMES core,
+//! Khaddam-Aljameh et al. 2021: 256×256 PCM, 130 ns MVM, 10.5 TOPS/W,
+//! 1.59 TOPS/mm²); the paper integrates it in 22 nm by scaling power as
+//! `a · b²` (a = dimensional scaling, b = voltage scaling), area by the
+//! dimensional scaling, and keeping latency constant. This module encodes
+//! exactly that arithmetic so the derivation of every 22 nm IMA constant is
+//! executable, not folklore.
+
+/// HERMES-core published numbers at 14 nm.
+pub mod hermes14 {
+    /// MVM latency (ns) — assumed constant across nodes (paper §V-A).
+    pub const MVM_NS: f64 = 130.0;
+    /// Peak efficiency on 8b×4b MVMs (TOPS/W).
+    pub const TOPS_PER_W: f64 = 10.5;
+    /// Performance density (TOPS/mm²).
+    pub const TOPS_PER_MM2: f64 = 1.59;
+    /// Array geometry.
+    pub const ROWS: usize = 256;
+    pub const COLS: usize = 256;
+
+    /// Peak throughput of one macro: 256·256·2 ops / 130 ns ≈ 1.008 TOPS.
+    pub fn peak_tops() -> f64 {
+        (ROWS * COLS * 2) as f64 / MVM_NS / 1e3
+    }
+
+    /// Implied macro power at peak (W): peak / efficiency ≈ 96 mW.
+    pub fn power_w() -> f64 {
+        peak_tops() / TOPS_PER_W
+    }
+
+    /// Implied macro area (mm²): peak / density ≈ 0.63 mm².
+    pub fn area_mm2() -> f64 {
+        peak_tops() / TOPS_PER_MM2
+    }
+}
+
+/// Scaling of the analog macro from 14 nm to the cluster's 22 nm node.
+pub struct ImaScaling {
+    /// Dimensional scaling factor a = 22/14.
+    pub dim: f64,
+    /// Voltage scaling factor b (paper scales under constant frequency;
+    /// the macro supply is kept — b = 1.0 reproduces the paper's ~150 mW).
+    pub volt: f64,
+}
+
+impl Default for ImaScaling {
+    fn default() -> Self {
+        ImaScaling {
+            dim: 22.0 / 14.0,
+            volt: 1.0,
+        }
+    }
+}
+
+impl ImaScaling {
+    /// Power scales by `a · b²` (paper §V-A).
+    pub fn power_w(&self) -> f64 {
+        hermes14::power_w() * self.dim * self.volt * self.volt
+    }
+
+    /// Area follows dimensional scaling (`a²` for planar area).
+    pub fn area_mm2(&self) -> f64 {
+        hermes14::area_mm2() * self.dim * self.dim
+    }
+
+    /// Latency is assumed constant (paper §V-A).
+    pub fn mvm_ns(&self) -> f64 {
+        hermes14::MVM_NS
+    }
+
+    /// Energy of one full-array MVM job at 22 nm (J).
+    pub fn mvm_energy_j(&self) -> f64 {
+        self.power_w() * self.mvm_ns() * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hermes_implied_numbers() {
+        assert!((hermes14::peak_tops() - 1.008).abs() < 0.001);
+        let p = hermes14::power_w();
+        assert!((p - 0.096).abs() < 0.001, "{p}");
+        let a = hermes14::area_mm2();
+        assert!((a - 0.634).abs() < 0.01, "{a}");
+    }
+
+    #[test]
+    fn scaled_macro_matches_paper_aggregates() {
+        let s = ImaScaling::default();
+        // ~151 mW at 22 nm → with the cluster on top, the paper's measured
+        // peak system efficiency of 6.39 TOPS/W at 958 GOPS implies ~150 mW.
+        let p = s.power_w();
+        assert!((0.140..0.160).contains(&p), "{p}");
+        // area ≈ 1.56 mm²?? — no: the paper quotes 0.83 mm² for the IMA
+        // *sub-system*; HERMES' 0.63 mm² contains periphery counted
+        // separately there. Dimensional scaling alone would give ~1.57 mm²
+        // for the full macro; the paper's floorplan allocates 0.83 mm² to
+        // the IMA (analog + digital), i.e. assumes only the array core
+        // scales. We keep the paper's quoted 0.83 in `area.rs` and expose
+        // this scaling as the upper bound.
+        assert!(s.area_mm2() > 0.83);
+    }
+
+    #[test]
+    fn mvm_energy_magnitude() {
+        let e = ImaScaling::default().mvm_energy_j();
+        // ~19.6 nJ per full-array job
+        assert!((15e-9..25e-9).contains(&e), "{e}");
+    }
+}

@@ -1,0 +1,85 @@
+//! Zhou et al. [7] "AnalogNets" baseline (IMA+DIG.ACC): a 1024×512 PCM
+//! array (same HERMES prototype family) + fixed-function activation/pooling
+//! logic and an IM2COL block — **no programmable cores**.
+//!
+//! Table I row is quoted from the publication; MobileNetV2 is architecturally
+//! undeployable: a single array cannot host the weights (no reprogramming at
+//! inference time) and residual connections have no engine to run on.
+
+use super::{Baseline, BaselineRow};
+use crate::net::mobilenetv2::mobilenet_v2;
+use crate::net::LayerKind;
+
+#[derive(Default)]
+pub struct AnalogNets;
+
+impl AnalogNets {
+    /// Why MobileNetV2 cannot be deployed (paper §VII): returns the list of
+    /// blocking reasons, empty if deployable.
+    pub fn mnv2_blockers(&self) -> Vec<String> {
+        let mut blockers = Vec::new();
+        let net = mobilenet_v2(224);
+        let conv_devices: usize = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Conv)
+            .map(|l| l.n_weights())
+            .sum();
+        let capacity = 1024 * 512;
+        if conv_devices > capacity {
+            blockers.push(format!(
+                "weights need {conv_devices} devices, single array holds {capacity} \
+                 (no inference-time reprogramming of PCM)"
+            ));
+        }
+        let has_residuals = net.layers.iter().any(|l| l.kind == LayerKind::Add);
+        if has_residuals {
+            blockers.push(
+                "residual connections require a programmable engine; only \
+                 fixed activation/pooling logic is available"
+                    .into(),
+            );
+        }
+        blockers
+    }
+}
+
+impl Baseline for AnalogNets {
+    fn row(&self) -> BaselineRow {
+        BaselineRow {
+            name: "AnalogNets [7]",
+            tech_nm: 14,
+            area_mm2: 3.2,
+            cores: "None",
+            analog_imc: "1x PCM",
+            array_rows: Some(1024),
+            array_cols: Some(512),
+            digital_acc: "ReLU, activ., im2col",
+            peak_tops: 2.0,
+            peak_tops_precision: "8b-4b",
+            peak_tops_per_w: 13.5,
+            mnv2_inf_per_s: None,
+            mnv2_energy_mj: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnv2_is_not_deployable() {
+        let b = AnalogNets;
+        let blockers = b.mnv2_blockers();
+        assert_eq!(blockers.len(), 2, "{blockers:?}");
+        assert!(b.row().mnv2_inf_per_s.is_none());
+    }
+
+    #[test]
+    fn higher_peak_than_this_work_single_array() {
+        // paper §VII: their bigger array (1024×512 vs 256×256) peaks higher
+        // on raw MVMs — the comparison point is end-to-end flexibility
+        assert!(AnalogNets.row().peak_tops > 0.958);
+    }
+}

@@ -1,0 +1,46 @@
+//! Jia et al. [31] baseline: 4×4 array of charge-based IMC cores with SIMD
+//! near-memory digital accelerators and a NoC — but no standalone
+//! programmable processor (host control via off-chip FPGA/MCU).
+//!
+//! Table I row quoted from the publication; MobileNetV2 marked n/a for the
+//! same flexibility reasons as [7] (paper §VII: "not viable to map
+//! heterogeneous workloads such as the MobileNetV2, due to the absence of a
+//! programmable processor").
+
+use super::{Baseline, BaselineRow};
+
+#[derive(Default)]
+pub struct JiaArray;
+
+impl Baseline for JiaArray {
+    fn row(&self) -> BaselineRow {
+        BaselineRow {
+            name: "Jia [31]",
+            tech_nm: 16,
+            area_mm2: 25.0,
+            cores: "None",
+            analog_imc: "16x charge",
+            array_rows: Some(1152),
+            array_cols: Some(256),
+            digital_acc: "Activ., scaling, pooling",
+            peak_tops: 3.0,
+            peak_tops_precision: "8b-8b",
+            peak_tops_per_w: 30.0,
+            mnv2_inf_per_s: None,
+            mnv2_energy_mj: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_matches_table1() {
+        let r = JiaArray.row();
+        assert_eq!(r.tech_nm, 16);
+        assert_eq!(r.peak_tops, 3.0);
+        assert!(r.mnv2_inf_per_s.is_none());
+    }
+}

@@ -1,0 +1,60 @@
+//! State-of-the-art baseline models (paper §VII, Table I, Fig. 13).
+//!
+//! Four architecture classes are compared against this work:
+//!
+//! * [`vega`]      — Vega [9]: the same PULP cluster generation without
+//!   analog IMC or the dw accelerator (fully digital, + HWCE std-conv
+//!   engine). MobileNetV2 runs in software at the low-voltage point.
+//! * [`jia_mcu`]   — Jia et al. [6] (IMA+MCU): a charge-based IMC array
+//!   loosely coupled to one tiny RISC-V core; point-wise on the array,
+//!   everything else on the single core (the paper's footnote-2 method).
+//! * [`analognets`]— Zhou et al. [7] (IMA+DIG.ACC): PCM array + fixed
+//!   activation/pooling logic, *no programmable cores* — cannot run
+//!   MobileNetV2 (n/a in Table I, "not deployable" in Fig. 13).
+//! * [`jia_array`] — Jia et al. [31]: 16-core charge-based IMC with SIMD
+//!   near-memory digital — no standalone programmable processor either.
+//!
+//! Each model implements [`Baseline`] so Table I / Fig. 13 render uniformly.
+
+pub mod analognets;
+pub mod jia_array;
+pub mod jia_mcu;
+pub mod vega;
+
+/// A Table-I row.
+#[derive(Clone, Debug)]
+pub struct BaselineRow {
+    pub name: &'static str,
+    pub tech_nm: u32,
+    pub area_mm2: f64,
+    pub cores: &'static str,
+    pub analog_imc: &'static str,
+    pub array_rows: Option<u32>,
+    pub array_cols: Option<u32>,
+    pub digital_acc: &'static str,
+    pub peak_tops: f64,
+    pub peak_tops_precision: &'static str,
+    pub peak_tops_per_w: f64,
+    /// MobileNetV2 end-to-end: None = cannot deploy the network.
+    pub mnv2_inf_per_s: Option<f64>,
+    pub mnv2_energy_mj: Option<f64>,
+}
+
+pub trait Baseline {
+    fn row(&self) -> BaselineRow;
+}
+
+pub use analognets::AnalogNets;
+pub use jia_array::JiaArray;
+pub use jia_mcu::JiaMcu;
+pub use vega::Vega;
+
+/// All Table-I baselines in paper column order.
+pub fn all_baselines() -> Vec<Box<dyn Baseline>> {
+    vec![
+        Box::new(Vega::default()),
+        Box::new(AnalogNets::default()),
+        Box::new(JiaArray::default()),
+        Box::new(JiaMcu::default()),
+    ]
+}

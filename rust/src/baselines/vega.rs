@@ -1,0 +1,97 @@
+//! Vega [9] baseline: ten-core fully-digital PULP SoC (22 nm), HWCE standard-
+//! convolution accelerator, no analog IMC, no dw engine.
+//!
+//! The MobileNetV2 numbers are *modeled*, not quoted: we run the same
+//! software cost model as our CORES strategy at Vega's efficient operating
+//! point, give the HWCE a 3× boost on standard (non-pw, non-dw) convolutions,
+//! and apply Vega's published energy/cycle. The paper's Table I quotes
+//! 10 inf/s and 1.19 mJ — the model must land near both.
+
+use crate::arch::{FreqPoint, PowerModel, SystemConfig};
+use crate::coordinator::{run_network, Strategy};
+use crate::net::mobilenetv2::mobilenet_v2;
+
+use super::{Baseline, BaselineRow};
+
+pub struct Vega {
+    /// Vega runs MobileNetV2 at its energy-efficient point.
+    pub freq: FreqPoint,
+    /// HWCE speedup on standard convolutions (k > 1, non-dw).
+    pub hwce_boost: f64,
+    /// Vega's cluster is heavily energy-optimized vs our model cluster:
+    /// measured 22 nm silicon reaches ~0.61 TOPS/W on 8-bit ML workloads;
+    /// this factor rescales our cluster's energy/cycle to Vega's.
+    pub energy_scale: f64,
+}
+
+impl Default for Vega {
+    fn default() -> Self {
+        Vega {
+            freq: FreqPoint::LOW,
+            hwce_boost: 3.0,
+            energy_scale: 0.45,
+        }
+    }
+}
+
+impl Vega {
+    /// Modeled MobileNetV2 end-to-end (inf/s, mJ).
+    pub fn mnv2(&self) -> (f64, f64) {
+        let cfg = SystemConfig::paper().with_freq(self.freq);
+        let pm = PowerModel::paper();
+        let net = mobilenet_v2(224);
+        let rep = run_network(&net, Strategy::Cores, &cfg, &pm);
+        // HWCE accelerates the k>1 standard convs (conv1 only in MNv2)
+        let mut cycles = 0u64;
+        for (l, lr) in net.layers.iter().zip(&rep.layers) {
+            let boosted = matches!(l.kind, crate::net::LayerKind::Conv) && l.k > 1;
+            cycles += if boosted {
+                (lr.cycles as f64 / self.hwce_boost) as u64
+            } else {
+                lr.cycles
+            };
+        }
+        let t = cycles as f64 * cfg.freq.cycle_ns() * 1e-9;
+        let e = rep.energy_j * self.energy_scale;
+        (1.0 / t, e * 1e3)
+    }
+}
+
+impl Baseline for Vega {
+    fn row(&self) -> BaselineRow {
+        let (inf_s, mj) = self.mnv2();
+        BaselineRow {
+            name: "Vega [9]",
+            tech_nm: 22,
+            area_mm2: 12.0,
+            cores: "9x RV32IMCF Xpulp",
+            analog_imc: "None",
+            array_rows: None,
+            array_cols: None,
+            digital_acc: "HWCE (std conv)",
+            peak_tops: 0.032,
+            peak_tops_precision: "ML 8b",
+            peak_tops_per_w: 0.61,
+            mnv2_inf_per_s: Some(inf_s),
+            mnv2_energy_mj: Some(mj),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnv2_near_10_inf_per_s() {
+        // paper Table I: 10 inf/s
+        let (inf_s, _) = Vega::default().mnv2();
+        assert!((7.0..15.0).contains(&inf_s), "{inf_s} inf/s (paper: 10)");
+    }
+
+    #[test]
+    fn mnv2_energy_near_1_19_mj() {
+        let (_, mj) = Vega::default().mnv2();
+        assert!((0.8..1.8).contains(&mj), "{mj} mJ (paper: 1.19)");
+    }
+}

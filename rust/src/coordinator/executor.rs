@@ -1,0 +1,277 @@
+//! Layer-to-engine scheduling and cost aggregation (the run loop).
+//!
+//! Layer-to-layer execution is sequential with all activations resident in
+//! L1 (the paper's §VI model); within a layer the coordinator issues the
+//! engine's job stream (pipelined on the IMA, blocks on the DW engine,
+//! parallel sections on the cores) and charges any ancillary core work the
+//! mapping implies (partial accumulation + requant for row-split IMA layers,
+//! HWC↔CHW marshaling for HYBRID depth-wise).
+
+use crate::arch::{EnergyAccount, PowerModel, SystemConfig};
+use crate::cores::SwKernels;
+use crate::dwacc;
+use crate::ima::{ConvMap, DwMap, ImaSubsystem};
+use crate::net::{Layer, LayerKind, Network};
+
+use super::metrics::{LayerReport, RunReport};
+use super::{Engine, Strategy};
+
+pub struct Executor<'a> {
+    pub cfg: &'a SystemConfig,
+    pub pm: &'a PowerModel,
+    pub strategy: Strategy,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(cfg: &'a SystemConfig, pm: &'a PowerModel, strategy: Strategy) -> Self {
+        Executor { cfg, pm, strategy }
+    }
+
+    fn sw(&self) -> SwKernels<'a> {
+        SwKernels::new(self.cfg)
+    }
+
+    fn ima(&self) -> ImaSubsystem<'a> {
+        ImaSubsystem::new(self.cfg, self.pm)
+    }
+
+    /// Cost one layer; returns (report, energy account).
+    pub fn layer(&self, l: &Layer) -> (LayerReport, EnergyAccount) {
+        match (l.kind, self.strategy) {
+            // ---- convolutions -------------------------------------------
+            (LayerKind::Conv, Strategy::Cores) => self.on_cores(l),
+            (LayerKind::Conv, _) => self.conv_on_ima(l),
+
+            // ---- depth-wise ---------------------------------------------
+            (LayerKind::Dw, Strategy::Cores) => self.on_cores(l),
+            (LayerKind::Dw, Strategy::ImaOnly { c_job }) => self.dw_on_ima(l, c_job),
+            (LayerKind::Dw, Strategy::Hybrid) => self.dw_hybrid(l),
+            (LayerKind::Dw, Strategy::ImaDw) => self.dw_on_accel(l),
+
+            // ---- everything else stays on the cores ---------------------
+            _ => self.on_cores(l),
+        }
+    }
+
+    fn on_cores(&self, l: &Layer) -> (LayerReport, EnergyAccount) {
+        let c = self.sw().layer_cost(l);
+        (
+            LayerReport {
+                name: l.name.clone(),
+                engine: Engine::Cores,
+                cycles: c.cycles,
+                energy_j: c.energy.total_j(self.pm, self.cfg),
+                macs: l.macs(),
+                ops: l.ops(),
+                devices: 0,
+            },
+            c.energy,
+        )
+    }
+
+    fn conv_on_ima(&self, l: &Layer) -> (LayerReport, EnergyAccount) {
+        let ima = self.ima();
+        let map = ConvMap::new(l, self.cfg.xbar_rows);
+        let mut cost = ima.conv_layer_cost(&map);
+        // row-split layers: cores accumulate int32 partials and requantize
+        if map.row_split() {
+            let elems = l.out_pixels() * l.cout;
+            let acc = self.sw().accumulate_partials(elems, map.n_row_tiles);
+            let rq = self.sw().requant(elems);
+            cost.cycles += acc.cycles + rq.cycles;
+            cost.energy.add(&acc.energy);
+            cost.energy.add(&rq.energy);
+        }
+        (
+            LayerReport {
+                name: l.name.clone(),
+                engine: Engine::Ima,
+                cycles: cost.cycles,
+                energy_j: cost.energy.total_j(self.pm, self.cfg),
+                macs: l.macs(),
+                ops: l.ops(),
+                devices: map.devices_total(),
+            },
+            cost.energy,
+        )
+    }
+
+    fn dw_on_ima(&self, l: &Layer, c_job: usize) -> (LayerReport, EnergyAccount) {
+        let ima = self.ima();
+        let map = DwMap::new(l, c_job);
+        let cost = ima.dw_layer_cost(&map);
+        (
+            LayerReport {
+                name: l.name.clone(),
+                engine: Engine::Ima,
+                cycles: cost.cycles,
+                energy_j: cost.energy.total_j(self.pm, self.cfg),
+                macs: l.macs(),
+                ops: l.ops(),
+                devices: map.devices_total(),
+            },
+            cost.energy,
+        )
+    }
+
+    fn dw_hybrid(&self, l: &Layer) -> (LayerReport, EnergyAccount) {
+        // software dw needs CHW: marshal the IMA's HWC output in, and the
+        // result back to HWC for the next IMA layer (paper §V-C)
+        let sw = self.sw();
+        let m_in = sw.marshal(l.hin * l.win * l.cin);
+        let dw = sw.layer_cost(l);
+        let m_out = sw.marshal(l.out_pixels() * l.cout);
+        let mut energy = EnergyAccount::default();
+        energy.add(&m_in.energy);
+        energy.add(&dw.energy);
+        energy.add(&m_out.energy);
+        let cycles = m_in.cycles + dw.cycles + m_out.cycles;
+        (
+            LayerReport {
+                name: l.name.clone(),
+                engine: Engine::Cores,
+                cycles,
+                energy_j: energy.total_j(self.pm, self.cfg),
+                macs: l.macs(),
+                ops: l.ops(),
+                devices: 0,
+            },
+            energy,
+        )
+    }
+
+    fn dw_on_accel(&self, l: &Layer) -> (LayerReport, EnergyAccount) {
+        let c = dwacc::dw_layer_cost(l, self.cfg, self.pm);
+        (
+            LayerReport {
+                name: l.name.clone(),
+                engine: Engine::DwAcc,
+                cycles: c.cycles,
+                energy_j: c.energy.total_j(self.pm, self.cfg),
+                macs: l.macs(),
+                ops: l.ops(),
+                devices: 0,
+            },
+            c.energy,
+        )
+    }
+}
+
+/// Run a whole network under a strategy — the entry point every figure uses.
+pub fn run_network(
+    net: &Network,
+    strategy: Strategy,
+    cfg: &SystemConfig,
+    pm: &PowerModel,
+) -> RunReport {
+    let ex = Executor::new(cfg, pm, strategy);
+    let mut layers = Vec::with_capacity(net.layers.len());
+    let mut total = EnergyAccount::default();
+    for l in &net.layers {
+        let (rep, acc) = ex.layer(l);
+        layers.push(rep);
+        total.add(&acc);
+    }
+    RunReport::from_parts(&net.name, strategy, cfg, pm, layers, &total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::bottleneck::bottleneck;
+
+    fn run(strategy: Strategy) -> RunReport {
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        run_network(&bottleneck(), strategy, &cfg, &pm)
+    }
+
+    /// The Fig. 9 calibration — the paper's headline ratios must hold in
+    /// shape: who wins, by roughly what factor.
+    #[test]
+    fn fig9_performance_ordering_and_ratios() {
+        let cores = run(Strategy::Cores);
+        let c8 = run(Strategy::ImaOnly { c_job: 8 });
+        let c16 = run(Strategy::ImaOnly { c_job: 16 });
+        let hy = run(Strategy::Hybrid);
+        let id = run(Strategy::ImaDw);
+
+        let r = |x: &RunReport| cores.cycles as f64 / x.cycles as f64;
+        // ordering
+        assert!(id.cycles < hy.cycles);
+        assert!(hy.cycles < c16.cycles);
+        assert!(c16.cycles < c8.cycles);
+        assert!(c8.cycles <= cores.cycles);
+        // bands around the paper's 1.23 / 2.27 / 4.6 / 11.5
+        assert!((1.0..1.6).contains(&r(&c8)), "cjob8 {:.2}x", r(&c8));
+        assert!((1.7..2.9).contains(&r(&c16)), "cjob16 {:.2}x", r(&c16));
+        // IMA+DW lands at ~14–15× here vs the paper's 11.5× — the per-job
+        // RTL overheads the silicon pays are not all recoverable from the
+        // text; EXPERIMENTS.md discusses the deviation. The *shape* (order
+        // of magnitude over CORES, ~3× over HYBRID) is the claim under test.
+        assert!((3.4..6.0).contains(&r(&hy)), "hybrid {:.2}x", r(&hy));
+        assert!((9.0..17.0).contains(&r(&id)), "ima+dw {:.2}x", r(&id));
+        let id_vs_hy = hy.cycles as f64 / id.cycles as f64;
+        assert!((2.0..4.0).contains(&id_vs_hy), "ima+dw/hybrid {id_vs_hy:.2}x (paper 2.6)");
+    }
+
+    #[test]
+    fn fig9_energy_efficiency_ordering() {
+        let cores = run(Strategy::Cores);
+        let hy = run(Strategy::Hybrid);
+        let id = run(Strategy::ImaDw);
+        let c16 = run(Strategy::ImaOnly { c_job: 16 });
+        assert!(id.tops_per_w() > hy.tops_per_w());
+        assert!(hy.tops_per_w() > cores.tops_per_w());
+        // paper: 9.2× CORES for IMA+DW, 3.4× for HYBRID
+        let e_id = id.tops_per_w() / cores.tops_per_w();
+        let e_hy = hy.tops_per_w() / cores.tops_per_w();
+        assert!((6.0..14.0).contains(&e_id), "IMA+DW eff {e_id:.2}x");
+        assert!((2.3..5.0).contains(&e_hy), "HYBRID eff {e_hy:.2}x");
+        // paper: cjob16 energy efficiency "comparable" to CORES; our model
+        // lands at ~2.9× (the analog fixed-energy share of near-empty jobs
+        // is the dominant unknown — EXPERIMENTS.md). The claim under test:
+        // dw-on-IMA efficiency is nowhere near IMA+DW's.
+        let e_c16 = c16.tops_per_w() / cores.tops_per_w();
+        assert!((0.4..5.5).contains(&e_c16), "cjob16 eff {e_c16:.2}x");
+        assert!(e_id > 2.0 * e_c16, "IMA+DW must dwarf dw-on-IMA efficiency");
+    }
+
+    #[test]
+    fn fig10_amdahl_story() {
+        // CORES: pw dominates; IMA_cjob: dw dominates; IMA+DW: balanced
+        let cores = run(Strategy::Cores);
+        let pw_cy: u64 = cores.layers[0].cycles + cores.layers[2].cycles;
+        assert!(pw_cy > cores.layers[1].cycles, "pw dominates in software");
+
+        let c16 = run(Strategy::ImaOnly { c_job: 16 });
+        let dw_cy = c16.layers[1].cycles;
+        assert!(
+            dw_cy > 2 * (c16.layers[0].cycles + c16.layers[2].cycles),
+            "dw dominates on the IMA"
+        );
+
+        let id = run(Strategy::ImaDw);
+        let parts: Vec<u64> = id.layers.iter().map(|l| l.cycles).collect();
+        let max = *parts.iter().max().unwrap() as f64;
+        let min = *parts.iter().min().unwrap() as f64;
+        assert!(max / min < 25.0, "IMA+DW balanced: {parts:?}");
+    }
+
+    #[test]
+    fn residual_always_on_cores() {
+        for s in Strategy::paper_lineup() {
+            let r = run(s);
+            assert_eq!(r.layers[3].engine, Engine::Cores, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn devices_accounting() {
+        let id = run(Strategy::ImaDw);
+        // pw expand + project mapped: 2 × 128 × 768 devices
+        assert_eq!(id.devices_used, 2 * 128 * 768);
+        let c16 = run(Strategy::ImaOnly { c_job: 16 });
+        assert_eq!(c16.devices_used, 2 * 128 * 768 + 9 * 768 * 16);
+    }
+}

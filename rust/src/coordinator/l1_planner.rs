@@ -1,0 +1,178 @@
+//! L1 (TCDM) memory planner — makes the paper's §VI residency assumption
+//! executable instead of assumed.
+//!
+//! The paper runs layer-to-layer inference "with the additional condition
+//! that all the input activations reside in the L1 memory" and argues that
+//! double buffering and activation tiling hide the L2 traffic when they
+//! don't fit. This planner:
+//!
+//! * allocates each layer's working set (input + output + dw weights for
+//!   the accelerator + residual source kept alive) against the 512 kB TCDM;
+//! * when a layer overflows, derives the spatial tiling factor that fits
+//!   and the DMA schedule (double-buffered halves);
+//! * verifies, per tile, that the transfer hides behind the engine time —
+//!   producing the latency *penalty* (usually zero) instead of a hope.
+
+use crate::arch::{PowerModel, SystemConfig};
+use crate::net::{LayerKind, Network};
+use crate::sim::dma::DmaModel;
+
+use super::{Executor, Strategy};
+
+/// Plan for one layer.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub name: String,
+    /// Full working set in bytes (in + out + weights resident in L1).
+    pub working_set: usize,
+    /// 1 = fully resident; >1 = spatial tiling factor applied.
+    pub tiles: usize,
+    /// DMA cycles that could NOT be hidden behind compute (adds latency).
+    pub exposed_dma_cy: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct L1Plan {
+    pub layers: Vec<LayerPlan>,
+    pub l1_bytes: usize,
+}
+
+impl L1Plan {
+    pub fn layers_tiled(&self) -> usize {
+        self.layers.iter().filter(|l| l.tiles > 1).count()
+    }
+
+    pub fn total_exposed_dma_cy(&self) -> u64 {
+        self.layers.iter().map(|l| l.exposed_dma_cy).sum()
+    }
+
+    pub fn peak_working_set(&self) -> usize {
+        self.layers.iter().map(|l| l.working_set).max().unwrap_or(0)
+    }
+}
+
+/// Residual liveness: bytes of earlier outputs that must stay in L1 while
+/// the block body executes.
+fn residual_live_bytes(net: &Network, idx: usize) -> usize {
+    net.layers
+        .iter()
+        .enumerate()
+        .skip(idx + 1)
+        .filter_map(|(_, l)| {
+            l.residual_from.and_then(|src| {
+                // `src`'s output is alive through layers (src, add]
+                if src <= idx {
+                    let s = &net.layers[src];
+                    Some(s.out_pixels() * s.cout)
+                } else {
+                    None
+                }
+            })
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Build the plan for a network under a strategy.
+pub fn plan(net: &Network, strategy: Strategy, cfg: &SystemConfig, pm: &PowerModel) -> L1Plan {
+    let l1 = cfg.tcdm_kb * 1024;
+    let dma = DmaModel::paper();
+    let ex = Executor::new(cfg, pm, strategy);
+    let mut out = L1Plan {
+        layers: Vec::new(),
+        l1_bytes: l1,
+    };
+
+    for (i, l) in net.layers.iter().enumerate() {
+        let dw_w = if l.kind == LayerKind::Dw { l.n_weights() } else { 0 };
+        let live = residual_live_bytes(net, i);
+        let ws = l.in_bytes() + l.out_bytes() + dw_w + live;
+
+        // fully resident (no DMA at all) when the plain working set fits;
+        // otherwise tile so that double-buffered halves fit (2 tile-inputs
+        // + 2 tile-outputs staged while weights/live tensors stay put)
+        let mut tiles = 1usize;
+        if ws > l1 {
+            tiles = 2;
+            while tiles < 64 {
+                let staged = 2 * (l.in_bytes() + l.out_bytes()) / tiles + dw_w + live;
+                if staged <= l1 {
+                    break;
+                }
+                tiles *= 2;
+            }
+        }
+
+        // can each tile's DMA hide behind its share of compute?
+        let (rep, _) = ex.layer(l);
+        let per_tile_cy = rep.cycles / tiles as u64;
+        let per_tile_bytes = (l.in_bytes() + l.out_bytes()) / tiles;
+        let dma_cy = dma.transfer_cy(per_tile_bytes);
+        let exposed = if tiles == 1 {
+            0
+        } else {
+            (dma_cy.saturating_sub(per_tile_cy)) * tiles as u64
+        };
+
+        out.layers.push(LayerPlan {
+            name: l.name.clone(),
+            working_set: ws,
+            tiles,
+            exposed_dma_cy: exposed,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::mobilenetv2::mobilenet_v2;
+
+    #[test]
+    fn mnv2_plan_validates_the_papers_assumption() {
+        let cfg = SystemConfig::scaled_up(33);
+        let pm = PowerModel::paper();
+        let net = mobilenet_v2(224);
+        let p = plan(&net, Strategy::ImaDw, &cfg, &pm);
+        assert_eq!(p.layers.len(), net.layers.len());
+        // early layers need tiling…
+        assert!(p.layers_tiled() >= 8, "{}", p.layers_tiled());
+        // …and double-buffered DMA hides *almost* everything: only the
+        // stride-2 dw layers (4× read:write on the fast accelerator)
+        // expose transfers, totalling <2 % of the 5.4 M-cycle inference —
+        // a sharper statement than the paper's blanket §VI assumption.
+        let exposed = p.total_exposed_dma_cy();
+        assert!(exposed > 0, "stride-2 dw should expose some DMA");
+        assert!(
+            (exposed as f64) < 0.02 * 5_440_000.0,
+            "exposed {exposed} cycles"
+        );
+    }
+
+    #[test]
+    fn bottleneck_fits_untiled() {
+        // the case-study block was *chosen* to fit 512 kB — the planner
+        // must agree (paper §V-C)
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        let net = crate::net::bottleneck::bottleneck();
+        let p = plan(&net, Strategy::ImaDw, &cfg, &pm);
+        assert_eq!(p.layers_tiled(), 0, "{:#?}", p.layers);
+        assert!(p.peak_working_set() <= 512 * 1024);
+    }
+
+    #[test]
+    fn residual_liveness_counted() {
+        let net = mobilenet_v2(224);
+        // inside bneck2_1 (which has an add), the block input must be live
+        let idx = net
+            .layers
+            .iter()
+            .position(|l| l.name == "bneck2_1_dw")
+            .unwrap();
+        assert!(residual_live_bytes(&net, idx) > 0);
+        // conv1 has no residual crossing it
+        assert_eq!(residual_live_bytes(&net, 0), 0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Run-level metrics: the quantities every paper figure reports.
+
+use crate::arch::{AreaModel, EnergyAccount, PowerModel, SystemConfig};
+use crate::util::units;
+
+use super::{Engine, Strategy};
+
+/// Per-layer outcome.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub engine: Engine,
+    pub cycles: u64,
+    pub energy_j: f64,
+    pub macs: u64,
+    pub ops: u64,
+    /// PCM devices this layer occupies (0 when not IMA-mapped).
+    pub devices: usize,
+}
+
+/// Whole-run outcome for one (network, strategy) pair.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub network: String,
+    pub strategy: Strategy,
+    pub cycles: u64,
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub ops: u64,
+    pub devices_used: usize,
+    pub layers: Vec<LayerReport>,
+}
+
+impl RunReport {
+    pub fn from_parts(
+        network: &str,
+        strategy: Strategy,
+        cfg: &SystemConfig,
+        pm: &PowerModel,
+        layers: Vec<LayerReport>,
+        accounts: &EnergyAccount,
+    ) -> RunReport {
+        let cycles: u64 = layers.iter().map(|l| l.cycles).sum();
+        let ops: u64 = layers.iter().map(|l| l.ops).sum();
+        let devices_used: usize = layers.iter().map(|l| l.devices).sum();
+        let time_s = cycles as f64 * cfg.freq.cycle_ns() * 1e-9;
+        RunReport {
+            network: network.into(),
+            strategy,
+            cycles,
+            time_s,
+            energy_j: accounts.total_j(pm, cfg),
+            ops,
+            devices_used,
+            layers,
+        }
+    }
+
+    pub fn gops(&self) -> f64 {
+        units::gops(self.ops, self.time_s)
+    }
+
+    pub fn tops_per_w(&self) -> f64 {
+        units::tops_per_w(self.ops, self.energy_j)
+    }
+
+    /// Area charged to the run: the non-IMA cluster plus the effective PCM
+    /// area of the mapped devices (padding included) — Fig. 9c convention,
+    /// see DESIGN.md §5 / EXPERIMENTS.md for the deviation discussion.
+    pub fn area_mm2(&self, cfg: &SystemConfig) -> f64 {
+        let base = AreaModel::paper();
+        let non_ima = base.total() - base.ima_subsystem;
+        let pcm = base.effective_pcm_mm2(cfg, self.devices_used);
+        non_ima + pcm + if self.devices_used > 0 { 0.10 } else { 0.0 }
+    }
+
+    pub fn gops_per_mm2(&self, cfg: &SystemConfig) -> f64 {
+        self.gops() / self.area_mm2(cfg)
+    }
+
+    pub fn inferences_per_s(&self) -> f64 {
+        if self.time_s > 0.0 {
+            1.0 / self.time_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Cycles spent per engine (the Fig. 10 breakdown).
+    pub fn engine_breakdown(&self) -> Vec<(Engine, u64)> {
+        let mut ima = 0;
+        let mut dw = 0;
+        let mut cores = 0;
+        for l in &self.layers {
+            match l.engine {
+                Engine::Ima => ima += l.cycles,
+                Engine::DwAcc => dw += l.cycles,
+                Engine::Cores => cores += l.cycles,
+            }
+        }
+        vec![(Engine::Ima, ima), (Engine::DwAcc, dw), (Engine::Cores, cores)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_layer(cycles: u64, engine: Engine) -> LayerReport {
+        LayerReport {
+            name: "l".into(),
+            engine,
+            cycles,
+            energy_j: 1e-6,
+            macs: 1000,
+            ops: 2000,
+            devices: 0,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        let mut acc = EnergyAccount::default();
+        acc.wall_cy = 300;
+        let r = RunReport::from_parts(
+            "net",
+            Strategy::Cores,
+            &cfg,
+            &pm,
+            vec![dummy_layer(100, Engine::Cores), dummy_layer(200, Engine::Ima)],
+            &acc,
+        );
+        assert_eq!(r.cycles, 300);
+        assert_eq!(r.ops, 4000);
+        assert!((r.time_s - 300.0 * 2e-9).abs() < 1e-15);
+        let bd = r.engine_breakdown();
+        assert_eq!(bd[0].1, 200); // IMA
+        assert_eq!(bd[2].1, 100); // cores
+    }
+
+    #[test]
+    fn area_includes_pcm_only_when_mapped() {
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        let acc = EnergyAccount::default();
+        let mut l = dummy_layer(10, Engine::Ima);
+        l.devices = 65536;
+        let with = RunReport::from_parts("n", Strategy::ImaDw, &cfg, &pm, vec![l], &acc);
+        let without = RunReport::from_parts(
+            "n",
+            Strategy::Cores,
+            &cfg,
+            &pm,
+            vec![dummy_layer(10, Engine::Cores)],
+            &acc,
+        );
+        assert!(with.area_mm2(&cfg) > without.area_mm2(&cfg) + 0.7);
+    }
+}

@@ -1,0 +1,61 @@
+//! The heterogeneous coordinator (the paper's system contribution).
+//!
+//! Maps every layer of a network onto {cores, IMA, DW accelerator} under one
+//! of the paper's four computation mappings (§V-C), drives the engine models,
+//! and aggregates cycles/energy into the metrics every figure reports:
+//!
+//! * `CORES`      — optimized parallel software on the 8 cores (baseline);
+//! * `IMA_cjobN`  — everything (incl. depth-wise, diagonal-mapped with
+//!                  C_job = N) on the IMA; residuals on the cores;
+//! * `HYBRID`     — point-wise on the IMA, depth-wise in software (the [8]
+//!                  configuration), with HWC↔CHW marshaling;
+//! * `IMA+DW`     — point-wise on the IMA, depth-wise on the dedicated
+//!                  accelerator, residuals/ancillary on the cores.
+
+pub mod executor;
+pub mod l1_planner;
+pub mod metrics;
+
+pub use executor::{run_network, Executor};
+pub use l1_planner::{plan as l1_plan, L1Plan};
+pub use metrics::{LayerReport, RunReport};
+
+/// The four computation mappings of Fig. 9 (+ Fig. 13's taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Cores,
+    ImaOnly { c_job: usize },
+    Hybrid,
+    ImaDw,
+}
+
+impl Strategy {
+    pub fn label(&self) -> String {
+        match self {
+            Strategy::Cores => "CORES".into(),
+            Strategy::ImaOnly { c_job } => format!("IMA_cjob{c_job}"),
+            Strategy::Hybrid => "HYBRID".into(),
+            Strategy::ImaDw => "IMA+DW".into(),
+        }
+    }
+
+    /// The Fig. 9 line-up.
+    pub fn paper_lineup() -> Vec<Strategy> {
+        vec![
+            Strategy::Cores,
+            Strategy::ImaOnly { c_job: 8 },
+            Strategy::ImaOnly { c_job: 16 },
+            Strategy::Hybrid,
+            Strategy::ImaDw,
+        ]
+    }
+}
+
+/// Which engine executes a layer under a strategy (used by reports and by
+/// the functional runtime to issue the same job stream).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Cores,
+    Ima,
+    DwAcc,
+}

@@ -1,0 +1,105 @@
+//! Classic DSP kernels on the programmable cores (paper §VII / Fig. 13
+//! discussion): modern embedded CV pipelines couple DNN inference with
+//! PCA, FFT, filtering or inverse kinematics — exactly the workloads that
+//! fixed-function IMC systems ([7], [31]) cannot host and that justify the
+//! SW+IMA+DIG.ACC computing model. Cycle models follow the XpulpV2 DSP
+//! throughput conventions of `arch::params` (fixed-point, 8 cores).
+
+use crate::arch::{EnergyAccount, SystemConfig};
+use crate::sim::event_unit::EventUnit;
+
+use super::kernels::CoresCost;
+
+pub struct DspKernels<'a> {
+    pub cfg: &'a SystemConfig,
+    eu: EventUnit,
+}
+
+impl<'a> DspKernels<'a> {
+    pub fn new(cfg: &'a SystemConfig) -> Self {
+        DspKernels {
+            cfg,
+            eu: EventUnit::paper(),
+        }
+    }
+
+    fn cost(&self, cycles: u64, duty: f64) -> CoresCost {
+        let wall = cycles + 2 * self.eu.barrier_cy;
+        let mut e = EnergyAccount::default();
+        e.wall_cy = wall;
+        e.core_active_cy = wall * self.cfg.n_cores as u64;
+        e.tcdm_duty_millicycles = (wall as f64 * duty * 1000.0) as u64;
+        CoresCost { cycles: wall, energy: e }
+    }
+
+    /// Radix-2 complex FFT of `n` points (fixed-point): 5·n·log2(n) MAC-ish
+    /// ops at the XpulpV2 sdotp rate, parallel across butterflies.
+    pub fn fft(&self, n: usize) -> CoresCost {
+        assert!(n.is_power_of_two());
+        let ops = 5 * n as u64 * (n as u64).ilog2() as u64;
+        let rate = self.cfg.sw_pw_macs_per_cycle; // complex MAC ≈ dotp unit
+        self.cost((ops as f64 / rate).ceil() as u64, 0.6)
+    }
+
+    /// FIR filter: `taps`-tap convolution over `n` samples.
+    pub fn fir(&self, n: usize, taps: usize) -> CoresCost {
+        let macs = (n * taps) as u64;
+        self.cost((macs as f64 / self.cfg.sw_pw_macs_per_cycle).ceil() as u64, 0.5)
+    }
+
+    /// PCA projection of a `dim`-vector onto `comps` components (a small
+    /// dense MVM — could also go to the IMA, but weights would evict DNN
+    /// tiles; the cores run it "for free").
+    pub fn pca_project(&self, dim: usize, comps: usize) -> CoresCost {
+        let macs = (dim * comps) as u64;
+        self.cost((macs as f64 / self.cfg.sw_pw_macs_per_cycle).ceil() as u64, 0.5)
+    }
+
+    /// Damped-least-squares inverse-kinematics iteration for a `joints`-DOF
+    /// chain: Jacobian build + 3 small MVMs per iteration.
+    pub fn inverse_kinematics(&self, joints: usize, iters: usize) -> CoresCost {
+        let per_iter = (3 * joints * joints + 9 * joints) as u64;
+        let macs = per_iter * iters as u64;
+        self.cost((macs as f64 / self.cfg.sw_pw_macs_per_cycle).ceil() as u64, 0.4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dsp(cfg: &SystemConfig) -> DspKernels<'_> {
+        DspKernels::new(cfg)
+    }
+
+    #[test]
+    fn fft_scales_n_log_n() {
+        let cfg = SystemConfig::paper();
+        let d = dsp(&cfg);
+        let c1k = d.fft(1024).cycles as f64;
+        let c4k = d.fft(4096).cycles as f64;
+        // 4096·12 / 1024·10 = 4.8×
+        assert!((c4k / c1k - 4.8).abs() < 0.3, "{}", c4k / c1k);
+    }
+
+    #[test]
+    fn dsp_stages_are_small_next_to_inference() {
+        // the §VII argument: classic DSP glue is cheap on the cluster cores
+        // compared to the 10 ms DNN — flexibility costs ~nothing
+        let cfg = SystemConfig::paper();
+        let d = dsp(&cfg);
+        let pipeline_cy = d.fir(224 * 224, 16).cycles
+            + d.fft(1024).cycles
+            + d.pca_project(1280, 64).cycles
+            + d.inverse_kinematics(6, 20).cycles;
+        let inference_cy = 5_400_000u64; // measured MNv2 e2e
+        assert!(pipeline_cy * 10 < inference_cy, "{pipeline_cy}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn fft_requires_power_of_two() {
+        let cfg = SystemConfig::paper();
+        dsp(&cfg).fft(1000);
+    }
+}

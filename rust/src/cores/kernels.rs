@@ -1,0 +1,180 @@
+//! Cycle/energy costs of the PULP-NN-style software kernels.
+
+use crate::arch::{EnergyAccount, SystemConfig};
+use crate::net::{Layer, LayerKind};
+use crate::sim::event_unit::EventUnit;
+
+#[derive(Clone, Debug, Default)]
+pub struct CoresCost {
+    pub cycles: u64,
+    pub energy: EnergyAccount,
+}
+
+pub struct SwKernels<'a> {
+    pub cfg: &'a SystemConfig,
+    pub eu: EventUnit,
+    /// Cores participating (8 in the cluster; 1 models the MCU baselines).
+    pub n_cores: usize,
+}
+
+impl<'a> SwKernels<'a> {
+    pub fn new(cfg: &'a SystemConfig) -> Self {
+        SwKernels {
+            cfg,
+            eu: EventUnit::paper(),
+            n_cores: cfg.n_cores,
+        }
+    }
+
+    pub fn with_cores(mut self, n: usize) -> Self {
+        self.n_cores = n;
+        self
+    }
+
+    /// Scale an 8-core throughput rate to `n_cores` (linear with a mild
+    /// parallel-efficiency knee below 8 — PULP-NN scales ~0.95/core).
+    fn scale_rate(&self, rate_8core: f64) -> f64 {
+        let n = self.n_cores as f64;
+        if self.n_cores >= 8 {
+            rate_8core * (n / 8.0)
+        } else {
+            rate_8core * (n / 8.0) * (1.0 + 0.05 * (8.0 - n) / 8.0)
+        }
+    }
+
+    fn cost(&self, cycles: u64, tcdm_duty: f64) -> CoresCost {
+        let mut e = EnergyAccount::default();
+        let wall = cycles + self.eu.parallel_section_overhead_cy(self.n_cores, self.n_cores);
+        e.wall_cy = wall;
+        e.core_active_cy = wall * self.n_cores as u64;
+        e.core_idle_cy = wall * (self.cfg.n_cores.saturating_sub(self.n_cores)) as u64;
+        e.tcdm_duty_millicycles = (wall as f64 * tcdm_duty * 1000.0) as u64;
+        CoresCost { cycles: wall, energy: e }
+    }
+
+    /// A whole layer in software (the CORES baseline of Fig. 9).
+    pub fn layer_cost(&self, l: &Layer) -> CoresCost {
+        match l.kind {
+            LayerKind::Conv | LayerKind::Fc => {
+                let rate = self.scale_rate(self.cfg.sw_pw_macs_per_cycle);
+                self.cost((l.macs() as f64 / rate).ceil() as u64, 0.5)
+            }
+            LayerKind::Dw => {
+                let rate = if self.n_cores == 1 {
+                    self.cfg.sw_dw_macs_per_cycle_1core
+                } else {
+                    self.scale_rate(self.cfg.sw_dw_macs_per_cycle)
+                };
+                self.cost((l.macs() as f64 / rate).ceil() as u64, 0.6)
+            }
+            LayerKind::Add => self.residual(l.out_pixels() * l.cout),
+            LayerKind::Pool => self.pool(l.hin * l.win * l.cin),
+            }
+    }
+
+    /// Residual connection: int8 saturating add of `elems` elements.
+    pub fn residual(&self, elems: usize) -> CoresCost {
+        let rate = self.scale_rate(self.cfg.sw_residual_elems_per_cycle);
+        self.cost((elems as f64 / rate).ceil() as u64, 0.8)
+    }
+
+    /// Digital accumulation of `n_partials` int32 partial tensors of
+    /// `elems` elements (row-split IMA layers): (n-1) adds per element.
+    pub fn accumulate_partials(&self, elems: usize, n_partials: usize) -> CoresCost {
+        if n_partials <= 1 {
+            return CoresCost::default();
+        }
+        let adds = elems * (n_partials - 1);
+        let rate = self.scale_rate(self.cfg.sw_accum_elems_per_cycle);
+        self.cost((adds as f64 / rate).ceil() as u64, 0.9)
+    }
+
+    /// Requantization (shift-round-clip int32→int8) of `elems` elements.
+    pub fn requant(&self, elems: usize) -> CoresCost {
+        let rate = self.scale_rate(self.cfg.sw_requant_elems_per_cycle);
+        self.cost((elems as f64 / rate).ceil() as u64, 0.7)
+    }
+
+    /// HWC↔CHW marshaling of `elems` elements (HYBRID mapping, §V-C).
+    pub fn marshal(&self, elems: usize) -> CoresCost {
+        let rate = self.scale_rate(self.cfg.sw_marshal_elems_per_cycle);
+        self.cost((elems as f64 / rate).ceil() as u64, 0.9)
+    }
+
+    /// Global average pooling over `elems` inputs.
+    pub fn pool(&self, elems: usize) -> CoresCost {
+        let rate = self.scale_rate(self.cfg.sw_pool_elems_per_cycle);
+        self.cost((elems as f64 / rate).ceil() as u64, 0.6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::bottleneck::bottleneck;
+    use crate::net::Layer;
+
+    fn sw(cfg: &SystemConfig) -> SwKernels<'_> {
+        SwKernels::new(cfg)
+    }
+
+    #[test]
+    fn pw_layer_rate() {
+        let cfg = SystemConfig::paper();
+        let l = Layer::conv("pw", 16, 16, 128, 768);
+        let c = sw(&cfg).layer_cost(&l);
+        let rate = l.macs() as f64 / c.cycles as f64;
+        assert!((rate - 15.5).abs() < 0.5, "{rate}");
+    }
+
+    #[test]
+    fn dw_software_is_the_bottleneck() {
+        // paper §IV-C: dw in software is slow (the accelerator's raison
+        // d'être) — per-MAC it is ~5× slower than pw
+        let cfg = SystemConfig::paper();
+        let net = bottleneck();
+        let pw = sw(&cfg).layer_cost(&net.layers[0]);
+        let dw = sw(&cfg).layer_cost(&net.layers[1]);
+        let pw_per_mac = pw.cycles as f64 / net.layers[0].macs() as f64;
+        let dw_per_mac = dw.cycles as f64 / net.layers[1].macs() as f64;
+        assert!(dw_per_mac / pw_per_mac > 4.0);
+    }
+
+    #[test]
+    fn single_core_dw_matches_26x_claim_base() {
+        let cfg = SystemConfig::paper();
+        let l = Layer::dw("d", 16, 16, 768, 1);
+        let c = sw(&cfg).with_cores(1).layer_cost(&l);
+        let rate = l.macs() as f64 / c.cycles as f64;
+        assert!((rate - 1.14).abs() < 0.05, "{rate}");
+    }
+
+    #[test]
+    fn whole_bottleneck_in_software() {
+        // the CORES bar of Fig. 9: ~3.5–4 M cycles for the case-study block
+        let cfg = SystemConfig::paper();
+        let net = bottleneck();
+        let total: u64 = net.layers.iter().map(|l| sw(&cfg).layer_cost(l).cycles).sum();
+        assert!((3_000_000..4_500_000).contains(&total), "{total}");
+    }
+
+    #[test]
+    fn ancillary_costs_scale_linearly() {
+        let cfg = SystemConfig::paper();
+        let s = sw(&cfg);
+        let r1 = s.residual(10_000).cycles;
+        let r2 = s.residual(20_000).cycles;
+        assert!((r2 as f64 / r1 as f64 - 2.0).abs() < 0.1);
+        assert_eq!(s.accumulate_partials(1000, 1).cycles, 0);
+        assert!(s.accumulate_partials(1000, 3).cycles > s.accumulate_partials(1000, 2).cycles);
+    }
+
+    #[test]
+    fn fewer_cores_cost_more_cycles() {
+        let cfg = SystemConfig::paper();
+        let l = Layer::conv("pw", 16, 16, 128, 128);
+        let c8 = sw(&cfg).layer_cost(&l).cycles;
+        let c2 = sw(&cfg).with_cores(2).layer_cost(&l).cycles;
+        assert!(c2 > 3 * c8);
+    }
+}

@@ -1,0 +1,14 @@
+//! Software execution on the 8 RISC-V cores (paper §III-B; PULP-NN [36]).
+//!
+//! The paper reports core performance as aggregate MAC/cycle figures for the
+//! XpulpV2 DSP kernels (sdotp-based 8-bit convolutions); this module turns
+//! layer shapes into cycle/energy costs using those calibrated rates, plus
+//! the ancillary operations the cores keep in every mapping: residual adds,
+//! partial-sum accumulation and requantization for row-split IMA layers,
+//! HWC↔CHW marshaling (HYBRID only), pooling and the classifier.
+
+pub mod dsp;
+pub mod kernels;
+
+pub use dsp::DspKernels;
+pub use kernels::{CoresCost, SwKernels};

@@ -1,0 +1,143 @@
+//! Cycle-exact schedule of the depth-wise engine (paper Fig. 5).
+//!
+//! Per 16-channel block:
+//!   * weight preload: 3×3×16 bytes through the 16 B/cycle port (9 cycles);
+//!   * per output column: window-buffer prime (3×3 pixels × 16 ch = 9 beats)
+//!     then the LD/MAC/ST inner loop:
+//!       - stride 1: the window slides one row → LD 3 pixels (3 cycles),
+//!         MAC 4 cycles (4 channels each), ST overlapped in cycle 4 →
+//!         4 cycles per output pixel;
+//!       - stride 2: the window slides two rows → LD 6 pixels dominates →
+//!         6 cycles per output pixel.
+//!
+//! Peak = 36 MAC/cycle (3×3×4 multipliers); the paper's quoted *average* of
+//! 29.7 MAC/cycle emerges from the prime/preload overheads and the stride-2
+//! layers (see `average_rate_matches_paper`).
+
+use crate::arch::{EnergyAccount, PowerModel, SystemConfig};
+use crate::net::Layer;
+
+pub const CH_BLOCK: usize = 16;
+
+#[derive(Clone, Debug, Default)]
+pub struct DwAccCost {
+    pub cycles: u64,
+    pub macs: u64,
+    pub energy: EnergyAccount,
+}
+
+impl DwAccCost {
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.cycles as f64
+        }
+    }
+}
+
+/// Cycles for one 16-channel block of an `hout`×`wout` output tile.
+fn block_cycles(hout: usize, wout: usize, stride: usize, setup_cy: u64) -> u64 {
+    let preload = 9u64; // 3×3×16 B at 16 B/cycle
+    let prime = 9u64; // first 3×3 window × 16 ch
+    let per_pixel = match stride {
+        1 => 4u64,
+        2 => 6u64,
+        _ => 2 + 2 * stride as u64, // generalization (unused by MNv2)
+    };
+    setup_cy + preload + wout as u64 * (prime + hout as u64 * per_pixel)
+}
+
+/// Full-layer cost on the dedicated accelerator.
+pub fn dw_layer_cost(l: &Layer, cfg: &SystemConfig, pm: &PowerModel) -> DwAccCost {
+    assert_eq!(l.k, 3, "the engine targets 3×3 depth-wise kernels");
+    let blocks = l.cout.div_ceil(CH_BLOCK) as u64;
+    let cycles = blocks * block_cycles(l.hout(), l.wout(), l.stride, cfg.dw_setup_cy);
+    let macs = l.macs();
+
+    let mut e = EnergyAccount::default();
+    e.wall_cy = cycles;
+    e.dw_active_cy = cycles;
+    // LD dominates the port: ~1 beat/cycle through the shared HWPE port
+    e.tcdm_duty_millicycles = cycles * 800;
+    // one core triggers then sleeps; others gated
+    e.core_active_cy = cfg.ima_layer_cfg_cy / 2;
+    e.core_idle_cy = cycles * cfg.n_cores as u64;
+    let _ = pm;
+    DwAccCost { cycles, macs, energy: e }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::mobilenetv2::mobilenet_v2;
+    use crate::net::{Layer, LayerKind};
+
+    fn cost(l: &Layer) -> DwAccCost {
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        dw_layer_cost(l, &cfg, &pm)
+    }
+
+    #[test]
+    fn steady_state_rate_approaches_36() {
+        // huge stride-1 layer: prime/preload amortize away
+        let l = Layer::dw("big", 512, 512, 16, 1);
+        let c = cost(&l);
+        let r = c.macs_per_cycle();
+        assert!((34.0..36.0).contains(&r), "{r}");
+    }
+
+    #[test]
+    fn stride2_rate_is_two_thirds() {
+        let l = Layer::dw("s2", 512, 512, 16, 2);
+        let r = cost(&l).macs_per_cycle();
+        assert!((22.0..24.5).contains(&r), "{r}");
+    }
+
+    #[test]
+    fn average_rate_matches_paper() {
+        // paper §IV-C: "an average performance of 29.7 MAC/cycle" — measured
+        // over the depth-wise layers the system actually runs (MobileNetV2)
+        let net = mobilenet_v2(224);
+        let mut macs = 0u64;
+        let mut cycles = 0u64;
+        for l in net.layers.iter().filter(|l| l.kind == LayerKind::Dw) {
+            let c = cost(l);
+            macs += c.macs;
+            cycles += c.cycles;
+        }
+        let avg = macs as f64 / cycles as f64;
+        assert!(
+            (27.0..33.0).contains(&avg),
+            "average {avg} MAC/cycle (paper: 29.7)"
+        );
+    }
+
+    #[test]
+    fn speedup_vs_single_core_software_about_26x() {
+        // paper §IV-C: 26× over a pure (single-core) software implementation
+        let cfg = SystemConfig::paper();
+        let l = Layer::dw("bneck", 16, 16, 768, 1);
+        let acc = cost(&l);
+        let sw_cy = l.macs() as f64 / cfg.sw_dw_macs_per_cycle_1core;
+        let speedup = sw_cy / acc.cycles as f64;
+        assert!((20.0..32.0).contains(&speedup), "{speedup}");
+    }
+
+    #[test]
+    fn channel_blocks_round_up() {
+        let l24 = Layer::dw("c24", 32, 32, 24, 1);
+        let l32 = Layer::dw("c32", 32, 32, 32, 1);
+        // 24 channels still needs 2 blocks
+        assert_eq!(cost(&l24).cycles, cost(&l32).cycles);
+    }
+
+    #[test]
+    fn energy_account_is_populated() {
+        let l = Layer::dw("e", 64, 64, 64, 1);
+        let c = cost(&l);
+        assert_eq!(c.energy.dw_active_cy, c.cycles);
+        assert!(c.energy.tcdm_duty_millicycles > 0);
+    }
+}

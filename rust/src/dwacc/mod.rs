@@ -1,0 +1,15 @@
+//! The dedicated depth-wise digital accelerator (paper §IV-C, Figs. 4/5).
+//!
+//! Weight-stationary 3×3 engine: 16 channels per block, a 3×3×16 weight
+//! buffer, a 4×3×16 sliding window buffer, a 36-multiplier MAC network
+//! (3×3×4 per cycle), ReLU + shift&clip epilogue. The LD/MAC/ST pipeline
+//! processes one output pixel (16 channels) per 4-cycle inner loop during
+//! the steady state → 36 MAC/cycle peak, 29.7 MAC/cycle average on real
+//! layers once preload/prime overheads are charged.
+//!
+//! [`datapath`] is the cycle-exact schedule of Fig. 5b; functional numerics
+//! live in the `dw3x3` Pallas artifacts.
+
+pub mod datapath;
+
+pub use datapath::{dw_layer_cost, DwAccCost};

@@ -1,0 +1,13 @@
+//! Hardware Processing Engine (HWPE) framework (paper §IV-A).
+//!
+//! Both accelerators are wrapped in the standardized HWPE shell: a
+//! memory-mapped *controller* (register file + ACQUIRE/TRIGGER protocol), an
+//! accelerator-specific *engine*, and a *streamer* that turns 3-D strided
+//! TCDM access patterns into coherent streams (with a re-aligner so the
+//! memory system never sees misaligned accesses).
+
+pub mod regfile;
+pub mod streamer;
+
+pub use regfile::{RegFile, RegfileError};
+pub use streamer::{Stream3d, StreamerPort};

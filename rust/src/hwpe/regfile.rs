@@ -1,0 +1,173 @@
+//! HWPE controller register file with the ACQUIRE/TRIGGER protocol
+//! (paper §IV-B): a core locks the accelerator, programs a job context,
+//! triggers, and is notified through the event unit. The model tracks both
+//! the functional state machine and the programming cost in cycles.
+
+/// Special register offsets (mirroring the hwpe-doc convention).
+pub const REG_ACQUIRE: u32 = 0x00;
+pub const REG_TRIGGER: u32 = 0x04;
+pub const REG_STATUS: u32 = 0x08;
+/// First job-context register.
+pub const REG_JOB_BASE: u32 = 0x40;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HwpeState {
+    Idle,
+    Acquired { owner: usize },
+    Running { owner: usize },
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum RegfileError {
+    #[error("accelerator busy (owned by core {0})")]
+    Busy(usize),
+    #[error("core {0} does not own the accelerator")]
+    NotOwner(usize),
+    #[error("trigger while no job context programmed")]
+    NoContext,
+}
+
+/// Latch-based register file + controller FSM.
+#[derive(Debug, Clone)]
+pub struct RegFile {
+    state: HwpeState,
+    regs: Vec<u32>,
+    programmed: bool,
+    /// peripheral-bus cycles consumed by control-plane traffic
+    pub cfg_cycles: u64,
+    /// cycles per control-interface access (peripheral interconnect hop)
+    access_cy: u64,
+}
+
+impl RegFile {
+    pub fn new(n_job_regs: usize) -> Self {
+        RegFile {
+            state: HwpeState::Idle,
+            regs: vec![0; n_job_regs],
+            programmed: false,
+            cfg_cycles: 0,
+            access_cy: 2,
+        }
+    }
+
+    pub fn state(&self) -> HwpeState {
+        self.state
+    }
+
+    /// Core reads ACQUIRE: locks if idle.
+    pub fn acquire(&mut self, core: usize) -> Result<(), RegfileError> {
+        self.cfg_cycles += self.access_cy;
+        match self.state {
+            HwpeState::Idle => {
+                self.state = HwpeState::Acquired { owner: core };
+                Ok(())
+            }
+            HwpeState::Acquired { owner } | HwpeState::Running { owner } => {
+                Err(RegfileError::Busy(owner))
+            }
+        }
+    }
+
+    /// Core writes one job-context register.
+    pub fn write_job_reg(&mut self, core: usize, idx: usize, val: u32) -> Result<(), RegfileError> {
+        self.cfg_cycles += self.access_cy;
+        match self.state {
+            HwpeState::Acquired { owner } if owner == core => {
+                self.regs[idx] = val;
+                self.programmed = true;
+                Ok(())
+            }
+            HwpeState::Acquired { owner } | HwpeState::Running { owner } => {
+                Err(RegfileError::NotOwner(if owner == core { core } else { core }))
+            }
+            HwpeState::Idle => Err(RegfileError::NotOwner(core)),
+        }
+    }
+
+    pub fn read_job_reg(&self, idx: usize) -> u32 {
+        self.regs[idx]
+    }
+
+    /// Core writes TRIGGER: starts the engine.
+    pub fn trigger(&mut self, core: usize) -> Result<(), RegfileError> {
+        self.cfg_cycles += self.access_cy;
+        match self.state {
+            HwpeState::Acquired { owner } if owner == core => {
+                if !self.programmed {
+                    return Err(RegfileError::NoContext);
+                }
+                self.state = HwpeState::Running { owner: core };
+                Ok(())
+            }
+            _ => Err(RegfileError::NotOwner(core)),
+        }
+    }
+
+    /// Engine raises end-of-computation: back to idle, owner released.
+    pub fn end_of_computation(&mut self) {
+        self.state = HwpeState::Idle;
+        self.programmed = false;
+    }
+
+    /// Cost of a full layer configuration: acquire + `n` register writes +
+    /// trigger, in peripheral-bus cycles.
+    pub fn layer_cfg_cost_cy(&self, n_regs: usize) -> u64 {
+        self.access_cy * (n_regs as u64 + 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_program_trigger_happy_path() {
+        let mut rf = RegFile::new(16);
+        rf.acquire(0).unwrap();
+        rf.write_job_reg(0, 3, 0xDEAD).unwrap();
+        assert_eq!(rf.read_job_reg(3), 0xDEAD);
+        rf.trigger(0).unwrap();
+        assert_eq!(rf.state(), HwpeState::Running { owner: 0 });
+        rf.end_of_computation();
+        assert_eq!(rf.state(), HwpeState::Idle);
+    }
+
+    #[test]
+    fn second_core_bounces_off_lock() {
+        let mut rf = RegFile::new(4);
+        rf.acquire(1).unwrap();
+        assert_eq!(rf.acquire(2), Err(RegfileError::Busy(1)));
+        assert!(rf.write_job_reg(2, 0, 1).is_err());
+        assert!(rf.trigger(2).is_err());
+    }
+
+    #[test]
+    fn trigger_without_context_rejected() {
+        let mut rf = RegFile::new(4);
+        rf.acquire(0).unwrap();
+        assert_eq!(rf.trigger(0), Err(RegfileError::NoContext));
+    }
+
+    #[test]
+    fn cfg_cycles_accumulate() {
+        let mut rf = RegFile::new(8);
+        rf.acquire(0).unwrap();
+        for i in 0..8 {
+            rf.write_job_reg(0, i, i as u32).unwrap();
+        }
+        rf.trigger(0).unwrap();
+        assert_eq!(rf.cfg_cycles, 2 * (1 + 8 + 1));
+        assert_eq!(rf.layer_cfg_cost_cy(8), rf.cfg_cycles);
+    }
+
+    #[test]
+    fn relock_after_completion() {
+        let mut rf = RegFile::new(2);
+        rf.acquire(5).unwrap();
+        rf.write_job_reg(5, 0, 9).unwrap();
+        rf.trigger(5).unwrap();
+        rf.end_of_computation();
+        rf.acquire(6).unwrap();
+        assert_eq!(rf.state(), HwpeState::Acquired { owner: 6 });
+    }
+}

@@ -1,0 +1,185 @@
+//! HWPE streamer: 3-D strided address generation + re-aligner (paper §IV-A).
+//!
+//! `Stream3d` is the functional address generator (three nested loops with
+//! configurable strides — the pattern the source/sink modules walk in TCDM);
+//! `StreamerPort` adds the timing view: beats through the data port, FIFO
+//! decoupling, re-aligner penalty for non-word-aligned bases. The IMA's
+//! "virtual IM2COL" (paper Fig. 3a) is a `Stream3d` over (K, K, Cin).
+
+/// Three-level strided pattern: for d0 in 0..len0 { for d1 in .. { for d2.. } }
+/// emitting `word_bytes`-sized elements at `base + d0*s0 + d1*s1 + d2*s2`.
+#[derive(Clone, Copy, Debug)]
+pub struct Stream3d {
+    pub base: usize,
+    pub len: [usize; 3],
+    pub stride: [isize; 3],
+    pub elem_bytes: usize,
+}
+
+impl Stream3d {
+    /// Contiguous 1-D stream.
+    pub fn linear(base: usize, elems: usize, elem_bytes: usize) -> Self {
+        Stream3d {
+            base,
+            len: [1, 1, elems],
+            stride: [0, 0, elem_bytes as isize],
+            elem_bytes,
+        }
+    }
+
+    /// The IMA's virtual IM2COL for one output pixel at (oy, ox) of an HWC
+    /// tensor: inner loop walks Cin contiguously, outer two walk the KxK
+    /// window with row stride `w * cin` (paper Fig. 3a).
+    pub fn im2col_window(
+        base: usize,
+        w: usize,
+        cin: usize,
+        k: usize,
+        stride: usize,
+        oy: usize,
+        ox: usize,
+    ) -> Self {
+        let row_bytes = (w * cin) as isize;
+        Stream3d {
+            base: base + (oy * stride * w + ox * stride) * cin,
+            len: [k, k, cin],
+            stride: [row_bytes, cin as isize, 1],
+            elem_bytes: 1,
+        }
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.len[0] * self.len[1] * self.len[2]
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_elems() * self.elem_bytes
+    }
+
+    /// Generate every address in order (tests / functional checks).
+    pub fn addresses(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.total_elems());
+        for d0 in 0..self.len[0] {
+            for d1 in 0..self.len[1] {
+                for d2 in 0..self.len[2] {
+                    let off = d0 as isize * self.stride[0]
+                        + d1 as isize * self.stride[1]
+                        + d2 as isize * self.stride[2] * self.elem_bytes as isize;
+                    out.push((self.base as isize + off) as usize);
+                }
+            }
+        }
+        out
+    }
+
+    /// Is the innermost run word-contiguous? (determines re-aligner work)
+    pub fn inner_contiguous(&self) -> bool {
+        self.stride[2] == 1 && self.elem_bytes == 1 || self.stride[2] == self.elem_bytes as isize
+    }
+}
+
+/// Timing view of a source or sink stream through the shared data port.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamerPort {
+    pub port_bytes: usize,
+    /// FIFO depth decouples bursts from memory stalls (paper §IV-A); the
+    /// model charges its fill latency once per stream.
+    pub fifo_depth: usize,
+}
+
+impl StreamerPort {
+    pub fn new(port_bytes: usize) -> Self {
+        StreamerPort {
+            port_bytes,
+            fifo_depth: 4,
+        }
+    }
+
+    /// Cycles to move the whole pattern through the port. Contiguous inner
+    /// runs move `port_bytes` per beat; non-contiguous inner runs degrade to
+    /// one element group per beat (the re-aligner gathers at element rate).
+    pub fn stream_cycles(&self, s: &Stream3d) -> u64 {
+        let inner_bytes = s.len[2] * s.elem_bytes;
+        let runs = (s.len[0] * s.len[1]) as u64;
+        let setup = 2; // address-generator prime + first FIFO fill
+        if s.inner_contiguous() {
+            let beats_per_run = inner_bytes.div_ceil(self.port_bytes) as u64;
+            // misaligned run base costs one extra re-aligner beat
+            let misalign = if s.base % self.port_bytes != 0 { 1 } else { 0 };
+            setup + runs * (beats_per_run + misalign)
+        } else {
+            setup + runs * s.len[2] as u64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn linear_addresses() {
+        let s = Stream3d::linear(100, 4, 1);
+        assert_eq!(s.addresses(), vec![100, 101, 102, 103]);
+        assert_eq!(s.total_bytes(), 4);
+    }
+
+    #[test]
+    fn im2col_window_walks_the_kxk_patch() {
+        // 4x4 image, cin=2, k=3, stride=1, output pixel (0,0)
+        let s = Stream3d::im2col_window(0, 4, 2, 3, 1, 0, 0);
+        let a = s.addresses();
+        assert_eq!(a.len(), 3 * 3 * 2);
+        // first row of the window: channels of pixels (0,0),(0,1),(0,2)
+        assert_eq!(&a[..6], &[0, 1, 2, 3, 4, 5]);
+        // second row starts at pixel (1,0) = byte 8
+        assert_eq!(a[6], 8);
+    }
+
+    #[test]
+    fn im2col_stride2_offsets() {
+        let s = Stream3d::im2col_window(0, 8, 4, 3, 2, 1, 2);
+        // window origin = (1*2, 2*2) = pixel (2,4) → byte (2*8+4)*4 = 80
+        assert_eq!(s.addresses()[0], 80);
+    }
+
+    #[test]
+    fn contiguous_stream_beats() {
+        let p = StreamerPort::new(16);
+        let s = Stream3d::linear(0, 256, 1);
+        assert_eq!(p.stream_cycles(&s), 2 + 16);
+        // misaligned base costs one extra beat
+        let s2 = Stream3d::linear(3, 256, 1);
+        assert_eq!(p.stream_cycles(&s2), 2 + 17);
+    }
+
+    #[test]
+    fn im2col_stream_timing_matches_window_rows() {
+        let p = StreamerPort::new(16);
+        // k=3, cin=128: 9 runs of 128 contiguous bytes = 9*8 beats + setup
+        let s = Stream3d::im2col_window(0, 16, 128, 3, 1, 0, 0);
+        assert_eq!(p.stream_cycles(&s), 2 + 9 * 8);
+    }
+
+    #[test]
+    fn address_count_always_matches_total() {
+        prop::check("stream3d_count", 128, |rng| {
+            let s = Stream3d {
+                base: rng.range_i64(0, 1024) as usize,
+                len: [
+                    rng.range_i64(1, 4) as usize,
+                    rng.range_i64(1, 4) as usize,
+                    rng.range_i64(1, 64) as usize,
+                ],
+                stride: [
+                    rng.range_i64(0, 512) as isize,
+                    rng.range_i64(0, 128) as isize,
+                    1,
+                ],
+                elem_bytes: 1,
+            };
+            assert_eq!(s.addresses().len(), s.total_elems());
+        });
+    }
+}

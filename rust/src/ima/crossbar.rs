@@ -1,0 +1,146 @@
+//! PCM crossbar device array: programming, readout, noise (paper §III-A, §VI).
+//!
+//! Functional MVM numerics live in the AOT artifacts (L1 Pallas kernel); this
+//! model owns the *state* view the coordinator needs: which cells hold which
+//! conductance, how long programming takes (iterative program-and-verify,
+//! 20–30× the MVM latency per row, §VI), and the conductance-error model used
+//! by the noise ablation (weights are perturbed host-side and flow through
+//! the same artifacts — DESIGN.md §3).
+
+use crate::arch::SystemConfig;
+use crate::util::rng::SplitMix64;
+
+/// One 256×256 PCM crossbar's programmed state.
+#[derive(Clone)]
+pub struct Crossbar {
+    pub rows: usize,
+    pub cols: usize,
+    /// Target 4-bit weights; `None` = unprogrammed (conductance ~0).
+    cells: Vec<Option<i8>>,
+    /// Rows that have been touched (programming is row-wise, §VI).
+    rows_programmed: Vec<bool>,
+}
+
+impl Crossbar {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Crossbar {
+            rows,
+            cols,
+            cells: vec![None; rows * cols],
+            rows_programmed: vec![false; rows],
+        }
+    }
+
+    pub fn program_tile(&mut self, row0: usize, col0: usize, tile: &[i8], trows: usize, tcols: usize) {
+        assert!(row0 + trows <= self.rows && col0 + tcols <= self.cols);
+        for r in 0..trows {
+            for c in 0..tcols {
+                let w = tile[r * tcols + c];
+                debug_assert!((-8..=7).contains(&w), "int4 range");
+                self.cells[(row0 + r) * self.cols + col0 + c] = Some(w);
+            }
+            self.rows_programmed[row0 + r] = true;
+        }
+    }
+
+    pub fn read_cell(&self, r: usize, c: usize) -> Option<i8> {
+        self.cells[r * self.cols + c]
+    }
+
+    pub fn programmed_cells(&self) -> usize {
+        self.cells.iter().filter(|c| c.is_some()).count()
+    }
+
+    pub fn programmed_rows(&self) -> usize {
+        self.rows_programmed.iter().filter(|&&b| b).count()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.programmed_cells() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Programming time for the rows touched so far (s): row-wise iterative
+    /// program-and-verify at `pcm_program_row_factor` × the MVM latency.
+    pub fn programming_time_s(&self, cfg: &SystemConfig) -> f64 {
+        self.programmed_rows() as f64 * cfg.pcm_program_row_factor * cfg.ima_mvm_ns * 1e-9
+    }
+
+    /// Extract the weights of a region as int8 values (unprogrammed = 0),
+    /// with optional conductance noise: w' = round(w + N(0, σ·|w_max|)),
+    /// clipped to int4 — the perturbed weights feed the same MVM artifacts.
+    pub fn read_region_noisy(
+        &self,
+        row0: usize,
+        col0: usize,
+        trows: usize,
+        tcols: usize,
+        sigma: f64,
+        rng: &mut SplitMix64,
+    ) -> Vec<i8> {
+        let mut out = Vec::with_capacity(trows * tcols);
+        for r in 0..trows {
+            for c in 0..tcols {
+                let w = self.cells[(row0 + r) * self.cols + col0 + c].unwrap_or(0) as f64;
+                let noisy = if sigma > 0.0 {
+                    (w + rng.next_gauss() * sigma * 8.0).round()
+                } else {
+                    w
+                };
+                out.push(noisy.clamp(-8.0, 7.0) as i8);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_and_read_back() {
+        let mut xb = Crossbar::new(256, 256);
+        let tile = vec![3i8; 4 * 5];
+        xb.program_tile(10, 20, &tile, 4, 5);
+        assert_eq!(xb.read_cell(10, 20), Some(3));
+        assert_eq!(xb.read_cell(13, 24), Some(3));
+        assert_eq!(xb.read_cell(14, 24), None);
+        assert_eq!(xb.programmed_cells(), 20);
+        assert_eq!(xb.programmed_rows(), 4);
+    }
+
+    #[test]
+    fn programming_time_magnitude() {
+        // full 256-row crossbar at 25×130 ns/row ≈ 0.83 ms — "considerably
+        // larger than an MVM" (paper §VI), i.e. ~6400 MVMs' worth
+        let mut xb = Crossbar::new(256, 256);
+        let tile = vec![1i8; 256 * 256];
+        xb.program_tile(0, 0, &tile, 256, 256);
+        let cfg = SystemConfig::paper();
+        let t = xb.programming_time_s(&cfg);
+        assert!((0.5e-3..1.5e-3).contains(&t), "{t}");
+        let mvms_equiv = t / (cfg.ima_mvm_ns * 1e-9);
+        assert!(mvms_equiv > 1000.0);
+    }
+
+    #[test]
+    fn noiseless_read_is_exact() {
+        let mut xb = Crossbar::new(16, 16);
+        let tile: Vec<i8> = (0..16).map(|i| (i % 16) as i8 - 8).collect();
+        xb.program_tile(0, 0, &tile, 1, 16);
+        let mut rng = SplitMix64::new(1);
+        let got = xb.read_region_noisy(0, 0, 1, 16, 0.0, &mut rng);
+        assert_eq!(got, tile);
+    }
+
+    #[test]
+    fn noisy_read_stays_int4_and_perturbs() {
+        let mut xb = Crossbar::new(16, 16);
+        let tile = vec![5i8; 16 * 16];
+        xb.program_tile(0, 0, &tile, 16, 16);
+        let mut rng = SplitMix64::new(2);
+        let got = xb.read_region_noisy(0, 0, 16, 16, 0.1, &mut rng);
+        assert!(got.iter().all(|&w| (-8..=7).contains(&w)));
+        assert!(got.iter().any(|&w| w != 5), "σ=0.1 must perturb something");
+    }
+}

@@ -1,0 +1,220 @@
+//! Layer → crossbar-job mapping (paper §V-C, Fig. 3a & Fig. 8).
+//!
+//! * Standard / point-wise convolutions: the streamer's virtual IM2COL maps
+//!   a K×K×Cin input volume on the word-lines (rows = K²·Cin) and Cout
+//!   filters across bit-lines; one *job* = one output pixel × one column
+//!   tile. Layers exceeding the array split into row tiles (digital partial
+//!   accumulation on the cores) and column tiles.
+//! * Depth-wise: diagonal block mapping with `c_job` channels per job —
+//!   rows = K²·c_job, cols = c_job, jobs = pixels × C/c_job, devices =
+//!   K²·C·c_job (paper's N_xbar formula).
+
+use crate::net::Layer;
+
+/// Shape of one crossbar job: what streams in/out and what's active.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobShape {
+    /// Bytes streamed in (input activations for the mapped rows).
+    pub in_bytes: usize,
+    /// Bytes streamed out (8-bit ADC outputs, or 4× for raw int32 partials).
+    pub out_bytes: usize,
+    /// Active word-lines / bit-lines — drive analog energy.
+    pub rows_used: usize,
+    pub cols_used: usize,
+    /// Active devices (rows_used × cols_used).
+    pub devices: usize,
+    /// MACs this job performs (true MACs, excluding padding zeros).
+    pub useful_macs: u64,
+}
+
+/// Mapping of a conv/fc layer onto (row tiles × col tiles) of S×S crossbars.
+#[derive(Clone, Debug)]
+pub struct ConvMap {
+    pub rows: usize,
+    pub cols: usize,
+    pub n_row_tiles: usize,
+    pub n_col_tiles: usize,
+    pub pixels: usize,
+    pub s: usize,
+}
+
+impl ConvMap {
+    pub fn new(l: &Layer, s: usize) -> ConvMap {
+        let rows = l.xbar_map_rows();
+        let cols = l.cout;
+        ConvMap {
+            rows,
+            cols,
+            n_row_tiles: rows.div_ceil(s),
+            n_col_tiles: cols.div_ceil(s),
+            pixels: l.out_pixels(),
+            s,
+        }
+    }
+
+    /// Total jobs for the layer: every output pixel visits every tile.
+    pub fn n_jobs(&self) -> usize {
+        self.pixels * self.n_row_tiles * self.n_col_tiles
+    }
+
+    /// Whether partial sums need digital accumulation on the cores.
+    pub fn row_split(&self) -> bool {
+        self.n_row_tiles > 1
+    }
+
+    /// Job shape for tile (rt, ct).
+    pub fn job(&self, rt: usize, ct: usize) -> JobShape {
+        let rows_used = (self.rows - rt * self.s).min(self.s);
+        let cols_used = (self.cols - ct * self.s).min(self.s);
+        let raw = self.row_split();
+        JobShape {
+            in_bytes: rows_used,
+            // raw partials leave as int32 (4 B), fused ADC output as int8
+            out_bytes: cols_used * if raw { 4 } else { 1 },
+            rows_used,
+            cols_used,
+            devices: rows_used * cols_used,
+            useful_macs: (rows_used * cols_used) as u64,
+        }
+    }
+
+    /// All tile job shapes with their multiplicity (pixels each).
+    pub fn tile_jobs(&self) -> Vec<(JobShape, usize)> {
+        let mut out = Vec::new();
+        for rt in 0..self.n_row_tiles {
+            for ct in 0..self.n_col_tiles {
+                out.push((self.job(rt, ct), self.pixels));
+            }
+        }
+        out
+    }
+
+    /// Crossbar devices the mapping occupies (no intra-tile padding).
+    pub fn devices_total(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Depth-wise on the IMA with `c_job` channels per job (the paper's two
+/// analyzed configurations: 8 and 16).
+#[derive(Clone, Debug)]
+pub struct DwMap {
+    pub c: usize,
+    pub c_job: usize,
+    pub k: usize,
+    pub pixels: usize,
+}
+
+impl DwMap {
+    pub fn new(l: &Layer, c_job: usize) -> DwMap {
+        DwMap {
+            c: l.cout,
+            c_job,
+            k: l.k,
+            pixels: l.out_pixels(),
+        }
+    }
+
+    pub fn jobs_per_pixel(&self) -> usize {
+        self.c.div_ceil(self.c_job)
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.pixels * self.jobs_per_pixel()
+    }
+
+    /// Devices occupied: N_xbar = K² · C · C_job (paper §V-C).
+    pub fn devices_total(&self) -> usize {
+        self.k * self.k * self.c * self.c_job
+    }
+
+    pub fn job(&self) -> JobShape {
+        let rows_used = self.k * self.k * self.c_job;
+        JobShape {
+            in_bytes: rows_used,
+            out_bytes: self.c_job,
+            rows_used,
+            cols_used: self.c_job,
+            devices: rows_used * self.c_job,
+            useful_macs: (self.k * self.k * self.c_job) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::bottleneck;
+    use crate::net::Layer;
+
+    #[test]
+    fn pointwise_single_tile() {
+        let l = Layer::conv("pw", 16, 16, 128, 256);
+        let m = ConvMap::new(&l, 256);
+        assert_eq!((m.n_row_tiles, m.n_col_tiles), (1, 1));
+        assert_eq!(m.n_jobs(), 256);
+        let j = m.job(0, 0);
+        assert_eq!(j.in_bytes, 128);
+        assert_eq!(j.out_bytes, 256);
+        assert!(!m.row_split());
+    }
+
+    #[test]
+    fn expand_layer_col_tiles() {
+        let l = Layer::conv("exp", 16, 16, 128, 768);
+        let m = ConvMap::new(&l, 256);
+        assert_eq!((m.n_row_tiles, m.n_col_tiles), (1, 3));
+        assert_eq!(m.n_jobs(), 256 * 3);
+    }
+
+    #[test]
+    fn project_layer_row_split_outputs_raw_partials() {
+        let l = Layer::conv("proj", 16, 16, 768, 128);
+        let m = ConvMap::new(&l, 256);
+        assert_eq!((m.n_row_tiles, m.n_col_tiles), (3, 1));
+        assert!(m.row_split());
+        let j = m.job(0, 0);
+        assert_eq!(j.out_bytes, 128 * 4); // int32 partials
+    }
+
+    #[test]
+    fn ragged_edge_tiles() {
+        let l = Layer::conv("cl", 7, 7, 320, 1280);
+        let m = ConvMap::new(&l, 256);
+        assert_eq!((m.n_row_tiles, m.n_col_tiles), (2, 5));
+        let edge = m.job(1, 0);
+        assert_eq!(edge.in_bytes, 320 - 256);
+        assert_eq!(m.n_jobs(), 49 * 10);
+    }
+
+    #[test]
+    fn conv1_virtual_im2col_rows() {
+        let l = Layer::conv("conv1", 224, 224, 3, 32).with_k(3, 2, 1);
+        let m = ConvMap::new(&l, 256);
+        assert_eq!(m.rows, 27);
+        assert_eq!(m.n_jobs(), 112 * 112);
+    }
+
+    #[test]
+    fn dw_map_matches_paper_device_formula() {
+        let net = bottleneck::bottleneck();
+        let dw = &net.layers[1];
+        for c_job in [8, 16] {
+            let m = DwMap::new(dw, c_job);
+            assert_eq!(m.devices_total(), 9 * 768 * c_job);
+            assert_eq!(m.n_jobs(), 256 * 768 / c_job);
+            let j = m.job();
+            assert_eq!(j.in_bytes, 9 * c_job);
+            assert_eq!(j.out_bytes, c_job);
+        }
+    }
+
+    #[test]
+    fn dw_useful_fraction_is_one_over_cjob() {
+        let net = bottleneck::bottleneck();
+        let m = DwMap::new(&net.layers[1], 16);
+        let j = m.job();
+        // diagonal mapping: only 1/c_job of the block is true weights
+        assert_eq!(j.useful_macs as usize * m.c_job, j.devices);
+    }
+}

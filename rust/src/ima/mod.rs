@@ -1,0 +1,15 @@
+//! The analog In-Memory Accelerator subsystem (paper §III-A, §IV-B).
+//!
+//! * [`crossbar`] — PCM device-array state: programming (iterative
+//!   program-and-verify), conductance readout, the noise model;
+//! * [`mapping`]  — how layers become crossbar jobs: point-wise/standard
+//!   convolutions via virtual im2col, depth-wise via diagonal C_job blocks;
+//! * [`subsys`]   — the timing model: job phase demands, sequential vs
+//!   pipelined schedules, per-layer cost/energy.
+
+pub mod crossbar;
+pub mod mapping;
+pub mod subsys;
+
+pub use mapping::{ConvMap, DwMap, JobShape};
+pub use subsys::{ImaSubsystem, LayerCost};

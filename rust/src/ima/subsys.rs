@@ -1,0 +1,278 @@
+//! IMA subsystem timing/energy model (paper §IV-B, §V-B).
+//!
+//! Turns a layer mapping into phase demands per job, schedules the job
+//! stream under the configured execution model, and accounts energy. The
+//! roofline study (Fig. 7) and every layer cost in Figs. 9/10/12 come from
+//! here.
+
+use crate::arch::{EnergyAccount, ExecModel, PowerModel, SystemConfig};
+use crate::sim::pipeline::{schedule_pipelined, schedule_sequential, steady_state_pipelined, JobPhases, Schedule};
+
+use super::mapping::{ConvMap, DwMap, JobShape};
+
+/// Cost of running one layer (or one layer's job stream) on the IMA.
+#[derive(Clone, Debug, Default)]
+pub struct LayerCost {
+    pub cycles: u64,
+    pub n_jobs: usize,
+    pub useful_macs: u64,
+    pub devices_active: usize,
+    pub energy: EnergyAccount,
+}
+
+impl LayerCost {
+    pub fn time_s(&self, cfg: &SystemConfig) -> f64 {
+        self.cycles as f64 * cfg.freq.cycle_ns() * 1e-9
+    }
+}
+
+pub struct ImaSubsystem<'a> {
+    pub cfg: &'a SystemConfig,
+    pub pm: &'a PowerModel,
+}
+
+impl<'a> ImaSubsystem<'a> {
+    pub fn new(cfg: &'a SystemConfig, pm: &'a PowerModel) -> Self {
+        ImaSubsystem { cfg, pm }
+    }
+
+    /// Phase demands of one job (cycles at the cluster clock).
+    pub fn phases(&self, j: &JobShape, dw_style: bool) -> JobPhases {
+        let c = self.cfg;
+        let bus = c.bus_bytes();
+        let setup = c.streamer_setup_cy;
+        JobPhases {
+            stream_in: setup + (j.in_bytes.div_ceil(bus)) as u64,
+            compute: c.ima_compute_cy(),
+            stream_out: setup + (j.out_bytes.div_ceil(bus)) as u64,
+            issue: if dw_style {
+                // diagonal dw jobs: cores rewrite source strides per job
+                c.ima_dw_job_cfg_cy
+            } else {
+                c.ima_trigger_cy + c.ima_job_issue_cy
+            },
+        }
+    }
+
+    fn schedule(&self, phases: JobPhases, n: u64, dw_style: bool) -> Schedule {
+        match (self.cfg.ima_exec, dw_style) {
+            // the diagonal dw job stream cannot be hardware-pipelined
+            (ExecModel::Sequential, _) | (_, true) => schedule_sequential((0..n).map(|_| phases)),
+            (ExecModel::Pipelined, false) => steady_state_pipelined(n, phases),
+        }
+    }
+
+    /// Exact (non-closed-form) pipelined schedule — used by tests to verify
+    /// the steady-state estimate and by heterogeneous job streams.
+    pub fn schedule_exact(&self, jobs: Vec<JobPhases>) -> Schedule {
+        match self.cfg.ima_exec {
+            ExecModel::Sequential => schedule_sequential(jobs),
+            ExecModel::Pipelined => schedule_pipelined(jobs),
+        }
+    }
+
+    fn account(&self, sched: &Schedule, job: &JobShape, n_jobs: u64, cfg_cy: u64) -> LayerCost {
+        let mut e = EnergyAccount::default();
+        let wall = sched.makespan + cfg_cy;
+        e.wall_cy = wall;
+        e.ima_digital_active_cy = sched.port_busy + sched.xbar_busy;
+        // streams occupy the TCDM at full port duty while active
+        e.tcdm_duty_millicycles = sched.port_busy * 1000;
+        // one core orchestrates (issue/config), the others are clock-gated
+        e.core_active_cy = cfg_cy + n_jobs * 2;
+        e.core_idle_cy = wall * self.cfg.n_cores as u64 - e.core_active_cy;
+        e.ima_analog_j = n_jobs as f64 * self.pm.ima_job_energy_j(self.cfg, job.rows_used, job.cols_used);
+        LayerCost {
+            cycles: wall,
+            n_jobs: n_jobs as usize,
+            useful_macs: job.useful_macs * n_jobs,
+            devices_active: job.devices,
+            energy: e,
+        }
+    }
+
+    /// Cost of a conv/fc layer mapped as `map` (all tiles, all pixels).
+    /// Digital accumulation/requant for row-split layers is *not* included
+    /// here — the coordinator adds the cores' share.
+    pub fn conv_layer_cost(&self, map: &ConvMap) -> LayerCost {
+        let mut total = LayerCost::default();
+        let cfg_cy = self.cfg.ima_layer_cfg_cy;
+        let mut first = true;
+        for (job, pixels) in map.tile_jobs() {
+            let phases = self.phases(&job, false);
+            let sched = self.schedule(phases, pixels as u64, false);
+            let c = self.account(&sched, &job, pixels as u64, if first { cfg_cy } else { 0 });
+            total.cycles += c.cycles;
+            total.n_jobs += c.n_jobs;
+            total.useful_macs += c.useful_macs;
+            total.devices_active += job.devices;
+            total.energy.add(&c.energy);
+            first = false;
+        }
+        total
+    }
+
+    /// Cost of a depth-wise layer mapped on the IMA with `c_job` channels.
+    pub fn dw_layer_cost(&self, map: &DwMap) -> LayerCost {
+        let job = map.job();
+        let phases = self.phases(&job, true);
+        let sched = self.schedule(phases, map.n_jobs() as u64, true);
+        let mut c = self.account(&sched, &job, map.n_jobs() as u64, self.cfg.ima_layer_cfg_cy);
+        c.devices_active = map.devices_total();
+        c
+    }
+
+    /// Achieved throughput in ops/s for a job stream (2 ops per useful MAC
+    /// — the paper charges only true MACs, padding contributes nothing).
+    pub fn achieved_ops_per_s(&self, cost: &LayerCost) -> f64 {
+        if cost.cycles == 0 {
+            return 0.0;
+        }
+        2.0 * cost.useful_macs as f64 / (cost.cycles as f64 * self.cfg.freq.cycle_ns() * 1e-9)
+    }
+
+    /// One roofline point (Fig. 7): a synthetic c×c point-wise layer.
+    /// Returns (operational intensity ops/B, achieved GOPS, roof GOPS).
+    pub fn roofline_point(&self, c_channels: usize, pixels: usize) -> (f64, f64, f64) {
+        let l = crate::net::workload::synthetic_pointwise(c_channels, pixels);
+        let map = ConvMap::new(&l, self.cfg.xbar_rows);
+        let cost = self.conv_layer_cost(&map);
+        let job = map.job(0, 0);
+        let ops = 2.0 * job.useful_macs as f64;
+        let bytes = (job.in_bytes + job.out_bytes) as f64;
+        let intensity = ops / bytes;
+        let achieved = self.achieved_ops_per_s(&cost) / 1e9;
+        // diagonal compute roof: ops per 130 ns at this utilization
+        let roof = ops / (self.cfg.ima_mvm_ns * 1e-9) / 1e9;
+        (intensity, achieved, roof)
+    }
+
+    /// Peak bandwidth of the IMA data interface (GB/s).
+    pub fn bus_bandwidth_gbps(&self) -> f64 {
+        self.cfg.bus_bytes() as f64 * self.cfg.freq.freq_hz() / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FreqPoint;
+    use crate::net::Layer;
+
+    fn sys<'a>(cfg: &'a SystemConfig, pm: &'a PowerModel) -> ImaSubsystem<'a> {
+        ImaSubsystem::new(cfg, pm)
+    }
+
+    #[test]
+    fn peak_958_gops_at_250mhz_pipelined_128bit() {
+        // paper §V-B: "a peak of 958 GOPS at 250 MHz, only 10 % less than
+        // the theoretical peak performance at the compute roof"
+        let cfg = SystemConfig::paper().with_freq(FreqPoint::LOW);
+        let pm = PowerModel::paper();
+        let ima = sys(&cfg, &pm);
+        let (_, achieved, roof) = ima.roofline_point(256, 65536);
+        assert!((roof - 1008.0).abs() < 1.0, "roof {roof}");
+        assert!(
+            (900.0..1000.0).contains(&achieved),
+            "achieved {achieved} (paper: 958)"
+        );
+    }
+
+    #[test]
+    fn sequential_at_500mhz_loses_a_third_to_streams() {
+        // Fig. 7a: in the sequential model 8–40 % of cycles are stream
+        // phases; at full utilization / 128-bit the gap is ~1/3
+        let cfg = SystemConfig::paper().with_exec(ExecModel::Sequential);
+        let pm = PowerModel::paper();
+        let ima = sys(&cfg, &pm);
+        let (_, achieved, roof) = ima.roofline_point(256, 4096);
+        let frac = achieved / roof;
+        assert!((0.45..0.80).contains(&frac), "seq/roof = {frac}");
+    }
+
+    #[test]
+    fn bus_32bit_is_memory_bound_at_500mhz() {
+        // Fig. 7a: "only with a 32-bit wide bus we are memory bound"
+        let pm = PowerModel::paper();
+        let narrow = SystemConfig::paper().with_bus_bits(32);
+        let wide = SystemConfig::paper().with_bus_bits(128);
+        let a32 = sys(&narrow, &pm).roofline_point(256, 4096).1;
+        let a128 = sys(&wide, &pm).roofline_point(256, 4096).1;
+        assert!(a128 > a32 * 1.5, "128-bit {a128} vs 32-bit {a32}");
+    }
+
+    #[test]
+    fn bus_beyond_128_does_not_help_at_250mhz() {
+        // Fig. 7c: optimal configuration is 128-bit; wider buys nothing
+        let pm = PowerModel::paper();
+        let b128 = SystemConfig::paper()
+            .with_freq(FreqPoint::LOW)
+            .with_bus_bits(128);
+        let b512 = SystemConfig::paper()
+            .with_freq(FreqPoint::LOW)
+            .with_bus_bits(512);
+        let a128 = sys(&b128, &pm).roofline_point(256, 8192).1;
+        let a512 = sys(&b512, &pm).roofline_point(256, 8192).1;
+        assert!((a512 - a128).abs() / a128 < 0.05, "{a128} vs {a512}");
+    }
+
+    #[test]
+    fn pipelined_beats_sequential_everywhere() {
+        let pm = PowerModel::paper();
+        for bus in [32, 64, 128, 256] {
+            for c in [64, 128, 256] {
+                let p = SystemConfig::paper().with_bus_bits(bus);
+                let s = p.clone().with_exec(ExecModel::Sequential);
+                let ap = sys(&p, &pm).roofline_point(c, 2048).1;
+                let as_ = sys(&s, &pm).roofline_point(c, 2048).1;
+                assert!(ap >= as_, "bus {bus} c {c}: {ap} < {as_}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_layer_cost_scales_with_tiles() {
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        let ima = sys(&cfg, &pm);
+        let small = ConvMap::new(&Layer::conv("a", 16, 16, 128, 256), 256);
+        let big = ConvMap::new(&Layer::conv("b", 16, 16, 128, 768), 256);
+        let cs = ima.conv_layer_cost(&small);
+        let cb = ima.conv_layer_cost(&big);
+        assert_eq!(cb.n_jobs, 3 * cs.n_jobs);
+        assert!(cb.cycles > 2 * cs.cycles);
+        assert!(cb.energy.ima_analog_j > 2.0 * cs.energy.ima_analog_j);
+    }
+
+    #[test]
+    fn dw_on_ima_is_inefficient() {
+        // the Fig. 9 story: dw on the IMA wastes devices and time
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        let ima = sys(&cfg, &pm);
+        let net = crate::net::bottleneck::bottleneck();
+        let dw8 = ima.dw_layer_cost(&DwMap::new(&net.layers[1], 8));
+        let dw16 = ima.dw_layer_cost(&DwMap::new(&net.layers[1], 16));
+        // c_job16 halves the job count → roughly halves the time
+        assert!(dw8.cycles > dw16.cycles);
+        let ratio = dw8.cycles as f64 / dw16.cycles as f64;
+        assert!((1.6..2.2).contains(&ratio), "{ratio}");
+        // and both are far slower than the pw layers of the same block
+        let pw = ima.conv_layer_cost(&ConvMap::new(&net.layers[0], 256));
+        assert!(dw16.cycles > 5 * pw.cycles);
+    }
+
+    #[test]
+    fn analog_energy_tracks_utilization() {
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        let ima = sys(&cfg, &pm);
+        let full = ConvMap::new(&Layer::conv("f", 8, 8, 256, 256), 256);
+        let tiny = ConvMap::new(&Layer::conv("t", 8, 8, 32, 32), 256);
+        let cf = ima.conv_layer_cost(&full);
+        let ct = ima.conv_layer_cost(&tiny);
+        let per_job_full = cf.energy.ima_analog_j / cf.n_jobs as f64;
+        let per_job_tiny = ct.energy.ima_analog_j / ct.n_jobs as f64;
+        assert!(per_job_full > 2.0 * per_job_tiny);
+    }
+}

@@ -1,0 +1,37 @@
+//! `imcc` — a heterogeneous in-memory computing cluster, reproduced in Rust.
+//!
+//! This library reproduces *A Heterogeneous In-Memory Computing Cluster For
+//! Flexible End-to-End Inference of Real-World Deep Neural Networks*
+//! (Garofalo et al., 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the cluster coordinator: a cycle/energy-accurate
+//!   model of the PULP cluster (8 RISC-V cores, 512 kB TCDM, logarithmic
+//!   interconnect), the analog In-Memory Accelerator (IMA) subsystem with
+//!   sequential/pipelined execution, the depth-wise digital accelerator, the
+//!   TILE&PACK multi-crossbar allocator, the layer-to-engine scheduler with
+//!   the paper's four mapping strategies, the state-of-the-art baseline
+//!   models, and the report generators for every figure/table in the paper.
+//! * **L2/L1 (python/, build-time only)** — the quantized MobileNetV2 and the
+//!   Pallas crossbar/depth-wise kernels, AOT-lowered to HLO text.
+//! * **runtime/** bridges the two: it loads `artifacts/*.hlo.txt` through the
+//!   PJRT C API (`xla` crate) and performs *functional* end-to-end inference
+//!   bit-exactly matching the JAX golden vectors — Python never runs on the
+//!   request path.
+//!
+//! Start from [`coordinator::run`] for end-to-end experiments or
+//! [`runtime::functional`] for functional inference; `DESIGN.md` maps every
+//! module to the paper section it reproduces.
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod cores;
+pub mod dwacc;
+pub mod hwpe;
+pub mod ima;
+pub mod net;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tilepack;
+pub mod util;

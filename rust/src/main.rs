@@ -1,0 +1,144 @@
+//! `imcc` — CLI for the heterogeneous in-memory computing cluster.
+//!
+//! Every figure/table of the paper regenerates from a subcommand; `all`
+//! writes the full machine-readable report set used by EXPERIMENTS.md.
+
+use imcc::arch::{ExecModel, FreqPoint, PowerModel, SystemConfig};
+use imcc::report;
+use imcc::util::cli::Args;
+use imcc::util::json::{obj, Json};
+
+const USAGE: &str = "\
+imcc — heterogeneous in-memory computing cluster (Garofalo et al. 2022 reproduction)
+
+USAGE: imcc <command> [options]
+
+commands (one per paper exhibit):
+  area                    Fig. 6b   cluster area breakdown
+  roofline                Fig. 7    IMA roofline (3 panels x 5 bus widths)
+  bottleneck              Fig. 9/10 Bottleneck case study, all five mappings
+  tilepack                Alg. 1    TILE&PACK of MobileNetV2 onto crossbars
+  e2e                     Fig. 12   end-to-end MobileNetV2 on the scaled-up system
+  table1                  Table I   comparison with the state of the art
+  ablate                  DESIGN.md §8 ablations (exec model, C_job, bus, L1/DMA, PCM programming)
+  fig13                   Fig. 13   four IMC computing models
+  infer [--tiny]          functional MobileNetV2 inference via PJRT artifacts
+                          (bit-exact vs the JAX golden logits)
+  all [--json FILE]       run everything; optionally dump JSON
+
+options:
+  --freq-mhz {500|250}    operating point            (default 500)
+  --bus BITS              IMA data-interface width   (default 128)
+  --sequential            sequential IMA execution   (default pipelined)
+  --artifacts DIR         artifacts directory        (default ./artifacts)
+  --noise SIGMA           PCM conductance noise for `infer` (default 0)
+  --batch N               after verification, serve N back-to-back requests
+";
+
+fn config_from(args: &Args) -> SystemConfig {
+    let mut cfg = SystemConfig::paper();
+    if args.opt_parse("freq-mhz", 500u32) == 250 {
+        cfg = cfg.with_freq(FreqPoint::LOW);
+    }
+    cfg = cfg.with_bus_bits(args.opt_parse("bus", 128usize));
+    if args.flag("sequential") {
+        cfg = cfg.with_exec(ExecModel::Sequential);
+    }
+    cfg
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let pm = PowerModel::paper();
+    let cfg = config_from(&args);
+
+    let Some(cmd) = args.subcommand.clone() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+
+    match cmd.as_str() {
+        "area" => report::fig6_area::generate(&cfg).print(),
+        "roofline" => report::fig7_roofline::generate().print(),
+        "bottleneck" => {
+            report::fig9_bottleneck::generate(&cfg, &pm).print();
+            if args.flag("breakdown") {
+                report::fig10_breakdown::generate(&cfg, &pm).print();
+            }
+        }
+        "tilepack" => {
+            let net = imcc::net::mobilenetv2::mobilenet_v2(224);
+            let tiles = imcc::tilepack::tile_network(&net, 256);
+            let p = imcc::tilepack::pack(&tiles, 256, args.flag("rotate"));
+            println!(
+                "TILE&PACK: {} tiles from {} layers -> {} crossbars (paper: 34)",
+                tiles.len(),
+                net.layers.len(),
+                p.n_bins()
+            );
+            for (i, u) in p.utilizations().iter().enumerate() {
+                println!("  IMA {i:>2}: {:>5.1}% utilized", u * 100.0);
+            }
+        }
+        "e2e" => report::fig12_e2e::generate(&pm).print(),
+        "ablate" => report::ablations::generate(&pm).print(),
+        "table1" => report::table1::generate(&pm).print(),
+        "fig13" => report::fig13_models::generate(&pm).print(),
+        "infer" => {
+            let dir = args.opt("artifacts").unwrap_or("artifacts").to_string();
+            let tiny = args.flag("tiny");
+            let sigma: f64 = args.opt_parse("noise", 0.0);
+            match imcc::runtime::functional::run_manifest_inference(&dir, tiny, sigma) {
+                Ok(summary) => println!("{summary}"),
+                Err(e) => {
+                    eprintln!("inference failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+            let batch: usize = args.opt_parse("batch", 0usize);
+            if batch > 0 {
+                // serving loop: weights stay programmed, N back-to-back requests
+                let m = imcc::runtime::Manifest::load(&dir, tiny).unwrap();
+                let mut rt = imcc::runtime::Runtime::load(&dir).unwrap();
+                imcc::runtime::functional::program_network(&mut rt, &m, sigma).unwrap();
+                let per = imcc::runtime::functional::serve_batch(&rt, &m, batch).unwrap();
+                println!(
+                    "serving: {batch} requests, {:.1} ms/inference amortized -> {:.1} inf/s host",
+                    per * 1e3,
+                    1.0 / per
+                );
+            }
+        }
+        "all" => {
+            let reports = vec![
+                report::fig6_area::generate(&cfg),
+                report::fig7_roofline::generate(),
+                report::fig9_bottleneck::generate(&cfg, &pm),
+                report::fig10_breakdown::generate(&cfg, &pm),
+                report::fig12_e2e::generate(&pm),
+                report::ablations::generate(&pm),
+                report::table1::generate(&pm),
+                report::fig13_models::generate(&pm),
+            ];
+            let mut all = Vec::new();
+            for r in &reports {
+                r.print();
+                println!();
+                all.push(obj([
+                    ("title", r.title.as_str().into()),
+                    ("data", r.data.clone()),
+                ]));
+            }
+            if let Some(path) = args.opt("json") {
+                let doc = Json::Arr(all).to_string_pretty();
+                std::fs::write(path, doc).expect("write json");
+                println!("wrote {path}");
+            }
+        }
+        "help" | "--help" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Layer and network descriptors (mirrors `python/compile/netspec.py`).
+
+/// Layer kinds — the paper's workload taxonomy (§V-C): dense MVM-shaped
+/// layers go to the IMA, depth-wise to the digital accelerator, the rest to
+/// the cores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard/point-wise convolution (IMA via virtual im2col).
+    Conv,
+    /// 3×3 depth-wise convolution.
+    Dw,
+    /// int8 saturating residual add (`residual_from` points at the source).
+    Add,
+    /// Global average pool.
+    Pool,
+    /// Fully connected (IMA, rows = Cin).
+    Fc,
+}
+
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub hin: usize,
+    pub win: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+    pub residual_from: Option<usize>,
+    /// Requantization shift (filled from the manifest for functional runs;
+    /// irrelevant to timing).
+    pub shift: i32,
+}
+
+impl Layer {
+    pub fn conv(name: &str, hin: usize, win: usize, cin: usize, cout: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            hin,
+            win,
+            cin,
+            cout,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            relu: false,
+            residual_from: None,
+            shift: 0,
+        }
+    }
+
+    pub fn with_k(mut self, k: usize, stride: usize, pad: usize) -> Layer {
+        self.k = k;
+        self.stride = stride;
+        self.pad = pad;
+        self
+    }
+
+    pub fn with_relu(mut self) -> Layer {
+        self.relu = true;
+        self
+    }
+
+    pub fn dw(name: &str, hin: usize, win: usize, c: usize, stride: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Dw,
+            hin,
+            win,
+            cin: c,
+            cout: c,
+            k: 3,
+            stride,
+            pad: 1,
+            relu: true,
+            residual_from: None,
+            shift: 0,
+        }
+    }
+
+    pub fn add(name: &str, h: usize, w: usize, c: usize, from: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Add,
+            hin: h,
+            win: w,
+            cin: c,
+            cout: c,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            relu: false,
+            residual_from: Some(from),
+            shift: 0,
+        }
+    }
+
+    pub fn hout(&self) -> usize {
+        match self.kind {
+            LayerKind::Add => self.hin,
+            LayerKind::Pool | LayerKind::Fc => 1,
+            _ => (self.hin + 2 * self.pad - self.k) / self.stride + 1,
+        }
+    }
+
+    pub fn wout(&self) -> usize {
+        match self.kind {
+            LayerKind::Add => self.win,
+            LayerKind::Pool | LayerKind::Fc => 1,
+            _ => (self.win + 2 * self.pad - self.k) / self.stride + 1,
+        }
+    }
+
+    /// Output pixels (spatial).
+    pub fn out_pixels(&self) -> usize {
+        self.hout() * self.wout()
+    }
+
+    /// Crossbar mapping rows (virtual-im2col depth) for IMA-mapped layers.
+    pub fn xbar_map_rows(&self) -> usize {
+        self.k * self.k * self.cin
+    }
+
+    /// MAC count (paper convention: 1 MAC = 2 ops).
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv | LayerKind::Fc => {
+                (self.out_pixels() * self.k * self.k * self.cin * self.cout) as u64
+            }
+            LayerKind::Dw => (self.out_pixels() * 9 * self.cout) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Total op count including non-MAC layers (adds/pools count 1 op/elem).
+    pub fn ops(&self) -> u64 {
+        match self.kind {
+            LayerKind::Add => (self.out_pixels() * self.cout) as u64,
+            LayerKind::Pool => (self.hin * self.win * self.cin) as u64,
+            _ => 2 * self.macs(),
+        }
+    }
+
+    /// Weight element count in the serialized layout.
+    pub fn n_weights(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv | LayerKind::Fc => self.k * self.k * self.cin * self.cout,
+            LayerKind::Dw => 9 * self.cin,
+            _ => 0,
+        }
+    }
+
+    pub fn in_bytes(&self) -> usize {
+        self.hin * self.win * self.cin
+    }
+
+    pub fn out_bytes(&self) -> usize {
+        self.out_pixels() * self.cout
+    }
+}
+
+/// A network is a flat layer list; residual edges are indices into it.
+#[derive(Clone, Debug, Default)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.ops()).sum()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.n_weights()).sum()
+    }
+
+    /// Validate residual links and inter-layer shape consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut prev_out: Option<(usize, usize, usize)> = None;
+        for (i, l) in self.layers.iter().enumerate() {
+            if let Some((h, w, c)) = prev_out {
+                if l.kind != LayerKind::Fc && (l.hin, l.win, l.cin) != (h, w, c) {
+                    return Err(format!(
+                        "layer {i} `{}` input {:?} != previous output {:?}",
+                        l.name,
+                        (l.hin, l.win, l.cin),
+                        (h, w, c)
+                    ));
+                }
+                if l.kind == LayerKind::Fc && l.cin != h * w * c {
+                    return Err(format!("fc layer {i} cin {} != {}", l.cin, h * w * c));
+                }
+            }
+            if let Some(src) = l.residual_from {
+                if src >= i {
+                    return Err(format!("layer {i} residual_from {src} is not earlier"));
+                }
+                let s = &self.layers[src];
+                if (s.hout(), s.wout(), s.cout) != (l.hin, l.win, l.cin) {
+                    return Err(format!(
+                        "layer {i} `{}` residual source shape mismatch",
+                        l.name
+                    ));
+                }
+            }
+            prev_out = Some((l.hout(), l.wout(), l.cout));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_algebra() {
+        let l = Layer::conv("c", 224, 224, 3, 32).with_k(3, 2, 1);
+        assert_eq!(l.hout(), 112);
+        assert_eq!(l.xbar_map_rows(), 27);
+        assert_eq!(l.macs(), 112 * 112 * 27 * 32);
+        assert_eq!(l.n_weights(), 27 * 32);
+    }
+
+    #[test]
+    fn dw_shape_algebra() {
+        let l = Layer::dw("d", 56, 56, 144, 2);
+        assert_eq!(l.hout(), 28);
+        assert_eq!(l.macs(), 28 * 28 * 9 * 144);
+        assert_eq!(l.n_weights(), 9 * 144);
+    }
+
+    #[test]
+    fn validate_catches_shape_break() {
+        let mut n = Network {
+            name: "x".into(),
+            layers: vec![
+                Layer::conv("a", 8, 8, 3, 16),
+                Layer::conv("b", 8, 8, 99, 16), // wrong cin
+            ],
+        };
+        assert!(n.validate().is_err());
+        n.layers[1].cin = 16;
+        assert!(n.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_bad_residual() {
+        let n = Network {
+            name: "x".into(),
+            layers: vec![
+                Layer::conv("a", 8, 8, 16, 16),
+                Layer::add("r", 8, 8, 16, 1), // self-reference (not earlier)
+            ],
+        };
+        assert!(n.validate().is_err());
+    }
+}

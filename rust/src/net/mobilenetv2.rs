@@ -1,0 +1,154 @@
+//! MobileNetV2 builder (Sandler et al. 2018), width 1.0, 224×224 — the
+//! paper's end-to-end workload (§VI). Mirrors `python/compile/netspec.py`
+//! exactly; the integration test `tests/integration_manifest.rs` asserts the
+//! two never drift.
+
+use super::layer::{Layer, LayerKind, Network};
+
+/// Inverted-residual settings: (expansion t, out channels c, repeats n,
+/// first-block stride s).
+pub const MNV2_BLOCKS: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+pub fn mobilenet_v2(resolution: usize) -> Network {
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut h = resolution;
+    let mut cin = 3usize;
+
+    layers.push(
+        Layer::conv("conv1", h, h, cin, 32)
+            .with_k(3, 2, 1)
+            .with_relu(),
+    );
+    h = layers.last().unwrap().hout();
+    cin = 32;
+
+    for (bi, (t, ch, n, s)) in MNV2_BLOCKS.iter().enumerate() {
+        for i in 0..*n {
+            let stride = if i == 0 { *s } else { 1 };
+            let prefix = format!("bneck{}_{}", bi + 1, i);
+            let block_in_idx = layers.len() - 1;
+            let hid = cin * t;
+            if *t != 1 {
+                layers.push(
+                    Layer::conv(&format!("{prefix}_exp"), h, h, cin, hid).with_relu(),
+                );
+            }
+            layers.push(Layer::dw(&format!("{prefix}_dw"), h, h, hid, stride));
+            h = layers.last().unwrap().hout();
+            layers.push(Layer::conv(&format!("{prefix}_proj"), h, h, hid, *ch));
+            if stride == 1 && cin == *ch {
+                layers.push(Layer::add(&format!("{prefix}_add"), h, h, *ch, block_in_idx));
+            }
+            cin = *ch;
+        }
+    }
+
+    layers.push(Layer::conv("conv_last", h, h, cin, 1280).with_relu());
+    layers.push(Layer {
+        name: "pool".into(),
+        kind: LayerKind::Pool,
+        hin: h,
+        win: h,
+        cin: 1280,
+        cout: 1280,
+        k: 1,
+        stride: 1,
+        pad: 0,
+        relu: false,
+        residual_from: None,
+        shift: 0,
+    });
+    layers.push(Layer {
+        name: "fc".into(),
+        kind: LayerKind::Fc,
+        hin: 1,
+        win: 1,
+        cin: 1280,
+        cout: 1000,
+        k: 1,
+        stride: 1,
+        pad: 0,
+        relu: false,
+        residual_from: None,
+        shift: 0,
+    });
+
+    let net = Network {
+        name: "mobilenetv2".into(),
+        layers,
+    };
+    debug_assert!(net.validate().is_ok(), "{:?}", net.validate());
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anatomy() {
+        let net = mobilenet_v2(224);
+        net.validate().unwrap();
+        assert_eq!(net.layers[0].hout(), 112);
+        let dws = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Dw)
+            .count();
+        assert_eq!(dws, 17);
+        let adds = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Add)
+            .count();
+        assert_eq!(adds, 10);
+        assert_eq!(net.layers.last().unwrap().cout, 1000);
+    }
+
+    #[test]
+    fn macs_match_the_literature() {
+        let net = mobilenet_v2(224);
+        let m = net.total_macs();
+        assert!(
+            (280_000_000..330_000_000).contains(&m),
+            "MobileNetV2 ≈ 300 MMAC, got {m}"
+        );
+    }
+
+    #[test]
+    fn conv_weight_volume_drives_tilepack() {
+        let net = mobilenet_v2(224);
+        // conv weights only — TILE&PACK maps the convolutional layers on
+        // crossbars (the paper's 34 IMAs = 2.23 M devices fit exactly the
+        // ~2.1 M conv weights + fragmentation; the 1.28 M-weight classifier
+        // is not crossbar-resident and runs on the cores in §VI)
+        let conv_w: usize = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Conv)
+            .map(|l| l.n_weights())
+            .sum();
+        assert!((2_000_000..2_300_000).contains(&conv_w), "{conv_w}");
+        // whole model incl. classifier ≈ 3.4 M params (the literature value)
+        assert!((3_300_000..3_600_000).contains(&net.total_weights()));
+    }
+
+    #[test]
+    fn final_stage_resolution_is_7x7() {
+        let net = mobilenet_v2(224);
+        let conv_last = net
+            .layers
+            .iter()
+            .find(|l| l.name == "conv_last")
+            .unwrap();
+        assert_eq!(conv_last.hin, 7);
+    }
+}

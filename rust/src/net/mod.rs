@@ -1,0 +1,14 @@
+//! DNN descriptors: layer shapes, the full MobileNetV2, the case-study
+//! Bottleneck, and synthetic workload generators for the roofline sweeps.
+//!
+//! The Rust network builder is independent of the Python `netspec.py` (the
+//! timing model must not require artifacts); `runtime::manifest` loads the
+//! Python-serialized network for functional inference, and an integration
+//! test asserts the two agree layer-by-layer.
+
+pub mod bottleneck;
+pub mod layer;
+pub mod mobilenetv2;
+pub mod workload;
+
+pub use layer::{Layer, LayerKind, Network};

@@ -1,0 +1,66 @@
+//! Synthetic workload generators (paper §V-B: "synthetic point-wise layers
+//! with different utilization rates of the IMC array, from 5 % to 100 %").
+
+use super::layer::{Layer, Network};
+
+/// A square point-wise layer with `c` in/out channels over `pixels` output
+/// pixels — crossbar utilization = c²/256².
+pub fn synthetic_pointwise(c: usize, pixels: usize) -> Layer {
+    let side = (pixels as f64).sqrt().ceil() as usize;
+    Layer::conv(&format!("synth_pw_{c}"), side, side, c, c)
+}
+
+/// The Fig. 7 sweep: utilization rates 5 %..100 % of a 256×256 crossbar
+/// (side = 256·sqrt(u)), serialized as equal-channel pw layers.
+pub fn utilization_sweep(xbar_side: usize) -> Vec<(f64, Layer)> {
+    let utils: [f64; 11] = [0.05, 0.10, 0.20, 0.30, 0.40, 0.50, 0.60, 0.70, 0.80, 0.90, 1.00];
+    utils
+        .iter()
+        .map(|&u| {
+            let c = ((xbar_side as f64) * u.sqrt()).round().max(1.0) as usize;
+            (u, synthetic_pointwise(c, 1024))
+        })
+        .collect()
+}
+
+/// The §V-B peak-performance workload: a full-utilization 256-in/256-out
+/// point-wise layer.
+pub fn peak_workload(pixels: usize) -> Network {
+    Network {
+        name: "peak_pw_256".into(),
+        layers: vec![synthetic_pointwise(256, pixels)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_5_to_100_percent() {
+        let sweep = utilization_sweep(256);
+        assert_eq!(sweep.len(), 11);
+        let (u0, l0) = &sweep[0];
+        assert!((*u0 - 0.05).abs() < 1e-9);
+        // 256 * sqrt(0.05) ≈ 57 channels
+        assert!((50..65).contains(&l0.cin), "{}", l0.cin);
+        let (ul, ll) = sweep.last().unwrap();
+        assert_eq!(*ul, 1.0);
+        assert_eq!(ll.cin, 256);
+    }
+
+    #[test]
+    fn utilization_is_c_squared() {
+        for (u, l) in utilization_sweep(256) {
+            let real = (l.cin * l.cout) as f64 / (256.0 * 256.0);
+            assert!((real - u).abs() < 0.02, "u={u} real={real}");
+        }
+    }
+
+    #[test]
+    fn peak_workload_saturates_crossbar() {
+        let n = peak_workload(1024);
+        assert_eq!(n.layers[0].xbar_map_rows(), 256);
+        assert_eq!(n.layers[0].cout, 256);
+    }
+}

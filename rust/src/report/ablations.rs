@@ -1,0 +1,203 @@
+//! Ablations beyond the paper's figures (DESIGN.md §8) — quantifying the
+//! design choices the paper asserts:
+//!
+//! * sequential vs pipelined IMA on the *end-to-end* network (Fig. 7 only
+//!   shows synthetic layers);
+//! * C_job sweep for depth-wise-on-IMA (the paper reports only 8 and 16);
+//! * IMA bus-width sweep end-to-end (the paper fixes 128-bit);
+//! * L1 residency + DMA double-buffering check (§VI *assumes* activations
+//!   fit L1 and DMA hides; we verify per layer);
+//! * PCM programming one-time cost (§VI quotes 20–30× MVM latency per row).
+
+use crate::arch::{ExecModel, PowerModel, SystemConfig};
+use crate::coordinator::{run_network, Strategy};
+use crate::ima::{DwMap, ImaSubsystem};
+use crate::net::mobilenetv2::mobilenet_v2;
+use crate::net::{bottleneck, LayerKind};
+use crate::util::json::{obj, Json};
+use crate::util::table::{f, Table};
+
+use super::Report;
+
+pub fn generate(pm: &PowerModel) -> Report {
+    let mut text = String::new();
+    let mut data = Vec::new();
+
+    // ---- 1. sequential vs pipelined, end to end --------------------------
+    let net = mobilenet_v2(224);
+    let n_xbars = {
+        let tiles = crate::tilepack::tile_network(&net, 256);
+        crate::tilepack::pack(&tiles, 256, false).n_bins()
+    };
+    let mut t = Table::new(
+        "ablation 1 — IMA execution model, end-to-end MobileNetV2",
+        &["exec model", "latency", "energy", "inf/s"],
+    );
+    let mut seq_pipe = Vec::new();
+    for exec in [ExecModel::Sequential, ExecModel::Pipelined] {
+        let cfg = SystemConfig::scaled_up(n_xbars).with_exec(exec);
+        let r = run_network(&net, Strategy::ImaDw, &cfg, pm);
+        t.row([
+            format!("{exec:?}"),
+            crate::util::units::fmt_time(r.time_s),
+            crate::util::units::fmt_energy(r.energy_j),
+            f(r.inferences_per_s(), 1),
+        ]);
+        seq_pipe.push(obj([
+            ("exec", format!("{exec:?}").into()),
+            ("time_s", r.time_s.into()),
+            ("energy_j", r.energy_j.into()),
+        ]));
+    }
+    text.push_str(&t.render());
+    data.push(("exec_model", Json::Arr(seq_pipe)));
+
+    // ---- 2. C_job sweep ---------------------------------------------------
+    let bn = bottleneck::bottleneck();
+    let cfg = SystemConfig::paper();
+    let ima = ImaSubsystem::new(&cfg, pm);
+    let mut t = Table::new(
+        "ablation 2 — depth-wise-on-IMA C_job sweep (case-study dw layer)",
+        &["C_job", "jobs", "devices", "cycles", "MAC/cycle"],
+    );
+    let mut cjob_rows = Vec::new();
+    for c_job in [1usize, 2, 4, 8, 16, 32, 64] {
+        let map = DwMap::new(&bn.layers[1], c_job);
+        let cost = ima.dw_layer_cost(&map);
+        let rate = cost.useful_macs as f64 / cost.cycles as f64;
+        t.row([
+            c_job.to_string(),
+            map.n_jobs().to_string(),
+            map.devices_total().to_string(),
+            cost.cycles.to_string(),
+            f(rate, 2),
+        ]);
+        cjob_rows.push(obj([
+            ("c_job", c_job.into()),
+            ("devices", map.devices_total().into()),
+            ("cycles", (cost.cycles as i64).into()),
+        ]));
+    }
+    text.push_str(&t.render());
+    text.push_str(
+        "reading: doubling C_job halves time but doubles wasted devices — the\n\
+         paper's 8/16 sit at the knee; even C_job=64 stays far from the DW\n\
+         accelerator's 29.7 MAC/cycle.\n\n",
+    );
+    data.push(("cjob_sweep", Json::Arr(cjob_rows)));
+
+    // ---- 3. bus-width sweep end-to-end -------------------------------------
+    let mut t = Table::new(
+        "ablation 3 — IMA bus width, end-to-end MobileNetV2 (pipelined)",
+        &["bus", "latency", "vs 128-bit"],
+    );
+    let base = {
+        let cfg = SystemConfig::scaled_up(n_xbars).with_bus_bits(128);
+        run_network(&net, Strategy::ImaDw, &cfg, pm).time_s
+    };
+    let mut bus_rows = Vec::new();
+    for bus in [32usize, 64, 128, 256, 512] {
+        let cfg = SystemConfig::scaled_up(n_xbars).with_bus_bits(bus);
+        let r = run_network(&net, Strategy::ImaDw, &cfg, pm);
+        t.row([
+            format!("{bus}b"),
+            crate::util::units::fmt_time(r.time_s),
+            format!("{:+.1}%", 100.0 * (r.time_s - base) / base),
+        ]);
+        bus_rows.push(obj([("bus", bus.into()), ("time_s", r.time_s.into())]));
+    }
+    text.push_str(&t.render());
+    data.push(("bus_sweep", Json::Arr(bus_rows)));
+
+    // ---- 4. L1 residency + DMA double-buffering (the L1 planner) ----------
+    let cfg = SystemConfig::scaled_up(n_xbars);
+    let lp = crate::coordinator::l1_plan(&net, Strategy::ImaDw, &cfg, pm);
+    let e2e = run_network(&net, Strategy::ImaDw, &cfg, pm);
+    let exposed = lp.total_exposed_dma_cy();
+    text.push_str(&format!(
+        "ablation 4 — L1 residency (planner): {} of {} layers need spatial \
+         tiling against the 512 kB TCDM (peak working set {} kB); \
+         double-buffered DMA hides all transfers except the stride-2 \
+         depth-wise layers, exposing {} cycles = {:.1}% of the inference → \
+         the paper's \"resident in L1\" §VI assumption is near-free, not \
+         free.\n\n",
+        lp.layers_tiled(),
+        net.layers.len(),
+        lp.peak_working_set() / 1024,
+        exposed,
+        100.0 * exposed as f64 / e2e.cycles as f64
+    ));
+    data.push(("l1_layers_tiled", Json::Num(lp.layers_tiled() as f64)));
+    data.push(("l1_exposed_dma_cy", Json::Num(exposed as f64)));
+
+    // ---- 5. PCM programming one-time cost ----------------------------------
+    let rows_programmed: usize = net
+        .layers
+        .iter()
+        .filter(|l| l.kind == LayerKind::Conv)
+        .map(|l| l.xbar_map_rows().min(256) * l.cout.div_ceil(256)
+            + l.xbar_map_rows().saturating_sub(256))
+        .sum();
+    let prog_s = rows_programmed as f64 * cfg.pcm_program_row_factor * cfg.ima_mvm_ns * 1e-9;
+    text.push_str(&format!(
+        "ablation 5 — PCM programming: ~{rows_programmed} crossbar rows, \
+         {:.1} ms one-time program-and-verify (≈{:.0}× one inference) — why \
+         §VI rules out inference-time reprogramming.\n",
+        prog_s * 1e3,
+        prog_s / 10.1e-3
+    ));
+    data.push(("pcm_program_s", Json::Num(prog_s)));
+
+    Report {
+        title: "ablations".into(),
+        text,
+        data: Json::Obj(data.into_iter().map(|(k, v)| (k.to_string(), v)).collect()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipelined_beats_sequential_e2e() {
+        let pm = PowerModel::paper();
+        let r = generate(&pm);
+        let arr = r.data.req("exec_model").as_arr().unwrap();
+        let seq = arr[0].req("time_s").as_f64().unwrap();
+        let pipe = arr[1].req("time_s").as_f64().unwrap();
+        assert!(pipe < seq);
+        // sequential costs tens of percent end to end
+        assert!(seq / pipe > 1.1, "{}", seq / pipe);
+    }
+
+    #[test]
+    fn cjob_monotonic_in_devices_and_speed() {
+        let pm = PowerModel::paper();
+        let r = generate(&pm);
+        let rows = r.data.req("cjob_sweep").as_arr().unwrap();
+        for w in rows.windows(2) {
+            assert!(w[1].req("devices").as_i64() > w[0].req("devices").as_i64());
+            assert!(w[1].req("cycles").as_i64() < w[0].req("cycles").as_i64());
+        }
+    }
+
+    #[test]
+    fn bus_width_knee_at_128() {
+        let pm = PowerModel::paper();
+        let r = generate(&pm);
+        let rows = r.data.req("bus_sweep").as_arr().unwrap();
+        let t = |i: usize| rows[i].req("time_s").as_f64().unwrap();
+        // 32b noticeably worse than 128b; 512b no better than 128b
+        assert!(t(0) > t(2) * 1.05, "32b {} vs 128b {}", t(0), t(2));
+        assert!((t(4) - t(2)).abs() / t(2) < 0.02);
+    }
+
+    #[test]
+    fn programming_dwarfs_inference() {
+        let pm = PowerModel::paper();
+        let r = generate(&pm);
+        let prog = r.data.req("pcm_program_s").as_f64().unwrap();
+        assert!(prog > 10.1e-3, "{prog}");
+    }
+}

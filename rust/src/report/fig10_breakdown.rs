@@ -1,0 +1,107 @@
+//! Fig. 10: normalized performance vs CORES (left: pure point-wise;
+//! right: whole Bottleneck) with the per-layer execution breakdown that
+//! visualizes Amdahl's effect moving between mappings.
+
+use crate::arch::{PowerModel, SystemConfig};
+use crate::coordinator::{run_network, Strategy};
+use crate::net::bottleneck::bottleneck;
+use crate::net::{Layer, Network};
+use crate::util::json::{obj, Json};
+use crate::util::table::{f, Table};
+
+use super::Report;
+
+/// A pure point-wise workload (the left panel).
+fn pointwise_only() -> Network {
+    let net = bottleneck();
+    Network {
+        name: "pointwise_only".into(),
+        layers: vec![
+            Layer { residual_from: None, ..net.layers[0].clone() },
+            net.layers[2].clone(),
+        ],
+    }
+}
+
+pub fn generate(cfg: &SystemConfig, pm: &PowerModel) -> Report {
+    let pw_net = pointwise_only();
+    let full = bottleneck();
+
+    // left panel: point-wise speedup IMA vs CORES
+    let pw_cores = run_network(&pw_net, Strategy::Cores, cfg, pm);
+    let pw_ima = run_network(&pw_net, Strategy::ImaDw, cfg, pm);
+    let pw_speedup = pw_cores.cycles as f64 / pw_ima.cycles as f64;
+
+    // right panel: per-layer breakdown under each mapping
+    let mut t = Table::new(
+        "Fig. 10 (right) — Bottleneck execution breakdown (cycles)",
+        &["mapping", "pw_exp", "dw", "pw_proj", "residual", "total", "norm perf"],
+    );
+    let cores = run_network(&full, Strategy::Cores, cfg, pm);
+    let mut rows = Vec::new();
+    for s in Strategy::paper_lineup() {
+        let r = run_network(&full, s, cfg, pm);
+        let cy: Vec<u64> = r.layers.iter().map(|l| l.cycles).collect();
+        let norm = cores.cycles as f64 / r.cycles as f64;
+        t.row([
+            s.label(),
+            cy[0].to_string(),
+            cy[1].to_string(),
+            cy[2].to_string(),
+            cy[3].to_string(),
+            r.cycles.to_string(),
+            f(norm, 2),
+        ]);
+        rows.push(obj([
+            ("mapping", s.label().into()),
+            ("pw_exp_cy", (cy[0] as i64).into()),
+            ("dw_cy", (cy[1] as i64).into()),
+            ("pw_proj_cy", (cy[2] as i64).into()),
+            ("residual_cy", (cy[3] as i64).into()),
+            ("norm_perf", norm.into()),
+        ]));
+    }
+    let mut text = format!(
+        "Fig. 10 (left) — point-wise only: IMA = {pw_speedup:.1}x CORES\n\n"
+    );
+    text.push_str(&t.render());
+    Report {
+        title: "fig10_breakdown".into(),
+        text,
+        data: obj([
+            ("pointwise_speedup", pw_speedup.into()),
+            ("breakdown", Json::Arr(rows)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pointwise_speedup_is_large() {
+        // left panel: the IMA shines on dense MVM layers (tens of ×)
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        let r = generate(&cfg, &pm);
+        let s = r.data.req("pointwise_speedup").as_f64().unwrap();
+        assert!((10.0..60.0).contains(&s), "{s}");
+    }
+
+    #[test]
+    fn dw_dominates_ima_only_rows() {
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        let r = generate(&cfg, &pm);
+        let rows = r.data.req("breakdown").as_arr().unwrap();
+        let c16 = rows
+            .iter()
+            .find(|x| x.req("mapping").as_str() == Some("IMA_cjob16"))
+            .unwrap();
+        assert!(
+            c16.req("dw_cy").as_i64().unwrap()
+                > 3 * c16.req("pw_exp_cy").as_i64().unwrap()
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! Fig. 12: end-to-end MobileNetV2 on the scaled-up (34-crossbar) system.
+//!
+//! (a) per-layer latency/energy/efficiency; (b) the TILE&PACK mapping;
+//! (c) latency+energy breakdown of the conv2d and Bottleneck layers.
+//! Paper totals: 10.1 ms, 482 µJ, 99 inf/s.
+
+use crate::arch::{PowerModel, SystemConfig};
+use crate::coordinator::{run_network, Engine, RunReport, Strategy};
+use crate::net::mobilenetv2::mobilenet_v2;
+use crate::tilepack::{pack, tile_network, Packing};
+use crate::util::json::{obj, Json};
+use crate::util::table::{f, Table};
+use crate::util::units;
+
+use super::Report;
+
+/// The §VI system: 34 crossbars (or whatever TILE&PACK needs).
+pub fn e2e_config() -> (SystemConfig, Packing) {
+    let net = mobilenet_v2(224);
+    let tiles = tile_network(&net, 256);
+    let packing = pack(&tiles, 256, false);
+    let cfg = SystemConfig::scaled_up(packing.n_bins());
+    (cfg, packing)
+}
+
+pub fn run(cfg: &SystemConfig, pm: &PowerModel) -> RunReport {
+    run_network(&mobilenet_v2(224), Strategy::ImaDw, cfg, pm)
+}
+
+pub fn generate(pm: &PowerModel) -> Report {
+    let (cfg, packing) = e2e_config();
+    let rep = run(&cfg, pm);
+
+    // ---- (a) per-layer table -------------------------------------------
+    let mut t = Table::new(
+        "Fig. 12a — MobileNetV2 end-to-end, per layer",
+        &["layer", "engine", "latency", "energy", "GMAC/s/W"],
+    );
+    let mut layer_rows = Vec::new();
+    for l in &rep.layers {
+        let time_s = l.cycles as f64 * cfg.freq.cycle_ns() * 1e-9;
+        let gmacs_w = if l.energy_j > 0.0 {
+            l.macs as f64 / time_s / 1e9 / (l.energy_j / time_s)
+        } else {
+            0.0
+        };
+        t.row([
+            l.name.clone(),
+            format!("{:?}", l.engine),
+            units::fmt_time(time_s),
+            units::fmt_energy(l.energy_j),
+            f(gmacs_w, 1),
+        ]);
+        layer_rows.push(obj([
+            ("name", l.name.clone().into()),
+            ("engine", format!("{:?}", l.engine).into()),
+            ("latency_s", time_s.into()),
+            ("energy_j", l.energy_j.into()),
+            ("gmacs_per_w", gmacs_w.into()),
+        ]));
+    }
+    let mut text = t.render();
+
+    // ---- totals ---------------------------------------------------------
+    text.push_str(&format!(
+        "\nTOTAL: {} | {} | {:.0} inf/s  (paper: 10.1 ms, 482 µJ, 99 inf/s)\n",
+        units::fmt_time(rep.time_s),
+        units::fmt_energy(rep.energy_j),
+        rep.inferences_per_s()
+    ));
+
+    // ---- (b) tile&pack --------------------------------------------------
+    let utils = packing.utilizations();
+    let full = utils.iter().filter(|u| **u > 0.99).count();
+    text.push_str(&format!(
+        "Fig. 12b — TILE&PACK: {} crossbars (paper: 34), {} at 100% utilization, last at {:.0}%\n",
+        packing.n_bins(),
+        full,
+        utils.iter().cloned().fold(f64::INFINITY, f64::min) * 100.0
+    ));
+
+    // ---- (c) engine breakdown -------------------------------------------
+    let bd = rep.engine_breakdown();
+    let total_cy = rep.cycles.max(1);
+    text.push_str("Fig. 12c — cycle breakdown: ");
+    for (e, cy) in &bd {
+        text.push_str(&format!("{:?} {:.1}%  ", e, 100.0 * *cy as f64 / total_cy as f64));
+    }
+    text.push('\n');
+
+    // ---- (c) per-block latency+energy (conv2d + every Bottleneck) ---------
+    let mut blocks: Vec<(String, u64, f64)> = Vec::new();
+    for l in &rep.layers {
+        let block = l
+            .name
+            .rsplit_once('_')
+            .map(|(pre, _)| pre.to_string())
+            .unwrap_or_else(|| l.name.clone());
+        match blocks.last_mut() {
+            Some((b, cy, e)) if *b == block => {
+                *cy += l.cycles;
+                *e += l.energy_j;
+            }
+            _ => blocks.push((block, l.cycles, l.energy_j)),
+        }
+    }
+    let mut tb = Table::new(
+        "Fig. 12c — latency/energy by block",
+        &["block", "latency", "energy", "% time"],
+    );
+    for (b, cy, e) in &blocks {
+        tb.row([
+            b.clone(),
+            units::fmt_time(*cy as f64 * cfg.freq.cycle_ns() * 1e-9),
+            units::fmt_energy(*e),
+            f(100.0 * *cy as f64 / total_cy as f64, 1),
+        ]);
+    }
+    text.push_str(&tb.render());
+
+    let ima_cy = bd.iter().find(|(e, _)| *e == Engine::Ima).unwrap().1;
+    Report {
+        title: "fig12_e2e".into(),
+        text,
+        data: obj([
+            ("total_time_s", rep.time_s.into()),
+            ("total_energy_j", rep.energy_j.into()),
+            ("inf_per_s", rep.inferences_per_s().into()),
+            ("n_crossbars", packing.n_bins().into()),
+            ("min_bin_utilization", utils.iter().cloned().fold(f64::INFINITY, f64::min).into()),
+            ("ima_cycle_share", (ima_cy as f64 / total_cy as f64).into()),
+            ("layers", Json::Arr(layer_rows)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2e_totals_near_paper() {
+        // paper §VI: 10.1 ms, 482 µJ — the headline end-to-end claim
+        let pm = PowerModel::paper();
+        let r = generate(&pm);
+        let t = r.data.req("total_time_s").as_f64().unwrap();
+        let e = r.data.req("total_energy_j").as_f64().unwrap();
+        assert!((5e-3..20e-3).contains(&t), "{t} s (paper: 10.1 ms)");
+        assert!((250e-6..900e-6).contains(&e), "{e} J (paper: 482 µJ)");
+    }
+
+    #[test]
+    fn crossbar_count_near_34() {
+        let pm = PowerModel::paper();
+        let r = generate(&pm);
+        let n = r.data.req("n_crossbars").as_usize().unwrap();
+        assert!((33..=38).contains(&n), "{n}");
+    }
+}

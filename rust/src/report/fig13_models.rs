@@ -1,0 +1,93 @@
+//! Fig. 13: MobileNetV2 performance across the four IMC computing models —
+//! IMA+DIG.ACC (not deployable), IMA+MCU, SW+IMA, SW+IMA+DIG.ACC (this work).
+
+use crate::arch::PowerModel;
+use crate::baselines::{AnalogNets, JiaMcu};
+use crate::coordinator::{run_network, Strategy};
+use crate::net::mobilenetv2::mobilenet_v2;
+use crate::util::json::{obj, Json};
+use crate::util::table::{f, Table};
+
+use super::fig12_e2e;
+use super::Report;
+
+pub fn generate(pm: &PowerModel) -> Report {
+    let (cfg, _) = fig12_e2e::e2e_config();
+    let net = mobilenet_v2(224);
+
+    // SW+IMA: the [8]-class system — pw on IMA, dw + rest in software
+    let sw_ima = run_network(&net, Strategy::Hybrid, &cfg, pm);
+    // SW+IMA+DIG.ACC: this work
+    let full = run_network(&net, Strategy::ImaDw, &cfg, pm);
+    // IMA+MCU: [6]-class
+    let mcu = JiaMcu::default();
+    let mcu_inf_s = 1.0 / mcu.mnv2_time_s();
+    // IMA+DIG.ACC: [7]/[31]-class — not deployable
+    let blockers = AnalogNets.mnv2_blockers();
+
+    let mut t = Table::new(
+        "Fig. 13 — MobileNetV2 on four IMC computing models",
+        &["model", "example", "inf/s", "note"],
+    );
+    t.row([
+        "IMA+DIG.ACC".into(),
+        "[7],[31]".into(),
+        "n/a".into(),
+        "not deployable (no programmable cores)".into(),
+    ]);
+    t.row([
+        "IMA+MCU".into(),
+        "[6]".into(),
+        f(mcu_inf_s, 2),
+        "single tiny core bottleneck".into(),
+    ]);
+    t.row([
+        "SW+IMA".into(),
+        "[8]".into(),
+        f(sw_ima.inferences_per_s(), 1),
+        "dw in software limits".into(),
+    ]);
+    t.row([
+        "SW+IMA+DIG.ACC".into(),
+        "this work".into(),
+        f(full.inferences_per_s(), 1),
+        "paper: 99 inf/s".into(),
+    ]);
+
+    let mut text = t.render();
+    text.push_str(&format!("IMA+DIG.ACC blockers: {}\n", blockers.join("; ")));
+
+    Report {
+        title: "fig13_models".into(),
+        text,
+        data: obj([
+            ("ima_mcu_inf_s", mcu_inf_s.into()),
+            ("sw_ima_inf_s", sw_ima.inferences_per_s().into()),
+            ("this_work_inf_s", full.inferences_per_s().into()),
+            ("ima_digacc_deployable", false.into()),
+            (
+                "blockers",
+                Json::Arr(blockers.into_iter().map(Json::Str).collect()),
+            ),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_of_the_four_models() {
+        let pm = PowerModel::paper();
+        let r = generate(&pm);
+        let mcu = r.data.req("ima_mcu_inf_s").as_f64().unwrap();
+        let sw_ima = r.data.req("sw_ima_inf_s").as_f64().unwrap();
+        let this = r.data.req("this_work_inf_s").as_f64().unwrap();
+        assert!(this > sw_ima && sw_ima > mcu, "{this} > {sw_ima} > {mcu}");
+        // paper: this work ≈ 99 inf/s, SW+IMA noticeably slower, IMA+MCU
+        // two orders of magnitude down
+        assert!(this / mcu > 100.0, "{:.0}x", this / mcu);
+        assert!(this / sw_ima > 1.5, "{:.1}x", this / sw_ima);
+    }
+}

@@ -1,0 +1,57 @@
+//! Fig. 6b: area breakdown of the heterogeneous cluster.
+
+use crate::arch::{AreaModel, SystemConfig};
+use crate::util::json::{obj, Json};
+use crate::util::table::{f, Table};
+
+use super::Report;
+
+pub fn generate(cfg: &SystemConfig) -> Report {
+    let area = AreaModel::for_config(cfg);
+    let mut t = Table::new(
+        &format!(
+            "Fig. 6b — area breakdown (GF 22FDX, {} crossbar{})",
+            cfg.n_crossbars,
+            if cfg.n_crossbars > 1 { "s" } else { "" }
+        ),
+        &["component", "mm^2", "%"],
+    );
+    let mut rows = Vec::new();
+    for (name, mm2, pct) in area.breakdown() {
+        t.row([name.to_string(), f(mm2, 3), f(pct, 1)]);
+        rows.push(obj([
+            ("component", name.into()),
+            ("mm2", mm2.into()),
+            ("pct", pct.into()),
+        ]));
+    }
+    t.row(["TOTAL".into(), f(area.total(), 3), "100.0".into()]);
+    Report {
+        title: "fig6b_area".into(),
+        text: t.render(),
+        data: obj([
+            ("total_mm2", area.total().into()),
+            ("breakdown", Json::Arr(rows)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_paper_config() {
+        let r = generate(&SystemConfig::paper());
+        assert!(r.text.contains("IMA subsystem"));
+        assert!(r.text.contains("2.500"));
+        assert!(r.data.req("total_mm2").as_f64().unwrap() > 2.4);
+    }
+
+    #[test]
+    fn scaled_up_grows_ima_share() {
+        let r = generate(&SystemConfig::scaled_up(34));
+        let total = r.data.req("total_mm2").as_f64().unwrap();
+        assert!((26.0..32.0).contains(&total), "{total}");
+    }
+}

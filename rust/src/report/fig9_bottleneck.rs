@@ -1,0 +1,84 @@
+//! Fig. 9: the Bottleneck case study — performance (GOPS), energy efficiency
+//! (TOPS/W) and area-utilization efficiency (GOPS/mm²) of the five mappings.
+
+use crate::arch::{PowerModel, SystemConfig};
+use crate::coordinator::{run_network, RunReport, Strategy};
+use crate::net::bottleneck::bottleneck;
+use crate::util::json::{obj, Json};
+use crate::util::table::{f, Table};
+
+use super::Report;
+
+pub fn run_all(cfg: &SystemConfig, pm: &PowerModel) -> Vec<RunReport> {
+    let net = bottleneck();
+    Strategy::paper_lineup()
+        .into_iter()
+        .map(|s| run_network(&net, s, cfg, pm))
+        .collect()
+}
+
+pub fn generate(cfg: &SystemConfig, pm: &PowerModel) -> Report {
+    let reports = run_all(cfg, pm);
+    let cores_ref = &reports[0];
+
+    let mut t = Table::new(
+        "Fig. 9 — Bottleneck (16x16x128, exp 6) @500 MHz, 128-bit, pipelined",
+        &[
+            "mapping", "cycles", "time", "GOPS", "vs CORES", "TOPS/W", "vs CORES",
+            "GOPS/mm^2", "vs CORES",
+        ],
+    );
+    let mut rows = Vec::new();
+    for r in &reports {
+        let perf_x = cores_ref.cycles as f64 / r.cycles as f64;
+        let eff_x = r.tops_per_w() / cores_ref.tops_per_w();
+        let area_x = r.gops_per_mm2(cfg) / cores_ref.gops_per_mm2(cfg);
+        t.row([
+            r.strategy.label(),
+            r.cycles.to_string(),
+            crate::util::units::fmt_time(r.time_s),
+            f(r.gops(), 1),
+            format!("{perf_x:.2}x"),
+            f(r.tops_per_w(), 3),
+            format!("{eff_x:.2}x"),
+            f(r.gops_per_mm2(cfg), 1),
+            format!("{area_x:.2}x"),
+        ]);
+        rows.push(obj([
+            ("mapping", r.strategy.label().into()),
+            ("cycles", (r.cycles as i64).into()),
+            ("gops", r.gops().into()),
+            ("tops_per_w", r.tops_per_w().into()),
+            ("gops_per_mm2", r.gops_per_mm2(cfg).into()),
+            ("perf_vs_cores", perf_x.into()),
+            ("eff_vs_cores", eff_x.into()),
+            ("area_eff_vs_cores", area_x.into()),
+        ]));
+    }
+    let mut text = t.render();
+    text.push_str(
+        "paper:   IMA_cjob8 1.23x | IMA_cjob16 2.27x | HYBRID 4.6x | IMA+DW 11.5x (perf)\n\
+         paper:   HYBRID 3.4x | IMA+DW 9.2x (energy eff) | IMA+DW 10.2x (area eff)\n",
+    );
+    Report {
+        title: "fig9_bottleneck".into(),
+        text,
+        data: Json::Arr(rows),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_mappings_reported() {
+        let cfg = SystemConfig::paper();
+        let pm = PowerModel::paper();
+        let r = generate(&cfg, &pm);
+        for label in ["CORES", "IMA_cjob8", "IMA_cjob16", "HYBRID", "IMA+DW"] {
+            assert!(r.text.contains(label), "{label}");
+        }
+        assert_eq!(r.data.as_arr().unwrap().len(), 5);
+    }
+}

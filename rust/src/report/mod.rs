@@ -1,0 +1,36 @@
+//! Figure/table generators — one module per paper exhibit, each printing the
+//! same rows/series the paper reports and returning machine-readable JSON.
+//!
+//! | module         | exhibit |
+//! |----------------|---------|
+//! | `fig6_area`    | Fig. 6b  area breakdown |
+//! | `fig7_roofline`| Fig. 7a-c IMA roofline |
+//! | `fig9_bottleneck`| Fig. 9a-c Bottleneck perf/eff/area-eff |
+//! | `fig10_breakdown`| Fig. 10 normalized perf + layer breakdown |
+//! | `fig12_e2e`    | Fig. 12a/c end-to-end MobileNetV2 + Alg.1/Fig.12b |
+//! | `table1`       | Table I SoA comparison |
+//! | `fig13_models` | Fig. 13 four computing models |
+
+pub mod ablations;
+pub mod fig10_breakdown;
+pub mod fig12_e2e;
+pub mod fig13_models;
+pub mod fig6_area;
+pub mod fig7_roofline;
+pub mod fig9_bottleneck;
+pub mod table1;
+
+use crate::util::json::Json;
+
+/// Every report renders text for the terminal and JSON for EXPERIMENTS.md.
+pub struct Report {
+    pub title: String,
+    pub text: String,
+    pub data: Json,
+}
+
+impl Report {
+    pub fn print(&self) {
+        println!("{}", self.text);
+    }
+}

@@ -1,0 +1,400 @@
+//! Functional end-to-end inference through the PJRT artifacts.
+//!
+//! Replays the manifest network layer by layer, issuing the same job stream
+//! the timing model accounts (DESIGN.md §4):
+//!
+//! * conv/fc — host gathers the virtual-IM2COL rows (the streamer's job),
+//!   crossbar tiles are programmed once as device buffers, 16-pixel MVM
+//!   jobs run per (row-tile × col-tile); row-split layers accumulate int32
+//!   partials on the host (the cores' job) and requantize via the `requant`
+//!   artifact;
+//! * dw — 16-channel × 16×16-output engine tiles through `dw3x3_s{1,2}`;
+//! * add — saturating `residual` chunks;
+//! * pool — host integer math (cores), matching `ref.avgpool_ref` exactly;
+//! * fc — raw partials summed to int32 logits (no requant, like the golden).
+//!
+//! Every layer's output checksum is compared against the manifest golden;
+//! the final logits must match bit-exactly.
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::LayerKind;
+use crate::util::rng::SplitMix64;
+
+use super::client::{Runtime, DW_CB, DW_TILE, PIXELS, PIXELS_BATCH, RESIDUAL_CHUNK, XBAR};
+use super::golden::{checksum_i32, checksum_i8};
+use super::manifest::Manifest;
+use super::tensor::TensorI8;
+
+#[derive(Debug)]
+pub struct InferenceResult {
+    pub logits: Vec<i32>,
+    pub argmax: usize,
+    pub pjrt_calls: u64,
+    pub programmed_tiles: usize,
+    pub wall: std::time::Duration,
+    /// (layer name, ours, golden) for every layer — all must match.
+    pub checksums: Vec<(String, i64, i64)>,
+}
+
+impl InferenceResult {
+    pub fn all_match(&self) -> bool {
+        self.checksums.iter().all(|(_, a, b)| a == b)
+    }
+
+    pub fn first_divergent_layer(&self) -> Option<&str> {
+        self.checksums
+            .iter()
+            .find(|(_, a, b)| a != b)
+            .map(|(n, _, _)| n.as_str())
+    }
+}
+
+/// Program every conv/fc crossbar tile of the network (done once, like the
+/// PCM programming flow in §VI). `sigma > 0` adds Gaussian conductance noise
+/// to the stored weights (the accuracy ablation).
+pub fn program_network(rt: &mut Runtime, m: &Manifest, sigma: f64) -> Result<()> {
+    for (li, ml) in m.layers.iter().enumerate() {
+        let l = &ml.layer;
+        if !matches!(l.kind, LayerKind::Conv | LayerKind::Fc) {
+            continue;
+        }
+        let rows = l.k * l.k * l.cin;
+        let cols = l.cout;
+        let w = m.layer_weights(li);
+        assert_eq!(w.len(), rows * cols, "{}", l.name);
+        let n_rt = rows.div_ceil(XBAR);
+        let n_ct = cols.div_ceil(XBAR);
+        for rt_i in 0..n_rt {
+            for ct_i in 0..n_ct {
+                let r0 = rt_i * XBAR;
+                let c0 = ct_i * XBAR;
+                let r_used = (rows - r0).min(XBAR);
+                let c_used = (cols - c0).min(XBAR);
+                let mut tile = vec![0i8; XBAR * XBAR];
+                for r in 0..r_used {
+                    let src = (r0 + r) * cols + c0;
+                    tile[r * XBAR..r * XBAR + c_used].copy_from_slice(&w[src..src + c_used]);
+                }
+                if sigma > 0.0 {
+                    let mut rng = SplitMix64::new(
+                        (m.seed as u64) ^ ((li as u64) << 32) ^ ((rt_i as u64) << 16) ^ ct_i as u64,
+                    );
+                    for v in tile.iter_mut() {
+                        if *v != 0 {
+                            let noisy = (*v as f64 + rng.next_gauss() * sigma * 8.0).round();
+                            *v = noisy.clamp(-8.0, 7.0) as i8;
+                        }
+                    }
+                }
+                rt.program_weight_tile((li, rt_i, ct_i), &tile)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run one conv/fc layer. Returns the HWC output tensor (for fc, the int32
+/// logits are returned separately).
+fn run_conv(
+    rt: &Runtime,
+    li: usize,
+    l: &crate::net::Layer,
+    input: &TensorI8,
+) -> Result<(TensorI8, Option<Vec<i32>>)> {
+    let rows = l.k * l.k * l.cin;
+    let cols = l.cout;
+    let n_rt = rows.div_ceil(XBAR);
+    let n_ct = cols.div_ceil(XBAR);
+    let hout = l.hout();
+    let wout = l.wout();
+    let pixels = hout * wout;
+    let mut out = TensorI8::zeros(hout, wout, cols);
+    let mut fc_logits: Option<Vec<i32>> = None;
+
+    let mut im2col = vec![0i8; rows];
+    let mut chunk_rows = vec![vec![0i8; PIXELS_BATCH * XBAR]; n_rt];
+
+    let mut px = 0usize;
+    while px < pixels {
+        // prefer the 128-pixel batched artifact; fall back to 16 at the tail
+        let batch = if pixels - px >= PIXELS_BATCH {
+            PIXELS_BATCH
+        } else {
+            PIXELS
+        };
+        let n_px = batch.min(pixels - px);
+        // gather the im2col rows of this pixel chunk, split by row tile
+        for cr in chunk_rows.iter_mut() {
+            cr[..batch * XBAR].fill(0);
+        }
+        for p in 0..n_px {
+            let oy = (px + p) / wout;
+            let ox = (px + p) % wout;
+            input.im2col_row(oy, ox, l.k, l.stride, l.pad, &mut im2col);
+            for (rt_i, cr) in chunk_rows.iter_mut().enumerate() {
+                let r0 = rt_i * XBAR;
+                let r_used = (rows - r0).min(XBAR);
+                cr[p * XBAR..p * XBAR + r_used].copy_from_slice(&im2col[r0..r0 + r_used]);
+            }
+        }
+
+        if n_rt == 1 && l.kind != LayerKind::Fc {
+            // fused-ADC path: one job batch per column tile
+            for ct_i in 0..n_ct {
+                let y = rt.mvm(
+                    (li, 0, ct_i),
+                    &chunk_rows[0][..batch * XBAR],
+                    l.shift,
+                    l.relu,
+                    batch,
+                )?;
+                let c0 = ct_i * XBAR;
+                let c_used = (cols - c0).min(XBAR);
+                for p in 0..n_px {
+                    let dst = (px + p) * cols + c0;
+                    out.data[dst..dst + c_used]
+                        .copy_from_slice(&y[p * XBAR..p * XBAR + c_used]);
+                }
+            }
+        } else {
+            // row-split: raw int32 partials, host accumulation (cores),
+            // digital requant — or raw logits for the classifier
+            for ct_i in 0..n_ct {
+                let c0 = ct_i * XBAR;
+                let c_used = (cols - c0).min(XBAR);
+                let mut acc = vec![0i32; batch * XBAR];
+                for (rt_i, cr) in chunk_rows.iter().enumerate() {
+                    let part = rt.mvm_raw((li, rt_i, ct_i), &cr[..batch * XBAR], batch)?;
+                    for (a, p) in acc.iter_mut().zip(part.iter()) {
+                        *a += *p;
+                    }
+                }
+                if l.kind == LayerKind::Fc {
+                    let logits = fc_logits.get_or_insert_with(|| vec![0i32; cols]);
+                    for c in 0..c_used {
+                        logits[c0 + c] = acc[c]; // single pixel (row 0)
+                    }
+                } else {
+                    let y = rt.requant(&acc, l.shift, l.relu, batch)?;
+                    for p in 0..n_px {
+                        let dst = (px + p) * cols + c0;
+                        out.data[dst..dst + c_used]
+                            .copy_from_slice(&y[p * XBAR..p * XBAR + c_used]);
+                    }
+                }
+            }
+        }
+        px += n_px;
+    }
+    Ok((out, fc_logits))
+}
+
+/// Run one depth-wise layer through the engine tiles.
+fn run_dw(rt: &Runtime, w: &[i8], l: &crate::net::Layer, input: &TensorI8) -> Result<TensorI8> {
+    assert_eq!(l.k, 3);
+    let hout = l.hout();
+    let wout = l.wout();
+    let c = l.cout;
+    let mut out = TensorI8::zeros(hout, wout, c);
+    let side = (DW_TILE - 1) * l.stride + 3;
+    let n_cb = c.div_ceil(DW_CB);
+    let n_ty = hout.div_ceil(DW_TILE);
+    let n_tx = wout.div_ceil(DW_TILE);
+
+    for cb in 0..n_cb {
+        let c0 = cb * DW_CB;
+        // weight block [3,3,16] with zero-fill beyond c
+        let mut wb = vec![0i8; 9 * DW_CB];
+        for kk in 0..9 {
+            let n = DW_CB.min(c - c0);
+            wb[kk * DW_CB..kk * DW_CB + n]
+                .copy_from_slice(&w[kk * c + c0..kk * c + c0 + n]);
+        }
+        for ty in 0..n_ty {
+            for tx in 0..n_tx {
+                let y0 = (ty * DW_TILE * l.stride) as isize - l.pad as isize;
+                let x0 = (tx * DW_TILE * l.stride) as isize - l.pad as isize;
+                let xt = input.dw_tile(y0, x0, side, c0, DW_CB);
+                let yt = rt.dw_tile(&xt, &wb, l.shift, l.relu, l.stride)?;
+                let ny = DW_TILE.min(hout - ty * DW_TILE);
+                let nx = DW_TILE.min(wout - tx * DW_TILE);
+                let nc = DW_CB.min(c - c0);
+                for dy in 0..ny {
+                    for dx in 0..nx {
+                        let src = (dy * DW_TILE + dx) * DW_CB;
+                        let dst = ((ty * DW_TILE + dy) * wout + tx * DW_TILE + dx) * c + c0;
+                        out.data[dst..dst + nc].copy_from_slice(&yt[src..src + nc]);
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn run_residual(rt: &Runtime, a: &TensorI8, b: &TensorI8) -> Result<TensorI8> {
+    assert_eq!(a.data.len(), b.data.len());
+    let n = a.data.len();
+    let mut out = TensorI8::zeros(a.h, a.w, a.c);
+    let mut pa = vec![0i8; RESIDUAL_CHUNK];
+    let mut pb = vec![0i8; RESIDUAL_CHUNK];
+    let mut i = 0;
+    while i < n {
+        let len = RESIDUAL_CHUNK.min(n - i);
+        pa[..len].copy_from_slice(&a.data[i..i + len]);
+        pb[..len].copy_from_slice(&b.data[i..i + len]);
+        pa[len..].fill(0);
+        pb[len..].fill(0);
+        let y = rt.residual(&pa, &pb)?;
+        out.data[i..i + len].copy_from_slice(&y[..len]);
+        i += len;
+    }
+    Ok(out)
+}
+
+/// Global average pool — host integer math matching `ref.avgpool_ref`.
+fn run_pool(input: &TensorI8) -> TensorI8 {
+    let area = (input.h * input.w) as i64;
+    let mut out = TensorI8::zeros(1, 1, input.c);
+    for ch in 0..input.c {
+        let mut s: i64 = 0;
+        for y in 0..input.h {
+            for x in 0..input.w {
+                s += input.at(y, x, ch) as i64;
+            }
+        }
+        let q = (s + area / 2).div_euclid(area);
+        out.data[ch] = q.clamp(-128, 127) as i8;
+    }
+    out
+}
+
+/// Full inference of a manifest network. Weights must be programmed first.
+pub fn run_inference(rt: &Runtime, m: &Manifest) -> Result<InferenceResult> {
+    let t0 = std::time::Instant::now();
+    let calls0 = rt.calls.get();
+    let (h, w, c) = m.input_shape;
+    let mut acts: Vec<TensorI8> = Vec::with_capacity(m.layers.len());
+    let mut cur = TensorI8::from_vec(h, w, c, m.input.clone());
+    let mut logits: Option<Vec<i32>> = None;
+    let mut checksums = Vec::new();
+
+    for (li, ml) in m.layers.iter().enumerate() {
+        let l = &ml.layer;
+        let (out, sum) = match l.kind {
+            LayerKind::Conv => {
+                let (y, _) = run_conv(rt, li, l, &cur)?;
+                let s = checksum_i8(&y.data);
+                (Some(y), s)
+            }
+            LayerKind::Fc => {
+                // flatten input to a 1×1×cin "pixel"
+                let flat = TensorI8::from_vec(1, 1, cur.data.len(), cur.data.clone());
+                let (_, lg) = run_conv(rt, li, l, &flat)?;
+                let lg = lg.context("fc must produce logits")?;
+                let s = checksum_i32(&lg);
+                logits = Some(lg);
+                (None, s)
+            }
+            LayerKind::Dw => {
+                let y = run_dw(rt, m.layer_weights(li), l, &cur)?;
+                let s = checksum_i8(&y.data);
+                (Some(y), s)
+            }
+            LayerKind::Add => {
+                let src = &acts[l.residual_from.expect("add needs source")];
+                let y = run_residual(rt, &cur, src)?;
+                let s = checksum_i8(&y.data);
+                (Some(y), s)
+            }
+            LayerKind::Pool => {
+                let y = run_pool(&cur);
+                let s = checksum_i8(&y.data);
+                (Some(y), s)
+            }
+        };
+        checksums.push((l.name.clone(), sum, ml.out_checksum));
+        if let Some(y) = out {
+            acts.push(y.clone());
+            cur = y;
+        }
+    }
+
+    let logits = logits.context("network has no fc layer")?;
+    let argmax = logits
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, v)| **v)
+        .map(|(i, _)| i)
+        .unwrap();
+    Ok(InferenceResult {
+        logits,
+        argmax,
+        pjrt_calls: rt.calls.get() - calls0,
+        programmed_tiles: rt.programmed_tiles(),
+        wall: t0.elapsed(),
+        checksums,
+    })
+}
+
+/// Serve a batch of `n` inference requests (weights stay programmed — the
+/// request loop the coordinator runs in deployment). Returns amortized
+/// seconds per inference.
+pub fn serve_batch(rt: &Runtime, m: &Manifest, n: usize) -> Result<f64> {
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let res = run_inference(rt, m)?;
+        std::hint::black_box(res.argmax);
+    }
+    Ok(t0.elapsed().as_secs_f64() / n.max(1) as f64)
+}
+
+/// CLI entry: load, program, run, verify against golden. Returns a summary.
+pub fn run_manifest_inference(dir: &str, tiny: bool, sigma: f64) -> Result<String> {
+    let m = Manifest::load(dir, tiny)?;
+    let mut rt = Runtime::load(dir)?;
+    program_network(&mut rt, &m, sigma)?;
+    let res = run_inference(&rt, &m)?;
+
+    let mut s = format!(
+        "network {} ({} layers, {:.1} MMAC) — {} PJRT job calls, {} crossbar tiles programmed, {:.2}s wall\n",
+        m.network_name,
+        m.layers.len(),
+        m.to_network().total_macs() as f64 / 1e6,
+        res.pjrt_calls,
+        res.programmed_tiles,
+        res.wall.as_secs_f64()
+    );
+    if sigma == 0.0 {
+        if !res.all_match() {
+            bail!(
+                "layer checksum divergence at `{}` — numeric contract broken\n{s}",
+                res.first_divergent_layer().unwrap()
+            );
+        }
+        if res.logits != m.golden_logits {
+            bail!("logits differ from JAX golden ({s})");
+        }
+        s.push_str(&format!(
+            "bit-exact vs JAX golden: all {} layer checksums match, argmax = {} (golden {})\n",
+            res.checksums.len(),
+            res.argmax,
+            m.golden_argmax
+        ));
+    } else {
+        // noise study: report logit divergence instead of asserting
+        let l2: f64 = res
+            .logits
+            .iter()
+            .zip(m.golden_logits.iter())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        s.push_str(&format!(
+            "conductance noise σ={sigma}: argmax {} (clean {}), logit L2 drift {:.1}\n",
+            res.argmax, m.golden_argmax, l2
+        ));
+    }
+    Ok(s)
+}

@@ -1,0 +1,50 @@
+//! Golden-vector comparison helpers (checksums shared with qnn.py).
+
+/// Order-independent checksum: sum of elements as i64 + 31·count.
+/// Must match `python/compile/qnn.py::checksum_i64`.
+pub fn checksum_i8(x: &[i8]) -> i64 {
+    x.iter().map(|&v| v as i64).sum::<i64>() + 31 * x.len() as i64
+}
+
+pub fn checksum_i32(x: &[i32]) -> i64 {
+    x.iter().map(|&v| v as i64).sum::<i64>() + 31 * x.len() as i64
+}
+
+/// First index where two slices differ (diagnostics).
+pub fn first_mismatch<T: PartialEq>(a: &[T], b: &[T]) -> Option<usize> {
+    if a.len() != b.len() {
+        return Some(a.len().min(b.len()));
+    }
+    a.iter().zip(b.iter()).position(|(x, y)| x != y)
+}
+
+/// Load a little-endian int8 binary file.
+pub fn load_i8(path: &str) -> std::io::Result<Vec<i8>> {
+    Ok(std::fs::read(path)?.iter().map(|&b| b as i8).collect())
+}
+
+pub fn load_i32(path: &str) -> std::io::Result<Vec<i32>> {
+    Ok(std::fs::read(path)?
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_matches_python_formula() {
+        // qnn.py: sum + 31*size; see test_checksum_matches_rust_formula
+        assert_eq!(checksum_i32(&[1, -2, 3]), (1 - 2 + 3) + 31 * 3);
+        assert_eq!(checksum_i8(&[]), 0);
+    }
+
+    #[test]
+    fn mismatch_detection() {
+        assert_eq!(first_mismatch(&[1, 2, 3], &[1, 9, 3]), Some(1));
+        assert_eq!(first_mismatch(&[1, 2], &[1, 2]), None);
+        assert_eq!(first_mismatch(&[1], &[1, 2]), Some(1));
+    }
+}

@@ -1,0 +1,142 @@
+//! Manifest loading: the Python→Rust network contract.
+//!
+//! `artifacts/manifest.json` (written by aot.py) carries the layer list with
+//! shapes, shifts, weight offsets and golden checksums; `weights.bin` the
+//! int4 weights; `golden/` the input and logits. This module parses it into
+//! the same `net::Network` the timing model uses, plus the runtime extras.
+
+use anyhow::{Context, Result};
+
+use crate::net::{Layer, LayerKind, Network};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ManifestLayer {
+    pub layer: Layer,
+    pub weight_offset: usize,
+    pub weight_len: usize,
+    pub out_checksum: i64,
+}
+
+pub struct Manifest {
+    pub network_name: String,
+    pub seed: i64,
+    pub layers: Vec<ManifestLayer>,
+    pub weights: Vec<i8>,
+    pub input_shape: (usize, usize, usize),
+    pub input: Vec<i8>,
+    pub golden_logits: Vec<i32>,
+    pub golden_argmax: usize,
+}
+
+fn kind_of(s: &str) -> LayerKind {
+    match s {
+        "conv" => LayerKind::Conv,
+        "dw" => LayerKind::Dw,
+        "add" => LayerKind::Add,
+        "pool" => LayerKind::Pool,
+        "fc" => LayerKind::Fc,
+        other => panic!("unknown layer kind `{other}` in manifest"),
+    }
+}
+
+impl Manifest {
+    /// `tiny = true` loads manifest_tiny.json (fast integration tests).
+    pub fn load(dir: &str, tiny: bool) -> Result<Manifest> {
+        let mpath = if tiny {
+            format!("{dir}/manifest_tiny.json")
+        } else {
+            format!("{dir}/manifest.json")
+        };
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {mpath} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("parsing manifest")?;
+
+        let weights_file = j.req("weights_file").as_str().unwrap().to_string();
+        let wbytes = std::fs::read(format!("{dir}/{weights_file}"))?;
+        let weights: Vec<i8> = wbytes.iter().map(|&b| b as i8).collect();
+
+        let mut layers = Vec::new();
+        for lj in j.req("layers").as_arr().unwrap() {
+            let kind = kind_of(lj.req("kind").as_str().unwrap());
+            let layer = Layer {
+                name: lj.req("name").as_str().unwrap().to_string(),
+                kind,
+                hin: lj.req("hin").as_usize().unwrap(),
+                win: lj.req("win").as_usize().unwrap(),
+                cin: lj.req("cin").as_usize().unwrap(),
+                cout: lj.req("cout").as_usize().unwrap(),
+                k: lj.req("k").as_usize().unwrap(),
+                stride: lj.req("stride").as_usize().unwrap(),
+                pad: lj.req("pad").as_usize().unwrap(),
+                relu: lj.req("relu").as_i64().unwrap() != 0,
+                residual_from: match lj.req("residual_from").as_i64().unwrap() {
+                    -1 => None,
+                    v => Some(v as usize),
+                },
+                shift: lj.req("shift").as_i64().unwrap() as i32,
+            };
+            // shape algebra cross-check: python hout/wout vs rust
+            assert_eq!(
+                layer.hout(),
+                lj.req("hout").as_usize().unwrap(),
+                "hout mismatch on {}",
+                layer.name
+            );
+            assert_eq!(layer.macs(), lj.req("macs").as_i64().unwrap() as u64);
+            layers.push(ManifestLayer {
+                layer,
+                weight_offset: lj.req("weight_offset").as_usize().unwrap(),
+                weight_len: lj.req("weight_len").as_usize().unwrap(),
+                out_checksum: lj.req("out_checksum").as_i64().unwrap(),
+            });
+        }
+
+        let ishape = j.req("input").req("shape").as_arr().unwrap();
+        let input_shape = (
+            ishape[0].as_usize().unwrap(),
+            ishape[1].as_usize().unwrap(),
+            ishape[2].as_usize().unwrap(),
+        );
+        let input_file = j.req("input").req("file").as_str().unwrap();
+        let ibytes = std::fs::read(format!("{dir}/{input_file}"))?;
+        let input: Vec<i8> = ibytes.iter().map(|&b| b as i8).collect();
+
+        let logits_file = j.req("logits").req("file").as_str().unwrap();
+        let lbytes = std::fs::read(format!("{dir}/{logits_file}"))?;
+        let golden_logits: Vec<i32> = lbytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(
+            golden_logits.len(),
+            j.req("logits").req("len").as_usize().unwrap()
+        );
+
+        Ok(Manifest {
+            network_name: j.req("network").as_str().unwrap().to_string(),
+            seed: j.req("seed").as_i64().unwrap(),
+            layers,
+            weights,
+            input_shape,
+            input,
+            golden_logits,
+            golden_argmax: j.req("logits").req("argmax").as_usize().unwrap(),
+        })
+    }
+
+    /// Weights of layer `idx` (serialized layout: crossbar [K²Cin, Cout]
+    /// row-major for conv/fc, [3,3,C] for dw).
+    pub fn layer_weights(&self, idx: usize) -> &[i8] {
+        let ml = &self.layers[idx];
+        &self.weights[ml.weight_offset..ml.weight_offset + ml.weight_len]
+    }
+
+    /// View as a plain `Network` (for cross-checks against the builder).
+    pub fn to_network(&self) -> Network {
+        Network {
+            name: self.network_name.clone(),
+            layers: self.layers.iter().map(|m| m.layer.clone()).collect(),
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: the functional half of the coordinator.
+//!
+//! Loads the AOT artifacts (`artifacts/*.hlo.txt`, HLO *text* — see
+//! DESIGN.md / aot.py for why not serialized protos), compiles them once on
+//! the PJRT CPU client, and performs end-to-end quantized inference by
+//! issuing exactly the job stream the timing model accounts: crossbar MVM
+//! jobs in 16-pixel chunks, depth-wise engine tiles, residual chunks. The
+//! host code plays the cluster cores' role (im2col gather, int32 partial
+//! accumulation, pooling); all tensor math runs inside PJRT executables.
+//! Python never runs here.
+//!
+//! Bit-exactness against the JAX golden vectors (same seed, same numeric
+//! contract) is asserted per layer via checksums and on the final logits.
+
+pub mod client;
+pub mod functional;
+pub mod golden;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::Runtime;
+pub use manifest::Manifest;

@@ -1,0 +1,165 @@
+//! HWC int8 tensors + the host-side data movement the cluster cores do:
+//! im2col gather (the streamer's virtual IM2COL, done by the host here),
+//! zero-padded tile extraction for the dw engine, chunking.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI8 {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i8>,
+}
+
+impl TensorI8 {
+    pub fn zeros(h: usize, w: usize, c: usize) -> TensorI8 {
+        TensorI8 {
+            h,
+            w,
+            c,
+            data: vec![0; h * w * c],
+        }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<i8>) -> TensorI8 {
+        assert_eq!(data.len(), h * w * c);
+        TensorI8 { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> i8 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    /// Signed-coordinate read with zero padding outside the tensor.
+    #[inline]
+    pub fn at_padded(&self, y: isize, x: isize, ch: usize) -> i8 {
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0
+        } else {
+            self.at(y as usize, x as usize, ch)
+        }
+    }
+
+    /// im2col row for output pixel (oy, ox): crossbar row ordering
+    /// r = (ki*k + kj)*Cin + ci (must match ref.im2col / functional.rs).
+    /// Writes `k*k*c` values into `out`.
+    pub fn im2col_row(&self, oy: usize, ox: usize, k: usize, stride: usize, pad: usize, out: &mut [i8]) {
+        debug_assert_eq!(out.len(), k * k * self.c);
+        let mut idx = 0;
+        let oy = (oy * stride) as isize - pad as isize;
+        let ox = (ox * stride) as isize - pad as isize;
+        for ki in 0..k as isize {
+            for kj in 0..k as isize {
+                let y = oy + ki;
+                let x = ox + kj;
+                if y >= 0 && x >= 0 && y < self.h as isize && x < self.w as isize {
+                    let base = ((y as usize) * self.w + x as usize) * self.c;
+                    out[idx..idx + self.c].copy_from_slice(&self.data[base..base + self.c]);
+                } else {
+                    out[idx..idx + self.c].fill(0);
+                }
+                idx += self.c;
+            }
+        }
+    }
+
+    /// Extract a zero-padded spatial tile of one 16-channel block for the
+    /// dw engine: input window origin (in padded coordinates with pad=1)
+    /// at (y0, x0), side `side`, channels [c0, c0+16).
+    pub fn dw_tile(&self, y0: isize, x0: isize, side: usize, c0: usize, cb: usize) -> Vec<i8> {
+        let mut out = vec![0i8; side * side * cb];
+        for ty in 0..side {
+            for tx in 0..side {
+                let sy = y0 + ty as isize;
+                let sx = x0 + tx as isize;
+                if sy < 0 || sx < 0 || sy >= self.h as isize || sx >= self.w as isize {
+                    continue; // stays zero
+                }
+                let src = ((sy as usize) * self.w + sx as usize) * self.c + c0;
+                let dst = (ty * side + tx) * cb;
+                let n = cb.min(self.c.saturating_sub(c0));
+                out[dst..dst + n].copy_from_slice(&self.data[src..src + n]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_tensor(h: usize, w: usize, c: usize) -> TensorI8 {
+        let data: Vec<i8> = (0..h * w * c).map(|i| (i % 127) as i8).collect();
+        TensorI8::from_vec(h, w, c, data)
+    }
+
+    #[test]
+    fn im2col_row_k1_is_identity() {
+        let t = seq_tensor(4, 4, 3);
+        let mut out = vec![0; 3];
+        t.im2col_row(2, 1, 1, 1, 0, &mut out);
+        assert_eq!(out, vec![t.at(2, 1, 0), t.at(2, 1, 1), t.at(2, 1, 2)]);
+    }
+
+    #[test]
+    fn im2col_row_k3_ordering() {
+        let t = seq_tensor(5, 5, 2);
+        let mut out = vec![0; 18];
+        t.im2col_row(1, 1, 3, 1, 1, &mut out);
+        // r = (ki*3 + kj)*2 + ci; window origin (0,0)
+        for ki in 0..3 {
+            for kj in 0..3 {
+                for ci in 0..2 {
+                    let r = (ki * 3 + kj) * 2 + ci;
+                    assert_eq!(out[r], t.at(ki, kj, ci), "ki {ki} kj {kj} ci {ci}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_zero_pads_borders() {
+        let t = seq_tensor(4, 4, 1);
+        let mut out = vec![99; 9];
+        t.im2col_row(0, 0, 3, 1, 1, &mut out);
+        // top-left window: first row and column padded
+        assert_eq!(out[0], 0);
+        assert_eq!(out[1], 0);
+        assert_eq!(out[3], 0);
+        assert_eq!(out[4], t.at(0, 0, 0));
+    }
+
+    #[test]
+    fn im2col_stride2() {
+        let t = seq_tensor(8, 8, 1);
+        let mut out = vec![0; 9];
+        t.im2col_row(1, 2, 3, 2, 1, &mut out);
+        // window origin = (1*2-1, 2*2-1) = (1, 3)
+        assert_eq!(out[0], t.at(1, 3, 0));
+        assert_eq!(out[8], t.at(3, 5, 0));
+    }
+
+    #[test]
+    fn dw_tile_extraction_with_halo() {
+        let t = seq_tensor(16, 16, 32);
+        // tile at origin (-1,-1) (pad=1), block 1 (channels 16..32)
+        let tile = t.dw_tile(-1, -1, 18, 16, 16);
+        assert_eq!(tile.len(), 18 * 18 * 16);
+        // (0,0) of the tile is padding
+        assert_eq!(tile[0], 0);
+        // (1,1,ch0) of the tile is t(0,0,16)
+        assert_eq!(tile[(18 + 1) * 16], t.at(0, 0, 16));
+    }
+
+    #[test]
+    fn dw_tile_partial_channel_block_zero_fills() {
+        let t = seq_tensor(4, 4, 24); // 24 channels: second block is half
+        let tile = t.dw_tile(0, 0, 4, 16, 16);
+        // channels 8..16 of the block (i.e. 24..32) must be zero
+        for c in 8..16 {
+            assert_eq!(tile[c], 0, "padded channel {c}");
+        }
+        assert_eq!(tile[0], t.at(0, 0, 16));
+    }
+}

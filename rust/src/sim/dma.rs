@@ -1,0 +1,56 @@
+//! Cluster DMA model (paper §III-B): TCDM ↔ L2 transfers.
+//!
+//! The paper's end-to-end study keeps all activations resident in L1 and
+//! argues (§VI) that double buffering hides L2 traffic; this model lets us
+//! *check* that claim as an ablation instead of assuming it.
+
+#[derive(Clone, Copy, Debug)]
+pub struct DmaModel {
+    /// AXI beat width towards L2, bytes per cluster cycle.
+    pub bytes_per_cycle: usize,
+    /// One-off programming + arbitration latency per transfer.
+    pub setup_cy: u64,
+}
+
+impl DmaModel {
+    pub fn paper() -> Self {
+        DmaModel {
+            bytes_per_cycle: 8,
+            setup_cy: 30,
+        }
+    }
+
+    pub fn transfer_cy(&self, bytes: usize) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        self.setup_cy + (bytes.div_ceil(self.bytes_per_cycle)) as u64
+    }
+
+    /// Double-buffering check: can a transfer of `bytes` hide behind
+    /// `compute_cy` cycles of engine work?
+    pub fn hides_behind(&self, bytes: usize, compute_cy: u64) -> bool {
+        self.transfer_cy(bytes) <= compute_cy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost() {
+        let d = DmaModel::paper();
+        assert_eq!(d.transfer_cy(0), 0);
+        assert_eq!(d.transfer_cy(8), 30 + 1);
+        assert_eq!(d.transfer_cy(1024), 30 + 128);
+    }
+
+    #[test]
+    fn double_buffering_typical_layer() {
+        // a 56x56x24 activation (75 kB) vs ~1 M compute cycles: hidden
+        let d = DmaModel::paper();
+        assert!(d.hides_behind(56 * 56 * 24, 1_000_000));
+        assert!(!d.hides_behind(1 << 20, 1000));
+    }
+}

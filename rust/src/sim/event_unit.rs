@@ -1,0 +1,59 @@
+//! Hardware Synchronization Unit model (paper §III-B): barriers, HWPE
+//! end-of-computation events, clock-gated sleep/wake costs.
+
+#[derive(Clone, Copy, Debug)]
+pub struct EventUnit {
+    /// Cycles for a full 8-core barrier (enter → all gated → release).
+    pub barrier_cy: u64,
+    /// Cycles from an HWPE end-of-computation event to the waiting core
+    /// resuming execution (clock-ungate + pipeline refill).
+    pub wakeup_cy: u64,
+    /// Cycles for a core to enter the clock-gated wait state.
+    pub sleep_cy: u64,
+}
+
+impl EventUnit {
+    pub fn paper() -> Self {
+        // "low-overhead and fine-grained parallelism" — single-digit to
+        // low-double-digit cycles in the PULP cluster event unit.
+        EventUnit {
+            barrier_cy: 12,
+            wakeup_cy: 8,
+            sleep_cy: 2,
+        }
+    }
+
+    /// Total synchronization cost of offloading one accelerator job batch:
+    /// core programs the HWPE, sleeps, is woken at end of computation.
+    pub fn offload_roundtrip_cy(&self) -> u64 {
+        self.sleep_cy + self.wakeup_cy
+    }
+
+    /// Cost of a parallel section over `n_chunks` of work distributed on
+    /// `n_cores`: one dispatch barrier + one join barrier; returns the
+    /// overhead cycles to add to the parallel work itself.
+    pub fn parallel_section_overhead_cy(&self, n_chunks: usize, n_cores: usize) -> u64 {
+        let waves = n_chunks.div_ceil(n_cores.max(1)) as u64;
+        2 * self.barrier_cy + waves.saturating_sub(1) * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_small() {
+        let eu = EventUnit::paper();
+        assert!(eu.offload_roundtrip_cy() <= 16);
+    }
+
+    #[test]
+    fn parallel_overhead_grows_with_waves() {
+        let eu = EventUnit::paper();
+        let one = eu.parallel_section_overhead_cy(8, 8);
+        let many = eu.parallel_section_overhead_cy(64, 8);
+        assert!(many > one);
+        assert_eq!(one, 2 * eu.barrier_cy);
+    }
+}

@@ -1,0 +1,17 @@
+//! Cluster simulation substrates.
+//!
+//! The engines (`ima`, `dwacc`, `cores`) produce *phase demands* (stream
+//! bytes, compute latencies); this module turns them into cycle-accurate
+//! schedules and activity ledgers:
+//!
+//! * [`pipeline`] — resource-constrained list scheduler for the IMA's
+//!   three-phase jobs (the sequential/pipelined execution models of Fig. 3);
+//! * [`tcdm`] — banked-memory contention model for the logarithmic
+//!   interconnect;
+//! * [`event_unit`] — synchronization/wake-up costs;
+//! * [`dma`] — L2↔TCDM transfer model (double-buffering analysis).
+
+pub mod dma;
+pub mod event_unit;
+pub mod pipeline;
+pub mod tcdm;

@@ -1,0 +1,240 @@
+//! Three-phase job pipeline scheduler (paper Fig. 3b).
+//!
+//! Each IMA job is STREAM-IN → COMPUTE → STREAM-OUT. The two stream phases
+//! contend for the single HWPE data port (the streamer's source and sink are
+//! *dynamically multiplexed*, §IV-A); COMPUTE owns the crossbar. The
+//! sequential model serializes everything; the pipelined model lets phases of
+//! *different* jobs overlap subject to those two resources — exactly what the
+//! added pipeline registers buy (§IV-B).
+//!
+//! This is an exact greedy list schedule (jobs issue in order, each phase
+//! starts as soon as its predecessor phase and its resource allow), which is
+//! how the engine FSM behaves.
+
+/// One job's phase durations in cycles.
+#[derive(Clone, Copy, Debug)]
+pub struct JobPhases {
+    pub stream_in: u64,
+    pub compute: u64,
+    pub stream_out: u64,
+    /// Cycles the controlling core spends issuing this job (occupies
+    /// neither port nor crossbar but delays the *next* issue).
+    pub issue: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Schedule {
+    /// Total makespan in cycles.
+    pub makespan: u64,
+    /// Cycles the data port was busy (TCDM side activity for energy).
+    pub port_busy: u64,
+    /// Cycles the crossbar was computing (analog active time).
+    pub xbar_busy: u64,
+}
+
+/// Sequential model: phases of each job strictly in order, no overlap.
+pub fn schedule_sequential<I: IntoIterator<Item = JobPhases>>(jobs: I) -> Schedule {
+    let mut t = 0u64;
+    let mut port = 0u64;
+    let mut xbar = 0u64;
+    for j in jobs {
+        t += j.issue + j.stream_in + j.compute + j.stream_out;
+        port += j.stream_in + j.stream_out;
+        xbar += j.compute;
+    }
+    Schedule {
+        makespan: t,
+        port_busy: port,
+        xbar_busy: xbar,
+    }
+}
+
+/// Pipelined model, implementing the paper's engine-FSM policy (§IV-B):
+/// during the compute phase of job *i*, the streamer first fetches the
+/// inputs of job *i+1*, then drains the results of job *i-1* — i.e. the
+/// port service order is IN₀, IN₁, OUT₀, IN₂, OUT₁, … The extra pipeline
+/// registers allow exactly one job of look-ahead on each side.
+pub fn schedule_pipelined(jobs: Vec<JobPhases>) -> Schedule {
+    let n = jobs.len();
+    if n == 0 {
+        return Schedule::default();
+    }
+    let mut port_free = 0u64;
+    let mut issue_done = vec![0u64; n];
+    let mut acc = 0u64;
+    for (i, j) in jobs.iter().enumerate() {
+        acc += j.issue;
+        issue_done[i] = acc;
+    }
+    let mut in_end = vec![0u64; n];
+    let mut comp_start = vec![0u64; n];
+    let mut comp_end = vec![0u64; n];
+    let mut port_busy = 0u64;
+    let mut xbar_busy = 0u64;
+    let mut makespan = 0u64;
+
+    // IN_0
+    let in0_start = issue_done[0].max(port_free);
+    in_end[0] = in0_start + jobs[0].stream_in;
+    port_free = in_end[0];
+    port_busy += jobs[0].stream_in;
+    comp_start[0] = in_end[0];
+    comp_end[0] = comp_start[0] + jobs[0].compute;
+    xbar_busy += jobs[0].compute;
+
+    for i in 1..n {
+        // IN_i: port free, issue done, and the input pipeline register is
+        // free once COMP_{i-1} has latched its operands (= comp start).
+        let in_start = port_free.max(issue_done[i]).max(comp_start[i - 1]);
+        in_end[i] = in_start + jobs[i].stream_in;
+        port_free = in_end[i];
+        port_busy += jobs[i].stream_in;
+
+        // OUT_{i-1}: after its compute, in FSM order after IN_i.
+        let out_start = port_free.max(comp_end[i - 1]);
+        let out_end = out_start + jobs[i - 1].stream_out;
+        port_free = out_end;
+        port_busy += jobs[i - 1].stream_out;
+        makespan = makespan.max(out_end);
+
+        comp_start[i] = in_end[i].max(comp_end[i - 1]);
+        comp_end[i] = comp_start[i] + jobs[i].compute;
+        xbar_busy += jobs[i].compute;
+    }
+    // final OUT
+    let out_start = port_free.max(comp_end[n - 1]);
+    let out_end = out_start + jobs[n - 1].stream_out;
+    port_busy += jobs[n - 1].stream_out;
+    makespan = makespan.max(out_end).max(comp_end[n - 1]);
+
+    Schedule {
+        makespan,
+        port_busy,
+        xbar_busy,
+    }
+}
+
+/// Closed-form steady-state estimate for `n` identical pipelined jobs —
+/// used by the roofline sweeps where exact scheduling of millions of jobs
+/// would be wasteful. Exact for the uniform-job case (see property test).
+pub fn steady_state_pipelined(n: u64, j: JobPhases) -> Schedule {
+    if n == 0 {
+        return Schedule::default();
+    }
+    let stage = (j.stream_in + j.stream_out)
+        .max(j.compute)
+        .max(j.issue);
+    // fill + (n-1) steady iterations + drain
+    let fill = j.issue + j.stream_in + j.compute + j.stream_out;
+    Schedule {
+        makespan: fill + (n - 1) * stage,
+        port_busy: n * (j.stream_in + j.stream_out),
+        xbar_busy: n * j.compute,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn uni(n: u64, ji: JobPhases) -> Vec<JobPhases> {
+        (0..n).map(|_| ji).collect()
+    }
+
+    #[test]
+    fn sequential_sums_everything() {
+        let j = JobPhases {
+            stream_in: 10,
+            compute: 65,
+            stream_out: 12,
+            issue: 3,
+        };
+        let s = schedule_sequential(uni(4, j));
+        assert_eq!(s.makespan, 4 * (10 + 65 + 12 + 3));
+        assert_eq!(s.xbar_busy, 4 * 65);
+        assert_eq!(s.port_busy, 4 * 22);
+    }
+
+    #[test]
+    fn pipelined_compute_bound_hits_compute_rate() {
+        // compute 65 dominates port (10+12): steady state = 65/job
+        let j = JobPhases {
+            stream_in: 10,
+            compute: 65,
+            stream_out: 12,
+            issue: 1,
+        };
+        let n = 1000;
+        let s = schedule_pipelined(uni(n, j));
+        let per_job = s.makespan as f64 / n as f64;
+        assert!((per_job - 65.0).abs() < 0.2, "{per_job}");
+    }
+
+    #[test]
+    fn pipelined_memory_bound_hits_port_rate() {
+        // port 40+40 dominates compute 33: steady state = 80/job
+        let j = JobPhases {
+            stream_in: 40,
+            compute: 33,
+            stream_out: 40,
+            issue: 1,
+        };
+        let n = 500;
+        let s = schedule_pipelined(uni(n, j));
+        let per_job = s.makespan as f64 / n as f64;
+        assert!((per_job - 80.0).abs() < 0.5, "{per_job}");
+    }
+
+    #[test]
+    fn pipelined_never_slower_than_sequential() {
+        prop::check("pipe_le_seq", 200, |rng| {
+            let n = rng.range_i64(1, 40) as u64;
+            let jobs: Vec<JobPhases> = (0..n)
+                .map(|_| JobPhases {
+                    stream_in: rng.range_i64(0, 100) as u64,
+                    compute: rng.range_i64(1, 100) as u64,
+                    stream_out: rng.range_i64(0, 100) as u64,
+                    issue: rng.range_i64(0, 10) as u64,
+                })
+                .collect();
+            let seq = schedule_sequential(jobs.clone());
+            let pipe = schedule_pipelined(jobs.clone());
+            assert!(pipe.makespan <= seq.makespan, "{pipe:?} vs {seq:?}");
+            assert_eq!(pipe.xbar_busy, seq.xbar_busy);
+            assert_eq!(pipe.port_busy, seq.port_busy);
+            // lower bounds: resources can't be beaten
+            let port_total: u64 = jobs.iter().map(|j| j.stream_in + j.stream_out).sum();
+            let xbar_total: u64 = jobs.iter().map(|j| j.compute).sum();
+            assert!(pipe.makespan >= port_total.max(xbar_total));
+        });
+    }
+
+    #[test]
+    fn steady_state_matches_exact_for_uniform_jobs() {
+        prop::check("steady_state_exact", 200, |rng| {
+            let j = JobPhases {
+                stream_in: rng.range_i64(0, 60) as u64,
+                compute: rng.range_i64(1, 90) as u64,
+                stream_out: rng.range_i64(0, 60) as u64,
+                issue: rng.range_i64(0, 5) as u64,
+            };
+            let n = rng.range_i64(1, 200) as u64;
+            let exact = schedule_pipelined(uni(n, j));
+            let est = steady_state_pipelined(n, j);
+            // The closed form is exact when one stage strictly dominates;
+            // otherwise it can differ by at most one pipeline fill.
+            let fill = j.issue + j.stream_in + j.compute + j.stream_out;
+            let diff = est.makespan.abs_diff(exact.makespan);
+            assert!(diff <= fill, "diff {diff} > fill {fill} ({j:?}, n={n})");
+            assert_eq!(est.xbar_busy, exact.xbar_busy);
+            assert_eq!(est.port_busy, exact.port_busy);
+        });
+    }
+
+    #[test]
+    fn empty_job_stream() {
+        assert_eq!(schedule_pipelined(Vec::new()).makespan, 0);
+        assert_eq!(steady_state_pipelined(0, JobPhases { stream_in: 1, compute: 1, stream_out: 1, issue: 0 }).makespan, 0);
+    }
+}

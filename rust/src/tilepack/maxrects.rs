@@ -1,0 +1,270 @@
+//! MaxRects bin packing with Best-Short-Side-Fit scoring (Jylänki 2010,
+//! "A thousand ways to pack the bin") — the algorithm behind the paper's
+//! `rectpack.MaxRectsBssf`.
+//!
+//! Invariants (property-tested):
+//!  * placed rectangles never overlap,
+//!  * placed rectangles stay inside the bin,
+//!  * free-rectangle list covers exactly the unoccupied area (checked by
+//!    area accounting).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rect {
+    pub x: usize,
+    pub y: usize,
+    pub w: usize,
+    pub h: usize,
+}
+
+impl Rect {
+    pub fn new(x: usize, y: usize, w: usize, h: usize) -> Rect {
+        Rect { x, y, w, h }
+    }
+
+    pub fn area(&self) -> usize {
+        self.w * self.h
+    }
+
+    pub fn contains(&self, other: &Rect) -> bool {
+        other.x >= self.x
+            && other.y >= self.y
+            && other.x + other.w <= self.x + self.w
+            && other.y + other.h <= self.y + self.h
+    }
+
+    pub fn intersects(&self, other: &Rect) -> bool {
+        self.x < other.x + other.w
+            && other.x < self.x + self.w
+            && self.y < other.y + other.h
+            && other.y < self.y + self.h
+    }
+}
+
+/// One crossbar-sized bin.
+#[derive(Clone, Debug)]
+pub struct MaxRectsBin {
+    pub width: usize,
+    pub height: usize,
+    pub allow_rotate: bool,
+    free: Vec<Rect>,
+    pub placed: Vec<(Rect, usize)>, // (position, tile id)
+}
+
+/// BSSF score: (short-side leftover, long-side leftover) — smaller is better.
+type Score = (usize, usize);
+
+impl MaxRectsBin {
+    pub fn new(width: usize, height: usize, allow_rotate: bool) -> Self {
+        MaxRectsBin {
+            width,
+            height,
+            allow_rotate,
+            free: vec![Rect::new(0, 0, width, height)],
+            placed: Vec::new(),
+        }
+    }
+
+    pub fn used_area(&self) -> usize {
+        self.placed.iter().map(|(r, _)| r.area()).sum()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_area() as f64 / (self.width * self.height) as f64
+    }
+
+    /// Best BSSF score achievable for a (w, h) tile, if it fits.
+    pub fn score(&self, w: usize, h: usize) -> Option<(Score, Rect)> {
+        let mut best: Option<(Score, Rect)> = None;
+        for f in &self.free {
+            for (tw, th) in self.orientations(w, h) {
+                if tw <= f.w && th <= f.h {
+                    let short = (f.w - tw).min(f.h - th);
+                    let long = (f.w - tw).max(f.h - th);
+                    let cand = ((short, long), Rect::new(f.x, f.y, tw, th));
+                    if best.map(|(s, _)| cand.0 < s).unwrap_or(true) {
+                        best = Some(cand);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    fn orientations(&self, w: usize, h: usize) -> Vec<(usize, usize)> {
+        if self.allow_rotate && w != h {
+            vec![(w, h), (h, w)]
+        } else {
+            vec![(w, h)]
+        }
+    }
+
+    /// Place a tile at its best position. Returns the placement or None.
+    pub fn insert(&mut self, w: usize, h: usize, id: usize) -> Option<Rect> {
+        let (_, pos) = self.score(w, h)?;
+        self.place(pos, id);
+        Some(pos)
+    }
+
+    fn place(&mut self, node: Rect, id: usize) {
+        // split every free rect that intersects the placed node
+        let mut i = 0;
+        while i < self.free.len() {
+            if self.free[i].intersects(&node) {
+                let f = self.free.swap_remove(i);
+                self.split(f, &node);
+            } else {
+                i += 1;
+            }
+        }
+        self.prune();
+        self.placed.push((node, id));
+    }
+
+    /// MaxRects split: the free rect minus the used node produces up to four
+    /// maximal free rects.
+    fn split(&mut self, f: Rect, used: &Rect) {
+        // left
+        if used.x > f.x {
+            self.free.push(Rect::new(f.x, f.y, used.x - f.x, f.h));
+        }
+        // right
+        if used.x + used.w < f.x + f.w {
+            self.free.push(Rect::new(
+                used.x + used.w,
+                f.y,
+                f.x + f.w - (used.x + used.w),
+                f.h,
+            ));
+        }
+        // bottom (below used, smaller y)
+        if used.y > f.y {
+            self.free.push(Rect::new(f.x, f.y, f.w, used.y - f.y));
+        }
+        // top
+        if used.y + used.h < f.y + f.h {
+            self.free.push(Rect::new(
+                f.x,
+                used.y + used.h,
+                f.w,
+                f.y + f.h - (used.y + used.h),
+            ));
+        }
+    }
+
+    /// Remove free rects fully contained in another (keep only maximal).
+    fn prune(&mut self) {
+        let mut i = 0;
+        while i < self.free.len() {
+            let mut removed = false;
+            for j in 0..self.free.len() {
+                if i != j && self.free[j].contains(&self.free[i]) {
+                    self.free.swap_remove(i);
+                    removed = true;
+                    break;
+                }
+            }
+            if !removed {
+                i += 1;
+            }
+        }
+    }
+
+    /// Check the no-overlap / in-bounds invariants (used by tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let bin = Rect::new(0, 0, self.width, self.height);
+        for (i, (a, _)) in self.placed.iter().enumerate() {
+            if !bin.contains(a) {
+                return Err(format!("tile {i} out of bounds: {a:?}"));
+            }
+            for (b, _) in &self.placed[i + 1..] {
+                if a.intersects(b) {
+                    return Err(format!("overlap: {a:?} vs {b:?}"));
+                }
+            }
+            for f in &self.free {
+                if f.intersects(a) {
+                    return Err(format!("free rect {f:?} overlaps placed {a:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn single_insert_at_origin() {
+        let mut b = MaxRectsBin::new(256, 256, false);
+        let p = b.insert(100, 50, 0).unwrap();
+        assert_eq!(p, Rect::new(0, 0, 100, 50));
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fills_bin_exactly_with_quarters() {
+        let mut b = MaxRectsBin::new(256, 256, false);
+        for i in 0..4 {
+            assert!(b.insert(128, 128, i).is_some(), "quarter {i}");
+        }
+        assert_eq!(b.used_area(), 256 * 256);
+        assert!(b.insert(1, 1, 99).is_none());
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let mut b = MaxRectsBin::new(256, 256, false);
+        assert!(b.insert(257, 10, 0).is_none());
+        assert!(b.insert(10, 300, 0).is_none());
+    }
+
+    #[test]
+    fn rotation_rescues_tall_tiles() {
+        let mut b = MaxRectsBin::new(256, 64, true);
+        // 64×200 only fits rotated
+        assert!(b.insert(64, 200, 0).is_some());
+        let mut b2 = MaxRectsBin::new(256, 64, false);
+        assert!(b2.insert(64, 200, 0).is_none());
+    }
+
+    #[test]
+    fn bssf_prefers_tight_fit() {
+        let mut b = MaxRectsBin::new(100, 100, false);
+        b.insert(100, 40, 0); // leaves a 100×60 strip
+        // a 100×60 tile should exactly fill the strip
+        let p = b.insert(100, 60, 1).unwrap();
+        assert_eq!(p, Rect::new(0, 40, 100, 60));
+        assert_eq!(b.used_area(), 100 * 100);
+    }
+
+    #[test]
+    fn random_insertions_keep_invariants() {
+        prop::check("maxrects_invariants", 120, |rng| {
+            let mut b = MaxRectsBin::new(256, 256, rng.below(2) == 0);
+            let n = rng.range_i64(1, 40) as usize;
+            for id in 0..n {
+                let w = rng.range_i64(1, 256) as usize;
+                let h = rng.range_i64(1, 256) as usize;
+                let _ = b.insert(w, h, id);
+            }
+            b.check_invariants()
+                .unwrap_or_else(|e| panic!("invariant: {e}"));
+            assert!(b.used_area() <= 256 * 256);
+        });
+    }
+
+    #[test]
+    fn many_small_tiles_reach_high_utilization() {
+        let mut b = MaxRectsBin::new(256, 256, false);
+        let mut id = 0;
+        while b.insert(32, 32, id).is_some() {
+            id += 1;
+        }
+        assert_eq!(id, 64); // 8×8 grid of 32×32 tiles fills it exactly
+        assert!((b.utilization() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! TILE&PACK (paper Alg. 1 + Fig. 12b): tile every conv/fc weight matrix to
+//! crossbar-sized rectangles, then pack the tiles onto the minimum number of
+//! 256×256 IMA crossbars with MaxRects-BSSF bin packing (the paper uses the
+//! `rectpack` Python library; `maxrects` is a from-scratch implementation of
+//! the same algorithm, Jylänki 2010).
+
+pub mod maxrects;
+pub mod packer;
+pub mod tiler;
+
+pub use maxrects::{MaxRectsBin, Rect};
+pub use packer::{pack, Packing};
+pub use tiler::{tile_network, Tile};

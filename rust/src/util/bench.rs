@@ -1,0 +1,94 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every `[[bench]]` target (`harness = false`): warms up, runs N
+//! timed iterations, reports min/median/mean/p95. Deterministic workloads +
+//! median keep the numbers stable enough for the §Perf before/after log.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10}/iter  median {:>12}  mean {:>12}  p95 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{:.0} ns", ns)
+    }
+}
+
+/// Run `f` repeatedly for at least `min_iters` iterations and ~`budget_ms`.
+/// `f` must return something observable to defeat dead-code elimination.
+pub fn bench<T, F: FnMut() -> T>(name: &str, min_iters: usize, budget_ms: u64, mut f: F) -> BenchResult {
+    // warmup
+    for _ in 0..2 {
+        std::hint::black_box(f());
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        let enough_iters = samples_ns.len() >= min_iters;
+        let out_of_budget = start.elapsed().as_millis() as u64 >= budget_ms;
+        if enough_iters && (out_of_budget || samples_ns.len() >= 10_000) {
+            break;
+        }
+        if out_of_budget && samples_ns.len() >= 3 {
+            break;
+        }
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let median = samples_ns[n / 2];
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    let p95 = samples_ns[((n as f64 * 0.95) as usize).min(n - 1)];
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        min_ns: samples_ns[0],
+        median_ns: median,
+        mean_ns: mean,
+        p95_ns: p95,
+    };
+    println!("{}", res.report());
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop_sum", 10, 5, || (0..100u64).sum::<u64>());
+        assert!(r.iters >= 10);
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns <= r.p95_ns + 1.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny argv parser (clap is unavailable offline).
+//!
+//! Supports `subcommand --flag --key value --key=value positional` shapes —
+//! all the `imcc` binary needs.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args().skip(1)`-style iterators.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                    && !Self::is_boolean_flag(rest)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Flags that never take a value even when followed by a positional.
+    fn is_boolean_flag(name: &str) -> bool {
+        matches!(
+            name,
+            "help" | "breakdown" | "peak" | "verbose" | "quiet" | "rotate" | "tiny" | "sequential"
+        )
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.opt(name) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("warning: could not parse --{name} {v}; using default");
+                std::process::exit(2)
+            }),
+            None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = argv("roofline --freq-mhz 250 --bus=128 --peak");
+        assert_eq!(a.subcommand.as_deref(), Some("roofline"));
+        assert_eq!(a.opt("freq-mhz"), Some("250"));
+        assert_eq!(a.opt("bus"), Some("128"));
+        assert!(a.flag("peak"));
+    }
+
+    #[test]
+    fn boolean_flags_do_not_swallow_positionals() {
+        let a = argv("e2e --breakdown manifest.json");
+        assert!(a.flag("breakdown"));
+        assert_eq!(a.positional, vec!["manifest.json"]);
+    }
+
+    #[test]
+    fn opt_parse_default() {
+        let a = argv("x");
+        assert_eq!(a.opt_parse("missing", 42u32), 42);
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure substrates built in-tree (the offline environment provides
+//! no criterion/serde/clap/proptest — see DESIGN.md §9).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod units;

@@ -1,0 +1,87 @@
+//! Property-test harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded RNGs; on failure
+//! it panics with the exact seed so `check_seed` reproduces the case. No
+//! shrinking — generators should be written to produce small cases often
+//! (pass small bounds first).
+
+use super::rng::SplitMix64;
+
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `f(rng)` for `cases` deterministic seeds derived from `name`.
+pub fn check<F: Fn(&mut SplitMix64)>(name: &str, cases: usize, f: F) {
+    let base = fnv1a(name.as_bytes());
+    for i in 0..cases {
+        let seed = base ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = SplitMix64::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property `{name}` failed at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_seed<F: Fn(&mut SplitMix64)>(seed: u64, f: F) {
+    let mut rng = SplitMix64::new(seed);
+    f(&mut rng);
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add_commutes", 64, |rng| {
+            let a = rng.range_i64(-1000, 1000);
+            let b = rng.range_i64(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            check("always_fails", 4, |_rng| {
+                panic!("boom");
+            });
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut trace1 = Vec::new();
+        check("trace", 8, |rng| {
+            let _ = rng.next_u64(); // exercise
+        });
+        // seeds derive only from the name: same name -> same seeds
+        let base1 = fnv1a(b"trace");
+        let base2 = fnv1a(b"trace");
+        assert_eq!(base1, base2);
+        trace1.push(base1);
+    }
+}

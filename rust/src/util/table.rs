@@ -1,0 +1,120 @@
+//! ASCII table rendering for figure/table reports (paper-style rows).
+
+#[derive(Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row<I: IntoIterator<Item = String>>(&mut self, cells: I) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table `{}`",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(display_width(c));
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&sep);
+        out.push('|');
+        for (i, h) in self.header.iter().enumerate() {
+            out.push_str(&format!(" {:<w$} |", h, w = widths[i]));
+        }
+        out.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push('|');
+            for (i, c) in row.iter().enumerate() {
+                let pad = widths[i].saturating_sub(display_width(c));
+                out.push_str(&format!(" {}{} |", c, " ".repeat(pad)));
+            }
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// Character count (not bytes) so µ/× align correctly.
+fn display_width(s: &str) -> usize {
+    s.chars().count()
+}
+
+/// Quick one-line f64 cell.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{:.*}", prec, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "GOPS"]);
+        t.row(["CORES".to_string(), "10.9".to_string()]);
+        t.row(["IMA+DW".to_string(), "125.3".to_string()]);
+        let s = t.render();
+        assert!(s.contains("| CORES "));
+        assert!(s.contains("| IMA+DW "));
+        let lines: Vec<&str> = s.lines().collect();
+        let w = lines[1].len();
+        for l in &lines[1..] {
+            assert_eq!(l.chars().count(), lines[1].chars().count(), "{w} {l}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(["only-one".to_string()]);
+    }
+
+    #[test]
+    fn unicode_width() {
+        assert_eq!(display_width("µJ"), 2);
+        assert_eq!(display_width("2.5×"), 4);
+    }
+}

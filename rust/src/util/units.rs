@@ -1,0 +1,91 @@
+//! Unit formatting/conversion helpers used by every report.
+
+/// Cycles at `freq_hz` → seconds.
+pub fn cycles_to_s(cycles: u64, freq_hz: f64) -> f64 {
+    cycles as f64 / freq_hz
+}
+
+/// Operations (MAC = 2 ops, the paper's convention) over seconds → GOPS.
+pub fn gops(ops: u64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    ops as f64 / seconds / 1e9
+}
+
+/// ops / joule → TOPS/W.
+pub fn tops_per_w(ops: u64, joules: f64) -> f64 {
+    if joules <= 0.0 {
+        return 0.0;
+    }
+    ops as f64 / joules / 1e12
+}
+
+pub fn fmt_si(v: f64, unit: &str) -> String {
+    let (scale, prefix) = if v == 0.0 {
+        (1.0, "")
+    } else {
+        let a = v.abs();
+        if a >= 1e12 {
+            (1e12, "T")
+        } else if a >= 1e9 {
+            (1e9, "G")
+        } else if a >= 1e6 {
+            (1e6, "M")
+        } else if a >= 1e3 {
+            (1e3, "k")
+        } else if a >= 1.0 {
+            (1.0, "")
+        } else if a >= 1e-3 {
+            (1e-3, "m")
+        } else if a >= 1e-6 {
+            (1e-6, "µ")
+        } else if a >= 1e-9 {
+            (1e-9, "n")
+        } else {
+            (1e-12, "p")
+        }
+    };
+    format!("{:.3} {}{}", v / scale, prefix, unit)
+}
+
+pub fn fmt_time(seconds: f64) -> String {
+    fmt_si(seconds, "s")
+}
+
+pub fn fmt_energy(joules: f64) -> String {
+    fmt_si(joules, "J")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gops_basic() {
+        assert!((gops(1_000_000_000, 1.0) - 1.0).abs() < 1e-12);
+        assert_eq!(gops(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ima_peak_sanity() {
+        // the paper's compute roof: 256*256*2 ops in 130 ns = 1.008 TOPS
+        let ops = 256 * 256 * 2u64;
+        let g = gops(ops, 130e-9);
+        assert!((g - 1008.2).abs() < 1.0, "{g}");
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(fmt_si(1.5e9, "OPS"), "1.500 GOPS");
+        assert_eq!(fmt_si(482e-6, "J"), "482.000 µJ");
+        assert_eq!(fmt_si(0.0101, "s"), "10.100 ms");
+    }
+
+    #[test]
+    fn tops_per_w_basic() {
+        // 958 GOPS at 150 mW = 6.39 TOPS/W
+        let e = tops_per_w(958_000_000_000, 0.150);
+        assert!((e - 6.39).abs() < 0.01, "{e}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Cross-checks between the Python-serialized manifest (netspec.py) and the
+//! independent Rust network builder (net::mobilenetv2) — the two sources of
+//! truth must never drift.
+
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::net::LayerKind;
+use imcc::runtime::Manifest;
+
+fn artifacts_dir() -> String {
+    std::env::var("IMCC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+#[test]
+fn manifest_network_matches_rust_builder_layer_by_layer() {
+    let m = Manifest::load(&artifacts_dir(), false).unwrap();
+    let ours = mobilenet_v2(224);
+    let theirs = m.to_network();
+    assert_eq!(ours.layers.len(), theirs.layers.len());
+    for (a, b) in ours.layers.iter().zip(theirs.layers.iter()) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.kind, b.kind, "{}", a.name);
+        assert_eq!(
+            (a.hin, a.win, a.cin, a.cout, a.k, a.stride, a.pad, a.relu),
+            (b.hin, b.win, b.cin, b.cout, b.k, b.stride, b.pad, b.relu),
+            "{}",
+            a.name
+        );
+        assert_eq!(a.residual_from, b.residual_from, "{}", a.name);
+        assert_eq!(a.macs(), b.macs(), "{}", a.name);
+    }
+    assert_eq!(ours.total_macs(), theirs.total_macs());
+}
+
+#[test]
+fn manifest_weights_cover_every_parametric_layer() {
+    let m = Manifest::load(&artifacts_dir(), false).unwrap();
+    let mut covered = 0usize;
+    for (i, ml) in m.layers.iter().enumerate() {
+        match ml.layer.kind {
+            LayerKind::Conv | LayerKind::Fc => {
+                assert_eq!(
+                    ml.weight_len,
+                    ml.layer.k * ml.layer.k * ml.layer.cin * ml.layer.cout,
+                    "{}",
+                    ml.layer.name
+                );
+                covered += ml.weight_len;
+                // weights are int4
+                assert!(m.layer_weights(i).iter().all(|w| (-8..=7).contains(w)));
+            }
+            LayerKind::Dw => {
+                assert_eq!(ml.weight_len, 9 * ml.layer.cin);
+                covered += ml.weight_len;
+            }
+            _ => assert_eq!(ml.weight_len, 0),
+        }
+    }
+    assert_eq!(covered, m.weights.len());
+}
+
+#[test]
+fn manifest_shifts_are_sane() {
+    let m = Manifest::load(&artifacts_dir(), false).unwrap();
+    for ml in &m.layers {
+        assert!((0..=24).contains(&ml.layer.shift), "{}", ml.layer.name);
+    }
+    // input shape is the canonical 224×224×3
+    assert_eq!(m.input_shape, (224, 224, 3));
+    assert_eq!(m.golden_logits.len(), 1000);
+}
+
+#[test]
+fn tiny_manifest_loads_too() {
+    let m = Manifest::load(&artifacts_dir(), true).unwrap();
+    assert_eq!(m.network_name, "tiny");
+    assert!(m.layers.len() >= 10);
+    m.to_network().validate().unwrap();
+}

@@ -1,0 +1,66 @@
+//! Whole-report integration: every paper exhibit generates, and the headline
+//! claims hold in shape (who wins, by roughly what factor).
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::report;
+
+#[test]
+fn all_reports_generate_and_agree() {
+    let cfg = SystemConfig::paper();
+    let pm = PowerModel::paper();
+
+    let fig6 = report::fig6_area::generate(&cfg);
+    assert!((fig6.data.req("total_mm2").as_f64().unwrap() - 2.5).abs() < 0.01);
+
+    let fig7 = report::fig7_roofline::generate();
+    let peak = fig7.data.req("peak_gops").as_f64().unwrap();
+    assert!((900.0..1000.0).contains(&peak));
+
+    let fig9 = report::fig9_bottleneck::generate(&cfg, &pm);
+    let rows = fig9.data.as_arr().unwrap();
+    let perf = |label: &str| {
+        rows.iter()
+            .find(|r| r.req("mapping").as_str() == Some(label))
+            .unwrap()
+            .req("perf_vs_cores")
+            .as_f64()
+            .unwrap()
+    };
+    // the paper's ordering
+    assert!(perf("IMA+DW") > perf("HYBRID"));
+    assert!(perf("HYBRID") > perf("IMA_cjob16"));
+    assert!(perf("IMA_cjob16") > perf("IMA_cjob8"));
+    assert!(perf("IMA_cjob8") >= 1.0);
+
+    let fig12 = report::fig12_e2e::generate(&pm);
+    let t = fig12.data.req("total_time_s").as_f64().unwrap();
+    let e = fig12.data.req("total_energy_j").as_f64().unwrap();
+    // paper: 10.1 ms / 482 µJ; hold within ±25 %
+    assert!((t - 10.1e-3).abs() / 10.1e-3 < 0.25, "{t}");
+    assert!((e - 482e-6).abs() / 482e-6 < 0.25, "{e}");
+
+    let t1 = report::table1::generate(&pm);
+    assert!(t1.text.contains("This work"));
+    assert!(t1.text.contains("n/a")); // the undeployable baselines
+
+    let fig13 = report::fig13_models::generate(&pm);
+    assert_eq!(
+        fig13.data.req("ima_digacc_deployable"),
+        &imcc::util::json::Json::Bool(false)
+    );
+}
+
+#[test]
+fn reports_serialize_to_valid_json() {
+    let cfg = SystemConfig::paper();
+    let pm = PowerModel::paper();
+    for rep in [
+        report::fig6_area::generate(&cfg),
+        report::fig9_bottleneck::generate(&cfg, &pm),
+        report::fig13_models::generate(&pm),
+    ] {
+        let text = rep.data.to_string_pretty();
+        let back = imcc::util::json::Json::parse(&text).unwrap();
+        assert_eq!(&back, &rep.data, "{}", rep.title);
+    }
+}

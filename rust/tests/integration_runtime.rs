@@ -1,0 +1,125 @@
+//! Integration tests over the PJRT runtime + artifacts (need `make artifacts`).
+//!
+//! These are the L3↔L1 contract tests: every artifact must load, and the
+//! Rust-orchestrated job streams must reproduce the JAX goldens bit-exactly.
+
+use imcc::runtime::{functional, golden, Manifest, Runtime};
+
+fn artifacts_dir() -> String {
+    std::env::var("IMCC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+#[test]
+fn artifacts_load_and_compile() {
+    let rt = Runtime::load(&artifacts_dir()).expect("run `make artifacts` first");
+    // a trivial residual run proves the executables actually execute
+    let y = rt.residual(&[7i8; 4096], &[-3i8; 4096]).unwrap();
+    assert!(y.iter().all(|&v| v == 4));
+}
+
+#[test]
+fn mvm_artifact_matches_host_math() {
+    let dir = artifacts_dir();
+    let mut rt = Runtime::load(&dir).unwrap();
+    // identity-ish weight tile: w[r][c] = 1 if r == c else 0
+    let mut w = vec![0i8; 256 * 256];
+    for i in 0..256 {
+        w[i * 256 + i] = 1;
+    }
+    rt.program_weight_tile((9000, 0, 0), &w).unwrap();
+    let mut x = vec![0i8; 16 * 256];
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = ((i * 7) % 251) as i8;
+    }
+    // identity weights, shift 0, no relu -> y == x
+    let y = rt.mvm((9000, 0, 0), &x, 0, false, 16).unwrap();
+    assert_eq!(y, x);
+    // raw path returns the same values as int32
+    let r = rt.mvm_raw((9000, 0, 0), &x, 16).unwrap();
+    assert!(r.iter().zip(x.iter()).all(|(a, b)| *a == *b as i32));
+}
+
+#[test]
+fn requant_matches_contract() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    let mut acc = vec![0i32; 16 * 256];
+    acc[0] = 1000; // (1000 + 4) >> 3 = 125
+    acc[1] = -1000; // (-1000 + 4) >> 3 = -125
+    acc[2] = 100_000; // clips to 127
+    acc[3] = -100_000; // clips to -128
+    let y = rt.requant(&acc, 3, false, 16).unwrap();
+    assert_eq!(&y[..4], &[125, -125, 127, -128]);
+    // relu clamps negatives to zero
+    let yr = rt.requant(&acc, 3, true, 16).unwrap();
+    assert_eq!(&yr[..4], &[125, 0, 127, 0]);
+}
+
+#[test]
+fn dw_tile_artifact_center_tap() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    // weights: only the center tap = 1 → output == input interior
+    let mut w = vec![0i8; 9 * 16];
+    for c in 0..16 {
+        w[4 * 16 + c] = 1;
+    }
+    let mut x = vec![0i8; 18 * 18 * 16];
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = ((i * 13) % 127) as i8;
+    }
+    let y = rt.dw_tile(&x, &w, 0, false, 1).unwrap();
+    for ty in 0..16 {
+        for tx in 0..16 {
+            for c in 0..16 {
+                let xin = x[((ty + 1) * 18 + tx + 1) * 16 + c];
+                assert_eq!(y[(ty * 16 + tx) * 16 + c], xin);
+            }
+        }
+    }
+}
+
+#[test]
+fn tiny_network_bit_exact_vs_jax_golden() {
+    let dir = artifacts_dir();
+    let m = Manifest::load(&dir, true).unwrap();
+    let mut rt = Runtime::load(&dir).unwrap();
+    functional::program_network(&mut rt, &m, 0.0).unwrap();
+    let res = functional::run_inference(&rt, &m).unwrap();
+    assert!(res.all_match(), "diverged at {:?}", res.first_divergent_layer());
+    assert_eq!(res.logits, m.golden_logits);
+    assert_eq!(res.argmax, m.golden_argmax);
+}
+
+#[test]
+fn noise_changes_logits_but_not_catastrophically() {
+    // conductance-noise ablation: σ=0.02 must perturb the logits while the
+    // pipeline still runs end-to-end
+    let dir = artifacts_dir();
+    let m = Manifest::load(&dir, true).unwrap();
+    let mut rt = Runtime::load(&dir).unwrap();
+    functional::program_network(&mut rt, &m, 0.02).unwrap();
+    let res = functional::run_inference(&rt, &m).unwrap();
+    assert_ne!(res.logits, m.golden_logits, "σ=0.02 must perturb something");
+    let l2: f64 = res
+        .logits
+        .iter()
+        .zip(m.golden_logits.iter())
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let ref_norm: f64 = m.golden_logits.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(l2 / ref_norm < 0.5, "drift {l2} vs norm {ref_norm}");
+}
+
+#[test]
+fn fused_bottleneck_artifact_matches_golden() {
+    let dir = artifacts_dir();
+    let rt = Runtime::load(&dir).unwrap();
+    let x = golden::load_i8(&format!("{dir}/golden/bottleneck_x.bin")).unwrap();
+    let w1 = golden::load_i8(&format!("{dir}/golden/bottleneck_w1.bin")).unwrap();
+    let wd = golden::load_i8(&format!("{dir}/golden/bottleneck_wd.bin")).unwrap();
+    let w2 = golden::load_i8(&format!("{dir}/golden/bottleneck_w2.bin")).unwrap();
+    let s = golden::load_i32(&format!("{dir}/golden/bottleneck_shifts.bin")).unwrap();
+    let want = golden::load_i8(&format!("{dir}/golden/bottleneck_y.bin")).unwrap();
+    let got = rt.bottleneck(&x, &w1, &wd, &w2, &[s[0], s[1], s[2]]).unwrap();
+    assert_eq!(golden::first_mismatch(&got, &want), None);
+}

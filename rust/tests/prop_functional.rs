@@ -1,0 +1,146 @@
+//! Property tests across the L3↔L1 boundary (need `make artifacts`).
+//!
+//! The golden tests pin two fixed networks; these pit the Rust-orchestrated
+//! artifact path against an independent host-side integer reference on
+//! *random* layer shapes — catching orchestration bugs (tiling, padding,
+//! chunking, accumulation order) the fixed goldens might miss.
+
+use imcc::runtime::client::XBAR;
+use imcc::runtime::Runtime;
+use imcc::util::prop;
+use imcc::util::rng::SplitMix64;
+
+fn artifacts_dir() -> String {
+    std::env::var("IMCC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+/// Host reference of the numeric contract (DESIGN.md §4) for one linear
+/// layer: acc = x·w (int32), round-shift, optional relu, clip.
+fn host_linear(x: &[i8], w: &[i8], rows: usize, cols: usize, n_px: usize, shift: i32, relu: bool) -> Vec<i8> {
+    let mut out = vec![0i8; n_px * cols];
+    for p in 0..n_px {
+        for c in 0..cols {
+            let mut acc: i64 = 0;
+            for r in 0..rows {
+                acc += x[p * rows + r] as i64 * w[r * cols + c] as i64;
+            }
+            let mut v = if shift > 0 {
+                (acc + (1i64 << (shift - 1))) >> shift
+            } else {
+                acc
+            };
+            if relu {
+                v = v.max(0);
+            }
+            out[p * cols + c] = v.clamp(-128, 127) as i8;
+        }
+    }
+    out
+}
+
+#[test]
+fn random_linear_layers_match_host_reference() {
+    let mut rt = Runtime::load(&artifacts_dir()).unwrap();
+    // pre-generate cases (program_weight_tile needs &mut; prop::check takes Fn)
+    let mut cases = Vec::new();
+    let mut rng = SplitMix64::new(0xFEED);
+    for case in 0..12 {
+        let rows = rng.range_i64(1, 256) as usize;
+        let cols = rng.range_i64(1, 256) as usize;
+        let shift = rng.range_i64(0, 14) as i32;
+        let relu = rng.below(2) == 1;
+        let mut x = vec![0i8; 16 * rows];
+        rng.fill_i8(&mut x);
+        let mut w = vec![0i8; rows * cols];
+        rng.fill_i4(&mut w);
+        // pad to the crossbar tile
+        let mut xp = vec![0i8; 16 * XBAR];
+        for p in 0..16 {
+            xp[p * XBAR..p * XBAR + rows].copy_from_slice(&x[p * rows..(p + 1) * rows]);
+        }
+        let mut wp = vec![0i8; XBAR * XBAR];
+        for r in 0..rows {
+            wp[r * XBAR..r * XBAR + cols].copy_from_slice(&w[r * cols..(r + 1) * cols]);
+        }
+        let key = (10_000 + case, 0, 0);
+        rt.program_weight_tile(key, &wp).unwrap();
+        cases.push((key, xp, x, w, rows, cols, shift, relu));
+    }
+    for (key, xp, x, w, rows, cols, shift, relu) in &cases {
+        let y = rt.mvm(*key, xp, *shift, *relu, 16).unwrap();
+        let want = host_linear(x, w, *rows, *cols, 16, *shift, *relu);
+        for p in 0..16 {
+            for c in 0..*cols {
+                assert_eq!(
+                    y[p * XBAR + c],
+                    want[p * cols + c],
+                    "key {key:?} rows {rows} cols {cols} shift {shift} relu {relu} p {p} c {c}"
+                );
+            }
+        }
+        // raw + host requant must equal the fused path
+        let raw = rt.mvm_raw(*key, xp, 16).unwrap();
+        let rq = rt.requant(&raw, *shift, *relu, 16).unwrap();
+        assert_eq!(&rq[..], &y[..], "raw+requant != fused for {key:?}");
+    }
+}
+
+#[test]
+fn batched_128px_equals_eight_16px_calls() {
+    let mut rt = Runtime::load(&artifacts_dir()).unwrap();
+    let mut rng = SplitMix64::new(0xBEEF);
+    let mut w = vec![0i8; XBAR * XBAR];
+    rng.fill_i4(&mut w);
+    let key = (20_000, 0, 0);
+    rt.program_weight_tile(key, &w).unwrap();
+    let mut x = vec![0i8; 128 * XBAR];
+    rng.fill_i8(&mut x);
+
+    let big = rt.mvm(key, &x, 7, true, 128).unwrap();
+    for chunk in 0..8 {
+        let lo = chunk * 16 * XBAR;
+        let small = rt.mvm(key, &x[lo..lo + 16 * XBAR], 7, true, 16).unwrap();
+        assert_eq!(&big[lo..lo + 16 * XBAR], &small[..], "chunk {chunk}");
+    }
+}
+
+#[test]
+fn dw_tile_matches_host_reference_random() {
+    let rt = Runtime::load(&artifacts_dir()).unwrap();
+    prop::check("dw_host_ref", 8, |rng| {
+        let stride = 1 + rng.below(2) as usize;
+        let side = (16 - 1) * stride + 3;
+        let mut x = vec![0i8; side * side * 16];
+        rng.fill_i8(&mut x);
+        let mut w = vec![0i8; 9 * 16];
+        rng.fill_i4(&mut w);
+        let shift = rng.range_i64(0, 10) as i32;
+        let y = rt.dw_tile(&x, &w, shift, true, stride).unwrap();
+        for ty in 0..16usize {
+            for tx in 0..16usize {
+                for ch in 0..16usize {
+                    let mut acc: i64 = 0;
+                    for ki in 0..3usize {
+                        for kj in 0..3usize {
+                            let sy = ty * stride + ki;
+                            let sx = tx * stride + kj;
+                            acc += x[(sy * side + sx) * 16 + ch] as i64
+                                * w[(ki * 3 + kj) * 16 + ch] as i64;
+                        }
+                    }
+                    let mut v = if shift > 0 {
+                        (acc + (1i64 << (shift - 1))) >> shift
+                    } else {
+                        acc
+                    };
+                    v = v.max(0).min(127);
+                    assert_eq!(
+                        y[(ty * 16 + tx) * 16 + ch],
+                        v as i8,
+                        "stride {stride} ty {ty} tx {tx} ch {ch}"
+                    );
+                }
+            }
+        }
+    });
+}

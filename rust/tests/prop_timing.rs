@@ -1,0 +1,70 @@
+//! Timing-model validation: the closed-form steady-state pipeline estimate
+//! (used for million-job layers) must agree with the exact greedy schedule
+//! on every job stream MobileNetV2 actually issues.
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::ima::{ConvMap, ImaSubsystem};
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::net::LayerKind;
+use imcc::sim::pipeline::{schedule_pipelined, steady_state_pipelined};
+
+#[test]
+fn steady_state_matches_exact_on_every_mnv2_conv_layer() {
+    let cfg = SystemConfig::paper();
+    let pm = PowerModel::paper();
+    let ima = ImaSubsystem::new(&cfg, &pm);
+    let net = mobilenet_v2(224);
+    for l in net.layers.iter().filter(|l| l.kind == LayerKind::Conv) {
+        let map = ConvMap::new(l, 256);
+        for rt_i in 0..map.n_row_tiles {
+            for ct_i in 0..map.n_col_tiles {
+                let job = map.job(rt_i, ct_i);
+                let phases = ima.phases(&job, false);
+                // cap n for the exact scheduler's O(n) cost
+                let n = (map.pixels as u64).min(4096);
+                let exact = schedule_pipelined((0..n).map(|_| phases).collect());
+                let est = steady_state_pipelined(n, phases);
+                let fill = phases.issue + phases.stream_in + phases.compute + phases.stream_out;
+                assert!(
+                    est.makespan.abs_diff(exact.makespan) <= fill,
+                    "{}: est {} vs exact {} (fill {fill})",
+                    l.name,
+                    est.makespan,
+                    exact.makespan
+                );
+                // relative error under 1% for real job counts
+                let rel = est.makespan.abs_diff(exact.makespan) as f64 / exact.makespan as f64;
+                assert!(rel < 0.01, "{}: rel err {rel}", l.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn conv_cost_monotone_in_every_dimension() {
+    // sanity surface: more pixels / rows / cols never get cheaper
+    let cfg = SystemConfig::paper();
+    let pm = PowerModel::paper();
+    let ima = ImaSubsystem::new(&cfg, &pm);
+    let base = imcc::net::Layer::conv("b", 16, 16, 64, 64);
+    let cost = |l: &imcc::net::Layer| ima.conv_layer_cost(&ConvMap::new(l, 256)).cycles;
+    let c0 = cost(&base);
+    let bigger_spatial = imcc::net::Layer::conv("s", 32, 32, 64, 64);
+    let more_cin = imcc::net::Layer::conv("ci", 16, 16, 128, 64);
+    let more_cout = imcc::net::Layer::conv("co", 16, 16, 64, 128);
+    assert!(cost(&bigger_spatial) > c0);
+    assert!(cost(&more_cin) >= c0);
+    assert!(cost(&more_cout) >= c0);
+}
+
+#[test]
+fn e2e_cycles_equal_sum_of_layer_cycles() {
+    // the RunReport aggregation invariant
+    let cfg = SystemConfig::scaled_up(33);
+    let pm = PowerModel::paper();
+    let net = mobilenet_v2(224);
+    let rep = imcc::coordinator::run_network(&net, imcc::coordinator::Strategy::ImaDw, &cfg, &pm);
+    let sum: u64 = rep.layers.iter().map(|l| l.cycles).sum();
+    assert_eq!(sum, rep.cycles);
+    assert_eq!(rep.layers.len(), net.layers.len());
+}
