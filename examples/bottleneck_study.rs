@@ -13,7 +13,7 @@ use imcc::report::{fig10_breakdown, fig9_bottleneck};
 use imcc::runtime::golden;
 use imcc::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> imcc::util::error::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     let cfg = SystemConfig::paper();
     let pm = PowerModel::paper();
@@ -39,12 +39,12 @@ fn main() -> anyhow::Result<()> {
     match golden::first_mismatch(&got, &want) {
         None => println!(
             "\n[functional] fused Bottleneck artifact: {} outputs bit-exact vs JAX \
-             golden (checksum {}), {:.1} ms on the CPU PJRT client",
+             golden (checksum {}), {:.1} ms on the native backend",
             got.len(),
             golden::checksum_i8(&got),
             dt.as_secs_f64() * 1e3
         ),
-        Some(i) => anyhow::bail!(
+        Some(i) => imcc::bail!(
             "fused Bottleneck diverges at element {i}: {} vs {}",
             got[i],
             want[i]

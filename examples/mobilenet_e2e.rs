@@ -22,7 +22,7 @@ use imcc::runtime::{functional, Manifest, Runtime};
 use imcc::tilepack::{pack, tile_network};
 use imcc::util::units;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> imcc::util::error::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
 
     // ---- 1. TILE&PACK --------------------------------------------------
@@ -49,15 +49,15 @@ fn main() -> anyhow::Result<()> {
         rt.programmed_tiles()
     );
     let res = functional::run_inference(&rt, &manifest)?;
-    anyhow::ensure!(res.all_match(), "layer checksum divergence");
-    anyhow::ensure!(res.logits == manifest.golden_logits, "logits mismatch");
+    imcc::ensure!(res.all_match(), "layer checksum divergence");
+    imcc::ensure!(res.logits == manifest.golden_logits, "logits mismatch");
     println!(
         "[functional] {} layers bit-exact vs JAX golden; argmax {} == golden {}; \
-         {} PJRT job calls in {:.2}s host wall",
+         {} backend job calls in {:.2}s host wall",
         res.checksums.len(),
         res.argmax,
         manifest.golden_argmax,
-        res.pjrt_calls,
+        res.backend_calls,
         res.wall.as_secs_f64()
     );
 

@@ -1,12 +1,16 @@
 //! Bench: Fig. 12 / Table I end-to-end MobileNetV2 — regenerates the
-//! headline result and times the whole-network simulation.
+//! headline result, times the whole-network simulation, and measures the
+//! multi-array serving loop: batched model throughput (inferences/s) vs
+//! batch size, plus the wall cost of a plan-cache hit vs a cold placement.
 
-use imcc::arch::PowerModel;
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::coordinator::{run_batched, BatchConfig, PlanCache, Strategy};
+use imcc::net::mobilenetv2::mobilenet_v2;
 use imcc::report::{fig12_e2e, fig13_models, table1};
 use imcc::util::bench::bench;
 
 fn main() {
-    println!("== bench_e2e (Fig. 12 / Table I / Fig. 13) ==");
+    println!("== bench_e2e (Fig. 12 / Table I / Fig. 13 / scale-up serving) ==");
     let pm = PowerModel::paper();
 
     bench("e2e_config_and_pack", 10, 1000, fig12_e2e::e2e_config);
@@ -25,4 +29,56 @@ fn main() {
         rep.data.req("total_energy_j").as_f64().unwrap() * 1e6,
         rep.data.req("inf_per_s").as_f64().unwrap()
     );
+
+    // ---- batched serving: model throughput vs batch size -----------------
+    let net = mobilenet_v2(224);
+    let arrays = 40usize;
+    let cfg40 = SystemConfig::scaled_up(arrays);
+    let mut cache = PlanCache::new();
+
+    bench("placement_cold (cache miss)", 5, 2000, || {
+        imcc::tilepack::place_staged(&net, 256, arrays, false).unwrap()
+    });
+    let plan = cache.get_or_place(&net, 256, arrays, false).unwrap();
+    bench("placement_hot (cache hit)", 50, 500, || {
+        cache.get_or_place(&net, 256, arrays, false).unwrap()
+    });
+
+    println!("\nbatched throughput, {arrays}-array resident pool (model inf/s):");
+    let mut b1 = 0.0f64;
+    for batch in [1usize, 2, 4, 8, 16] {
+        let r = run_batched(
+            &net,
+            Strategy::ImaDw,
+            &cfg40,
+            &pm,
+            &plan,
+            BatchConfig {
+                batch,
+                pipeline: true,
+            },
+        );
+        if batch == 1 {
+            b1 = r.inferences_per_s();
+        }
+        println!(
+            "  batch {batch:>2}: {:>7.1} inf/s  ({:.2}x vs batch 1, bottleneck `{}`)",
+            r.inferences_per_s(),
+            r.inferences_per_s() / b1,
+            r.bottleneck_layer
+        );
+        bench(&format!("run_batched_b{batch}"), 10, 500, || {
+            run_batched(
+                &net,
+                Strategy::ImaDw,
+                &cfg40,
+                &pm,
+                &plan,
+                BatchConfig {
+                    batch,
+                    pipeline: true,
+                },
+            )
+        });
+    }
 }

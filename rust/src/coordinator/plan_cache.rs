@@ -1,0 +1,131 @@
+//! TILE&PACK plan cache: repeated inferences skip allocation entirely.
+//!
+//! Placing a whole network is the expensive, offline half of serving
+//! (hundreds of MaxRects scoring passes); the placement depends only on the
+//! layer geometry and the pool shape. The cache keys on a fingerprint of
+//! exactly those inputs and hands out shared, immutable plans (`Rc`), so a
+//! cache hit is bit-identical to the miss that produced it — the scheduler
+//! regression tests assert this, and the serving loop goes
+//! allocation-free after the first request of each (network, pool) pair.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::net::Network;
+use crate::tilepack::{place_staged, StagedPlacement};
+
+/// What a placement depends on — nothing else may leak into the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// FNV-1a over every layer's geometry (name excluded: renaming a layer
+    /// must not fault the cache, resizing it must).
+    pub net_fingerprint: u64,
+    /// Crossbar side.
+    pub s: usize,
+    /// Pool size the plan was made for.
+    pub n_arrays: usize,
+    /// Whether 90° tile rotation was allowed.
+    pub rotate: bool,
+}
+
+/// Geometry fingerprint of a network (delegates to [`Network::fingerprint`]).
+pub fn fingerprint(net: &Network) -> u64 {
+    net.fingerprint()
+}
+
+#[derive(Default)]
+pub struct PlanCache {
+    map: HashMap<PlanKey, Rc<StagedPlacement>>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Fetch the placement for (net, pool), computing it on first use.
+    pub fn get_or_place(
+        &mut self,
+        net: &Network,
+        s: usize,
+        n_arrays: usize,
+        rotate: bool,
+    ) -> Result<Rc<StagedPlacement>, String> {
+        let key = PlanKey {
+            net_fingerprint: fingerprint(net),
+            s,
+            n_arrays,
+            rotate,
+        };
+        if let Some(plan) = self.map.get(&key) {
+            self.hits.set(self.hits.get() + 1);
+            return Ok(Rc::clone(plan));
+        }
+        self.misses.set(self.misses.get() + 1);
+        let plan = Rc::new(place_staged(net, s, n_arrays, rotate)?);
+        self.map.insert(key, Rc::clone(&plan));
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::bottleneck::bottleneck;
+    use crate::net::mobilenetv2::mobilenet_v2;
+
+    #[test]
+    fn fingerprint_sensitive_to_shape_not_name() {
+        let a = bottleneck();
+        let mut renamed = bottleneck();
+        renamed.layers[0].name = "totally_different".into();
+        assert_eq!(fingerprint(&a), fingerprint(&renamed));
+
+        let mut resized = bottleneck();
+        resized.layers[0].cout += 1;
+        assert_ne!(fingerprint(&a), fingerprint(&resized));
+    }
+
+    #[test]
+    fn hit_returns_the_same_plan_object() {
+        let mut cache = PlanCache::new();
+        let net = bottleneck();
+        let first = cache.get_or_place(&net, 256, 8, false).unwrap();
+        let second = cache.get_or_place(&net, 256, 8, false).unwrap();
+        assert!(Rc::ptr_eq(&first, &second));
+        assert_eq!((cache.misses(), cache.hits()), (1, 1));
+        // bit-identical, not merely equal-by-pointer
+        assert_eq!(*first, *second);
+    }
+
+    #[test]
+    fn distinct_pools_are_distinct_entries() {
+        let mut cache = PlanCache::new();
+        let net = mobilenet_v2(224);
+        let small = cache.get_or_place(&net, 256, 8, false).unwrap();
+        let large = cache.get_or_place(&net, 256, 40, false).unwrap();
+        assert!(small.n_passes() > 1);
+        assert_eq!(large.n_passes(), 1);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 2);
+    }
+}

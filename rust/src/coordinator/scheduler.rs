@@ -1,0 +1,344 @@
+//! Batched multi-array scheduler: the serving loop of the scaled-up system.
+//!
+//! The per-request execution model stays the paper's (§VI: layer-to-layer
+//! sequential, activations in L1); what this module adds is the *request*
+//! dimension. A batch of B inferences flows through the layer chain, and
+//! with pipelining enabled, request r+1 may occupy a resource as soon as
+//! request r has released it — so while request r computes on the arrays
+//! that host layer k+1, request r+1 computes on the (disjoint) arrays of
+//! layer k, with double-buffered activations decoupling the two. This is an
+//! exact greedy list schedule over explicit resources:
+//!
+//! * each pool array is a resource — conv layers occupy exactly the arrays
+//!   TILE&PACK placed their tiles on (two layers sharing an array cannot
+//!   overlap, which the schedule enforces by construction);
+//! * the DW accelerator and the core complex are single resources;
+//! * IMA-mapped layers without a placement (e.g. dw-on-IMA under the
+//!   `IMA_cjob` strategies) serialize on one shared virtual IMA resource;
+//! * activations between consecutive layers are double-buffered: layer k
+//!   of request r additionally waits until request r−2 has consumed the
+//!   k/k+1 boundary buffer (at most two live activations per boundary).
+//!
+//! With pipelining disabled and a resident plan, the batch degenerates to
+//! B back-to-back inferences and the totals are bit-identical to B
+//! sequential runs — the regression tests pin both properties.
+//!
+//! Staged (undersized-pool) plans execute batch-major: every pass runs the
+//! whole batch before the pool reprograms for the next pass, so the
+//! enormous PCM cost amortizes over B (a truly sequential request would
+//! reprogram every pass itself — `sequential_cycles` is that baseline) —
+//! the report then shows exactly how far off-chip weights are from
+//! interactive serving (§VI's argument).
+
+use std::collections::BTreeMap;
+
+use crate::arch::{EnergyAccount, PowerModel, SystemConfig};
+use crate::ima::ImaArrayPool;
+use crate::net::Network;
+use crate::tilepack::StagedPlacement;
+
+use super::{Engine, Executor, Strategy};
+
+/// Batch execution knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    pub batch: usize,
+    /// Overlap requests across layer resources (double-buffered
+    /// activations); disabled = strict back-to-back serving.
+    pub pipeline: bool,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            batch: 1,
+            pipeline: true,
+        }
+    }
+}
+
+/// Outcome of serving one batch.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    pub network: String,
+    pub strategy: Strategy,
+    pub batch: usize,
+    pub pipelined: bool,
+    pub n_passes: usize,
+    /// Total cycles to drain the batch (incl. reprogramming for staged).
+    pub cycles: u64,
+    /// Of which: PCM reprogramming (zero for resident plans).
+    pub reprogram_cycles: u64,
+    pub time_s: f64,
+    /// Total energy: request work plus (for staged plans) the PCM
+    /// program-and-verify energy matching `reprogram_cycles`.
+    pub energy_j: f64,
+    /// Of which: PCM reprogramming (zero for resident plans).
+    pub reprogram_energy_j: f64,
+    /// One request's layer work executed alone (no reprogramming).
+    pub per_request_cycles: u64,
+    /// The honest sequential baseline: B requests served one at a time,
+    /// each paying the full per-pass reprogramming itself (equals
+    /// `per_request_cycles * batch` for resident plans).
+    pub sequential_cycles: u64,
+    /// Name of the layer whose resources bound the pipeline.
+    pub bottleneck_layer: String,
+}
+
+impl BatchReport {
+    pub fn inferences_per_s(&self) -> f64 {
+        if self.time_s > 0.0 {
+            self.batch as f64 / self.time_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Batch speedup over B strictly sequential requests (each paying its
+    /// own reprogramming on staged pools).
+    pub fn speedup_vs_sequential(&self) -> f64 {
+        if self.cycles == 0 {
+            return 1.0;
+        }
+        self.sequential_cycles as f64 / self.cycles as f64
+    }
+}
+
+/// Resource ids for the list schedule.
+const RES_CORES: usize = 0;
+const RES_DWACC: usize = 1;
+const RES_IMA_SHARED: usize = 2;
+const RES_ARRAY0: usize = 3;
+
+/// Serve a batch of `cfgb.batch` requests of `net` under `strategy` on the
+/// pool described by `cfg`/`plan`. The plan must come from the plan cache
+/// (or `place_staged`) for the same network.
+pub fn run_batched(
+    net: &Network,
+    strategy: Strategy,
+    cfg: &SystemConfig,
+    pm: &PowerModel,
+    plan: &StagedPlacement,
+    cfgb: BatchConfig,
+) -> BatchReport {
+    assert!(cfgb.batch > 0, "batch must be ≥ 1");
+    assert_eq!(
+        plan.net_fingerprint,
+        net.fingerprint(),
+        "plan was placed for a different network geometry"
+    );
+    assert_eq!(
+        plan.pass_ranges.last().map(|&(_, b)| b),
+        Some(net.layers.len()),
+        "plan does not cover this network"
+    );
+    let ex = Executor::new(cfg, pm, strategy);
+    let pool = ImaArrayPool::new(cfg, pm);
+
+    // per-layer (cycles, energy, engine), computed once — requests are
+    // identical and the engine choice feeds the resource mapping
+    let costs: Vec<(u64, EnergyAccount, Engine)> = net
+        .layers
+        .iter()
+        .map(|l| {
+            let (rep, acc) = ex.layer(l);
+            (rep.cycles, acc, rep.engine)
+        })
+        .collect();
+    let per_request_cycles: u64 = costs.iter().map(|(cy, _, _)| *cy).sum();
+    let per_request_energy: f64 = {
+        let mut acc = EnergyAccount::default();
+        for (_, e, _) in &costs {
+            acc.add(e);
+        }
+        acc.total_j(pm, cfg)
+    };
+
+    // resources each layer occupies (within its pass)
+    let layer_resources = |pass: &crate::tilepack::PoolPlacement,
+                           range: (usize, usize)|
+     -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        for li in range.0..range.1 {
+            let res = match costs[li].2 {
+                Engine::Cores => vec![RES_CORES],
+                Engine::DwAcc => vec![RES_DWACC],
+                Engine::Ima => {
+                    let arrays = &pass.layer_arrays[li];
+                    if arrays.is_empty() {
+                        vec![RES_IMA_SHARED]
+                    } else {
+                        arrays.iter().map(|a| RES_ARRAY0 + a).collect()
+                    }
+                }
+            };
+            out.push(res);
+        }
+        out
+    };
+
+    let (reprogram_per_pass, reprogram_energy_j): (Vec<u64>, f64) = if plan.is_resident() {
+        (vec![0; plan.passes.len()], 0.0)
+    } else {
+        (
+            plan.passes.iter().map(|p| pool.program_cycles(p)).collect(),
+            plan.passes.iter().map(|p| pool.program_energy_j(p)).sum(),
+        )
+    };
+
+    // greedy list schedule, batch-major across passes
+    let mut now: u64 = 0; // global clock across passes
+    let mut reprogram_cycles: u64 = 0;
+    // deterministic maps: the bottleneck tie-break iterates these
+    let mut busy_cy: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut layer_contrib: BTreeMap<(usize, usize), u64> = BTreeMap::new(); // (res, layer)
+
+    for (pi, (pass, &range)) in plan.passes.iter().zip(plan.pass_ranges.iter()).enumerate() {
+        // staged pools rewrite their weights before every pass
+        now += reprogram_per_pass[pi];
+        reprogram_cycles += reprogram_per_pass[pi];
+
+        let res_of = layer_resources(pass, range);
+        let n_layers = range.1 - range.0;
+        let mut res_free: BTreeMap<usize, u64> = BTreeMap::new();
+        // per-layer finish times of the previous two requests — the
+        // double-buffer backpressure (request r's layer k may not start
+        // until request r−2 has consumed the k/k+1 boundary buffer)
+        let mut finish_prev: Vec<u64> = vec![now; n_layers];
+        let mut finish_prev2: Vec<u64> = vec![now; n_layers];
+        let mut pass_end = now;
+        let mut prev_request_end = now;
+        for _r in 0..cfgb.batch {
+            let mut finish_cur: Vec<u64> = vec![now; n_layers];
+            let mut t = now; // this request's position in the chain
+            if !cfgb.pipeline {
+                // strict serving: wait for the previous request to drain
+                t = t.max(prev_request_end);
+            }
+            for (k, li) in (range.0..range.1).enumerate() {
+                let cy = costs[li].0;
+                let mut start = t;
+                for res in &res_of[k] {
+                    start = start.max(*res_free.get(res).unwrap_or(&now));
+                }
+                // buffer slot at the output boundary frees once request
+                // r−2 has finished the consuming layer k+1
+                if k + 1 < n_layers {
+                    start = start.max(finish_prev2[k + 1]);
+                }
+                let finish = start + cy;
+                for res in &res_of[k] {
+                    res_free.insert(*res, finish);
+                    *busy_cy.entry(*res).or_insert(0) += cy;
+                    *layer_contrib.entry((*res, li)).or_insert(0) += cy;
+                }
+                finish_cur[k] = finish;
+                t = finish;
+            }
+            prev_request_end = t;
+            pass_end = pass_end.max(t);
+            finish_prev2 = std::mem::replace(&mut finish_prev, finish_cur);
+        }
+        now = pass_end;
+    }
+
+    // pipeline bottleneck: the busiest resource, attributed to the layer
+    // that contributed the most busy time on it (deterministic: BTreeMap
+    // order breaks ties by lowest resource id / layer index last-wins)
+    let mut bottleneck_layer = String::from("none");
+    if let Some((&res, _)) = busy_cy.iter().max_by_key(|(_, &cy)| cy) {
+        let top = layer_contrib
+            .iter()
+            .filter(|((r, _), _)| *r == res)
+            .max_by_key(|(_, &cy)| cy);
+        if let Some((&(_, li), _)) = top {
+            bottleneck_layer = net.layers[li].name.clone();
+        }
+    }
+
+    let cycles = now;
+    let time_s = cycles as f64 * cfg.freq.cycle_ns() * 1e-9;
+    // a truly sequential request reprograms every pass itself; batch-major
+    // serving pays it once per batch (reprogram_cycles is one serving cycle)
+    let sequential_cycles =
+        (per_request_cycles + reprogram_cycles).saturating_mul(cfgb.batch as u64);
+    BatchReport {
+        network: net.name.clone(),
+        strategy,
+        batch: cfgb.batch,
+        pipelined: cfgb.pipeline,
+        n_passes: plan.n_passes(),
+        cycles,
+        reprogram_cycles,
+        time_s,
+        energy_j: per_request_energy * cfgb.batch as f64 + reprogram_energy_j,
+        reprogram_energy_j,
+        per_request_cycles,
+        sequential_cycles,
+        bottleneck_layer,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan_cache::PlanCache;
+    use crate::coordinator::run_network;
+    use crate::net::bottleneck::bottleneck;
+
+    fn setup() -> (SystemConfig, PowerModel) {
+        (SystemConfig::scaled_up(8), PowerModel::paper())
+    }
+
+    #[test]
+    fn batch_one_pipelined_equals_one_sequential_run() {
+        let (cfg, pm) = setup();
+        let net = bottleneck();
+        let mut cache = PlanCache::new();
+        let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+        let one = run_batched(
+            &net,
+            Strategy::ImaDw,
+            &cfg,
+            &pm,
+            &plan,
+            BatchConfig {
+                batch: 1,
+                pipeline: true,
+            },
+        );
+        let seq = run_network(&net, Strategy::ImaDw, &cfg, &pm);
+        assert_eq!(one.cycles, seq.cycles);
+        assert_eq!(one.per_request_cycles, seq.cycles);
+        assert!((one.energy_j - seq.energy_j).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelined_batch_overlaps_disjoint_resources() {
+        let (cfg, pm) = setup();
+        let net = bottleneck();
+        let mut cache = PlanCache::new();
+        let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+        let b = BatchConfig {
+            batch: 4,
+            pipeline: true,
+        };
+        let piped = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, b);
+        let strict = run_batched(
+            &net,
+            Strategy::ImaDw,
+            &cfg,
+            &pm,
+            &plan,
+            BatchConfig {
+                batch: 4,
+                pipeline: false,
+            },
+        );
+        assert!(piped.cycles < strict.cycles, "{} vs {}", piped.cycles, strict.cycles);
+        assert!(piped.speedup_vs_sequential() > 1.0);
+        assert!(piped.inferences_per_s() > strict.inferences_per_s());
+        // lower bound: the bottleneck resource cannot be beaten
+        assert!(piped.cycles >= piped.per_request_cycles);
+    }
+}

@@ -17,15 +17,24 @@ pub enum HwpeState {
     Running { owner: usize },
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum RegfileError {
-    #[error("accelerator busy (owned by core {0})")]
     Busy(usize),
-    #[error("core {0} does not own the accelerator")]
     NotOwner(usize),
-    #[error("trigger while no job context programmed")]
     NoContext,
 }
+
+impl std::fmt::Display for RegfileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegfileError::Busy(owner) => write!(f, "accelerator busy (owned by core {owner})"),
+            RegfileError::NotOwner(core) => write!(f, "core {core} does not own the accelerator"),
+            RegfileError::NoContext => write!(f, "trigger while no job context programmed"),
+        }
+    }
+}
+
+impl std::error::Error for RegfileError {}
 
 /// Latch-based register file + controller FSM.
 #[derive(Debug, Clone)]

@@ -5,11 +5,15 @@
 //! * [`mapping`]  — how layers become crossbar jobs: point-wise/standard
 //!   convolutions via virtual im2col, depth-wise via diagonal C_job blocks;
 //! * [`subsys`]   — the timing model: job phase demands, sequential vs
-//!   pipelined schedules, per-layer cost/energy.
+//!   pipelined schedules, per-layer cost/energy;
+//! * [`pool`]     — the multi-array scale-up: N crossbars with weights
+//!   pinned on-chip, pool occupancy, PCM (re)programming cost.
 
 pub mod crossbar;
 pub mod mapping;
+pub mod pool;
 pub mod subsys;
 
 pub use mapping::{ConvMap, DwMap, JobShape};
+pub use pool::ImaArrayPool;
 pub use subsys::{ImaSubsystem, LayerCost};

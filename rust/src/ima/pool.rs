@@ -1,0 +1,117 @@
+//! Multi-array IMA pool (the §VI scale-up, generalized beyond 34 arrays).
+//!
+//! The paper's scaled-up system statically muxes N crossbars into one IMA
+//! subsystem — one array computes at a time, but every array holds its
+//! weights permanently. [`ImaArrayPool`] models the pool-level quantities
+//! the batch scheduler needs on top of the single-array timing model in
+//! [`super::subsys`]: device capacity, placement fit, per-array occupancy,
+//! and the PCM program-and-verify cost of (re)programming a placement —
+//! 20–30× the MVM latency *per row* (§VI), which is why staged serving on
+//! an undersized pool is catastrophically slow and the paper insists on
+//! weights resident on-chip.
+
+use crate::arch::{PowerModel, SystemConfig};
+use crate::tilepack::PoolPlacement;
+
+use super::subsys::ImaSubsystem;
+
+pub struct ImaArrayPool<'a> {
+    pub cfg: &'a SystemConfig,
+    pub pm: &'a PowerModel,
+    /// Arrays in the pool (mirrors `cfg.n_crossbars`).
+    pub n_arrays: usize,
+}
+
+impl<'a> ImaArrayPool<'a> {
+    pub fn new(cfg: &'a SystemConfig, pm: &'a PowerModel) -> Self {
+        ImaArrayPool {
+            cfg,
+            pm,
+            n_arrays: cfg.n_crossbars,
+        }
+    }
+
+    /// The shared single-array timing model (arrays are identical; the
+    /// static mux serializes compute, so per-layer costs come from here).
+    pub fn subsystem(&self) -> ImaSubsystem<'a> {
+        ImaSubsystem::new(self.cfg, self.pm)
+    }
+
+    /// Total PCM device capacity of the pool.
+    pub fn capacity_devices(&self) -> usize {
+        self.cfg.xbar_rows * self.cfg.xbar_cols * self.n_arrays
+    }
+
+    /// Does a placement fit this pool?
+    pub fn fits(&self, p: &PoolPlacement) -> bool {
+        p.arrays_used <= self.n_arrays
+    }
+
+    /// Pool-wide occupancy: fraction of *all* pool devices holding weights
+    /// (unused arrays count as empty — the Fig. 12b denominator).
+    pub fn pool_occupancy(&self, p: &PoolPlacement) -> f64 {
+        if self.n_arrays == 0 {
+            return 0.0;
+        }
+        p.devices_used() as f64 / self.capacity_devices() as f64
+    }
+
+    /// Cycles to program (or reprogram) every tile of a placement: per-row
+    /// program-and-verify at `pcm_program_row_factor` × the MVM latency.
+    pub fn program_cycles(&self, p: &PoolPlacement) -> u64 {
+        let per_row = self.cfg.ima_mvm_ns * self.cfg.pcm_program_row_factor;
+        let cy_per_row = (per_row / self.cfg.freq.cycle_ns()).ceil() as u64;
+        p.program_rows() * cy_per_row
+    }
+
+    /// First-order energy of (re)programming a placement: each row holds
+    /// the analog macro for `pcm_program_row_factor` MVM-latency intervals
+    /// (write pulses + verify reads) with that tile's columns active — the
+    /// single-word-line job energy scaled by the iteration count. Keeps the
+    /// batch reports' energy consistent with their reprogramming cycles.
+    pub fn program_energy_j(&self, p: &PoolPlacement) -> f64 {
+        p.placements
+            .iter()
+            .map(|pl| {
+                self.cfg.pcm_program_row_factor
+                    * pl.tile.rows as f64
+                    * self.pm.ima_job_energy_j(self.cfg, 1, pl.tile.cols)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::mobilenetv2::mobilenet_v2;
+    use crate::tilepack::place_network;
+
+    #[test]
+    fn capacity_and_fit() {
+        let cfg = SystemConfig::scaled_up(34);
+        let pm = PowerModel::paper();
+        let pool = ImaArrayPool::new(&cfg, &pm);
+        assert_eq!(pool.n_arrays, 34);
+        assert_eq!(pool.capacity_devices(), 34 * 65536);
+
+        let net = mobilenet_v2(224);
+        let p = place_network(&net, 256, 40, false).unwrap();
+        assert!(pool.fits(&p) == (p.arrays_used <= 34));
+        let occ = pool.pool_occupancy(&p);
+        assert!((0.5..=1.0).contains(&occ), "{occ}");
+    }
+
+    #[test]
+    fn programming_dwarfs_inference() {
+        // §VI: programming all of MNv2's rows takes far longer than the
+        // 10 ms inference — the argument for weights resident on-chip
+        let cfg = SystemConfig::scaled_up(34);
+        let pm = PowerModel::paper();
+        let pool = ImaArrayPool::new(&cfg, &pm);
+        let net = mobilenet_v2(224);
+        let p = place_network(&net, 256, 40, false).unwrap();
+        let prog_s = pool.program_cycles(&p) as f64 * cfg.freq.cycle_ns() * 1e-9;
+        assert!(prog_s > 10e-3, "programming {prog_s} s");
+    }
+}

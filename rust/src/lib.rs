@@ -7,20 +7,28 @@
 //! * **L3 (this crate)** — the cluster coordinator: a cycle/energy-accurate
 //!   model of the PULP cluster (8 RISC-V cores, 512 kB TCDM, logarithmic
 //!   interconnect), the analog In-Memory Accelerator (IMA) subsystem with
-//!   sequential/pipelined execution, the depth-wise digital accelerator, the
-//!   TILE&PACK multi-crossbar allocator, the layer-to-engine scheduler with
-//!   the paper's four mapping strategies, the state-of-the-art baseline
-//!   models, and the report generators for every figure/table in the paper.
+//!   sequential/pipelined execution and the multi-array scale-up pool
+//!   ([`ima::pool`]), the depth-wise digital accelerator, the TILE&PACK
+//!   multi-crossbar allocator with whole-network pool placement
+//!   ([`tilepack::placement`]), the layer-to-engine scheduler with the
+//!   paper's four mapping strategies plus the batched multi-array serving
+//!   engine ([`coordinator::scheduler`]) and its memoizing plan cache
+//!   ([`coordinator::plan_cache`]), the state-of-the-art baseline models,
+//!   and the report generators for every figure/table in the paper (plus
+//!   the `scaleup` pool-size × batch sweep).
 //! * **L2/L1 (python/, build-time only)** — the quantized MobileNetV2 and the
 //!   Pallas crossbar/depth-wise kernels, AOT-lowered to HLO text.
-//! * **runtime/** bridges the two: it loads `artifacts/*.hlo.txt` through the
-//!   PJRT C API (`xla` crate) and performs *functional* end-to-end inference
-//!   bit-exactly matching the JAX golden vectors — Python never runs on the
-//!   request path.
+//! * **runtime/** performs *functional* end-to-end inference by issuing the
+//!   same job stream the timing model accounts, through a native integer
+//!   backend implementing the AOT ABI's numeric contract (the PJRT/`xla`
+//!   client is unavailable offline). Golden-vector tests verify
+//!   bit-exactness vs the JAX reference when `make artifacts` has run and
+//!   **skip cleanly otherwise** — `cargo test -q` needs no artifacts.
 //!
-//! Start from [`coordinator::run`] for end-to-end experiments or
-//! [`runtime::functional`] for functional inference; `DESIGN.md` maps every
-//! module to the paper section it reproduces.
+//! Start from [`coordinator::run_network`] for per-request experiments,
+//! [`coordinator::scheduler::run_batched`] for batched multi-array serving,
+//! or [`runtime::functional`] for functional inference; `DESIGN.md` maps
+//! every module to the paper section it reproduces.
 
 pub mod arch;
 pub mod baselines;

@@ -22,8 +22,10 @@ commands (one per paper exhibit):
   table1                  Table I   comparison with the state of the art
   ablate                  DESIGN.md §8 ablations (exec model, C_job, bus, L1/DMA, PCM programming)
   fig13                   Fig. 13   four IMC computing models
-  infer [--tiny]          functional MobileNetV2 inference via PJRT artifacts
-                          (bit-exact vs the JAX golden logits)
+  scaleup                 multi-array serving: pool-size × batch sweep, or one
+                          point with --arrays N --batch B
+  infer [--tiny]          functional MobileNetV2 inference (bit-exact vs the
+                          JAX golden logits when artifacts are present)
   all [--json FILE]       run everything; optionally dump JSON
 
 options:
@@ -32,7 +34,10 @@ options:
   --sequential            sequential IMA execution   (default pipelined)
   --artifacts DIR         artifacts directory        (default ./artifacts)
   --noise SIGMA           PCM conductance noise for `infer` (default 0)
-  --batch N               after verification, serve N back-to-back requests
+  --arrays N              `scaleup`: crossbar arrays in the pool
+  --batch N               `scaleup`: batched requests per serving cycle;
+                          `infer`: serve N back-to-back requests
+  --no-pipeline           `scaleup`: disable request pipelining
 ";
 
 fn config_from(args: &Args) -> SystemConfig {
@@ -84,6 +89,41 @@ fn main() {
         "ablate" => report::ablations::generate(&pm).print(),
         "table1" => report::table1::generate(&pm).print(),
         "fig13" => report::fig13_models::generate(&pm).print(),
+        "scaleup" => match (args.opt("arrays"), args.opt("batch")) {
+            (None, None) => report::scaleup::generate_sweep(
+                &pm,
+                report::scaleup::DEFAULT_ARRAYS,
+                report::scaleup::DEFAULT_BATCHES,
+                !args.flag("no-pipeline"),
+            )
+            .print(),
+            _ => {
+                let arrays: usize = args.opt_parse("arrays", 34usize);
+                let batch: usize = args.opt_parse("batch", 1usize);
+                let pipeline = !args.flag("no-pipeline");
+                match report::scaleup::run_point(&pm, arrays, batch, pipeline) {
+                    Ok(rep) => {
+                        println!(
+                            "scale-up: {} on {arrays} arrays, batch {batch} ({}) — \
+                             {} passes, {} cycles ({} reprogramming), {:.1} inf/s, \
+                             {:.2}x vs sequential, bottleneck `{}`",
+                            rep.network,
+                            if rep.pipelined { "pipelined" } else { "strict" },
+                            rep.n_passes,
+                            rep.cycles,
+                            rep.reprogram_cycles,
+                            rep.inferences_per_s(),
+                            rep.speedup_vs_sequential(),
+                            rep.bottleneck_layer
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!("scale-up failed: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        },
         "infer" => {
             let dir = args.opt("artifacts").unwrap_or("artifacts").to_string();
             let tiny = args.flag("tiny");
@@ -119,6 +159,7 @@ fn main() {
                 report::ablations::generate(&pm),
                 report::table1::generate(&pm),
                 report::fig13_models::generate(&pm),
+                report::scaleup::generate(&pm),
             ];
             let mut all = Vec::new();
             for r in &reports {

@@ -175,6 +175,28 @@ impl Network {
         self.layers.iter().map(|l| l.macs()).sum()
     }
 
+    /// Geometry fingerprint (FNV-1a over layer kinds + shapes, names
+    /// excluded, order-sensitive). Placements and cached plans key on it so
+    /// a plan can never silently be applied to a different network.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        };
+        mix(self.layers.len() as u64);
+        for l in &self.layers {
+            mix(l.kind as u64);
+            for v in [l.hin, l.win, l.cin, l.cout, l.k, l.stride, l.pad] {
+                mix(v as u64);
+            }
+            mix(l.residual_from.map(|v| v as u64 + 1).unwrap_or(0));
+        }
+        h
+    }
+
     pub fn total_ops(&self) -> u64 {
         self.layers.iter().map(|l| l.ops()).sum()
     }

@@ -10,6 +10,7 @@
 //! | `fig12_e2e`    | Fig. 12a/c end-to-end MobileNetV2 + Alg.1/Fig.12b |
 //! | `table1`       | Table I SoA comparison |
 //! | `fig13_models` | Fig. 13 four computing models |
+//! | `scaleup`      | pool-size × batch sweep (the Fig. 12b/13 story, serving regime) |
 
 pub mod ablations;
 pub mod fig10_breakdown;
@@ -18,6 +19,7 @@ pub mod fig13_models;
 pub mod fig6_area;
 pub mod fig7_roofline;
 pub mod fig9_bottleneck;
+pub mod scaleup;
 pub mod table1;
 
 use crate::util::json::Json;

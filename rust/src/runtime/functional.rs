@@ -1,4 +1,4 @@
-//! Functional end-to-end inference through the PJRT artifacts.
+//! Functional end-to-end inference through the job backend.
 //!
 //! Replays the manifest network layer by layer, issuing the same job stream
 //! the timing model accounts (DESIGN.md §4):
@@ -16,9 +16,9 @@
 //! Every layer's output checksum is compared against the manifest golden;
 //! the final logits must match bit-exactly.
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
 use crate::net::LayerKind;
+use crate::util::error::{Context, Result};
 use crate::util::rng::SplitMix64;
 
 use super::client::{Runtime, DW_CB, DW_TILE, PIXELS, PIXELS_BATCH, RESIDUAL_CHUNK, XBAR};
@@ -30,7 +30,7 @@ use super::tensor::TensorI8;
 pub struct InferenceResult {
     pub logits: Vec<i32>,
     pub argmax: usize,
-    pub pjrt_calls: u64,
+    pub backend_calls: u64,
     pub programmed_tiles: usize,
     pub wall: std::time::Duration,
     /// (layer name, ours, golden) for every layer — all must match.
@@ -233,6 +233,19 @@ fn run_dw(rt: &Runtime, w: &[i8], l: &crate::net::Layer, input: &TensorI8) -> Re
     Ok(out)
 }
 
+/// Run one conv/fc layer through the backend job stream. Public so the
+/// batched property tests can pit the exact orchestration path (tiling,
+/// padding, chunked 16/128-pixel batching, row-split accumulation) against
+/// an independent host reference — no artifacts required.
+pub fn run_conv_layer(
+    rt: &Runtime,
+    li: usize,
+    l: &crate::net::Layer,
+    input: &TensorI8,
+) -> Result<(TensorI8, Option<Vec<i32>>)> {
+    run_conv(rt, li, l, input)
+}
+
 fn run_residual(rt: &Runtime, a: &TensorI8, b: &TensorI8) -> Result<TensorI8> {
     assert_eq!(a.data.len(), b.data.len());
     let n = a.data.len();
@@ -331,7 +344,7 @@ pub fn run_inference(rt: &Runtime, m: &Manifest) -> Result<InferenceResult> {
     Ok(InferenceResult {
         logits,
         argmax,
-        pjrt_calls: rt.calls.get() - calls0,
+        backend_calls: rt.calls.get() - calls0,
         programmed_tiles: rt.programmed_tiles(),
         wall: t0.elapsed(),
         checksums,
@@ -358,11 +371,11 @@ pub fn run_manifest_inference(dir: &str, tiny: bool, sigma: f64) -> Result<Strin
     let res = run_inference(&rt, &m)?;
 
     let mut s = format!(
-        "network {} ({} layers, {:.1} MMAC) — {} PJRT job calls, {} crossbar tiles programmed, {:.2}s wall\n",
+        "network {} ({} layers, {:.1} MMAC) — {} backend job calls, {} crossbar tiles programmed, {:.2}s wall\n",
         m.network_name,
         m.layers.len(),
         m.to_network().total_macs() as f64 / 1e6,
-        res.pjrt_calls,
+        res.backend_calls,
         res.programmed_tiles,
         res.wall.as_secs_f64()
     );

@@ -5,9 +5,8 @@
 //! int4 weights; `golden/` the input and logits. This module parses it into
 //! the same `net::Network` the timing model uses, plus the runtime extras.
 
-use anyhow::{Context, Result};
-
 use crate::net::{Layer, LayerKind, Network};
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]

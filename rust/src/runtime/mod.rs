@@ -1,16 +1,18 @@
-//! PJRT runtime: the functional half of the coordinator.
+//! Functional runtime: the numeric half of the coordinator.
 //!
-//! Loads the AOT artifacts (`artifacts/*.hlo.txt`, HLO *text* — see
-//! DESIGN.md / aot.py for why not serialized protos), compiles them once on
-//! the PJRT CPU client, and performs end-to-end quantized inference by
-//! issuing exactly the job stream the timing model accounts: crossbar MVM
-//! jobs in 16-pixel chunks, depth-wise engine tiles, residual chunks. The
-//! host code plays the cluster cores' role (im2col gather, int32 partial
-//! accumulation, pooling); all tensor math runs inside PJRT executables.
+//! Performs end-to-end quantized inference by issuing exactly the job
+//! stream the timing model accounts: crossbar MVM jobs in 16/128-pixel
+//! chunks, depth-wise engine tiles, residual chunks. The host code plays
+//! the cluster cores' role (im2col gather, int32 partial accumulation,
+//! pooling); the per-job tensor math runs in [`client::Runtime`] — a native
+//! integer backend implementing the AOT ABI's numeric contract (the
+//! original PJRT/`xla` client is unavailable offline; see client.rs).
 //! Python never runs here.
 //!
 //! Bit-exactness against the JAX golden vectors (same seed, same numeric
-//! contract) is asserted per layer via checksums and on the final logits.
+//! contract) is asserted per layer via checksums and on the final logits
+//! whenever the artifacts are present (`make artifacts`); the contract
+//! itself is property-tested artifact-free.
 
 pub mod client;
 pub mod functional;

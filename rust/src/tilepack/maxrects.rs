@@ -258,6 +258,27 @@ mod tests {
     }
 
     #[test]
+    fn deterministic_for_fixed_seed() {
+        // same SplitMix64 seed → bit-identical placements, run after run —
+        // the property the plan cache and golden schedules rely on
+        use crate::util::rng::SplitMix64;
+        let run = || {
+            let mut rng = SplitMix64::new(0xD0_0DCAFE);
+            let mut b = MaxRectsBin::new(256, 256, false);
+            for id in 0..60 {
+                let w = rng.range_i64(1, 200) as usize;
+                let h = rng.range_i64(1, 200) as usize;
+                let _ = b.insert(w, h, id);
+            }
+            b.placed.clone()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
     fn many_small_tiles_reach_high_utilization() {
         let mut b = MaxRectsBin::new(256, 256, false);
         let mut id = 0;

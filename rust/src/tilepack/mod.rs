@@ -2,12 +2,16 @@
 //! crossbar-sized rectangles, then pack the tiles onto the minimum number of
 //! 256×256 IMA crossbars with MaxRects-BSSF bin packing (the paper uses the
 //! `rectpack` Python library; `maxrects` is a from-scratch implementation of
-//! the same algorithm, Jylänki 2010).
+//! the same algorithm, Jylänki 2010). [`placement`] lifts the packing to
+//! whole-network pool placement — resident when the pool holds every
+//! weight, staged (multi-pass, reprogramming) when it does not.
 
 pub mod maxrects;
 pub mod packer;
+pub mod placement;
 pub mod tiler;
 
 pub use maxrects::{MaxRectsBin, Rect};
 pub use packer::{pack, Packing};
+pub use placement::{place_network, place_staged, PoolPlacement, StagedPlacement};
 pub use tiler::{tile_network, Tile};

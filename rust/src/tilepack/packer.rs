@@ -6,7 +6,7 @@
 use super::maxrects::{MaxRectsBin, Rect};
 use super::tiler::Tile;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Placement {
     pub tile: Tile,
     pub bin: usize,

@@ -1,0 +1,363 @@
+//! Whole-network placement across a multi-array IMA pool (the §VI scale-up
+//! generalized): TILE&PACK every conv/fc weight matrix onto at most
+//! `n_arrays` crossbars, pin the weights on-chip, and report per-array
+//! occupancy (the Fig. 12b view, extended to arbitrary pool sizes).
+//!
+//! Two regimes:
+//!
+//! * **Resident** — the whole network packs into the pool (MobileNetV2 needs
+//!   ~34 arrays); weights are programmed once at boot and every request runs
+//!   allocation-free.
+//! * **Staged** — the pool is smaller than the weight footprint; the network
+//!   is split into consecutive *passes* whose tiles each fit, and serving
+//!   reprograms the pool between passes (the paper deems this infeasible at
+//!   interactive rates — §VI — and the scheduler charges the full PCM
+//!   program-and-verify cost so the report shows exactly why).
+
+use crate::net::{LayerKind, Network};
+
+use super::packer::{pack, Packing, Placement};
+use super::tiler::{tile_network, Tile};
+
+/// A network packed onto one pool-sized set of arrays.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolPlacement {
+    /// Crossbar side (rows = cols = `s`).
+    pub s: usize,
+    /// Arrays actually used (≤ the pool size it was placed for).
+    pub arrays_used: usize,
+    /// Every tile's (array, position) assignment.
+    pub placements: Vec<Placement>,
+    /// Per-array utilization in [0, 1].
+    pub occupancy: Vec<f64>,
+    /// For each network layer: the sorted arrays hosting at least one of
+    /// its tiles (empty for layers not mapped to the pool).
+    pub layer_arrays: Vec<Vec<usize>>,
+    /// For each network layer: how many tiles it was split into.
+    pub layer_tiles: Vec<usize>,
+}
+
+impl PoolPlacement {
+    fn from_packing(net: &Network, s: usize, tiles: &[Tile], packing: Packing) -> PoolPlacement {
+        let mut layer_arrays: Vec<Vec<usize>> = vec![Vec::new(); net.layers.len()];
+        let mut layer_tiles = vec![0usize; net.layers.len()];
+        for t in tiles {
+            layer_tiles[t.layer] += 1;
+        }
+        for p in &packing.placements {
+            let la = &mut layer_arrays[p.tile.layer];
+            if !la.contains(&p.bin) {
+                la.push(p.bin);
+            }
+        }
+        for la in layer_arrays.iter_mut() {
+            la.sort_unstable();
+        }
+        PoolPlacement {
+            s,
+            arrays_used: packing.n_bins(),
+            occupancy: packing.utilizations(),
+            placements: packing.placements,
+            layer_arrays,
+            layer_tiles,
+        }
+    }
+
+    /// Total devices occupied across the pool.
+    pub fn devices_used(&self) -> usize {
+        self.placements.iter().map(|p| p.tile.devices()).sum()
+    }
+
+    /// Rows that PCM program-and-verify must write to program this
+    /// placement (each placed tile programs `rows` word-lines).
+    pub fn program_rows(&self) -> u64 {
+        self.placements.iter().map(|p| p.tile.rows as u64).sum()
+    }
+
+    /// Placement invariants (tested): every tiled layer is placed exactly
+    /// once per tile, per-array utilization stays within [0, 1], and array
+    /// indices stay inside `arrays_used`.
+    pub fn check_invariants(&self, net: &Network) -> Result<(), String> {
+        let mut placed = vec![0usize; net.layers.len()];
+        for p in &self.placements {
+            if p.bin >= self.arrays_used {
+                return Err(format!("tile on array {} >= {}", p.bin, self.arrays_used));
+            }
+            placed[p.tile.layer] += 1;
+        }
+        for (li, (&want, &got)) in self.layer_tiles.iter().zip(placed.iter()).enumerate() {
+            if want != got {
+                return Err(format!(
+                    "layer {li} `{}`: {got} of {want} tiles placed",
+                    net.layers[li].name
+                ));
+            }
+        }
+        for (a, &u) in self.occupancy.iter().enumerate() {
+            if !(0.0..=1.0).contains(&u) {
+                return Err(format!("array {a} utilization {u} outside [0,1]"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Place the whole network onto a pool of `n_arrays` crossbars. Errors when
+/// the weights do not fit (use [`place_staged`] for small pools).
+pub fn place_network(
+    net: &Network,
+    s: usize,
+    n_arrays: usize,
+    rotate: bool,
+) -> Result<PoolPlacement, String> {
+    let tiles = tile_network(net, s);
+    let packing = pack(&tiles, s, rotate);
+    if packing.n_bins() > n_arrays {
+        return Err(format!(
+            "network `{}` needs {} arrays but the pool has {n_arrays} \
+             (weights do not fit on-chip; staged placement required)",
+            net.name,
+            packing.n_bins()
+        ));
+    }
+    Ok(PoolPlacement::from_packing(net, s, &tiles, packing))
+}
+
+/// A network split into consecutive passes, each resident in the pool.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StagedPlacement {
+    pub n_arrays: usize,
+    /// [`crate::net::Network::fingerprint`] of the network this placement
+    /// was made for — the scheduler refuses plans for a different geometry.
+    pub net_fingerprint: u64,
+    pub passes: Vec<PoolPlacement>,
+    /// For each pass: the half-open network layer index range it executes
+    /// (covers *all* layers — non-conv layers ride with the preceding pass).
+    pub pass_ranges: Vec<(usize, usize)>,
+}
+
+impl StagedPlacement {
+    pub fn n_passes(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// Resident placements never reprogram on the request path.
+    pub fn is_resident(&self) -> bool {
+        self.passes.len() <= 1
+    }
+
+    /// PCM rows rewritten per serving cycle through all passes (zero when
+    /// resident — boot-time programming is off the request path).
+    pub fn reprogram_rows_per_cycle(&self) -> u64 {
+        if self.is_resident() {
+            0
+        } else {
+            self.passes.iter().map(|p| p.program_rows()).sum()
+        }
+    }
+}
+
+/// Greedily split the network into consecutive passes whose TILE&PACK each
+/// fits `n_arrays`. Errors only if a single layer alone exceeds the pool.
+pub fn place_staged(
+    net: &Network,
+    s: usize,
+    n_arrays: usize,
+    rotate: bool,
+) -> Result<StagedPlacement, String> {
+    // fast path: everything fits
+    if let Ok(p) = place_network(net, s, n_arrays, rotate) {
+        return Ok(StagedPlacement {
+            n_arrays,
+            net_fingerprint: net.fingerprint(),
+            passes: vec![p],
+            pass_ranges: vec![(0, net.layers.len())],
+        });
+    }
+
+    let conv_idx: Vec<usize> = net
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.kind == LayerKind::Conv)
+        .map(|(i, _)| i)
+        .collect();
+
+    // `keep[i]`: conv layer i stays in the trial pass; everything else is
+    // masked to a non-tiled kind so tile_network skips it while `layer`
+    // ids still refer to the full network
+    let sub_net = |keep: &[bool]| -> Network {
+        Network {
+            name: net.name.clone(),
+            layers: net
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| {
+                    let mut l = l.clone();
+                    if l.kind == LayerKind::Conv && !keep[i] {
+                        l.kind = LayerKind::Add;
+                    }
+                    l
+                })
+                .collect(),
+        }
+    };
+    let mask_of = |layers: &[usize]| -> Vec<bool> {
+        let mut keep = vec![false; net.layers.len()];
+        for &i in layers {
+            keep[i] = true;
+        }
+        keep
+    };
+
+    let single_layer_err = |ci: usize| {
+        format!(
+            "layer `{}` alone exceeds a {n_arrays}-array pool",
+            net.layers[ci].name
+        )
+    };
+
+    let mut passes = Vec::new();
+    let mut pass_first_conv = Vec::new();
+    let mut group: Vec<usize> = Vec::new();
+    // the last successful packing of `group` — reused when the pass closes
+    // instead of re-running MaxRects on the identical layer set
+    let mut group_placed: Option<PoolPlacement> = None;
+    for &ci in &conv_idx {
+        let mut attempt = group.clone();
+        attempt.push(ci);
+        match place_network(&sub_net(&mask_of(&attempt)), s, n_arrays, rotate) {
+            Ok(p) => {
+                group = attempt;
+                group_placed = Some(p);
+            }
+            Err(_) => {
+                let placed = group_placed.take().ok_or_else(|| single_layer_err(ci))?;
+                passes.push(placed);
+                pass_first_conv.push(group[0]);
+                let p = place_network(&sub_net(&mask_of(&[ci])), s, n_arrays, rotate)
+                    .map_err(|_| single_layer_err(ci))?;
+                group = vec![ci];
+                group_placed = Some(p);
+            }
+        }
+    }
+    if let Some(placed) = group_placed {
+        passes.push(placed);
+        pass_first_conv.push(group[0]);
+    }
+
+    // layer ranges: pass p runs from its first conv layer (or 0 for the
+    // first pass) up to the next pass's first conv layer
+    let mut pass_ranges = Vec::with_capacity(passes.len());
+    for (p, _) in passes.iter().enumerate() {
+        let start = if p == 0 { 0 } else { pass_first_conv[p] };
+        let end = if p + 1 < passes.len() {
+            pass_first_conv[p + 1]
+        } else {
+            net.layers.len()
+        };
+        pass_ranges.push((start, end));
+    }
+
+    Ok(StagedPlacement {
+        n_arrays,
+        net_fingerprint: net.fingerprint(),
+        passes,
+        pass_ranges,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::bottleneck::bottleneck;
+    use crate::net::mobilenetv2::mobilenet_v2;
+
+    #[test]
+    fn mobilenet_resident_on_34_arrays() {
+        let net = mobilenet_v2(224);
+        let p = place_network(&net, 256, 40, false).unwrap();
+        assert!((33..=38).contains(&p.arrays_used), "{}", p.arrays_used);
+        p.check_invariants(&net).unwrap();
+        // every layer placed exactly once per tile; conv layers host arrays
+        for (li, l) in net.layers.iter().enumerate() {
+            if l.kind == crate::net::LayerKind::Conv {
+                assert!(!p.layer_arrays[li].is_empty(), "{}", l.name);
+            } else {
+                assert!(p.layer_arrays[li].is_empty(), "{}", l.name);
+            }
+        }
+        // occupancy ≤ 1.0 everywhere, and devices match the tiling
+        let conv_weights: usize = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == crate::net::LayerKind::Conv)
+            .map(|l| l.n_weights())
+            .sum();
+        assert_eq!(p.devices_used(), conv_weights);
+    }
+
+    #[test]
+    fn mobilenet_does_not_fit_8_arrays_resident() {
+        let net = mobilenet_v2(224);
+        assert!(place_network(&net, 256, 8, false).is_err());
+    }
+
+    #[test]
+    fn bottleneck_expand_and_project_on_disjoint_arrays() {
+        let net = bottleneck();
+        let p = place_network(&net, 256, 8, false).unwrap();
+        p.check_invariants(&net).unwrap();
+        let exp = &p.layer_arrays[0];
+        let proj = &p.layer_arrays[2];
+        assert!(!exp.is_empty() && !proj.is_empty());
+        assert!(
+            exp.iter().all(|a| !proj.contains(a)),
+            "expand {exp:?} vs project {proj:?}"
+        );
+    }
+
+    #[test]
+    fn staged_placement_covers_every_layer_once() {
+        let net = mobilenet_v2(224);
+        let st = place_staged(&net, 256, 8, false).unwrap();
+        assert!(st.n_passes() > 1, "{}", st.n_passes());
+        assert!(!st.is_resident());
+        // ranges tile [0, len) without gaps or overlap
+        let mut cursor = 0usize;
+        for &(a, b) in &st.pass_ranges {
+            assert_eq!(a, cursor);
+            assert!(b > a);
+            cursor = b;
+        }
+        assert_eq!(cursor, net.layers.len());
+        // each pass fits the pool and places its conv layers in-range
+        for (p, &(_, b)) in st.passes.iter().zip(st.pass_ranges.iter()) {
+            assert!(p.arrays_used <= 8);
+            for pl in &p.placements {
+                // the first pass may start before its first conv layer
+                assert!(pl.tile.layer < b, "tile layer {} vs range end {b}", pl.tile.layer);
+            }
+        }
+        assert!(st.reprogram_rows_per_cycle() > 0);
+    }
+
+    #[test]
+    fn staged_is_deterministic() {
+        let net = mobilenet_v2(224);
+        let a = place_staged(&net, 256, 8, false).unwrap();
+        let b = place_staged(&net, 256, 8, false).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn resident_staged_has_one_pass_and_no_reprogram() {
+        let net = bottleneck();
+        let st = place_staged(&net, 256, 8, false).unwrap();
+        assert_eq!(st.n_passes(), 1);
+        assert!(st.is_resident());
+        assert_eq!(st.reprogram_rows_per_cycle(), 0);
+    }
+}

@@ -46,7 +46,15 @@ impl Args {
     fn is_boolean_flag(name: &str) -> bool {
         matches!(
             name,
-            "help" | "breakdown" | "peak" | "verbose" | "quiet" | "rotate" | "tiny" | "sequential"
+            "help"
+                | "breakdown"
+                | "peak"
+                | "verbose"
+                | "quiet"
+                | "rotate"
+                | "tiny"
+                | "sequential"
+                | "no-pipeline"
         )
     }
 
@@ -97,5 +105,14 @@ mod tests {
     fn opt_parse_default() {
         let a = argv("x");
         assert_eq!(a.opt_parse("missing", 42u32), 42);
+    }
+
+    #[test]
+    fn scaleup_flags_parse() {
+        let a = argv("scaleup --arrays 8 --batch 4 --no-pipeline");
+        assert_eq!(a.subcommand.as_deref(), Some("scaleup"));
+        assert_eq!(a.opt_parse("arrays", 0usize), 8);
+        assert_eq!(a.opt_parse("batch", 0usize), 4);
+        assert!(a.flag("no-pipeline"));
     }
 }

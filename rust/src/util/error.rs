@@ -1,0 +1,140 @@
+//! Minimal error plumbing (`anyhow`/`thiserror` are unavailable offline).
+//!
+//! Provides the three things the runtime layer needs: a string-carrying
+//! [`Error`] convertible from `io::Error`, a [`Context`] extension trait for
+//! `Result`/`Option` mirroring `anyhow::Context`, and the `bail!`/`ensure!`
+//! macros (exported at the crate root).
+
+use std::fmt;
+
+/// A flat, message-carrying error. Context wrapping concatenates messages
+/// (`outer: inner`) instead of keeping a source chain — enough for a CLI
+/// whose errors terminate in `eprintln!`.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-shaped extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T>;
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)).into())
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail_helper()
+    }
+
+    fn bail_helper() -> Result<u32> {
+        crate::bail!("boom {}", 42);
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "boom 42");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(30).unwrap_err().to_string(), "too big: 30");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<u32, String> = Err("inner".into());
+        assert_eq!(r.context("outer").unwrap_err().to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let ok: Option<u32> = Some(7);
+        assert_eq!(ok.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<Vec<u8>> {
+            Ok(std::fs::read("/nonexistent/imcc-error-test")?)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -1,9 +1,10 @@
-//! Property tests across the L3↔L1 boundary (need `make artifacts`).
+//! Property tests across the job-backend boundary (no artifacts needed —
+//! the native backend implements the AOT numeric contract directly).
 //!
 //! The golden tests pin two fixed networks; these pit the Rust-orchestrated
-//! artifact path against an independent host-side integer reference on
-//! *random* layer shapes — catching orchestration bugs (tiling, padding,
-//! chunking, accumulation order) the fixed goldens might miss.
+//! job path against an independent host-side integer reference on *random*
+//! layer shapes — catching orchestration bugs (tiling, padding, chunking,
+//! accumulation order) the fixed goldens might miss.
 
 use imcc::runtime::client::XBAR;
 use imcc::runtime::Runtime;

@@ -1,0 +1,125 @@
+//! Scheduler regression tests (no artifacts needed).
+//!
+//! Pins the three contract points of the multi-array batch engine:
+//! batched execution with pipelining disabled is *identical* to B
+//! sequential runs (cycles and energy), enabling pipelining strictly
+//! helps, and a plan-cache hit returns a bit-identical plan.
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::coordinator::{run_batched, run_network, BatchConfig, PlanCache, Strategy};
+use imcc::net::bottleneck::bottleneck;
+use imcc::net::mobilenetv2::mobilenet_v2;
+
+fn batch(b: usize, pipeline: bool) -> BatchConfig {
+    BatchConfig { batch: b, pipeline }
+}
+
+#[test]
+fn batched_disabled_equals_b_sequential_runs() {
+    let cfg = SystemConfig::scaled_up(8);
+    let pm = PowerModel::paper();
+    let net = bottleneck();
+    let mut cache = PlanCache::new();
+    let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+
+    let seq = run_network(&net, Strategy::ImaDw, &cfg, &pm);
+    for b in [1usize, 2, 4, 7] {
+        let rep = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, batch(b, false));
+        assert_eq!(rep.cycles, seq.cycles * b as u64, "batch {b}");
+        assert_eq!(rep.per_request_cycles, seq.cycles);
+        assert!(
+            (rep.energy_j - seq.energy_j * b as f64).abs() < 1e-15,
+            "batch {b}: {} vs {}",
+            rep.energy_j,
+            seq.energy_j * b as f64
+        );
+        assert_eq!(rep.reprogram_cycles, 0, "resident plan must not reprogram");
+    }
+}
+
+#[test]
+fn pipelined_batch_strictly_fewer_cycles() {
+    let cfg = SystemConfig::scaled_up(8);
+    let pm = PowerModel::paper();
+    let net = bottleneck();
+    let mut cache = PlanCache::new();
+    let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+
+    for b in [2usize, 4, 8] {
+        let strict = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, batch(b, false));
+        let piped = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, batch(b, true));
+        assert!(
+            piped.cycles < strict.cycles,
+            "batch {b}: {} !< {}",
+            piped.cycles,
+            strict.cycles
+        );
+        // same work, same energy — pipelining moves cycles, not jobs
+        assert!((piped.energy_j - strict.energy_j).abs() < 1e-15);
+        // schedule sanity: never faster than one request, never slower
+        // than strict serving
+        assert!(piped.cycles >= piped.per_request_cycles);
+        assert!(piped.inferences_per_s() > strict.inferences_per_s());
+    }
+}
+
+#[test]
+fn pipelined_throughput_monotone_in_batch() {
+    let cfg = SystemConfig::scaled_up(8);
+    let pm = PowerModel::paper();
+    let net = bottleneck();
+    let mut cache = PlanCache::new();
+    let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+
+    let mut last = 0.0f64;
+    for b in [1usize, 2, 4, 8, 16] {
+        let rep = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, batch(b, true));
+        let inf_s = rep.inferences_per_s();
+        assert!(inf_s >= last, "batch {b}: {inf_s} < {last}");
+        last = inf_s;
+    }
+}
+
+#[test]
+fn plan_cache_hit_returns_bit_identical_plan() {
+    let mut cache = PlanCache::new();
+    let net = mobilenet_v2(224);
+    let miss = cache.get_or_place(&net, 256, 40, false).unwrap();
+    assert_eq!((cache.misses(), cache.hits()), (1, 0));
+    let hit = cache.get_or_place(&net, 256, 40, false).unwrap();
+    assert_eq!((cache.misses(), cache.hits()), (1, 1));
+    // same shared object, and bit-identical content
+    assert!(std::rc::Rc::ptr_eq(&miss, &hit));
+    assert_eq!(*miss, *hit);
+    // a freshly computed plan is also identical — placement is a pure
+    // function of the geometry key
+    let fresh = imcc::tilepack::place_staged(&net, 256, 40, false).unwrap();
+    assert_eq!(*miss, fresh);
+}
+
+#[test]
+fn mnv2_batched_serving_end_to_end() {
+    // the acceptance scenario: MobileNetV2, 8-array pool, batch 4 —
+    // must complete (staged) and beat batch 1 throughput
+    let pm = PowerModel::paper();
+    let cfg = SystemConfig::scaled_up(8);
+    let net = mobilenet_v2(224);
+    let mut cache = PlanCache::new();
+    let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+    assert!(plan.n_passes() > 1, "8 arrays cannot hold MNv2 resident");
+
+    let b1 = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, batch(1, true));
+    let b4 = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, batch(4, true));
+    assert!(b1.reprogram_cycles > 0);
+    assert!(b4.inferences_per_s() > b1.inferences_per_s());
+
+    // resident pool: no reprogramming, and pipelining beats batch 1
+    let cfg40 = SystemConfig::scaled_up(40);
+    let plan40 = cache.get_or_place(&net, 256, 40, false).unwrap();
+    let r1 = run_batched(&net, Strategy::ImaDw, &cfg40, &pm, &plan40, batch(1, true));
+    let r4 = run_batched(&net, Strategy::ImaDw, &cfg40, &pm, &plan40, batch(4, true));
+    assert_eq!(r1.reprogram_cycles, 0);
+    assert!(r4.inferences_per_s() > r1.inferences_per_s());
+    // resident serving crushes staged serving
+    assert!(r4.inferences_per_s() > b4.inferences_per_s());
+}
