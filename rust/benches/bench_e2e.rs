@@ -56,6 +56,7 @@ fn main() {
             BatchConfig {
                 batch,
                 pipeline: true,
+                ..BatchConfig::default()
             },
         );
         if batch == 1 {
@@ -77,6 +78,7 @@ fn main() {
                 BatchConfig {
                     batch,
                     pipeline: true,
+                    ..BatchConfig::default()
                 },
             )
         });

@@ -1,0 +1,43 @@
+//! Bench: the event-driven serving simulator — wall cost of simulating
+//! multi-model traffic (the tool itself must stay interactive for sweeps),
+//! histogram hot-path cost, and a peek at the latency tables per policy.
+
+use imcc::arch::PowerModel;
+use imcc::serve::{mnv2_bottleneck_pair as models, simulate, LogHistogram, Policy, ServeConfig};
+use imcc::util::bench::bench;
+
+fn main() {
+    println!("== bench_serve (event-driven multi-model serving) ==");
+    let pm = PowerModel::paper();
+
+    // histogram hot path: record + quantile
+    bench("histogram_record_4k", 20, 500, || {
+        let mut h = LogHistogram::new();
+        for v in 0..4096u64 {
+            h.record(v * 37 + 11);
+        }
+        h.percentiles()
+    });
+
+    for &(label, rate) in &[("light", 50.0), ("saturated", 150.0), ("overload", 600.0)] {
+        let ms = models(rate);
+        let scfg = ServeConfig {
+            duration_s: 0.1,
+            ..ServeConfig::default()
+        };
+        bench(&format!("simulate_{label}_{rate}rps"), 5, 2000, || {
+            simulate(&ms, &scfg, &pm).unwrap()
+        });
+    }
+
+    println!("\nper-policy tables, 2 models, 0.1 s @ 150 req/s/model:");
+    for policy in [Policy::Fifo, Policy::Wrr, Policy::Sjf] {
+        let scfg = ServeConfig {
+            policy,
+            duration_s: 0.1,
+            ..ServeConfig::default()
+        };
+        let rep = simulate(&models(150.0), &scfg, &pm).unwrap();
+        print!("{}", rep.render_table());
+    }
+}

@@ -7,8 +7,13 @@
 //! cache hit is bit-identical to the miss that produced it — the scheduler
 //! regression tests assert this, and the serving loop goes
 //! allocation-free after the first request of each (network, pool) pair.
+//!
+//! Multi-model serving keeps one cache alive across tenants and sweeps, so
+//! the cache is LRU-bounded ([`PlanCache::with_capacity`]): evicting a plan
+//! costs only recomputation, and because placement is a pure function of
+//! the key, an evicted-then-recomputed plan is bit-identical to the one
+//! evicted (pinned by the regression tests).
 
-use std::cell::Cell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
@@ -34,24 +39,57 @@ pub fn fingerprint(net: &Network) -> u64 {
     net.fingerprint()
 }
 
-#[derive(Default)]
 pub struct PlanCache {
-    map: HashMap<PlanKey, Rc<StagedPlacement>>,
-    hits: Cell<u64>,
-    misses: Cell<u64>,
+    /// Key → (plan, last-touched tick) — recency is a monotone logical
+    /// clock bumped on every lookup.
+    map: HashMap<PlanKey, (Rc<StagedPlacement>, u64)>,
+    capacity: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::with_capacity(usize::MAX)
+    }
 }
 
 impl PlanCache {
+    /// Unbounded cache (the single-model CLI paths).
     pub fn new() -> PlanCache {
         PlanCache::default()
     }
 
+    /// LRU-bounded cache: at most `capacity` resident plans. Eviction only
+    /// costs recomputation — placement is a pure function of the key.
+    pub fn with_capacity(capacity: usize) -> PlanCache {
+        assert!(capacity > 0, "plan cache capacity must be ≥ 1");
+        PlanCache {
+            map: HashMap::new(),
+            capacity,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
     pub fn hits(&self) -> u64 {
-        self.hits.get()
+        self.hits
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.get()
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     pub fn len(&self) -> usize {
@@ -62,7 +100,8 @@ impl PlanCache {
         self.map.is_empty()
     }
 
-    /// Fetch the placement for (net, pool), computing it on first use.
+    /// Fetch the placement for (net, pool), computing it on first use and
+    /// evicting the least-recently-used plan when over capacity.
     pub fn get_or_place(
         &mut self,
         net: &Network,
@@ -76,13 +115,28 @@ impl PlanCache {
             n_arrays,
             rotate,
         };
-        if let Some(plan) = self.map.get(&key) {
-            self.hits.set(self.hits.get() + 1);
+        self.tick += 1;
+        if let Some((plan, touched)) = self.map.get_mut(&key) {
+            *touched = self.tick;
+            self.hits += 1;
             return Ok(Rc::clone(plan));
         }
-        self.misses.set(self.misses.get() + 1);
+        self.misses += 1;
         let plan = Rc::new(place_staged(net, s, n_arrays, rotate)?);
-        self.map.insert(key, Rc::clone(&plan));
+        self.map.insert(key, (Rc::clone(&plan), self.tick));
+        if self.map.len() > self.capacity {
+            // evict the stalest entry (the one just inserted carries the
+            // newest tick, so capacity ≥ 1 never evicts it)
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(k, _)| *k)
+            {
+                self.map.remove(&oldest);
+                self.evictions += 1;
+            }
+        }
         Ok(plan)
     }
 }
@@ -127,5 +181,37 @@ mod tests {
         assert_eq!(large.n_passes(), 1);
         assert_eq!(cache.len(), 2);
         assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.evictions(), 0, "unbounded cache never evicts");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        let mut cache = PlanCache::with_capacity(2);
+        let net = bottleneck();
+        cache.get_or_place(&net, 256, 6, false).unwrap(); // A
+        cache.get_or_place(&net, 256, 7, false).unwrap(); // B
+        cache.get_or_place(&net, 256, 6, false).unwrap(); // touch A
+        cache.get_or_place(&net, 256, 8, false).unwrap(); // C evicts B
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        // A stayed (it was touched), B went: re-fetching A hits, B misses
+        let misses_before = cache.misses();
+        cache.get_or_place(&net, 256, 6, false).unwrap();
+        assert_eq!(cache.misses(), misses_before);
+        cache.get_or_place(&net, 256, 7, false).unwrap();
+        assert_eq!(cache.misses(), misses_before + 1);
+    }
+
+    #[test]
+    fn evicted_then_recomputed_plan_is_bit_identical() {
+        let mut bounded = PlanCache::with_capacity(1);
+        let net = bottleneck();
+        let first = bounded.get_or_place(&net, 256, 8, false).unwrap();
+        let keep = Rc::clone(&first); // outlives the eviction
+        bounded.get_or_place(&net, 256, 6, false).unwrap(); // evicts the 8-array plan
+        assert_eq!(bounded.evictions(), 1);
+        let recomputed = bounded.get_or_place(&net, 256, 8, false).unwrap();
+        assert!(!Rc::ptr_eq(&keep, &recomputed), "a fresh object");
+        assert_eq!(*keep, *recomputed, "but bit-identical content");
     }
 }

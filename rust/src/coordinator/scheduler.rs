@@ -29,12 +29,20 @@
 //! reprogram every pass itself — `sequential_cycles` is that baseline) —
 //! the report then shows exactly how far off-chip weights are from
 //! interactive serving (§VI's argument).
+//!
+//! Staged passes additionally charge the L2 activation traffic at every
+//! cut boundary: the activation feeding the next pass's first layer must
+//! spill to L2 while the pool reprograms and refill into L1 afterwards
+//! (one DMA spill + one refill per request per cut, serialized at the
+//! pass barrier on the single cluster DMA). Resident plans never touch L2
+//! on the request path, matching the paper's all-activations-in-L1 model.
 
 use std::collections::BTreeMap;
 
 use crate::arch::{EnergyAccount, PowerModel, SystemConfig};
 use crate::ima::ImaArrayPool;
 use crate::net::Network;
+use crate::sim::dma::DmaModel;
 use crate::tilepack::StagedPlacement;
 
 use super::{Engine, Executor, Strategy};
@@ -46,6 +54,10 @@ pub struct BatchConfig {
     /// Overlap requests across layer resources (double-buffered
     /// activations); disabled = strict back-to-back serving.
     pub pipeline: bool,
+    /// Charge the L2 spill/refill of cut-boundary activations between
+    /// staged passes (no effect on resident plans). On by default;
+    /// disabling it reproduces the pre-DMA accounting for ablations.
+    pub charge_dma: bool,
 }
 
 impl Default for BatchConfig {
@@ -53,6 +65,7 @@ impl Default for BatchConfig {
         BatchConfig {
             batch: 1,
             pipeline: true,
+            charge_dma: true,
         }
     }
 }
@@ -69,6 +82,10 @@ pub struct BatchReport {
     pub cycles: u64,
     /// Of which: PCM reprogramming (zero for resident plans).
     pub reprogram_cycles: u64,
+    /// Of which: L2 spill/refill of cut-boundary activations between
+    /// staged passes (zero for resident plans; DMA energy is negligible
+    /// next to PCM programming and is not accounted).
+    pub dma_cycles: u64,
     pub time_s: f64,
     /// Total energy: request work plus (for staged plans) the PCM
     /// program-and-verify energy matching `reprogram_cycles`.
@@ -78,8 +95,9 @@ pub struct BatchReport {
     /// One request's layer work executed alone (no reprogramming).
     pub per_request_cycles: u64,
     /// The honest sequential baseline: B requests served one at a time,
-    /// each paying the full per-pass reprogramming itself (equals
-    /// `per_request_cycles * batch` for resident plans).
+    /// each paying the full per-pass reprogramming and its own boundary
+    /// activation spill/refill itself (equals `per_request_cycles * batch`
+    /// for resident plans).
     pub sequential_cycles: u64,
     /// Name of the layer whose resources bound the pipeline.
     pub bottleneck_layer: String,
@@ -186,14 +204,38 @@ pub fn run_batched(
         )
     };
 
+    // per-cut L2 activation traffic: the tensor feeding the next pass's
+    // first layer spills to L2 and refills into L1 (one transfer each way
+    // per request, serialized at the pass barrier on the cluster DMA)
+    let dma = DmaModel::paper();
+    let boundary_dma_cy: Vec<u64> = plan
+        .pass_ranges
+        .windows(2)
+        .map(|w| {
+            if cfgb.charge_dma {
+                2 * dma.transfer_cy(net.layers[w[1].0].in_bytes())
+            } else {
+                0
+            }
+        })
+        .collect();
+
     // greedy list schedule, batch-major across passes
     let mut now: u64 = 0; // global clock across passes
     let mut reprogram_cycles: u64 = 0;
+    let mut dma_cycles: u64 = 0;
     // deterministic maps: the bottleneck tie-break iterates these
     let mut busy_cy: BTreeMap<usize, u64> = BTreeMap::new();
     let mut layer_contrib: BTreeMap<(usize, usize), u64> = BTreeMap::new(); // (res, layer)
 
     for (pi, (pass, &range)) in plan.passes.iter().zip(plan.pass_ranges.iter()).enumerate() {
+        // crossing a cut: every request's boundary activation spills to
+        // L2 and refills into L1 around the reprogramming barrier
+        if pi > 0 {
+            let cy = boundary_dma_cy[pi - 1].saturating_mul(cfgb.batch as u64);
+            now += cy;
+            dma_cycles += cy;
+        }
         // staged pools rewrite their weights before every pass
         now += reprogram_per_pass[pi];
         reprogram_cycles += reprogram_per_pass[pi];
@@ -258,10 +300,13 @@ pub fn run_batched(
 
     let cycles = now;
     let time_s = cycles as f64 * cfg.freq.cycle_ns() * 1e-9;
-    // a truly sequential request reprograms every pass itself; batch-major
-    // serving pays it once per batch (reprogram_cycles is one serving cycle)
-    let sequential_cycles =
-        (per_request_cycles + reprogram_cycles).saturating_mul(cfgb.batch as u64);
+    // a truly sequential request reprograms every pass itself and pays its
+    // own boundary spill/refill; batch-major serving pays reprogramming
+    // once per batch (reprogram_cycles is one serving cycle) but DMA per
+    // request — activations are per-request state and never amortize
+    let per_request_dma: u64 = boundary_dma_cy.iter().sum();
+    let sequential_cycles = (per_request_cycles + reprogram_cycles + per_request_dma)
+        .saturating_mul(cfgb.batch as u64);
     BatchReport {
         network: net.name.clone(),
         strategy,
@@ -270,6 +315,7 @@ pub fn run_batched(
         n_passes: plan.n_passes(),
         cycles,
         reprogram_cycles,
+        dma_cycles,
         time_s,
         energy_j: per_request_energy * cfgb.batch as f64 + reprogram_energy_j,
         reprogram_energy_j,
@@ -305,6 +351,7 @@ mod tests {
             BatchConfig {
                 batch: 1,
                 pipeline: true,
+                ..BatchConfig::default()
             },
         );
         let seq = run_network(&net, Strategy::ImaDw, &cfg, &pm);
@@ -322,6 +369,7 @@ mod tests {
         let b = BatchConfig {
             batch: 4,
             pipeline: true,
+            ..BatchConfig::default()
         };
         let piped = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, b);
         let strict = run_batched(
@@ -333,6 +381,7 @@ mod tests {
             BatchConfig {
                 batch: 4,
                 pipeline: false,
+                ..BatchConfig::default()
             },
         );
         assert!(piped.cycles < strict.cycles, "{} vs {}", piped.cycles, strict.cycles);

@@ -13,9 +13,12 @@
 //!   ([`tilepack::placement`]), the layer-to-engine scheduler with the
 //!   paper's four mapping strategies plus the batched multi-array serving
 //!   engine ([`coordinator::scheduler`]) and its memoizing plan cache
-//!   ([`coordinator::plan_cache`]), the state-of-the-art baseline models,
-//!   and the report generators for every figure/table in the paper (plus
-//!   the `scaleup` pool-size × batch sweep).
+//!   ([`coordinator::plan_cache`]), the event-driven multi-model serving
+//!   simulator ([`serve`]: open-loop traffic, pool tenancy with scheduler
+//!   arbitration, dynamic batching, latency percentiles), the
+//!   state-of-the-art baseline models, and the report generators for every
+//!   figure/table in the paper (plus the `scaleup` pool-size × batch sweep
+//!   and the `serving` load/latency tables).
 //! * **L2/L1 (python/, build-time only)** — the quantized MobileNetV2 and the
 //!   Pallas crossbar/depth-wise kernels, AOT-lowered to HLO text.
 //! * **runtime/** performs *functional* end-to-end inference by issuing the
@@ -40,6 +43,7 @@ pub mod ima;
 pub mod net;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tilepack;
 pub mod util;

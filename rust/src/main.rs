@@ -24,6 +24,9 @@ commands (one per paper exhibit):
   fig13                   Fig. 13   four IMC computing models
   scaleup                 multi-array serving: pool-size × batch sweep, or one
                           point with --arrays N --batch B
+  serve                   event-driven multi-model serving: open-loop traffic
+                          into one pool, dynamic batching, latency percentiles
+                          (--sweep for the rate × policy table)
   infer [--tiny]          functional MobileNetV2 inference (bit-exact vs the
                           JAX golden logits when artifacts are present)
   all [--json FILE]       run everything; optionally dump JSON
@@ -34,10 +37,23 @@ options:
   --sequential            sequential IMA execution   (default pipelined)
   --artifacts DIR         artifacts directory        (default ./artifacts)
   --noise SIGMA           PCM conductance noise for `infer` (default 0)
-  --arrays N              `scaleup`: crossbar arrays in the pool
+  --arrays N              `scaleup`/`serve`: crossbar arrays in the pool
   --batch N               `scaleup`: batched requests per serving cycle;
                           `infer`: serve N back-to-back requests
-  --no-pipeline           `scaleup`: disable request pipelining
+  --no-pipeline           `scaleup`/`serve`: disable request pipelining
+  --models A,B            `serve`: comma list (mobilenetv2|bottleneck)
+  --rate R                `serve`: Poisson arrivals per second per model (50)
+  --policy P              `serve`: arbitration fifo|wrr|sjf    (default fifo)
+  --duration D            `serve`: arrival horizon in seconds  (default 0.25)
+  --seed S                `serve`: traffic seed                (default 0xc0ffee00)
+  --max-batch B           `serve`: admission window width      (default 8)
+  --max-wait-us W         `serve`: admission window wait cap   (default 200)
+  --traffic T             `serve`: poisson|bursty              (default poisson)
+  --deadline-ms D         `serve`: abandon after D ms waiting  (default off)
+  --weights A,B           `serve`: WRR weights per model       (default 1,1)
+  --sweep                 `serve`: rate × policy percentile table over the
+                          default model pair; honors only --arrays --rate
+                          --policy --duration --seed
 ";
 
 fn config_from(args: &Args) -> SystemConfig {
@@ -50,6 +66,122 @@ fn config_from(args: &Args) -> SystemConfig {
         cfg = cfg.with_exec(ExecModel::Sequential);
     }
     cfg
+}
+
+fn parse_seed(s: &str) -> Result<u64, String> {
+    let r = if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16)
+    } else {
+        s.parse::<u64>()
+    };
+    r.map_err(|_| format!("bad seed `{s}`"))
+}
+
+/// `imcc serve --sweep`: the rate × policy percentile table, honoring the
+/// serve flags that apply to a sweep (`--arrays --rate --policy
+/// --duration --seed`).
+fn run_serve_sweep(args: &Args, pm: &PowerModel) -> Result<(), String> {
+    use imcc::serve::{Policy, DEFAULT_SEED};
+
+    let arrays: usize = args.opt_parse("arrays", 64usize);
+    let duration_s: f64 = args.opt_parse("duration", 0.25);
+    let seed = match args.opt("seed") {
+        None => DEFAULT_SEED,
+        Some(s) => parse_seed(s)?,
+    };
+    let rates: Vec<f64> = match args.opt("rate") {
+        None => report::serving::DEFAULT_RATES.to_vec(),
+        Some(_) => vec![args.opt_parse("rate", 50.0)],
+    };
+    let policies: Vec<Policy> = match args.opt("policy") {
+        None => report::serving::DEFAULT_POLICIES.to_vec(),
+        Some(p) => vec![Policy::parse(p)?],
+    };
+    report::serving::generate_sweep(pm, arrays, &rates, &policies, duration_s, seed).print();
+    Ok(())
+}
+
+/// `imcc serve`: one serving simulation, per-model percentile table out.
+fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
+    use imcc::serve::{
+        self, BatchWindow, ModelTraffic, Policy, ServeConfig, TrafficModel, DEFAULT_SEED,
+    };
+
+    let models_arg = args.opt("models").unwrap_or("mobilenetv2,bottleneck");
+    let rate: f64 = args.opt_parse("rate", 50.0);
+    let policy = Policy::parse(args.opt("policy").unwrap_or("fifo"))?;
+    let duration_s: f64 = args.opt_parse("duration", 0.25);
+    let arrays: usize = args.opt_parse("arrays", 64usize);
+    let max_batch: usize = args.opt_parse("max-batch", 8usize);
+    let max_wait_us: f64 = args.opt_parse("max-wait-us", 200.0);
+    let deadline_ms: f64 = args.opt_parse("deadline-ms", 0.0);
+    let traffic_kind = args.opt("traffic").unwrap_or("poisson");
+    let seed = match args.opt("seed") {
+        None => DEFAULT_SEED,
+        Some(s) => parse_seed(s)?,
+    };
+    let weights: Vec<u64> = match args.opt("weights") {
+        None => Vec::new(),
+        Some(w) => w
+            .split(',')
+            .map(|x| match x.trim().parse::<u64>() {
+                Ok(0) | Err(_) => Err(format!("bad weight `{x}` (integer ≥ 1)")),
+                Ok(v) => Ok(v),
+            })
+            .collect::<Result<_, _>>()?,
+    };
+
+    // wall-clock → cycle conversion from the same config the simulator
+    // will run under, so the two can never drift
+    let cycle_ns = SystemConfig::scaled_up(arrays).freq.cycle_ns();
+    let mut models = Vec::new();
+    for (i, name) in models_arg.split(',').enumerate() {
+        let net = serve::model_by_name(name)?;
+        let traffic = match traffic_kind {
+            "poisson" => TrafficModel::Poisson { rate_per_s: rate },
+            "bursty" => TrafficModel::Bursty {
+                rate_per_s: rate,
+                burst: 4.0,
+                dwell_s: 0.01,
+            },
+            other => return Err(format!("unknown traffic `{other}` (poisson|bursty)")),
+        };
+        let weight = weights.get(i).copied().unwrap_or(1);
+        models.push(ModelTraffic {
+            net,
+            traffic,
+            weight,
+        });
+    }
+
+    let scfg = ServeConfig {
+        n_arrays: arrays,
+        policy,
+        window: BatchWindow {
+            max_batch,
+            max_wait_cy: (max_wait_us * 1e3 / cycle_ns) as u64,
+        },
+        pipeline: !args.flag("no-pipeline"),
+        seed,
+        duration_s,
+        deadline_cy: (deadline_ms * 1e6 / cycle_ns) as u64,
+        ..ServeConfig::default()
+    };
+    let rep = serve::simulate(&models, &scfg, pm)?;
+    print!("{}", rep.render_table());
+    let makespan_s = rep.makespan_cycles as f64 * rep.cycle_ns * 1e-9;
+    println!(
+        "{} served / {} dropped over {:.1} ms makespan — {:.1} inf/s aggregate",
+        rep.total_served(),
+        rep.total_dropped(),
+        makespan_s * 1e3,
+        if makespan_s > 0.0 {
+            rep.total_served() as f64 / makespan_s
+        } else {
+            0.0
+        },
+    );
+    Ok(())
 }
 
 fn main() {
@@ -124,6 +256,17 @@ fn main() {
                 }
             }
         },
+        "serve" => {
+            let run = if args.flag("sweep") {
+                run_serve_sweep(&args, &pm)
+            } else {
+                run_serve(&args, &pm)
+            };
+            if let Err(e) = run {
+                eprintln!("serve failed: {e}");
+                std::process::exit(1);
+            }
+        }
         "infer" => {
             let dir = args.opt("artifacts").unwrap_or("artifacts").to_string();
             let tiny = args.flag("tiny");
@@ -160,6 +303,7 @@ fn main() {
                 report::table1::generate(&pm),
                 report::fig13_models::generate(&pm),
                 report::scaleup::generate(&pm),
+                report::serving::generate(&pm),
             ];
             let mut all = Vec::new();
             for r in &reports {

@@ -11,6 +11,7 @@
 //! | `table1`       | Table I SoA comparison |
 //! | `fig13_models` | Fig. 13 four computing models |
 //! | `scaleup`      | pool-size × batch sweep (the Fig. 12b/13 story, serving regime) |
+//! | `serving`      | multi-model latency percentiles vs offered load, per policy |
 
 pub mod ablations;
 pub mod fig10_breakdown;
@@ -20,6 +21,7 @@ pub mod fig6_area;
 pub mod fig7_roofline;
 pub mod fig9_bottleneck;
 pub mod scaleup;
+pub mod serving;
 pub mod table1;
 
 use crate::util::json::Json;

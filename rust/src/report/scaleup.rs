@@ -34,7 +34,11 @@ pub fn run_point(
         &cfg,
         pm,
         &plan,
-        BatchConfig { batch, pipeline },
+        BatchConfig {
+            batch,
+            pipeline,
+            ..BatchConfig::default()
+        },
     ))
 }
 
@@ -93,7 +97,11 @@ pub fn generate_sweep(
                 &cfg,
                 pm,
                 &plan,
-                BatchConfig { batch, pipeline },
+                BatchConfig {
+                    batch,
+                    pipeline,
+                    ..BatchConfig::default()
+                },
             );
             t.row([
                 arrays.to_string(),

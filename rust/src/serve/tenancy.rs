@@ -1,0 +1,292 @@
+//! Multi-model residency in one IMA pool, plus the arbitration policies
+//! that pick which tenant's batch dispatches next.
+//!
+//! Placement carves the pool into disjoint per-tenant array slices, first
+//! come first carved: each network TILE&PACKs into the arrays the earlier
+//! tenants left over (through the shared [`PlanCache`], so a tenant whose
+//! geometry and slice repeat across sweeps never re-packs). A tenant whose
+//! slice holds all its weights is *resident* — its requests never touch PCM
+//! programming; an oversubscribed tenant falls back to staged serving
+//! inside its own slice and pays reprogramming + boundary DMA per batch,
+//! exactly as `coordinator::scheduler` charges it.
+//!
+//! Cross-tenant timing: batches serialize on the pool. The cluster's
+//! cores, the DW accelerator, and the IMA mux are shared single resources,
+//! so two tenants' batches cannot overlap without contending on them; the
+//! simulator models the pool as one batch-granular server and leaves
+//! finer-grained cross-tenant overlap as future work (ROADMAP).
+
+use std::rc::Rc;
+
+use crate::coordinator::PlanCache;
+use crate::net::Network;
+use crate::tilepack::StagedPlacement;
+
+/// One model resident (or staged) in its slice of the pool.
+#[derive(Clone, Debug)]
+pub struct Tenant {
+    pub name: String,
+    /// First pool array of this tenant's slice.
+    pub array_base: usize,
+    /// Arrays in the slice (max over passes for staged tenants).
+    pub arrays: usize,
+    pub plan: Rc<StagedPlacement>,
+    /// Device occupancy within the slice, in [0, 1].
+    pub occupancy: f64,
+}
+
+impl Tenant {
+    pub fn resident(&self) -> bool {
+        self.plan.is_resident()
+    }
+
+    pub fn n_passes(&self) -> usize {
+        self.plan.n_passes()
+    }
+}
+
+/// The whole pool, carved.
+#[derive(Clone, Debug)]
+pub struct Tenancy {
+    pub n_arrays: usize,
+    pub tenants: Vec<Tenant>,
+}
+
+impl Tenancy {
+    /// Arrays carved out across all tenants.
+    pub fn arrays_used(&self) -> usize {
+        self.tenants.iter().map(|t| t.arrays).sum()
+    }
+}
+
+/// Carve `n_arrays` among `nets` in order. Every tenant must at least fit
+/// staged in what is left — a single layer larger than the remaining slice
+/// is an error (the pool is simply too small for that mix).
+pub fn place_tenants(
+    nets: &[Network],
+    s: usize,
+    n_arrays: usize,
+    rotate: bool,
+    cache: &mut PlanCache,
+) -> Result<Tenancy, String> {
+    let mut tenants = Vec::with_capacity(nets.len());
+    let mut base = 0usize;
+    for net in nets {
+        if base >= n_arrays {
+            return Err(format!(
+                "no arrays left for `{}`: {base} of {n_arrays} already carved",
+                net.name
+            ));
+        }
+        let remaining = n_arrays - base;
+        let plan = cache
+            .get_or_place(net, s, remaining, rotate)
+            .map_err(|e| format!("placing `{}` in {remaining} arrays: {e}", net.name))?;
+        let arrays = plan.passes.iter().map(|p| p.arrays_used).max().unwrap_or(0);
+        let slice_devices = arrays * s * s;
+        let occupancy = if slice_devices == 0 {
+            0.0
+        } else {
+            // staged tenants reuse the slice pass after pass: occupancy is
+            // the fullest pass
+            plan.passes
+                .iter()
+                .map(|p| p.devices_used() as f64 / slice_devices as f64)
+                .fold(0.0, f64::max)
+        };
+        tenants.push(Tenant {
+            name: net.name.clone(),
+            array_base: base,
+            arrays,
+            plan,
+            occupancy,
+        });
+        base += arrays;
+    }
+    Ok(Tenancy { n_arrays, tenants })
+}
+
+/// Arbitration policy between tenants with dispatchable batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Oldest waiting head-of-queue request first.
+    Fifo,
+    /// Weighted round-robin over tenants (weights from the model specs).
+    Wrr,
+    /// Shortest planned batch (in scheduler cycles) first. Maximizes
+    /// throughput, starves heavy models under overload — the report shows
+    /// both.
+    Sjf,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Ok(Policy::Fifo),
+            "wrr" => Ok(Policy::Wrr),
+            "sjf" => Ok(Policy::Sjf),
+            other => Err(format!("unknown policy `{other}` (fifo|wrr|sjf)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "FIFO",
+            Policy::Wrr => "WRR",
+            Policy::Sjf => "SJF",
+        }
+    }
+}
+
+/// One tenant's claim at an arbitration point.
+#[derive(Clone, Copy, Debug)]
+pub struct Claim {
+    pub tenant: usize,
+    /// Arrival cycle of its oldest pending request.
+    pub head_arrival: u64,
+    /// Planned cycles of the batch it would dispatch.
+    pub planned_cycles: u64,
+}
+
+/// Deterministic arbiter. WRR keeps rotating state; FIFO/SJF are
+/// stateless. All ties break toward the lower tenant id.
+pub struct Arbiter {
+    policy: Policy,
+    weights: Vec<u64>,
+    /// WRR cursor: tenant whose turn it is, and how much of its weight
+    /// this turn has consumed.
+    wrr_tenant: usize,
+    wrr_spent: u64,
+}
+
+impl Arbiter {
+    pub fn new(policy: Policy, weights: &[u64]) -> Arbiter {
+        assert!(!weights.is_empty());
+        Arbiter {
+            policy,
+            weights: weights.iter().map(|&w| w.max(1)).collect(),
+            wrr_tenant: 0,
+            wrr_spent: 0,
+        }
+    }
+
+    /// Pick one claim. `claims` must be non-empty; ids must be < the
+    /// weight-vector length.
+    pub fn pick(&mut self, claims: &[Claim]) -> usize {
+        assert!(!claims.is_empty());
+        match self.policy {
+            Policy::Fifo => {
+                claims
+                    .iter()
+                    .min_by_key(|c| (c.head_arrival, c.tenant))
+                    .unwrap()
+                    .tenant
+            }
+            Policy::Sjf => {
+                claims
+                    .iter()
+                    .min_by_key(|c| (c.planned_cycles, c.tenant))
+                    .unwrap()
+                    .tenant
+            }
+            Policy::Wrr => {
+                let n = self.weights.len();
+                for _ in 0..n {
+                    let t = self.wrr_tenant;
+                    if claims.iter().any(|c| c.tenant == t) {
+                        self.wrr_spent += 1;
+                        if self.wrr_spent >= self.weights[t] {
+                            self.wrr_tenant = (t + 1) % n;
+                            self.wrr_spent = 0;
+                        }
+                        return t;
+                    }
+                    // absent tenants forfeit the rest of their turn
+                    self.wrr_tenant = (t + 1) % n;
+                    self.wrr_spent = 0;
+                }
+                unreachable!("non-empty claims always yield a pick");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::bottleneck::bottleneck;
+    use crate::net::mobilenetv2::mobilenet_v2;
+
+    #[test]
+    fn two_models_resident_in_disjoint_slices() {
+        let mut cache = PlanCache::new();
+        let nets = vec![mobilenet_v2(224), bottleneck()];
+        let t = place_tenants(&nets, 256, 64, false, &mut cache).unwrap();
+        assert_eq!(t.tenants.len(), 2);
+        let (a, b) = (&t.tenants[0], &t.tenants[1]);
+        assert!(a.resident() && b.resident());
+        // disjoint, in-bounds slices
+        assert_eq!(b.array_base, a.array_base + a.arrays);
+        assert!(t.arrays_used() <= 64);
+        assert!(a.occupancy > 0.0 && a.occupancy <= 1.0);
+        assert!(b.occupancy > 0.0 && b.occupancy <= 1.0);
+    }
+
+    #[test]
+    fn second_tenant_stages_when_squeezed() {
+        let mut cache = PlanCache::new();
+        // bottleneck carves a few arrays; 12 arrays leave too little for
+        // MobileNetV2 resident → staged in its slice
+        let nets = vec![bottleneck(), mobilenet_v2(224)];
+        let t = place_tenants(&nets, 256, 12, false, &mut cache).unwrap();
+        assert!(t.tenants[0].resident());
+        assert!(!t.tenants[1].resident());
+        assert!(t.tenants[1].n_passes() > 1);
+        assert!(t.arrays_used() <= 12);
+    }
+
+    #[test]
+    fn pool_exhaustion_is_an_error() {
+        let mut cache = PlanCache::new();
+        let nets = vec![bottleneck(), bottleneck(), bottleneck()];
+        // bottleneck needs ~4 arrays; 4 total leaves zero for tenant 2
+        let r = place_tenants(&nets, 256, 4, false, &mut cache);
+        assert!(r.is_err(), "{r:?}");
+    }
+
+    #[test]
+    fn fifo_picks_oldest_head() {
+        let mut arb = Arbiter::new(Policy::Fifo, &[1, 1]);
+        let pick = arb.pick(&[
+            Claim { tenant: 0, head_arrival: 100, planned_cycles: 5 },
+            Claim { tenant: 1, head_arrival: 50, planned_cycles: 500 },
+        ]);
+        assert_eq!(pick, 1);
+    }
+
+    #[test]
+    fn sjf_picks_shortest_batch() {
+        let mut arb = Arbiter::new(Policy::Sjf, &[1, 1]);
+        let pick = arb.pick(&[
+            Claim { tenant: 0, head_arrival: 100, planned_cycles: 5 },
+            Claim { tenant: 1, head_arrival: 50, planned_cycles: 500 },
+        ]);
+        assert_eq!(pick, 0);
+    }
+
+    #[test]
+    fn wrr_alternates_and_respects_weights() {
+        let both = [
+            Claim { tenant: 0, head_arrival: 0, planned_cycles: 1 },
+            Claim { tenant: 1, head_arrival: 0, planned_cycles: 1 },
+        ];
+        let mut arb = Arbiter::new(Policy::Wrr, &[2, 1]);
+        let picks: Vec<usize> = (0..6).map(|_| arb.pick(&both)).collect();
+        assert_eq!(picks, vec![0, 0, 1, 0, 0, 1]);
+        // a tenant with nothing pending forfeits its turn
+        let only1 = [Claim { tenant: 1, head_arrival: 0, planned_cycles: 1 }];
+        let mut arb = Arbiter::new(Policy::Wrr, &[2, 1]);
+        assert_eq!(arb.pick(&only1), 1);
+        assert_eq!(arb.pick(&both), 0, "turn passed back to tenant 0");
+    }
+}

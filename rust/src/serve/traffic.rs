@@ -1,0 +1,194 @@
+//! Open-loop traffic generators: seeded arrival processes per model.
+//!
+//! Arrivals are generated *open-loop* — the client population does not slow
+//! down when the pool saturates — which is the only way latency percentiles
+//! mean anything (closed-loop "batch of B" measurements hide queueing
+//! entirely, the coordinated-omission trap). Three processes:
+//!
+//! * [`TrafficModel::Poisson`] — memoryless arrivals at a fixed rate, the
+//!   classic serving baseline;
+//! * [`TrafficModel::Bursty`] — a two-state Markov-modulated Poisson
+//!   process (MMPP-2): dwell in a hot state at `burst ×` the base rate,
+//!   then a cold state at `rate / burst`, exponential dwell times — the
+//!   open/closed-tab traffic real deployments see;
+//! * [`TrafficModel::Trace`] — replay an explicit arrival-cycle list
+//!   (regression tests and production trace replay).
+//!
+//! Everything derives from [`SplitMix64`], so a (model, seed) pair yields
+//! the same arrival vector on every run — the serving determinism tests
+//! pin this.
+
+use crate::util::rng::SplitMix64;
+
+/// An arrival process, parameterized in wall-clock terms.
+#[derive(Clone, Debug)]
+pub enum TrafficModel {
+    /// Memoryless arrivals at `rate_per_s`.
+    Poisson { rate_per_s: f64 },
+    /// MMPP-2: alternate hot and cold states (hot rate = `burst` × cold
+    /// rate) with exponential `dwell_s` dwell, normalized so the
+    /// time-averaged rate equals `rate_per_s` — same offered load as
+    /// `Poisson`, different clumping.
+    Bursty {
+        rate_per_s: f64,
+        burst: f64,
+        dwell_s: f64,
+    },
+    /// Replay explicit arrival times (cycles from simulation start);
+    /// need not be sorted — generation sorts a copy.
+    Trace { arrivals_cy: Vec<u64> },
+}
+
+impl TrafficModel {
+    pub fn label(&self) -> String {
+        match self {
+            TrafficModel::Poisson { rate_per_s } => format!("poisson({rate_per_s:.0}/s)"),
+            TrafficModel::Bursty {
+                rate_per_s, burst, ..
+            } => format!("bursty({rate_per_s:.0}/s x{burst:.1})"),
+            TrafficModel::Trace { arrivals_cy } => format!("trace({} reqs)", arrivals_cy.len()),
+        }
+    }
+}
+
+/// Exponential variate with the given rate (events per cycle).
+fn exp_cy(rng: &mut SplitMix64, rate_per_cy: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / rate_per_cy
+}
+
+/// Generate the sorted arrival cycles of `model` over `[0, duration_cy)`.
+/// `cycle_ns` converts the wall-clock rates into cycle terms; the result
+/// depends only on (model, seed, duration, cycle_ns).
+pub fn arrivals(
+    model: &TrafficModel,
+    seed: u64,
+    duration_cy: u64,
+    cycle_ns: f64,
+) -> Vec<u64> {
+    let cy_per_s = 1e9 / cycle_ns;
+    let mut rng = SplitMix64::new(seed);
+    let mut out = Vec::new();
+    match model {
+        TrafficModel::Poisson { rate_per_s } => {
+            if *rate_per_s <= 0.0 {
+                return out;
+            }
+            let rate_per_cy = rate_per_s / cy_per_s;
+            let mut t = 0.0f64;
+            loop {
+                t += exp_cy(&mut rng, rate_per_cy);
+                if t >= duration_cy as f64 {
+                    break;
+                }
+                out.push(t as u64);
+            }
+        }
+        TrafficModel::Bursty {
+            rate_per_s,
+            burst,
+            dwell_s,
+        } => {
+            if *rate_per_s <= 0.0 {
+                return out;
+            }
+            let burst = burst.max(1.0);
+            let dwell_cy = (dwell_s * cy_per_s).max(1.0);
+            // equal expected dwell in each state: hot + cold average to
+            // exactly `rate_per_s` while their ratio stays `burst`
+            let hot_rate = 2.0 * burst / (burst + 1.0) * rate_per_s;
+            let cold_rate = 2.0 / (burst + 1.0) * rate_per_s;
+            let mut hot = rng.below(2) == 1;
+            let mut t = 0.0f64;
+            // exponential dwell; memorylessness lets the arrival clock
+            // resample cleanly at every state switch
+            let mut t_switch = exp_cy(&mut rng, 1.0 / dwell_cy);
+            loop {
+                let rate_per_cy = if hot { hot_rate } else { cold_rate } / cy_per_s;
+                let next = t + exp_cy(&mut rng, rate_per_cy);
+                if next >= t_switch {
+                    t = t_switch;
+                    t_switch += exp_cy(&mut rng, 1.0 / dwell_cy);
+                    hot = !hot;
+                    if t >= duration_cy as f64 {
+                        break;
+                    }
+                    continue;
+                }
+                t = next;
+                if t >= duration_cy as f64 {
+                    break;
+                }
+                out.push(t as u64);
+            }
+        }
+        TrafficModel::Trace { arrivals_cy } => {
+            out = arrivals_cy
+                .iter()
+                .copied()
+                .filter(|&a| a < duration_cy)
+                .collect();
+            out.sort_unstable();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CYCLE_NS: f64 = 2.0; // 500 MHz
+
+    #[test]
+    fn poisson_is_seed_deterministic() {
+        let m = TrafficModel::Poisson { rate_per_s: 1000.0 };
+        let a = arrivals(&m, 42, 5_000_000, CYCLE_NS);
+        let b = arrivals(&m, 42, 5_000_000, CYCLE_NS);
+        assert_eq!(a, b);
+        let c = arrivals(&m, 43, 5_000_000, CYCLE_NS);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn poisson_rate_is_roughly_respected() {
+        // 10 ms at 500 MHz = 5 M cycles; 10 k/s → ~100 arrivals
+        let m = TrafficModel::Poisson { rate_per_s: 10_000.0 };
+        let a = arrivals(&m, 7, 5_000_000, CYCLE_NS);
+        assert!((60..=140).contains(&a.len()), "{}", a.len());
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        assert!(a.iter().all(|&t| t < 5_000_000));
+    }
+
+    #[test]
+    fn bursty_offered_load_matches_poisson() {
+        let p = TrafficModel::Poisson { rate_per_s: 10_000.0 };
+        let b = TrafficModel::Bursty {
+            rate_per_s: 10_000.0,
+            burst: 4.0,
+            dwell_s: 0.001,
+        };
+        let ap = arrivals(&p, 11, 25_000_000, CYCLE_NS);
+        let ab = arrivals(&b, 11, 25_000_000, CYCLE_NS);
+        // normalized MMPP-2: same time-averaged rate as Poisson (~500
+        // arrivals over 50 ms), only the clumping differs — pin a loose
+        // envelope (bursty counts have much higher variance) + sortedness
+        assert!(!ab.is_empty());
+        assert!(ab.len() > ap.len() / 3, "{} vs {}", ab.len(), ap.len());
+        assert!(ab.len() < ap.len() * 3, "{} vs {}", ab.len(), ap.len());
+        assert!(ab.windows(2).all(|w| w[0] <= w[1]), "sorted");
+    }
+
+    #[test]
+    fn trace_replays_sorted_and_clipped() {
+        let m = TrafficModel::Trace {
+            arrivals_cy: vec![50, 10, 99, 100, 200],
+        };
+        assert_eq!(arrivals(&m, 0, 100, CYCLE_NS), vec![10, 50, 99]);
+    }
+
+    #[test]
+    fn zero_rate_yields_no_arrivals() {
+        let m = TrafficModel::Poisson { rate_per_s: 0.0 };
+        assert!(arrivals(&m, 1, 1_000_000, CYCLE_NS).is_empty());
+    }
+}

@@ -55,6 +55,7 @@ impl Args {
                 | "tiny"
                 | "sequential"
                 | "no-pipeline"
+                | "sweep"
         )
     }
 
@@ -105,6 +106,16 @@ mod tests {
     fn opt_parse_default() {
         let a = argv("x");
         assert_eq!(a.opt_parse("missing", 42u32), 42);
+    }
+
+    #[test]
+    fn serve_flags_parse() {
+        let a = argv("serve --models mobilenetv2,bottleneck --rate 120 --policy wrr --sweep");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt("models"), Some("mobilenetv2,bottleneck"));
+        assert_eq!(a.opt_parse("rate", 0.0f64), 120.0);
+        assert_eq!(a.opt("policy"), Some("wrr"));
+        assert!(a.flag("sweep"));
     }
 
     #[test]

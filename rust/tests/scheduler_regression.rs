@@ -11,7 +11,11 @@ use imcc::net::bottleneck::bottleneck;
 use imcc::net::mobilenetv2::mobilenet_v2;
 
 fn batch(b: usize, pipeline: bool) -> BatchConfig {
-    BatchConfig { batch: b, pipeline }
+    BatchConfig {
+        batch: b,
+        pipeline,
+        ..BatchConfig::default()
+    }
 }
 
 #[test]
@@ -78,6 +82,58 @@ fn pipelined_throughput_monotone_in_batch() {
         assert!(inf_s >= last, "batch {b}: {inf_s} < {last}");
         last = inf_s;
     }
+}
+
+#[test]
+fn staged_totals_grow_by_modeled_boundary_dma() {
+    // satellite: staged passes now charge L2 spill/refill of the
+    // cut-boundary activations — totals must grow by exactly the DmaModel
+    // cost, per request, per cut
+    let cfg = SystemConfig::scaled_up(8);
+    let pm = PowerModel::paper();
+    let net = mobilenet_v2(224);
+    let mut cache = PlanCache::new();
+    let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+    assert!(plan.n_passes() > 1, "needs a staged plan");
+
+    let dma = imcc::sim::dma::DmaModel::paper();
+    let per_request: u64 = plan
+        .pass_ranges
+        .windows(2)
+        .map(|w| 2 * dma.transfer_cy(net.layers[w[1].0].in_bytes()))
+        .sum();
+    assert!(per_request > 0);
+
+    for b in [1usize, 3] {
+        let charged = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, batch(b, true));
+        let uncharged = run_batched(
+            &net,
+            Strategy::ImaDw,
+            &cfg,
+            &pm,
+            &plan,
+            BatchConfig {
+                batch: b,
+                pipeline: true,
+                charge_dma: false,
+            },
+        );
+        let expected = per_request * b as u64;
+        assert_eq!(charged.dma_cycles, expected, "batch {b}");
+        assert_eq!(charged.cycles - uncharged.cycles, expected, "batch {b}");
+        assert_eq!(uncharged.dma_cycles, 0);
+        // the sequential baseline pays the same per-request DMA
+        assert_eq!(
+            charged.sequential_cycles - uncharged.sequential_cycles,
+            expected
+        );
+    }
+
+    // resident plans never touch L2 on the request path
+    let cfg40 = SystemConfig::scaled_up(40);
+    let plan40 = cache.get_or_place(&net, 256, 40, false).unwrap();
+    let r = run_batched(&net, Strategy::ImaDw, &cfg40, &pm, &plan40, batch(2, true));
+    assert_eq!(r.dma_cycles, 0);
 }
 
 #[test]

@@ -1,0 +1,263 @@
+//! Serving-subsystem regression tests (no artifacts needed).
+//!
+//! Pins the contract points of the event-driven multi-model simulator:
+//! seeded-trace determinism (the percentile table is bit-identical under a
+//! fixed seed), strict-mode equivalence (one model through a 1-wide window
+//! equals the scheduler's sequential baseline exactly), and arbitration
+//! fairness/starvation properties under two tenants.
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::coordinator::{run_batched, BatchConfig, PlanCache, Strategy};
+use imcc::net::bottleneck::bottleneck;
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::serve::{
+    mnv2_bottleneck_pair as poisson_pair, simulate, BatchWindow, ModelTraffic, Policy,
+    ServeConfig, TrafficModel,
+};
+use imcc::util::prop;
+use imcc::util::rng::SplitMix64;
+
+#[test]
+fn seeded_percentile_tables_are_bit_identical() {
+    // the acceptance scenario: two models resident in one pool under a
+    // seeded Poisson trace; the printed table must be identical across
+    // runs with the same seed and differ across seeds
+    let pm = PowerModel::paper();
+    let scfg = ServeConfig {
+        seed: 0xDEAD_BEEF,
+        duration_s: 0.1,
+        ..ServeConfig::default()
+    };
+    let a = simulate(&poisson_pair(150.0), &scfg, &pm).unwrap();
+    let b = simulate(&poisson_pair(150.0), &scfg, &pm).unwrap();
+    assert_eq!(a.render_table(), b.render_table());
+    assert_eq!(a.makespan_cycles, b.makespan_cycles);
+    assert_eq!(a.busy_cycles, b.busy_cycles);
+    for (x, y) in a.tenants.iter().zip(b.tenants.iter()) {
+        assert_eq!(x.latency.percentiles(), y.latency.percentiles());
+        assert_eq!((x.served, x.batches, x.dropped), (y.served, y.batches, y.dropped));
+    }
+    // both tenants really are resident together (multi-model residency)
+    assert!(a.tenants.iter().all(|t| t.n_passes == 1));
+    assert!(a.tenants.iter().all(|t| t.served > 0));
+
+    let other = ServeConfig {
+        seed: 0xFACE_FEED,
+        ..scfg.clone()
+    };
+    let c = simulate(&poisson_pair(150.0), &other, &pm).unwrap();
+    // different seeds → different arrival times; the exact makespan (or
+    // failing that, the quantized table) must move
+    assert!(
+        a.makespan_cycles != c.makespan_cycles || a.render_table() != c.render_table(),
+        "different seeds must yield different traffic"
+    );
+}
+
+#[test]
+fn strict_window_equals_sequential_baseline_resident() {
+    // one model, 1-wide window, pipelining off, all arrivals at t=0: the
+    // serving loop degenerates to N back-to-back sequential runs
+    let pm = PowerModel::paper();
+    let n = 5usize;
+    let models = vec![ModelTraffic {
+        net: bottleneck(),
+        traffic: TrafficModel::Trace {
+            arrivals_cy: vec![0; n],
+        },
+        weight: 1,
+    }];
+    let scfg = ServeConfig {
+        n_arrays: 8,
+        window: BatchWindow {
+            max_batch: 1,
+            max_wait_cy: 0,
+        },
+        pipeline: false,
+        duration_s: 0.01,
+        ..ServeConfig::default()
+    };
+    let rep = simulate(&models, &scfg, &pm).unwrap();
+    assert_eq!(rep.tenants[0].served, n as u64);
+    assert_eq!(rep.tenants[0].batches, n as u64);
+
+    let cfg = SystemConfig::scaled_up(8);
+    let mut cache = PlanCache::new();
+    let plan = cache.get_or_place(&bottleneck(), 256, 8, false).unwrap();
+    let strict = run_batched(
+        &bottleneck(),
+        Strategy::ImaDw,
+        &cfg,
+        &pm,
+        &plan,
+        BatchConfig {
+            batch: n,
+            pipeline: false,
+            charge_dma: true,
+        },
+    );
+    assert_eq!(rep.makespan_cycles, strict.cycles, "served totals must be bit-identical");
+    assert_eq!(rep.makespan_cycles, strict.sequential_cycles);
+    assert_eq!(rep.busy_cycles, strict.cycles, "no idle gaps with a t=0 backlog");
+}
+
+#[test]
+fn strict_window_equals_sequential_baseline_staged() {
+    // same property on a staged (undersized-pool) tenant: every
+    // single-request batch pays its own reprogramming and boundary DMA,
+    // exactly like the scheduler's honest sequential baseline
+    let pm = PowerModel::paper();
+    let n = 3usize;
+    let models = vec![ModelTraffic {
+        net: mobilenet_v2(224),
+        traffic: TrafficModel::Trace {
+            arrivals_cy: vec![0; n],
+        },
+        weight: 1,
+    }];
+    let scfg = ServeConfig {
+        n_arrays: 8,
+        window: BatchWindow {
+            max_batch: 1,
+            max_wait_cy: 0,
+        },
+        pipeline: false,
+        duration_s: 0.01,
+        ..ServeConfig::default()
+    };
+    let rep = simulate(&models, &scfg, &pm).unwrap();
+    assert!(rep.tenants[0].n_passes > 1, "8 arrays must stage MNv2");
+    assert_eq!(rep.tenants[0].served, n as u64);
+
+    let cfg = SystemConfig::scaled_up(8);
+    let mut cache = PlanCache::new();
+    let plan = cache.get_or_place(&mobilenet_v2(224), 256, 8, false).unwrap();
+    let strict = run_batched(
+        &mobilenet_v2(224),
+        Strategy::ImaDw,
+        &cfg,
+        &pm,
+        &plan,
+        BatchConfig {
+            batch: n,
+            pipeline: false,
+            charge_dma: true,
+        },
+    );
+    // batch-major strict serving amortizes reprogramming, one-at-a-time
+    // serving cannot: the serve totals match the *sequential* baseline
+    assert_eq!(rep.makespan_cycles, strict.sequential_cycles);
+    assert!(rep.makespan_cycles > strict.cycles);
+}
+
+#[test]
+fn wrr_equal_weights_alternate_batches_under_backlog() {
+    // fairness property: two tenants with identical t=0 backlogs and
+    // equal weights drain in strict alternation — identical batch counts,
+    // every request of both served, and the tenant served first in each
+    // round finishes strictly earlier on average
+    prop::check("wrr_fairness", 24, |rng: &mut SplitMix64| {
+        let pm = PowerModel::paper();
+        let n = rng.range_i64(4, 64) as usize;
+        let max_batch = rng.range_i64(1, 8) as usize;
+        let mk = |name: &str| {
+            let mut net = bottleneck();
+            net.name = name.into();
+            ModelTraffic {
+                net,
+                traffic: TrafficModel::Trace {
+                    arrivals_cy: vec![0; n],
+                },
+                weight: 1,
+            }
+        };
+        let models = vec![mk("bn-a"), mk("bn-b")];
+        let scfg = ServeConfig {
+            n_arrays: 16,
+            policy: Policy::Wrr,
+            window: BatchWindow {
+                max_batch,
+                max_wait_cy: 50_000,
+            },
+            duration_s: 0.05,
+            ..ServeConfig::default()
+        };
+        let rep = simulate(&models, &scfg, &pm).unwrap();
+        let (a, b) = (&rep.tenants[0], &rep.tenants[1]);
+        assert_eq!(a.served, n as u64);
+        assert_eq!(b.served, n as u64);
+        assert_eq!(
+            a.batches, b.batches,
+            "equal backlogs, equal weights (n {n}, max_batch {max_batch})"
+        );
+        assert!(
+            a.latency.mean() < b.latency.mean(),
+            "round-robin serves tenant 0 first in every round"
+        );
+    });
+}
+
+#[test]
+fn wrr_weights_bias_latency_toward_the_heavier_tenant() {
+    // weight 3 vs 1 on identical backlogs: the heavier tenant's requests
+    // finish earlier on average
+    let pm = PowerModel::paper();
+    let n = 64usize;
+    let mk = |name: &str, weight: u64| {
+        let mut net = bottleneck();
+        net.name = name.into();
+        ModelTraffic {
+            net,
+            traffic: TrafficModel::Trace {
+                arrivals_cy: vec![0; n],
+            },
+            weight,
+        }
+    };
+    let models = vec![mk("heavy", 3), mk("light", 1)];
+    let scfg = ServeConfig {
+        n_arrays: 16,
+        policy: Policy::Wrr,
+        duration_s: 0.05,
+        ..ServeConfig::default()
+    };
+    let rep = simulate(&models, &scfg, &pm).unwrap();
+    let (h, l) = (&rep.tenants[0], &rep.tenants[1]);
+    assert_eq!(h.served, n as u64);
+    assert_eq!(l.served, n as u64);
+    assert!(
+        h.latency.mean() < l.latency.mean(),
+        "{} vs {}",
+        h.latency.mean(),
+        l.latency.mean()
+    );
+}
+
+#[test]
+fn sjf_shields_the_light_model_fifo_couples_them() {
+    // classic arbitration result under overload: SJF keeps the cheap
+    // model's latency near its service time by always jumping it ahead of
+    // the heavy model's queue; FIFO makes it wait in the shared backlog
+    let pm = PowerModel::paper();
+    let run = |policy: Policy| {
+        let scfg = ServeConfig {
+            policy,
+            seed: 0xBEEF,
+            duration_s: 0.05,
+            ..ServeConfig::default()
+        };
+        simulate(&poisson_pair(600.0), &scfg, &pm).unwrap()
+    };
+    let sjf = run(Policy::Sjf);
+    let fifo = run(Policy::Fifo);
+    let bn_p50 = |r: &imcc::serve::ServeReport| r.tenants[1].latency.quantile(0.5);
+    let mnv2_p50 = |r: &imcc::serve::ServeReport| r.tenants[0].latency.quantile(0.5);
+    assert!(
+        (bn_p50(&sjf) as f64) * 1.5 < bn_p50(&fifo) as f64,
+        "sjf {} vs fifo {}",
+        bn_p50(&sjf),
+        bn_p50(&fifo)
+    );
+    // and under SJF the light model is far faster than the starved heavy one
+    assert!(bn_p50(&sjf) * 3 < mnv2_p50(&sjf));
+}
