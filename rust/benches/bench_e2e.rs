@@ -83,4 +83,49 @@ fn main() {
             )
         });
     }
+
+    // ---- staged pool: PCM weight-update streaming ------------------------
+    let cfg8 = SystemConfig::scaled_up(8);
+    let plan8 = cache.get_or_place(&net, 256, 8, false).unwrap();
+    println!("\nstaged 8-array pool, weight-update streaming (model inf/s):");
+    for batch in [1usize, 4, 8] {
+        let mk = |stream_weights: bool| {
+            run_batched(
+                &net,
+                Strategy::ImaDw,
+                &cfg8,
+                &pm,
+                &plan8,
+                BatchConfig {
+                    batch,
+                    pipeline: true,
+                    stream_weights,
+                    ..BatchConfig::default()
+                },
+            )
+        };
+        let block = mk(false);
+        let stream = mk(true);
+        println!(
+            "  batch {batch:>2}: blocking {:>6.2} -> streamed {:>6.2} inf/s ({:.2}x)",
+            block.inferences_per_s(),
+            stream.inferences_per_s(),
+            stream.inferences_per_s() / block.inferences_per_s()
+        );
+    }
+    bench("run_batched_staged_streamed_b4", 10, 500, || {
+        run_batched(
+            &net,
+            Strategy::ImaDw,
+            &cfg8,
+            &pm,
+            &plan8,
+            BatchConfig {
+                batch: 4,
+                pipeline: true,
+                stream_weights: true,
+                ..BatchConfig::default()
+            },
+        )
+    });
 }

@@ -1,10 +1,33 @@
 //! Bench: the event-driven serving simulator — wall cost of simulating
 //! multi-model traffic (the tool itself must stay interactive for sweeps),
-//! histogram hot-path cost, and a peek at the latency tables per policy.
+//! the heap-based next-event queue at high tenant counts, histogram
+//! hot-path cost, the overlapped-vs-serialized dispatch comparison, and
+//! weight-update streaming on a staged tenant.
 
 use imcc::arch::PowerModel;
-use imcc::serve::{mnv2_bottleneck_pair as models, simulate, LogHistogram, Policy, ServeConfig};
+use imcc::coordinator::PlanCache;
+use imcc::net::bottleneck::bottleneck;
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::serve::{
+    mnv2_bottleneck_pair as models, simulate, simulate_with_cache, LogHistogram, ModelTraffic,
+    Policy, ServeConfig, TrafficModel,
+};
 use imcc::util::bench::bench;
+
+/// `n` bottleneck tenants with distinct names under equal Poisson load.
+fn tenant_fleet(n: usize, rate_per_s: f64) -> Vec<ModelTraffic> {
+    (0..n)
+        .map(|i| {
+            let mut net = bottleneck();
+            net.name = format!("bn-{i}");
+            ModelTraffic {
+                net,
+                traffic: TrafficModel::Poisson { rate_per_s },
+                weight: 1,
+            }
+        })
+        .collect()
+}
 
 fn main() {
     println!("== bench_serve (event-driven multi-model serving) ==");
@@ -28,6 +51,58 @@ fn main() {
         bench(&format!("simulate_{label}_{rate}rps"), 5, 2000, || {
             simulate(&ms, &scfg, &pm).unwrap()
         });
+    }
+
+    // heap-based next-event queue: wall cost vs tenant count (the former
+    // linear scan re-examined every queue at every dispatch)
+    let mut cache = PlanCache::with_capacity(256);
+    for &n in &[4usize, 16, 32] {
+        let ms = tenant_fleet(n, 100.0);
+        let scfg = ServeConfig {
+            n_arrays: 6 * n,
+            duration_s: 0.05,
+            ..ServeConfig::default()
+        };
+        bench(&format!("simulate_{n}_tenants"), 3, 2000, || {
+            simulate_with_cache(&ms, &scfg, &pm, &mut cache).unwrap()
+        });
+    }
+
+    println!("\ntwo-tenant dispatch, 0.1 s @ 150 req/s/model:");
+    for (label, overlap) in [("overlapped", true), ("serialized", false)] {
+        let scfg = ServeConfig {
+            overlap,
+            duration_s: 0.1,
+            ..ServeConfig::default()
+        };
+        let rep = simulate(&models(150.0), &scfg, &pm).unwrap();
+        println!(
+            "  {label:>10}: makespan {:>8.2} ms, {:>7.1} inf/s, pool util {:.0}%",
+            rep.makespan_cycles as f64 * rep.cycle_ns * 1e-6,
+            rep.inferences_per_s(),
+            rep.utilization() * 100.0
+        );
+    }
+
+    println!("\nstaged MobileNetV2 tenant (8 arrays), 0.05 s @ 20 req/s:");
+    for (label, stream_weights) in [("blocking", false), ("streamed", true)] {
+        let ms = vec![ModelTraffic {
+            net: mobilenet_v2(224),
+            traffic: TrafficModel::Poisson { rate_per_s: 20.0 },
+            weight: 1,
+        }];
+        let scfg = ServeConfig {
+            n_arrays: 8,
+            stream_weights,
+            duration_s: 0.05,
+            ..ServeConfig::default()
+        };
+        let rep = simulate(&ms, &scfg, &pm).unwrap();
+        println!(
+            "  {label:>9}: makespan {:>8.2} ms, {:>6.2} inf/s",
+            rep.makespan_cycles as f64 * rep.cycle_ns * 1e-6,
+            rep.inferences_per_s()
+        );
     }
 
     println!("\nper-policy tables, 2 models, 0.1 s @ 150 req/s/model:");

@@ -14,20 +14,24 @@
 //!
 //! On top of the per-request model, [`scheduler`] serves *batches* across
 //! the multi-array pool (requests pipelined over disjoint layer resources,
-//! double-buffered activations) and [`plan_cache`] memoizes TILE&PACK
-//! placements so repeated inferences skip allocation entirely.
+//! double-buffered activations), [`plan_cache`] memoizes TILE&PACK
+//! placements so repeated inferences skip allocation entirely, and
+//! [`timeline`] names the pool's contended resources — every batch emits a
+//! per-resource reservation profile the serving arbiter schedules against.
 
 pub mod executor;
 pub mod l1_planner;
 pub mod metrics;
 pub mod plan_cache;
 pub mod scheduler;
+pub mod timeline;
 
 pub use executor::{run_network, Executor};
 pub use l1_planner::{plan as l1_plan, L1Plan};
 pub use metrics::{LayerReport, RunReport};
 pub use plan_cache::{PlanCache, PlanKey};
 pub use scheduler::{run_batched, BatchConfig, BatchReport};
+pub use timeline::{ReservationProfile, ResourceSpan, ResourceTimeline};
 
 /// The four computation mappings of Fig. 9 (+ Fig. 13's taxonomy).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

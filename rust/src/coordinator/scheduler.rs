@@ -36,6 +36,22 @@
 //! (one DMA spill + one refill per request per cut, serialized at the
 //! pass barrier on the single cluster DMA). Resident plans never touch L2
 //! on the request path, matching the paper's all-activations-in-L1 model.
+//!
+//! Two extensions ride on the same resource machinery:
+//!
+//! * every batch now emits a [`ReservationProfile`] — per resource, the
+//!   offsets of first occupancy and final release plus busy cycles — so
+//!   the serving arbiter can overlap batches of different tenants whose
+//!   resource envelopes are disjoint (see [`super::timeline`]);
+//! * with [`BatchConfig::stream_weights`] set, staged plans *stream* their
+//!   PCM updates: pass k+1's program-and-verify runs array by array on the
+//!   single programming port, each array starting the moment pass k's
+//!   compute releases it, and pass k+1's layers start as soon as their own
+//!   arrays are programmed (plus their request's boundary refill). The
+//!   cut-boundary DMA likewise overlaps programming on its own port.
+//!   Programming work, DMA work, and energy are identical to the blocking
+//!   schedule — only the makespan shrinks. With the flag off the schedule
+//!   is bit-identical to the original barrier model.
 
 use std::collections::BTreeMap;
 
@@ -45,6 +61,10 @@ use crate::net::Network;
 use crate::sim::dma::DmaModel;
 use crate::tilepack::StagedPlacement;
 
+use super::timeline::{
+    ProfileBuilder, ReservationProfile, RES_ARRAY0, RES_CORES, RES_DMA, RES_DWACC, RES_IMA_MUX,
+    RES_PROG,
+};
 use super::{Engine, Executor, Strategy};
 
 /// Batch execution knobs.
@@ -58,6 +78,11 @@ pub struct BatchConfig {
     /// staged passes (no effect on resident plans). On by default;
     /// disabling it reproduces the pre-DMA accounting for ablations.
     pub charge_dma: bool,
+    /// Stream staged PCM updates: overlap a pass's compute tail with the
+    /// next pass's reprogramming on arrays the running pass has released
+    /// (no effect on resident plans). Off by default — the blocking
+    /// barrier schedule stays bit-identical to the PR 1/2 model.
+    pub stream_weights: bool,
 }
 
 impl Default for BatchConfig {
@@ -66,6 +91,7 @@ impl Default for BatchConfig {
             batch: 1,
             pipeline: true,
             charge_dma: true,
+            stream_weights: false,
         }
     }
 }
@@ -101,6 +127,10 @@ pub struct BatchReport {
     pub sequential_cycles: u64,
     /// Name of the layer whose resources bound the pipeline.
     pub bottleneck_layer: String,
+    /// Per-resource reservation envelope of this batch (offsets relative
+    /// to dispatch; array ids are plan-local) — what the serving arbiter
+    /// reserves on its pool timeline.
+    pub profile: ReservationProfile,
 }
 
 impl BatchReport {
@@ -121,12 +151,6 @@ impl BatchReport {
         self.sequential_cycles as f64 / self.cycles as f64
     }
 }
-
-/// Resource ids for the list schedule.
-const RES_CORES: usize = 0;
-const RES_DWACC: usize = 1;
-const RES_IMA_SHARED: usize = 2;
-const RES_ARRAY0: usize = 3;
 
 /// Serve a batch of `cfgb.batch` requests of `net` under `strategy` on the
 /// pool described by `cfg`/`plan`. The plan must come from the plan cache
@@ -184,7 +208,7 @@ pub fn run_batched(
                 Engine::Ima => {
                     let arrays = &pass.layer_arrays[li];
                     if arrays.is_empty() {
-                        vec![RES_IMA_SHARED]
+                        vec![RES_IMA_MUX]
                     } else {
                         arrays.iter().map(|a| RES_ARRAY0 + a).collect()
                     }
@@ -221,68 +245,171 @@ pub fn run_batched(
         .collect();
 
     // greedy list schedule, batch-major across passes
-    let mut now: u64 = 0; // global clock across passes
     let mut reprogram_cycles: u64 = 0;
     let mut dma_cycles: u64 = 0;
     // deterministic maps: the bottleneck tie-break iterates these
     let mut busy_cy: BTreeMap<usize, u64> = BTreeMap::new();
     let mut layer_contrib: BTreeMap<(usize, usize), u64> = BTreeMap::new(); // (res, layer)
+    let mut builder = ProfileBuilder::new();
 
-    for (pi, (pass, &range)) in plan.passes.iter().zip(plan.pass_ranges.iter()).enumerate() {
-        // crossing a cut: every request's boundary activation spills to
-        // L2 and refills into L1 around the reprogramming barrier
-        if pi > 0 {
-            let cy = boundary_dma_cy[pi - 1].saturating_mul(cfgb.batch as u64);
-            now += cy;
-            dma_cycles += cy;
-        }
-        // staged pools rewrite their weights before every pass
-        now += reprogram_per_pass[pi];
-        reprogram_cycles += reprogram_per_pass[pi];
-
-        let res_of = layer_resources(pass, range);
-        let n_layers = range.1 - range.0;
+    let streamed = cfgb.stream_weights && !plan.is_resident();
+    let cycles: u64 = if streamed {
+        // ---- streamed weight updates ---------------------------------
+        // Pass k+1's PCM programming runs array by array on the single
+        // program-and-verify port, each chunk starting the moment pass
+        // k's compute releases that array; pass k+1's layers start once
+        // their own arrays are programmed and their request's boundary
+        // activation has refilled (DMA overlaps programming on its own
+        // port). Resource state therefore persists across passes.
         let mut res_free: BTreeMap<usize, u64> = BTreeMap::new();
-        // per-layer finish times of the previous two requests — the
-        // double-buffer backpressure (request r's layer k may not start
-        // until request r−2 has consumed the k/k+1 boundary buffer)
-        let mut finish_prev: Vec<u64> = vec![now; n_layers];
-        let mut finish_prev2: Vec<u64> = vec![now; n_layers];
-        let mut pass_end = now;
-        let mut prev_request_end = now;
-        for _r in 0..cfgb.batch {
-            let mut finish_cur: Vec<u64> = vec![now; n_layers];
-            let mut t = now; // this request's position in the chain
-            if !cfgb.pipeline {
-                // strict serving: wait for the previous request to drain
-                t = t.max(prev_request_end);
-            }
-            for (k, li) in (range.0..range.1).enumerate() {
-                let cy = costs[li].0;
-                let mut start = t;
-                for res in &res_of[k] {
-                    start = start.max(*res_free.get(res).unwrap_or(&now));
-                }
-                // buffer slot at the output boundary frees once request
-                // r−2 has finished the consuming layer k+1
-                if k + 1 < n_layers {
-                    start = start.max(finish_prev2[k + 1]);
-                }
+        let mut prog_free: u64 = 0; // the programming port
+        let mut dma_free: u64 = 0; // the cluster DMA port
+        let mut req_end: Vec<u64> = vec![0; cfgb.batch];
+        let mut makespan: u64 = 0;
+
+        for (pi, (pass, &range)) in plan.passes.iter().zip(plan.pass_ranges.iter()).enumerate() {
+            let chunks = pool.program_cycles_by_array(pass);
+            for (&a, &cy) in &chunks {
+                let res = RES_ARRAY0 + a;
+                let start = prog_free.max(*res_free.get(&res).unwrap_or(&0));
                 let finish = start + cy;
-                for res in &res_of[k] {
-                    res_free.insert(*res, finish);
-                    *busy_cy.entry(*res).or_insert(0) += cy;
-                    *layer_contrib.entry((*res, li)).or_insert(0) += cy;
-                }
-                finish_cur[k] = finish;
-                t = finish;
+                builder.occupy(res, start, finish);
+                builder.occupy(RES_PROG, start, finish);
+                res_free.insert(res, finish);
+                prog_free = finish;
             }
-            prev_request_end = t;
-            pass_end = pass_end.max(t);
-            finish_prev2 = std::mem::replace(&mut finish_prev, finish_cur);
+            reprogram_cycles += reprogram_per_pass[pi];
+
+            let res_of = layer_resources(pass, range);
+            let n_layers = range.1 - range.0;
+            let mut finish_prev: Vec<u64> = vec![0; n_layers];
+            let mut finish_prev2: Vec<u64> = vec![0; n_layers];
+            let mut prev_request_end: u64 = 0;
+            for end in req_end.iter_mut() {
+                let mut t = *end;
+                if pi > 0 {
+                    // spill once the request drains from the previous
+                    // pass, refill before this one — one DMA transaction
+                    let cy = boundary_dma_cy[pi - 1];
+                    if cy > 0 {
+                        let start = dma_free.max(*end);
+                        let finish = start + cy;
+                        builder.occupy(RES_DMA, start, finish);
+                        dma_free = finish;
+                        dma_cycles += cy;
+                        t = finish;
+                    }
+                }
+                if !cfgb.pipeline {
+                    t = t.max(prev_request_end);
+                }
+                let mut finish_cur: Vec<u64> = vec![0; n_layers];
+                for (k, li) in (range.0..range.1).enumerate() {
+                    let cy = costs[li].0;
+                    let mut start = t;
+                    for res in &res_of[k] {
+                        start = start.max(*res_free.get(res).unwrap_or(&0));
+                    }
+                    if k + 1 < n_layers {
+                        start = start.max(finish_prev2[k + 1]);
+                    }
+                    let finish = start + cy;
+                    for res in &res_of[k] {
+                        builder.occupy(*res, start, finish);
+                        res_free.insert(*res, finish);
+                        *busy_cy.entry(*res).or_insert(0) += cy;
+                        *layer_contrib.entry((*res, li)).or_insert(0) += cy;
+                    }
+                    finish_cur[k] = finish;
+                    t = finish;
+                }
+                prev_request_end = t;
+                *end = t;
+                makespan = makespan.max(t);
+                finish_prev2 = std::mem::replace(&mut finish_prev, finish_cur);
+            }
         }
-        now = pass_end;
-    }
+        // compute on a programmed array always outlasts its programming
+        // under the IMA strategies; the max guards strategies that leave
+        // programmed arrays idle
+        makespan.max(prog_free).max(dma_free)
+    } else {
+        // ---- blocking barrier schedule (bit-identical to PR 1/2) -----
+        let mut now: u64 = 0; // global clock across passes
+        for (pi, (pass, &range)) in plan.passes.iter().zip(plan.pass_ranges.iter()).enumerate() {
+            // crossing a cut: every request's boundary activation spills
+            // to L2 and refills into L1 around the reprogramming barrier
+            if pi > 0 {
+                let cy = boundary_dma_cy[pi - 1].saturating_mul(cfgb.batch as u64);
+                if cy > 0 {
+                    builder.occupy(RES_DMA, now, now + cy);
+                }
+                now += cy;
+                dma_cycles += cy;
+            }
+            // staged pools rewrite their weights before every pass; the
+            // per-array program-and-verify chunks serialize inside the
+            // barrier (profile attribution only — `now` jumps the total)
+            if reprogram_per_pass[pi] > 0 {
+                let chunks = pool.program_cycles_by_array(pass);
+                let mut t0 = now;
+                for (&a, &cy) in &chunks {
+                    builder.occupy(RES_ARRAY0 + a, t0, t0 + cy);
+                    t0 += cy;
+                }
+                debug_assert_eq!(t0, now + reprogram_per_pass[pi]);
+                builder.occupy(RES_PROG, now, now + reprogram_per_pass[pi]);
+            }
+            now += reprogram_per_pass[pi];
+            reprogram_cycles += reprogram_per_pass[pi];
+
+            let res_of = layer_resources(pass, range);
+            let n_layers = range.1 - range.0;
+            let mut res_free: BTreeMap<usize, u64> = BTreeMap::new();
+            // per-layer finish times of the previous two requests — the
+            // double-buffer backpressure (request r's layer k may not
+            // start until request r−2 has consumed the k/k+1 boundary
+            // buffer)
+            let mut finish_prev: Vec<u64> = vec![now; n_layers];
+            let mut finish_prev2: Vec<u64> = vec![now; n_layers];
+            let mut pass_end = now;
+            let mut prev_request_end = now;
+            for _r in 0..cfgb.batch {
+                let mut finish_cur: Vec<u64> = vec![now; n_layers];
+                let mut t = now; // this request's position in the chain
+                if !cfgb.pipeline {
+                    // strict serving: wait for the previous request
+                    t = t.max(prev_request_end);
+                }
+                for (k, li) in (range.0..range.1).enumerate() {
+                    let cy = costs[li].0;
+                    let mut start = t;
+                    for res in &res_of[k] {
+                        start = start.max(*res_free.get(res).unwrap_or(&now));
+                    }
+                    // buffer slot at the output boundary frees once
+                    // request r−2 has finished the consuming layer k+1
+                    if k + 1 < n_layers {
+                        start = start.max(finish_prev2[k + 1]);
+                    }
+                    let finish = start + cy;
+                    for res in &res_of[k] {
+                        builder.occupy(*res, start, finish);
+                        res_free.insert(*res, finish);
+                        *busy_cy.entry(*res).or_insert(0) += cy;
+                        *layer_contrib.entry((*res, li)).or_insert(0) += cy;
+                    }
+                    finish_cur[k] = finish;
+                    t = finish;
+                }
+                prev_request_end = t;
+                pass_end = pass_end.max(t);
+                finish_prev2 = std::mem::replace(&mut finish_prev, finish_cur);
+            }
+            now = pass_end;
+        }
+        now
+    };
 
     // pipeline bottleneck: the busiest resource, attributed to the layer
     // that contributed the most busy time on it (deterministic: BTreeMap
@@ -298,7 +425,6 @@ pub fn run_batched(
         }
     }
 
-    let cycles = now;
     let time_s = cycles as f64 * cfg.freq.cycle_ns() * 1e-9;
     // a truly sequential request reprograms every pass itself and pays its
     // own boundary spill/refill; batch-major serving pays reprogramming
@@ -322,6 +448,7 @@ pub fn run_batched(
         per_request_cycles,
         sequential_cycles,
         bottleneck_layer,
+        profile: builder.build(cycles),
     }
 }
 
@@ -389,5 +516,146 @@ mod tests {
         assert!(piped.inferences_per_s() > strict.inferences_per_s());
         // lower bound: the bottleneck resource cannot be beaten
         assert!(piped.cycles >= piped.per_request_cycles);
+    }
+
+    #[test]
+    fn profile_envelopes_are_consistent() {
+        // resident plan: spans stay inside the makespan, busy fits the
+        // envelope, and no DMA resource appears
+        let (cfg, pm) = setup();
+        let net = bottleneck();
+        let mut cache = PlanCache::new();
+        let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+        let rep = run_batched(
+            &net,
+            Strategy::ImaDw,
+            &cfg,
+            &pm,
+            &plan,
+            BatchConfig {
+                batch: 4,
+                ..BatchConfig::default()
+            },
+        );
+        let prof = &rep.profile;
+        assert_eq!(prof.len, rep.cycles);
+        assert!(!prof.spans.is_empty());
+        for s in &prof.spans {
+            assert!(s.first_use <= s.last_release);
+            assert!(
+                s.last_release <= prof.len,
+                "res {} released at {} > len {}",
+                s.res,
+                s.last_release,
+                prof.len
+            );
+            assert!(s.busy <= s.last_release - s.first_use);
+        }
+        assert!(prof.span(RES_DMA).is_none(), "resident plans never touch L2");
+        assert!(prof.span(RES_PROG).is_none(), "resident plans never reprogram");
+        assert!(prof.span(RES_CORES).is_some());
+        assert!(prof.span(RES_DWACC).is_some());
+    }
+
+    #[test]
+    fn staged_profiles_reserve_the_programming_port() {
+        // a staged batch's profile must carry the PCM programming port so
+        // two staged tenants cannot reprogram concurrently cross-tenant
+        let (cfg, pm) = setup();
+        let net = crate::net::mobilenetv2::mobilenet_v2(224);
+        let mut cache = PlanCache::new();
+        let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+        for stream_weights in [false, true] {
+            let rep = run_batched(
+                &net,
+                Strategy::ImaDw,
+                &cfg,
+                &pm,
+                &plan,
+                BatchConfig {
+                    batch: 2,
+                    stream_weights,
+                    ..BatchConfig::default()
+                },
+            );
+            let prog = rep.profile.span(RES_PROG).expect("staged batches program");
+            assert_eq!(prog.busy, rep.reprogram_cycles, "stream {stream_weights}");
+            assert!(rep.profile.span(RES_DMA).is_some());
+        }
+    }
+
+    #[test]
+    fn streamed_weight_updates_beat_the_barrier() {
+        let (cfg, pm) = setup();
+        let net = crate::net::mobilenetv2::mobilenet_v2(224);
+        let mut cache = PlanCache::new();
+        let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+        assert!(plan.n_passes() > 1, "8 arrays must stage MNv2");
+        for batch in [1usize, 4] {
+            let block = run_batched(
+                &net,
+                Strategy::ImaDw,
+                &cfg,
+                &pm,
+                &plan,
+                BatchConfig {
+                    batch,
+                    ..BatchConfig::default()
+                },
+            );
+            let stream = run_batched(
+                &net,
+                Strategy::ImaDw,
+                &cfg,
+                &pm,
+                &plan,
+                BatchConfig {
+                    batch,
+                    stream_weights: true,
+                    ..BatchConfig::default()
+                },
+            );
+            // identical work, identical energy — only the makespan moves
+            assert_eq!(stream.reprogram_cycles, block.reprogram_cycles);
+            assert_eq!(stream.dma_cycles, block.dma_cycles);
+            assert_eq!(stream.sequential_cycles, block.sequential_cycles);
+            assert!((stream.energy_j - block.energy_j).abs() < 1e-12);
+            assert!(
+                stream.cycles < block.cycles,
+                "batch {batch}: {} !< {}",
+                stream.cycles,
+                block.cycles
+            );
+            // programming still serializes on one port: the makespan can
+            // beat neither the programming work nor a lone request
+            assert!(stream.cycles >= stream.reprogram_cycles);
+            assert!(stream.cycles >= stream.per_request_cycles);
+        }
+    }
+
+    #[test]
+    fn stream_flag_is_inert_on_resident_plans() {
+        let (cfg, pm) = setup();
+        let net = bottleneck();
+        let mut cache = PlanCache::new();
+        let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+        let base = BatchConfig {
+            batch: 4,
+            ..BatchConfig::default()
+        };
+        let a = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, base);
+        let b = run_batched(
+            &net,
+            Strategy::ImaDw,
+            &cfg,
+            &pm,
+            &plan,
+            BatchConfig {
+                stream_weights: true,
+                ..base
+            },
+        );
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.profile, b.profile);
     }
 }

@@ -1,0 +1,311 @@
+//! Per-resource busy timelines: the contention vocabulary shared by the
+//! batch scheduler and the serving arbiter.
+//!
+//! PR 2's serving loop modeled the whole pool as one opaque server — a
+//! dispatched batch held "the pool" for its full makespan, so two tenants
+//! on *disjoint* array slices could never overlap, and a staged tenant's
+//! PCM reprogramming stalled everyone. This module replaces that scalar
+//! clock with explicit resources:
+//!
+//! * the 8-core complex ([`RES_CORES`]),
+//! * the depth-wise accelerator ([`RES_DWACC`]),
+//! * the shared IMA mux that serializes IMA jobs without a pool placement
+//!   ([`RES_IMA_MUX`]),
+//! * the L2/DMA port that carries staged cut-boundary activations
+//!   ([`RES_DMA`]),
+//! * the PCM program-and-verify port that serializes all reprogramming
+//!   ([`RES_PROG`]),
+//! * and every crossbar array as its own resource ([`RES_ARRAY0`]` + i`).
+//!
+//! [`run_batched`](super::scheduler::run_batched) already schedules over
+//! these resources internally; what it now *emits* is a
+//! [`ReservationProfile`] — for each resource the batch touches, the
+//! offsets (relative to batch start) of its first occupancy and final
+//! release, plus the cycles actually held. The serving loop keeps one
+//! [`ResourceTimeline`] of scalar next-free times over the whole pool and
+//! dispatches a tenant's batch at the earliest instant every required
+//! resource is free — so tenants on disjoint slices genuinely overlap
+//! while contended shared resources (cores, DW accelerator, mux, DMA)
+//! still serialize correctly.
+//!
+//! The envelope model is deliberately conservative: within a batch a
+//! resource is considered held from its first use to its last release, so
+//! a later batch may not backfill into idle gaps of an earlier batch's
+//! envelope. That keeps the timeline a scalar per resource (exact event
+//! jumps, no interval sets) and makes overlap claims safe: the reported
+//! makespan is an upper bound on what a cleverer arbiter could do, and is
+//! still strictly below the serialized sum whenever envelopes are
+//! disjoint.
+
+use std::collections::BTreeMap;
+
+/// The RISC-V core complex (one shared resource).
+pub const RES_CORES: usize = 0;
+/// The depth-wise accelerator.
+pub const RES_DWACC: usize = 1;
+/// Shared IMA mux: serializes IMA jobs that have no pool placement.
+pub const RES_IMA_MUX: usize = 2;
+/// The cluster L2/DMA port (staged cut-boundary spills/refills).
+pub const RES_DMA: usize = 3;
+/// The PCM program-and-verify port: all reprogramming — within a batch
+/// and across tenants — serializes here.
+pub const RES_PROG: usize = 4;
+/// First crossbar array; array `i` is resource `RES_ARRAY0 + i`.
+pub const RES_ARRAY0: usize = 5;
+
+/// Human-readable name of a resource id (pool-absolute array indices).
+pub fn res_label(res: usize) -> String {
+    match res {
+        RES_CORES => "cores".into(),
+        RES_DWACC => "dw_acc".into(),
+        RES_IMA_MUX => "ima_mux".into(),
+        RES_DMA => "dma".into(),
+        RES_PROG => "pcm_prog".into(),
+        a => format!("array{}", a - RES_ARRAY0),
+    }
+}
+
+/// One resource's envelope within a scheduled batch. All offsets are
+/// cycles relative to the batch's start instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResourceSpan {
+    /// Resource id (`RES_*`; arrays are plan-local, i.e. relative to the
+    /// tenant's slice base).
+    pub res: usize,
+    /// Offset of the first cycle the batch occupies this resource.
+    pub first_use: u64,
+    /// Offset of the cycle the batch finally releases this resource.
+    pub last_release: u64,
+    /// Cycles the resource is actually held (≤ `last_release - first_use`).
+    pub busy: u64,
+}
+
+/// The per-resource reservation profile of one scheduled batch: which
+/// resources it needs, when (relative to its start), and for how long.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReservationProfile {
+    /// Spans sorted by resource id (one entry per touched resource).
+    pub spans: Vec<ResourceSpan>,
+    /// Batch makespan: the offset at which the whole batch has drained.
+    pub len: u64,
+}
+
+impl ReservationProfile {
+    /// The span for `res`, if the batch touches it.
+    pub fn span(&self, res: usize) -> Option<&ResourceSpan> {
+        self.spans.iter().find(|s| s.res == res)
+    }
+
+    /// Total busy cycles across all resources (for conservation checks:
+    /// every span's `busy` must fit inside the batch makespan).
+    pub fn total_busy(&self) -> u64 {
+        self.spans.iter().map(|s| s.busy).sum()
+    }
+}
+
+/// Accumulates per-resource occupancy while a schedule is being built,
+/// then freezes into a [`ReservationProfile`].
+#[derive(Debug, Default)]
+pub struct ProfileBuilder {
+    /// res → (first_use, last_release, busy)
+    spans: BTreeMap<usize, (u64, u64, u64)>,
+}
+
+impl ProfileBuilder {
+    pub fn new() -> ProfileBuilder {
+        ProfileBuilder::default()
+    }
+
+    /// Record that `res` is held over `[start, finish)`.
+    pub fn occupy(&mut self, res: usize, start: u64, finish: u64) {
+        debug_assert!(finish >= start);
+        let e = self.spans.entry(res).or_insert((start, finish, 0));
+        e.0 = e.0.min(start);
+        e.1 = e.1.max(finish);
+        e.2 += finish - start;
+    }
+
+    /// Freeze into a profile with batch makespan `len`.
+    pub fn build(self, len: u64) -> ReservationProfile {
+        ReservationProfile {
+            spans: self
+                .spans
+                .into_iter()
+                .map(|(res, (first_use, last_release, busy))| ResourceSpan {
+                    res,
+                    first_use,
+                    last_release,
+                    busy,
+                })
+                .collect(),
+            len,
+        }
+    }
+}
+
+/// Scalar next-free times over every resource of one pool, plus cumulative
+/// busy cycles for the utilization breakdown. Array ids are pool-absolute;
+/// profiles carry slice-local array ids, so every operation takes the
+/// tenant's `array_base` and relocates `RES_ARRAY0 + a` to
+/// `RES_ARRAY0 + array_base + a` (shared resources map to themselves).
+#[derive(Clone, Debug, Default)]
+pub struct ResourceTimeline {
+    free: BTreeMap<usize, u64>,
+    busy: BTreeMap<usize, u64>,
+}
+
+impl ResourceTimeline {
+    pub fn new() -> ResourceTimeline {
+        ResourceTimeline::default()
+    }
+
+    fn map_res(res: usize, array_base: usize) -> usize {
+        if res >= RES_ARRAY0 {
+            res + array_base
+        } else {
+            res
+        }
+    }
+
+    /// When `res` (pool-absolute) next becomes free.
+    pub fn free_at(&self, res: usize) -> u64 {
+        *self.free.get(&res).unwrap_or(&0)
+    }
+
+    /// Cycles `res` (pool-absolute) has been held so far.
+    pub fn busy_cycles(&self, res: usize) -> u64 {
+        *self.busy.get(&res).unwrap_or(&0)
+    }
+
+    /// Cumulative busy cycles per pool-absolute resource id.
+    pub fn busy_map(&self) -> &BTreeMap<usize, u64> {
+        &self.busy
+    }
+
+    /// Earliest instant ≥ `not_before` at which a batch with this profile
+    /// can start: every resource it needs must be free by the offset the
+    /// batch first touches it.
+    pub fn earliest_start(
+        &self,
+        prof: &ReservationProfile,
+        array_base: usize,
+        not_before: u64,
+    ) -> u64 {
+        let mut t = not_before;
+        for s in &prof.spans {
+            let free = self.free_at(Self::map_res(s.res, array_base));
+            t = t.max(free.saturating_sub(s.first_use));
+        }
+        t
+    }
+
+    /// Commit a batch dispatched at `t`: push each touched resource's
+    /// next-free time to the batch's release offset and accumulate busy
+    /// cycles. Callers must have chosen `t ≥ earliest_start(..)`.
+    pub fn commit(&mut self, t: u64, prof: &ReservationProfile, array_base: usize) {
+        for s in &prof.spans {
+            let res = Self::map_res(s.res, array_base);
+            let release = t + s.last_release;
+            let e = self.free.entry(res).or_insert(0);
+            *e = (*e).max(release);
+            *self.busy.entry(res).or_insert(0) += s.busy;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof(spans: &[(usize, u64, u64, u64)], len: u64) -> ReservationProfile {
+        ReservationProfile {
+            spans: spans
+                .iter()
+                .map(|&(res, first_use, last_release, busy)| ResourceSpan {
+                    res,
+                    first_use,
+                    last_release,
+                    busy,
+                })
+                .collect(),
+            len,
+        }
+    }
+
+    #[test]
+    fn disjoint_profiles_overlap_fully() {
+        let mut tl = ResourceTimeline::new();
+        let a = prof(&[(RES_ARRAY0, 0, 100, 100)], 100);
+        let b = prof(&[(RES_ARRAY0 + 1, 0, 80, 80)], 80);
+        let ta = tl.earliest_start(&a, 0, 0);
+        tl.commit(ta, &a, 0);
+        let tb = tl.earliest_start(&b, 0, 0);
+        assert_eq!((ta, tb), (0, 0), "disjoint resources must not serialize");
+        tl.commit(tb, &b, 0);
+        assert_eq!(tl.free_at(RES_ARRAY0), 100);
+        assert_eq!(tl.free_at(RES_ARRAY0 + 1), 80);
+    }
+
+    #[test]
+    fn shared_resource_serializes_on_its_span_only() {
+        let mut tl = ResourceTimeline::new();
+        // batch A holds cores over [90, 100) of a 100-cycle batch
+        let a = prof(&[(RES_ARRAY0, 0, 100, 100), (RES_CORES, 90, 100, 10)], 100);
+        // batch B needs cores at offset 50 of an 80-cycle batch
+        let b = prof(&[(RES_ARRAY0 + 1, 0, 80, 80), (RES_CORES, 50, 60, 10)], 80);
+        tl.commit(0, &a, 0);
+        // B may start at 50: its cores use (offset 50) then lands at 100
+        assert_eq!(tl.earliest_start(&b, 0, 0), 50);
+    }
+
+    #[test]
+    fn array_base_relocates_slices() {
+        let mut tl = ResourceTimeline::new();
+        let p = prof(&[(RES_ARRAY0, 0, 10, 10)], 10);
+        tl.commit(0, &p, 0);
+        // same plan-local array in a slice based at 4 is a different
+        // physical array — no contention
+        assert_eq!(tl.earliest_start(&p, 4, 0), 0);
+        tl.commit(0, &p, 4);
+        assert_eq!(tl.free_at(RES_ARRAY0 + 4), 10);
+        // but the same slice contends with itself
+        assert_eq!(tl.earliest_start(&p, 0, 0), 10);
+    }
+
+    #[test]
+    fn earliest_start_respects_not_before_and_first_use() {
+        let mut tl = ResourceTimeline::new();
+        let a = prof(&[(RES_DWACC, 0, 40, 40)], 40);
+        tl.commit(0, &a, 0);
+        // a batch that first touches the DW accelerator at offset 30 may
+        // start at 10 (so its use begins exactly at 40)
+        let b = prof(&[(RES_DWACC, 30, 50, 20)], 60);
+        assert_eq!(tl.earliest_start(&b, 0, 0), 10);
+        assert_eq!(tl.earliest_start(&b, 0, 25), 25);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(res_label(RES_CORES), "cores");
+        assert_eq!(res_label(RES_DWACC), "dw_acc");
+        assert_eq!(res_label(RES_IMA_MUX), "ima_mux");
+        assert_eq!(res_label(RES_DMA), "dma");
+        assert_eq!(res_label(RES_PROG), "pcm_prog");
+        assert_eq!(res_label(RES_ARRAY0 + 7), "array7");
+    }
+
+    #[test]
+    fn builder_merges_occupancy_into_envelopes() {
+        let mut b = ProfileBuilder::new();
+        b.occupy(RES_CORES, 10, 20);
+        b.occupy(RES_CORES, 40, 45);
+        b.occupy(RES_ARRAY0 + 2, 0, 5);
+        let p = b.build(50);
+        assert_eq!(p.len, 50);
+        let c = p.span(RES_CORES).unwrap();
+        assert_eq!((c.first_use, c.last_release, c.busy), (10, 45, 15));
+        let a = p.span(RES_ARRAY0 + 2).unwrap();
+        assert_eq!((a.first_use, a.last_release, a.busy), (0, 5, 5));
+        assert_eq!(p.total_busy(), 20);
+    }
+}

@@ -10,6 +10,8 @@
 //! an undersized pool is catastrophically slow and the paper insists on
 //! weights resident on-chip.
 
+use std::collections::BTreeMap;
+
 use crate::arch::{PowerModel, SystemConfig};
 use crate::tilepack::PoolPlacement;
 
@@ -64,6 +66,21 @@ impl<'a> ImaArrayPool<'a> {
         p.program_rows() * cy_per_row
     }
 
+    /// [`Self::program_cycles`] split by hosting array (keys are the
+    /// placement's array indices, ascending). The values sum exactly to
+    /// `program_cycles` — weight-update streaming reorders these chunks
+    /// onto per-array timelines without changing the total programming
+    /// work.
+    pub fn program_cycles_by_array(&self, p: &PoolPlacement) -> BTreeMap<usize, u64> {
+        let per_row = self.cfg.ima_mvm_ns * self.cfg.pcm_program_row_factor;
+        let cy_per_row = (per_row / self.cfg.freq.cycle_ns()).ceil() as u64;
+        let mut out: BTreeMap<usize, u64> = BTreeMap::new();
+        for pl in &p.placements {
+            *out.entry(pl.bin).or_insert(0) += pl.tile.rows as u64 * cy_per_row;
+        }
+        out
+    }
+
     /// First-order energy of (re)programming a placement: each row holds
     /// the analog macro for `pcm_program_row_factor` MVM-latency intervals
     /// (write pulses + verify reads) with that tile's columns active — the
@@ -100,6 +117,19 @@ mod tests {
         assert!(pool.fits(&p) == (p.arrays_used <= 34));
         let occ = pool.pool_occupancy(&p);
         assert!((0.5..=1.0).contains(&occ), "{occ}");
+    }
+
+    #[test]
+    fn per_array_programming_sums_to_total() {
+        let cfg = SystemConfig::scaled_up(34);
+        let pm = PowerModel::paper();
+        let pool = ImaArrayPool::new(&cfg, &pm);
+        let net = mobilenet_v2(224);
+        let p = place_network(&net, 256, 40, false).unwrap();
+        let by_array = pool.program_cycles_by_array(&p);
+        assert!(!by_array.is_empty());
+        assert!(by_array.keys().all(|&a| a < p.arrays_used));
+        assert_eq!(by_array.values().sum::<u64>(), pool.program_cycles(&p));
     }
 
     #[test]

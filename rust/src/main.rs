@@ -51,9 +51,16 @@ options:
   --traffic T             `serve`: poisson|bursty              (default poisson)
   --deadline-ms D         `serve`: abandon after D ms waiting  (default off)
   --weights A,B           `serve`: WRR weights per model       (default 1,1)
+  --no-overlap            `serve`: serialize batches on the pool (the PR 2
+                          model; default is per-resource overlapped dispatch)
+  --stream-weights        `serve`/`scaleup`: stream staged PCM reprogramming
+                          under the previous pass's compute tail
+  --json [FILE]           `scaleup`/`serve`: also write a machine-readable
+                          bench baseline (default BENCH_scaleup.json /
+                          BENCH_serve.json)
   --sweep                 `serve`: rate × policy percentile table over the
                           default model pair; honors only --arrays --rate
-                          --policy --duration --seed
+                          --policy --duration --seed --no-overlap --json
 ";
 
 fn config_from(args: &Args) -> SystemConfig {
@@ -77,12 +84,39 @@ fn parse_seed(s: &str) -> Result<u64, String> {
     r.map_err(|_| format!("bad seed `{s}`"))
 }
 
+/// `--json FILE` names the output; bare `--json` picks `default`; absent
+/// means no baseline file.
+fn json_out(args: &Args, default: &str) -> Option<String> {
+    match args.opt("json") {
+        Some(p) => Some(p.to_string()),
+        None if args.flag("json") => Some(default.to_string()),
+        None => None,
+    }
+}
+
+fn write_json(path: &str, doc: &Json) -> Result<(), String> {
+    std::fs::write(path, doc.to_string_pretty()).map_err(|e| format!("write {path}: {e}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 /// `imcc serve --sweep`: the rate × policy percentile table, honoring the
 /// serve flags that apply to a sweep (`--arrays --rate --policy
-/// --duration --seed`).
+/// --duration --seed --no-overlap --json`).
 fn run_serve_sweep(args: &Args, pm: &PowerModel) -> Result<(), String> {
     use imcc::serve::{Policy, DEFAULT_SEED};
 
+    if args.flag("overlap") && args.flag("no-overlap") {
+        return Err("--overlap and --no-overlap are mutually exclusive".into());
+    }
+    if args.flag("stream-weights") {
+        return Err(
+            "--stream-weights is not supported with --sweep (the default \
+             model pair is fully resident; nothing reprograms)"
+                .into(),
+        );
+    }
+    let overlap = !args.flag("no-overlap");
     let arrays: usize = args.opt_parse("arrays", 64usize);
     let duration_s: f64 = args.opt_parse("duration", 0.25);
     let seed = match args.opt("seed") {
@@ -97,7 +131,13 @@ fn run_serve_sweep(args: &Args, pm: &PowerModel) -> Result<(), String> {
         None => report::serving::DEFAULT_POLICIES.to_vec(),
         Some(p) => vec![Policy::parse(p)?],
     };
-    report::serving::generate_sweep(pm, arrays, &rates, &policies, duration_s, seed).print();
+    let rep =
+        report::serving::generate_sweep(pm, arrays, &rates, &policies, duration_s, seed, overlap);
+    rep.print();
+    if let Some(path) = json_out(args, "BENCH_serve.json") {
+        let doc = obj([("bench", "serve_sweep".into()), ("points", rep.data)]);
+        write_json(&path, &doc)?;
+    }
     Ok(())
 }
 
@@ -154,6 +194,9 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
         });
     }
 
+    if args.flag("overlap") && args.flag("no-overlap") {
+        return Err("--overlap and --no-overlap are mutually exclusive".into());
+    }
     let scfg = ServeConfig {
         n_arrays: arrays,
         policy,
@@ -162,6 +205,8 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
             max_wait_cy: (max_wait_us * 1e3 / cycle_ns) as u64,
         },
         pipeline: !args.flag("no-pipeline"),
+        overlap: !args.flag("no-overlap"),
+        stream_weights: args.flag("stream-weights"),
         seed,
         duration_s,
         deadline_cy: (deadline_ms * 1e6 / cycle_ns) as u64,
@@ -175,12 +220,75 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
         rep.total_served(),
         rep.total_dropped(),
         makespan_s * 1e3,
-        if makespan_s > 0.0 {
-            rep.total_served() as f64 / makespan_s
-        } else {
-            0.0
-        },
+        rep.inferences_per_s(),
     );
+    if let Some(path) = json_out(args, "BENCH_serve.json") {
+        write_json(&path, &rep.to_json())?;
+    }
+    Ok(())
+}
+
+/// `imcc scaleup`: the pool-size × batch sweep, or one point with
+/// `--arrays`/`--batch`; `--stream-weights` and `--json` apply to both.
+fn run_scaleup(args: &Args, pm: &PowerModel) -> Result<(), String> {
+    let pipeline = !args.flag("no-pipeline");
+    let stream = args.flag("stream-weights");
+    match (args.opt("arrays"), args.opt("batch")) {
+        (None, None) => {
+            let rep = report::scaleup::generate_sweep(
+                pm,
+                report::scaleup::DEFAULT_ARRAYS,
+                report::scaleup::DEFAULT_BATCHES,
+                pipeline,
+                stream,
+            );
+            rep.print();
+            if let Some(path) = json_out(args, "BENCH_scaleup.json") {
+                let doc = obj([("bench", "scaleup".into()), ("points", rep.data)]);
+                write_json(&path, &doc)?;
+            }
+        }
+        _ => {
+            let arrays: usize = args.opt_parse("arrays", 34usize);
+            let batch: usize = args.opt_parse("batch", 1usize);
+            let rep = report::scaleup::run_point(pm, arrays, batch, pipeline, stream)?;
+            let mode = match (rep.pipelined, stream) {
+                (true, true) => "pipelined, streamed",
+                (true, false) => "pipelined",
+                (false, true) => "strict, streamed",
+                (false, false) => "strict",
+            };
+            println!(
+                "scale-up: {} on {arrays} arrays, batch {batch} ({mode}) — \
+                 {} passes, {} cycles ({} reprogramming), {:.1} inf/s, \
+                 {:.2}x vs sequential, bottleneck `{}`",
+                rep.network,
+                rep.n_passes,
+                rep.cycles,
+                rep.reprogram_cycles,
+                rep.inferences_per_s(),
+                rep.speedup_vs_sequential(),
+                rep.bottleneck_layer
+            );
+            if let Some(path) = json_out(args, "BENCH_scaleup.json") {
+                let doc = obj([
+                    ("bench", "scaleup_point".into()),
+                    ("arrays", arrays.into()),
+                    ("batch", batch.into()),
+                    ("pipelined", rep.pipelined.into()),
+                    ("stream_weights", stream.into()),
+                    ("passes", rep.n_passes.into()),
+                    ("cycles", (rep.cycles as f64).into()),
+                    ("reprogram_cycles", (rep.reprogram_cycles as f64).into()),
+                    ("dma_cycles", (rep.dma_cycles as f64).into()),
+                    ("inf_per_s", rep.inferences_per_s().into()),
+                    ("speedup_vs_sequential", rep.speedup_vs_sequential().into()),
+                    ("bottleneck", rep.bottleneck_layer.clone().into()),
+                ]);
+                write_json(&path, &doc)?;
+            }
+        }
+    }
     Ok(())
 }
 
@@ -221,41 +329,12 @@ fn main() {
         "ablate" => report::ablations::generate(&pm).print(),
         "table1" => report::table1::generate(&pm).print(),
         "fig13" => report::fig13_models::generate(&pm).print(),
-        "scaleup" => match (args.opt("arrays"), args.opt("batch")) {
-            (None, None) => report::scaleup::generate_sweep(
-                &pm,
-                report::scaleup::DEFAULT_ARRAYS,
-                report::scaleup::DEFAULT_BATCHES,
-                !args.flag("no-pipeline"),
-            )
-            .print(),
-            _ => {
-                let arrays: usize = args.opt_parse("arrays", 34usize);
-                let batch: usize = args.opt_parse("batch", 1usize);
-                let pipeline = !args.flag("no-pipeline");
-                match report::scaleup::run_point(&pm, arrays, batch, pipeline) {
-                    Ok(rep) => {
-                        println!(
-                            "scale-up: {} on {arrays} arrays, batch {batch} ({}) — \
-                             {} passes, {} cycles ({} reprogramming), {:.1} inf/s, \
-                             {:.2}x vs sequential, bottleneck `{}`",
-                            rep.network,
-                            if rep.pipelined { "pipelined" } else { "strict" },
-                            rep.n_passes,
-                            rep.cycles,
-                            rep.reprogram_cycles,
-                            rep.inferences_per_s(),
-                            rep.speedup_vs_sequential(),
-                            rep.bottleneck_layer
-                        );
-                    }
-                    Err(e) => {
-                        eprintln!("scale-up failed: {e}");
-                        std::process::exit(1);
-                    }
-                }
+        "scaleup" => {
+            if let Err(e) = run_scaleup(&args, &pm) {
+                eprintln!("scale-up failed: {e}");
+                std::process::exit(1);
             }
-        },
+        }
         "serve" => {
             let run = if args.flag("sweep") {
                 run_serve_sweep(&args, &pm)

@@ -23,6 +23,7 @@ pub fn run_point(
     arrays: usize,
     batch: usize,
     pipeline: bool,
+    stream_weights: bool,
 ) -> Result<crate::coordinator::BatchReport, String> {
     let net = mobilenet_v2(224);
     let cfg = SystemConfig::scaled_up(arrays);
@@ -37,13 +38,14 @@ pub fn run_point(
         BatchConfig {
             batch,
             pipeline,
+            stream_weights,
             ..BatchConfig::default()
         },
     ))
 }
 
 pub fn generate(pm: &PowerModel) -> Report {
-    generate_sweep(pm, DEFAULT_ARRAYS, DEFAULT_BATCHES, true)
+    generate_sweep(pm, DEFAULT_ARRAYS, DEFAULT_BATCHES, true, false)
 }
 
 pub fn generate_sweep(
@@ -51,14 +53,18 @@ pub fn generate_sweep(
     arrays_list: &[usize],
     batches: &[usize],
     pipeline: bool,
+    stream_weights: bool,
 ) -> Report {
     let net = mobilenet_v2(224);
     let mut cache = PlanCache::new();
 
-    let title = format!(
-        "Scale-up — MobileNetV2 across pool sizes and batch depths ({})",
-        if pipeline { "pipelined" } else { "strict serving" }
-    );
+    let mode = match (pipeline, stream_weights) {
+        (true, true) => "pipelined, streamed",
+        (true, false) => "pipelined",
+        (false, true) => "strict serving, streamed",
+        (false, false) => "strict serving",
+    };
+    let title = format!("Scale-up — MobileNetV2 across pool sizes and batch depths ({mode})");
     let mut t = Table::new(
         &title,
         &[
@@ -100,6 +106,7 @@ pub fn generate_sweep(
                 BatchConfig {
                     batch,
                     pipeline,
+                    stream_weights,
                     ..BatchConfig::default()
                 },
             );
@@ -117,6 +124,7 @@ pub fn generate_sweep(
                 ("passes", rep.n_passes.into()),
                 ("occupancy", occ.into()),
                 ("batch", batch.into()),
+                ("stream_weights", stream_weights.into()),
                 ("inf_per_s", rep.inferences_per_s().into()),
                 ("speedup_vs_sequential", rep.speedup_vs_sequential().into()),
                 ("reprogram_cycles", (rep.reprogram_cycles as f64).into()),
@@ -145,8 +153,8 @@ mod tests {
     #[test]
     fn batching_improves_resident_throughput() {
         let pm = PowerModel::paper();
-        let b1 = run_point(&pm, 40, 1, true).unwrap();
-        let b4 = run_point(&pm, 40, 4, true).unwrap();
+        let b1 = run_point(&pm, 40, 1, true, false).unwrap();
+        let b4 = run_point(&pm, 40, 4, true, false).unwrap();
         assert_eq!(b1.n_passes, 1);
         assert!(
             b4.inferences_per_s() > b1.inferences_per_s(),
@@ -159,22 +167,32 @@ mod tests {
     #[test]
     fn staged_8_array_pool_completes_and_amortizes() {
         let pm = PowerModel::paper();
-        let b1 = run_point(&pm, 8, 1, true).unwrap();
-        let b4 = run_point(&pm, 8, 4, true).unwrap();
+        let b1 = run_point(&pm, 8, 1, true, false).unwrap();
+        let b4 = run_point(&pm, 8, 4, true, false).unwrap();
         assert!(b1.n_passes > 1);
         assert!(b1.reprogram_cycles > 0);
         // batch-major serving amortizes reprogramming across the batch
         assert!(b4.inferences_per_s() > b1.inferences_per_s());
         // and staged serving is far slower than resident serving (the
         // reprogramming tax is ~4x the inference itself at batch 1)
-        let resident = run_point(&pm, 40, 1, true).unwrap();
+        let resident = run_point(&pm, 40, 1, true, false).unwrap();
         assert!(resident.inferences_per_s() > 3.0 * b1.inferences_per_s());
+    }
+
+    #[test]
+    fn streamed_point_beats_blocking_staged() {
+        let pm = PowerModel::paper();
+        let block = run_point(&pm, 8, 4, true, false).unwrap();
+        let stream = run_point(&pm, 8, 4, true, true).unwrap();
+        assert!(stream.inferences_per_s() > block.inferences_per_s());
+        // the win is pure overlap: programming work is unchanged
+        assert_eq!(stream.reprogram_cycles, block.reprogram_cycles);
     }
 
     #[test]
     fn sweep_generates() {
         let pm = PowerModel::paper();
-        let r = generate_sweep(&pm, &[8, 40], &[1, 4], true);
+        let r = generate_sweep(&pm, &[8, 40], &[1, 4], true, false);
         let pts = r.data.as_arr().unwrap();
         assert_eq!(pts.len(), 4);
         // 40 arrays hold all of MNv2's conv weights: resident, one pass

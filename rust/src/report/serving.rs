@@ -24,7 +24,7 @@ pub const DEFAULT_RATES: &[f64] = &[25.0, 50.0, 100.0, 200.0];
 pub const DEFAULT_POLICIES: &[Policy] = &[Policy::Fifo, Policy::Wrr, Policy::Sjf];
 
 pub fn generate(pm: &PowerModel) -> Report {
-    generate_sweep(pm, 64, DEFAULT_RATES, DEFAULT_POLICIES, 0.25, DEFAULT_SEED)
+    generate_sweep(pm, 64, DEFAULT_RATES, DEFAULT_POLICIES, 0.25, DEFAULT_SEED, true)
 }
 
 pub fn generate_sweep(
@@ -34,10 +34,12 @@ pub fn generate_sweep(
     policies: &[Policy],
     duration_s: f64,
     seed: u64,
+    overlap: bool,
 ) -> Report {
     let title = format!(
         "Serving — latency percentiles vs offered load ({n_arrays} arrays, \
-         {duration_s} s Poisson horizon/model, seed {seed:#x})"
+         {duration_s} s Poisson horizon/model, seed {seed:#x}, {} dispatch)",
+        if overlap { "overlapped" } else { "serialized" }
     );
     let mut t = Table::new(
         &title,
@@ -56,6 +58,7 @@ pub fn generate_sweep(
             let scfg = ServeConfig {
                 n_arrays,
                 policy,
+                overlap,
                 seed,
                 duration_s,
                 ..ServeConfig::default()
@@ -105,6 +108,8 @@ pub fn generate_sweep(
                     ("p99_ms", ms(p99).into()),
                     ("peak_queue", s.peak_queue.into()),
                     ("utilization", util.into()),
+                    ("overlap", rep.overlap.into()),
+                    ("inf_per_s", rep.inferences_per_s().into()),
                 ]));
             }
         }
@@ -112,7 +117,8 @@ pub fn generate_sweep(
 
     let mut text = t.render();
     text.push_str(
-        "open-loop Poisson per model, both models weights-resident in one pool; \
+        "open-loop Poisson per model, both models weights-resident in one pool, \
+         per-resource overlapped dispatch (disjoint slices run concurrently); \
          latencies include queueing (p50/p95/p99 from the log histogram). \
          Past saturation FIFO couples the models, WRR shares the pool, SJF \
          shields the light model by starving the heavy one.\n",
@@ -132,7 +138,7 @@ mod tests {
     #[test]
     fn sweep_generates_all_points() {
         let pm = PowerModel::paper();
-        let r = generate_sweep(&pm, 64, &[50.0], &[Policy::Fifo, Policy::Sjf], 0.05, 0xAB);
+        let r = generate_sweep(&pm, 64, &[50.0], &[Policy::Fifo, Policy::Sjf], 0.05, 0xAB, true);
         let pts = r.data.as_arr().unwrap();
         // 2 policies × 1 rate × 2 models
         assert_eq!(pts.len(), 4);
@@ -146,7 +152,7 @@ mod tests {
     #[test]
     fn overload_inflates_the_tail() {
         let pm = PowerModel::paper();
-        let r = generate_sweep(&pm, 64, &[25.0, 800.0], &[Policy::Fifo], 0.05, 0xAB);
+        let r = generate_sweep(&pm, 64, &[25.0, 800.0], &[Policy::Fifo], 0.05, 0xAB, true);
         let pts = r.data.as_arr().unwrap();
         let p99_of = |rate: f64| -> f64 {
             pts.iter()

@@ -120,6 +120,28 @@ impl LogHistogram {
     }
 }
 
+/// One pool resource's share of a serving run — the per-resource
+/// utilization breakdown (cores, DW accelerator, IMA mux, DMA port, PCM
+/// programming port, the array aggregate, the busiest array). `units` is
+/// how many physical units the entry aggregates: utilization =
+/// busy / (units × makespan).
+#[derive(Clone, Debug)]
+pub struct ResourceUtil {
+    pub name: String,
+    pub busy_cycles: u64,
+    pub units: u64,
+}
+
+impl ResourceUtil {
+    pub fn new(name: &str, busy_cycles: u64, units: u64) -> ResourceUtil {
+        ResourceUtil {
+            name: name.to_string(),
+            busy_cycles,
+            units,
+        }
+    }
+}
+
 /// Per-model serving outcome, accumulated by the event loop.
 #[derive(Clone, Debug)]
 pub struct TenantStats {
@@ -136,9 +158,13 @@ pub struct TenantStats {
     pub batches: u64,
     /// End-to-end request latency (arrival → batch completion), cycles.
     pub latency: LogHistogram,
-    /// Deepest backlog observed at any dispatch decision.
+    /// Deepest backlog observed at this tenant's dispatch-candidate
+    /// instants, sampled before expired requests are dropped (backlog
+    /// only grows between a tenant's dispatches, so sampling there
+    /// captures the peak a waiting client would have seen).
     pub peak_queue: usize,
-    /// Cycles this tenant's batches held the pool.
+    /// Cycles this tenant's batches held their resources (sum of batch
+    /// makespans — overlapped batches each count in full).
     pub busy_cycles: u64,
     /// Energy of all served batches (work + reprogramming), joules.
     pub energy_j: f64,

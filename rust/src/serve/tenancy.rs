@@ -10,11 +10,14 @@
 //! inside its own slice and pays reprogramming + boundary DMA per batch,
 //! exactly as `coordinator::scheduler` charges it.
 //!
-//! Cross-tenant timing: batches serialize on the pool. The cluster's
-//! cores, the DW accelerator, and the IMA mux are shared single resources,
-//! so two tenants' batches cannot overlap without contending on them; the
-//! simulator models the pool as one batch-granular server and leaves
-//! finer-grained cross-tenant overlap as future work (ROADMAP).
+//! Cross-tenant timing: dispatch is per-resource. Every batch carries a
+//! reservation profile over the pool's explicit resources (each array of
+//! the tenant's slice, plus the shared cores, DW accelerator, IMA mux,
+//! and L2/DMA port — see `coordinator::timeline`), so two tenants on
+//! disjoint slices overlap up to their contention on the shared engines,
+//! while `overlap: false` restores the one-batch-in-flight pool of PR 2.
+//! The arbiter below only breaks ties between tenants dispatchable at the
+//! same instant.
 
 use std::rc::Rc;
 

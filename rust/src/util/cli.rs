@@ -56,6 +56,9 @@ impl Args {
                 | "sequential"
                 | "no-pipeline"
                 | "sweep"
+                | "overlap"
+                | "no-overlap"
+                | "stream-weights"
         )
     }
 
@@ -125,5 +128,20 @@ mod tests {
         assert_eq!(a.opt_parse("arrays", 0usize), 8);
         assert_eq!(a.opt_parse("batch", 0usize), 4);
         assert!(a.flag("no-pipeline"));
+    }
+
+    #[test]
+    fn overlap_and_json_flags_parse() {
+        // boolean overlap flags never swallow a following token; --json
+        // doubles as a flag (default filename) or a keyed option
+        let a = argv("serve --no-overlap --stream-weights --json out.json");
+        assert!(a.flag("no-overlap"));
+        assert!(a.flag("stream-weights"));
+        assert_eq!(a.opt("json"), Some("out.json"));
+        let b = argv("scaleup --stream-weights positional --json");
+        assert!(b.flag("stream-weights"));
+        assert_eq!(b.positional, vec!["positional"]);
+        assert!(b.flag("json"));
+        assert_eq!(b.opt("json"), None);
     }
 }

@@ -1,0 +1,168 @@
+//! Overlapped-dispatch regression tests (no artifacts needed).
+//!
+//! Pins the acceptance criteria of the per-resource contention model:
+//! two resident tenants on disjoint slices achieve an overlapped makespan
+//! strictly below the serialized sum; `--no-overlap` reproduces the PR 2
+//! serialized pool; a staged tenant with `--stream-weights` beats
+//! blocking reprogramming; and overlapped dispatch stays bit-identical
+//! across runs under a fixed seed.
+
+use imcc::arch::PowerModel;
+use imcc::net::bottleneck::bottleneck;
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::serve::{
+    mnv2_bottleneck_pair, simulate, BatchWindow, ModelTraffic, ServeConfig, TrafficModel,
+};
+
+/// `n_models` bottleneck tenants, each with `n_requests` arrivals at t=0.
+fn t0_fleet(n_models: usize, n_requests: usize) -> Vec<ModelTraffic> {
+    (0..n_models)
+        .map(|i| {
+            let mut net = bottleneck();
+            net.name = format!("bn-{i}");
+            ModelTraffic {
+                net,
+                traffic: TrafficModel::Trace {
+                    arrivals_cy: vec![0; n_requests],
+                },
+                weight: 1,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn disjoint_tenants_overlap_strictly_below_serialized_sum() {
+    // the acceptance scenario: two resident tenants on disjoint slices,
+    // one t=0 batch each — the overlapped makespan must be strictly
+    // below the serialized sum `--no-overlap` produces
+    let pm = PowerModel::paper();
+    let base = ServeConfig {
+        n_arrays: 16,
+        window: BatchWindow {
+            max_batch: 8,
+            max_wait_cy: 0,
+        },
+        duration_s: 0.01,
+        ..ServeConfig::default()
+    };
+    let models = t0_fleet(2, 8);
+    let on = simulate(&models, &base, &pm).unwrap();
+    let off = simulate(
+        &models,
+        &ServeConfig {
+            overlap: false,
+            ..base
+        },
+        &pm,
+    )
+    .unwrap();
+
+    // both tenants resident in disjoint slices, same work either way
+    assert!(on.tenants.iter().all(|t| t.n_passes == 1));
+    assert_eq!(on.total_served(), 16);
+    assert_eq!(off.total_served(), 16);
+    for (a, b) in on.tenants.iter().zip(off.tenants.iter()) {
+        assert_eq!(a.batches, b.batches, "{}", a.name);
+        assert_eq!(a.busy_cycles, b.busy_cycles, "{}", a.name);
+    }
+
+    // serialized mode is back-to-back: makespan = sum of batch makespans
+    let sum: u64 = off.tenants.iter().map(|t| t.busy_cycles).sum();
+    assert_eq!(off.makespan_cycles, sum, "serialized pool must not overlap");
+
+    // the headline: overlap strictly beats the serialized sum
+    assert!(
+        on.makespan_cycles < off.makespan_cycles,
+        "{} !< {}",
+        on.makespan_cycles,
+        off.makespan_cycles
+    );
+    // but never beats the slowest single batch
+    let slowest = on.tenants.iter().map(|t| t.busy_cycles).max().unwrap();
+    assert!(on.makespan_cycles >= slowest);
+    // and the pool-busy union stays inside the makespan
+    assert!(on.busy_cycles <= on.makespan_cycles);
+}
+
+#[test]
+fn no_overlap_is_the_serialized_pr2_pool() {
+    // under the default seed, `--no-overlap` keeps one batch in flight:
+    // the pool-busy union equals the plain sum of dispatched batch
+    // makespans, and the run is bit-identical across repeats
+    let pm = PowerModel::paper();
+    let scfg = ServeConfig {
+        overlap: false,
+        duration_s: 0.05,
+        ..ServeConfig::default()
+    };
+    let rep = simulate(&mnv2_bottleneck_pair(150.0), &scfg, &pm).unwrap();
+    let sum: u64 = rep.tenants.iter().map(|t| t.busy_cycles).sum();
+    assert_eq!(rep.busy_cycles, sum, "serialized batches never overlap");
+    assert!(rep.utilization() <= 1.0);
+    let again = simulate(&mnv2_bottleneck_pair(150.0), &scfg, &pm).unwrap();
+    assert_eq!(rep.render_table(), again.render_table());
+    assert_eq!(rep.makespan_cycles, again.makespan_cycles);
+}
+
+#[test]
+fn overlapped_tables_are_bit_identical_under_a_seed() {
+    let pm = PowerModel::paper();
+    let scfg = ServeConfig {
+        seed: 0x0DD5_EED5,
+        duration_s: 0.1,
+        ..ServeConfig::default()
+    };
+    let a = simulate(&mnv2_bottleneck_pair(200.0), &scfg, &pm).unwrap();
+    let b = simulate(&mnv2_bottleneck_pair(200.0), &scfg, &pm).unwrap();
+    assert!(a.overlap, "default dispatch is overlapped");
+    assert_eq!(a.render_table(), b.render_table());
+    assert_eq!(a.makespan_cycles, b.makespan_cycles);
+    assert_eq!(a.busy_cycles, b.busy_cycles);
+    for (x, y) in a.tenants.iter().zip(b.tenants.iter()) {
+        assert_eq!(x.latency.percentiles(), y.latency.percentiles());
+        assert_eq!((x.served, x.batches, x.dropped), (y.served, y.batches, y.dropped));
+    }
+}
+
+#[test]
+fn streamed_weights_beat_blocking_reprogramming_when_staged() {
+    // the acceptance scenario: a staged MobileNetV2 tenant drains the
+    // same backlog strictly faster with `--stream-weights`
+    let pm = PowerModel::paper();
+    let models = vec![ModelTraffic {
+        net: mobilenet_v2(224),
+        traffic: TrafficModel::Trace {
+            arrivals_cy: vec![0; 6],
+        },
+        weight: 1,
+    }];
+    let base = ServeConfig {
+        n_arrays: 8,
+        window: BatchWindow {
+            max_batch: 2,
+            max_wait_cy: 0,
+        },
+        duration_s: 0.01,
+        ..ServeConfig::default()
+    };
+    let block = simulate(&models, &base, &pm).unwrap();
+    let stream = simulate(
+        &models,
+        &ServeConfig {
+            stream_weights: true,
+            ..base
+        },
+        &pm,
+    )
+    .unwrap();
+    assert!(block.tenants[0].n_passes > 1, "8 arrays must stage MNv2");
+    assert_eq!(stream.total_served(), block.total_served());
+    assert_eq!(stream.tenants[0].batches, block.tenants[0].batches);
+    assert!(
+        stream.makespan_cycles < block.makespan_cycles,
+        "{} !< {}",
+        stream.makespan_cycles,
+        block.makespan_cycles
+    );
+}

@@ -1,0 +1,195 @@
+//! Property tests for the per-resource contention model (no artifacts
+//! needed).
+//!
+//! Conservation properties of reservation profiles and overlapped
+//! dispatch: per-resource busy time fits inside its envelope and the
+//! batch makespan; overlapped serving never exceeds the serialized sum
+//! (and strictly beats it whenever two tenants share a pool); streamed
+//! weight updates never lose to the blocking barrier; and strict mode
+//! (`overlap: false`, 1-wide window, no pipelining) stays bit-identical
+//! to the scheduler's honest sequential baseline on resident and staged
+//! tenants.
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::coordinator::timeline::RES_ARRAY0;
+use imcc::coordinator::{run_batched, BatchConfig, PlanCache, Strategy};
+use imcc::net::bottleneck::bottleneck;
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::serve::{simulate, BatchWindow, ModelTraffic, ServeConfig, TrafficModel};
+use imcc::util::prop;
+use imcc::util::rng::SplitMix64;
+
+#[test]
+fn batch_profile_conservation_on_random_configs() {
+    prop::check("batch_profile_conservation", 16, |rng: &mut SplitMix64| {
+        let pm = PowerModel::paper();
+        let staged = rng.below(2) == 1;
+        let net = if staged { mobilenet_v2(224) } else { bottleneck() };
+        let cfg = SystemConfig::scaled_up(8);
+        let mut cache = PlanCache::new();
+        let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+        let cfgb = BatchConfig {
+            batch: rng.range_i64(1, 7) as usize,
+            pipeline: rng.below(2) == 1,
+            charge_dma: true,
+            stream_weights: rng.below(2) == 1,
+        };
+        let rep = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, cfgb);
+
+        // per-resource busy ≤ envelope ≤ makespan
+        assert_eq!(rep.profile.len, rep.cycles);
+        assert!(!rep.profile.spans.is_empty());
+        for s in &rep.profile.spans {
+            assert!(s.first_use <= s.last_release, "res {}", s.res);
+            assert!(s.last_release <= rep.profile.len, "res {}", s.res);
+            assert!(s.busy <= s.last_release - s.first_use, "res {}", s.res);
+            if s.res >= RES_ARRAY0 {
+                assert!(s.res - RES_ARRAY0 < plan.n_arrays);
+            }
+        }
+        // never faster than one request, never slower than the honest
+        // sequential baseline
+        assert!(rep.cycles >= rep.per_request_cycles);
+        assert!(rep.cycles <= rep.sequential_cycles);
+
+        // streaming relaxes constraints only: same work, ≤ makespan
+        if cfgb.stream_weights {
+            let block = run_batched(
+                &net,
+                Strategy::ImaDw,
+                &cfg,
+                &pm,
+                &plan,
+                BatchConfig {
+                    stream_weights: false,
+                    ..cfgb
+                },
+            );
+            assert!(rep.cycles <= block.cycles);
+            assert_eq!(rep.reprogram_cycles, block.reprogram_cycles);
+            assert_eq!(rep.dma_cycles, block.dma_cycles);
+            assert_eq!(rep.sequential_cycles, block.sequential_cycles);
+        }
+    });
+}
+
+#[test]
+fn overlap_conservation_on_t0_backlogs() {
+    prop::check("overlap_conservation", 10, |rng: &mut SplitMix64| {
+        let pm = PowerModel::paper();
+        let n_models = rng.range_i64(1, 4) as usize;
+        let n_req = rng.range_i64(1, 13) as usize;
+        let max_batch = rng.range_i64(1, 7) as usize;
+        let pipeline = rng.below(2) == 1;
+        let models: Vec<ModelTraffic> = (0..n_models)
+            .map(|i| {
+                let mut net = bottleneck();
+                net.name = format!("bn-{i}");
+                ModelTraffic {
+                    net,
+                    traffic: TrafficModel::Trace {
+                        arrivals_cy: vec![0; n_req],
+                    },
+                    weight: 1,
+                }
+            })
+            .collect();
+        let base = ServeConfig {
+            n_arrays: 8 * n_models,
+            window: BatchWindow {
+                max_batch,
+                max_wait_cy: 0,
+            },
+            pipeline,
+            duration_s: 0.01,
+            ..ServeConfig::default()
+        };
+        let on = simulate(&models, &base, &pm).unwrap();
+        let off = simulate(
+            &models,
+            &ServeConfig {
+                overlap: false,
+                ..base
+            },
+            &pm,
+        )
+        .unwrap();
+
+        // identical work either way
+        assert_eq!(on.total_served(), (n_models * n_req) as u64);
+        assert_eq!(off.total_served(), on.total_served());
+
+        // the serialized pool is back-to-back: makespan = batch-span sum;
+        // overlapped makespan ≤ that sum, strictly < with several tenants
+        let sum: u64 = off.tenants.iter().map(|t| t.busy_cycles).sum();
+        assert_eq!(off.makespan_cycles, sum);
+        assert!(
+            on.makespan_cycles <= off.makespan_cycles,
+            "n_models {n_models} n_req {n_req} max_batch {max_batch}"
+        );
+        if n_models > 1 {
+            assert!(on.makespan_cycles < off.makespan_cycles);
+        }
+
+        // conservation: busy union and every per-resource busy fit the
+        // makespan
+        assert!(on.busy_cycles <= on.makespan_cycles);
+        for r in &on.resource_busy {
+            let u = on.resource_utilization(r);
+            assert!((0.0..=1.0).contains(&u), "{} at {u}", r.name);
+        }
+    });
+}
+
+#[test]
+fn strict_mode_equals_sequential_baseline_on_random_backlogs() {
+    // `--no-overlap` + 1-wide window + no pipelining is the PR 2
+    // serialized baseline, bit-identical on resident and staged tenants
+    prop::check("strict_serialized_baseline", 8, |rng: &mut SplitMix64| {
+        let pm = PowerModel::paper();
+        let n = rng.range_i64(1, 7) as usize;
+        let staged = rng.below(2) == 1;
+        let net = if staged { mobilenet_v2(224) } else { bottleneck() };
+        let models = vec![ModelTraffic {
+            net: net.clone(),
+            traffic: TrafficModel::Trace {
+                arrivals_cy: vec![0; n],
+            },
+            weight: 1,
+        }];
+        let scfg = ServeConfig {
+            n_arrays: 8,
+            window: BatchWindow {
+                max_batch: 1,
+                max_wait_cy: 0,
+            },
+            pipeline: false,
+            overlap: false,
+            duration_s: 0.01,
+            ..ServeConfig::default()
+        };
+        let rep = simulate(&models, &scfg, &pm).unwrap();
+        assert_eq!(rep.tenants[0].served, n as u64);
+
+        let cfg = SystemConfig::scaled_up(8);
+        let mut cache = PlanCache::new();
+        let plan = cache.get_or_place(&net, 256, 8, false).unwrap();
+        let strict = run_batched(
+            &net,
+            Strategy::ImaDw,
+            &cfg,
+            &pm,
+            &plan,
+            BatchConfig {
+                batch: n,
+                pipeline: false,
+                ..BatchConfig::default()
+            },
+        );
+        assert_eq!(
+            rep.makespan_cycles,
+            strict.sequential_cycles,
+            "staged {staged}, n {n}"
+        );
+    });
+}

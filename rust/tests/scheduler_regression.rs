@@ -116,6 +116,7 @@ fn staged_totals_grow_by_modeled_boundary_dma() {
                 batch: b,
                 pipeline: true,
                 charge_dma: false,
+                ..BatchConfig::default()
             },
         );
         let expected = per_request * b as u64;

@@ -3,8 +3,11 @@
 //! Pins the contract points of the event-driven multi-model simulator:
 //! seeded-trace determinism (the percentile table is bit-identical under a
 //! fixed seed), strict-mode equivalence (one model through a 1-wide window
-//! equals the scheduler's sequential baseline exactly), and arbitration
-//! fairness/starvation properties under two tenants.
+//! with `overlap: false` equals the scheduler's sequential baseline
+//! exactly — the PR 2 serialized pool), and arbitration
+//! fairness/starvation properties under two tenants (run serialized,
+//! where the arbiter fully decides the order). Overlapped-dispatch
+//! regressions live in `tests/overlap_regression.rs`.
 
 use imcc::arch::{PowerModel, SystemConfig};
 use imcc::coordinator::{run_batched, BatchConfig, PlanCache, Strategy};
@@ -74,6 +77,7 @@ fn strict_window_equals_sequential_baseline_resident() {
             max_wait_cy: 0,
         },
         pipeline: false,
+        overlap: false,
         duration_s: 0.01,
         ..ServeConfig::default()
     };
@@ -93,7 +97,7 @@ fn strict_window_equals_sequential_baseline_resident() {
         BatchConfig {
             batch: n,
             pipeline: false,
-            charge_dma: true,
+            ..BatchConfig::default()
         },
     );
     assert_eq!(rep.makespan_cycles, strict.cycles, "served totals must be bit-identical");
@@ -122,6 +126,7 @@ fn strict_window_equals_sequential_baseline_staged() {
             max_wait_cy: 0,
         },
         pipeline: false,
+        overlap: false,
         duration_s: 0.01,
         ..ServeConfig::default()
     };
@@ -141,7 +146,7 @@ fn strict_window_equals_sequential_baseline_staged() {
         BatchConfig {
             batch: n,
             pipeline: false,
-            charge_dma: true,
+            ..BatchConfig::default()
         },
     );
     // batch-major strict serving amortizes reprogramming, one-at-a-time
@@ -179,6 +184,7 @@ fn wrr_equal_weights_alternate_batches_under_backlog() {
                 max_batch,
                 max_wait_cy: 50_000,
             },
+            overlap: false, // serialized: the arbiter fully orders batches
             duration_s: 0.05,
             ..ServeConfig::default()
         };
@@ -218,6 +224,7 @@ fn wrr_weights_bias_latency_toward_the_heavier_tenant() {
     let scfg = ServeConfig {
         n_arrays: 16,
         policy: Policy::Wrr,
+        overlap: false, // serialized: the arbiter fully orders batches
         duration_s: 0.05,
         ..ServeConfig::default()
     };
@@ -243,6 +250,7 @@ fn sjf_shields_the_light_model_fifo_couples_them() {
         let scfg = ServeConfig {
             policy,
             seed: 0xBEEF,
+            overlap: false, // serialized: policy fully decides the order
             duration_s: 0.05,
             ..ServeConfig::default()
         };
