@@ -69,9 +69,14 @@ fn main() {
     }
 
     println!("\ntwo-tenant dispatch, 0.1 s @ 150 req/s/model:");
-    for (label, overlap) in [("overlapped", true), ("serialized", false)] {
+    for (label, overlap, backfill) in [
+        ("backfilled", true, true),
+        ("envelope", true, false),
+        ("serialized", false, false),
+    ] {
         let scfg = ServeConfig {
             overlap,
+            backfill,
             duration_s: 0.1,
             ..ServeConfig::default()
         };
@@ -82,6 +87,26 @@ fn main() {
             rep.inferences_per_s(),
             rep.utilization() * 100.0
         );
+    }
+
+    // backfilling pays off where envelopes leave gaps: high offered load
+    println!("\nbackfilled vs envelope makespan, 2 tenants, 0.05 s:");
+    for &rate in &[300.0, 600.0, 1200.0] {
+        let mut row = format!("  {rate:>6.0} req/s:");
+        for (label, backfill) in [("envelope", false), ("backfilled", true)] {
+            let scfg = ServeConfig {
+                backfill,
+                duration_s: 0.05,
+                ..ServeConfig::default()
+            };
+            let rep = simulate(&models(rate), &scfg, &pm).unwrap();
+            row.push_str(&format!(
+                " {label} {:>8.2} ms ({:>6.1} inf/s)",
+                rep.makespan_cycles as f64 * rep.cycle_ns * 1e-6,
+                rep.inferences_per_s()
+            ));
+        }
+        println!("{row}");
     }
 
     println!("\nstaged MobileNetV2 tenant (8 arrays), 0.05 s @ 20 req/s:");

@@ -64,6 +64,7 @@ impl<'a> Executor<'a> {
                 macs: l.macs(),
                 ops: l.ops(),
                 devices: 0,
+                cores_used: c.cores,
             },
             c.energy,
         )
@@ -91,6 +92,10 @@ impl<'a> Executor<'a> {
                 macs: l.macs(),
                 ops: l.ops(),
                 devices: map.devices_total(),
+                // ancillary accumulation/requant rides inside the IMA
+                // layer's serial cycles; the resource model charges the
+                // arrays, not the cores (pre-existing simplification)
+                cores_used: 0,
             },
             cost.energy,
         )
@@ -109,6 +114,7 @@ impl<'a> Executor<'a> {
                 macs: l.macs(),
                 ops: l.ops(),
                 devices: map.devices_total(),
+                cores_used: 0,
             },
             cost.energy,
         )
@@ -135,6 +141,8 @@ impl<'a> Executor<'a> {
                 macs: l.macs(),
                 ops: l.ops(),
                 devices: 0,
+                // sequential sections: reserve the widest one
+                cores_used: m_in.cores.max(dw.cores).max(m_out.cores),
             },
             energy,
         )
@@ -151,6 +159,7 @@ impl<'a> Executor<'a> {
                 macs: l.macs(),
                 ops: l.ops(),
                 devices: 0,
+                cores_used: 0,
             },
             c.energy,
         )

@@ -16,6 +16,10 @@ pub struct LayerReport {
     pub ops: u64,
     /// PCM devices this layer occupies (0 when not IMA-mapped).
     pub devices: usize,
+    /// Cores the layer's parallel section engages (0 when the layer does
+    /// not run on the core complex) — the batch scheduler reserves the
+    /// per-core resource prefix `core0..cores_used`.
+    pub cores_used: usize,
 }
 
 /// Whole-run outcome for one (network, strategy) pair.
@@ -115,6 +119,7 @@ mod tests {
             macs: 1000,
             ops: 2000,
             devices: 0,
+            cores_used: 0,
         }
     }
 

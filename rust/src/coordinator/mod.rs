@@ -16,8 +16,10 @@
 //! the multi-array pool (requests pipelined over disjoint layer resources,
 //! double-buffered activations), [`plan_cache`] memoizes TILE&PACK
 //! placements so repeated inferences skip allocation entirely, and
-//! [`timeline`] names the pool's contended resources — every batch emits a
-//! per-resource reservation profile the serving arbiter schedules against.
+//! [`timeline`] names the pool's contended resources (each core, the DW
+//! accelerator, the IMA mux, the DMA and PCM-programming ports, every
+//! array) — every batch emits a per-resource busy-interval profile the
+//! serving arbiter intersects (and backfills) against its pool timeline.
 
 pub mod executor;
 pub mod l1_planner;
@@ -31,7 +33,7 @@ pub use l1_planner::{plan as l1_plan, L1Plan};
 pub use metrics::{LayerReport, RunReport};
 pub use plan_cache::{PlanCache, PlanKey};
 pub use scheduler::{run_batched, BatchConfig, BatchReport};
-pub use timeline::{ReservationProfile, ResourceSpan, ResourceTimeline};
+pub use timeline::{IntervalSet, ResMap, ReservationProfile, ResourceSpan, ResourceTimeline};
 
 /// The four computation mappings of Fig. 9 (+ Fig. 13's taxonomy).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

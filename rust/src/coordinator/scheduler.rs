@@ -12,7 +12,11 @@
 //! * each pool array is a resource — conv layers occupy exactly the arrays
 //!   TILE&PACK placed their tiles on (two layers sharing an array cannot
 //!   overlap, which the schedule enforces by construction);
-//! * the DW accelerator and the core complex are single resources;
+//! * the DW accelerator is a single resource; the core complex is eight
+//!   per-core resources — a core-mapped layer occupies the prefix
+//!   `core0..cores_used` its parallel section engages (every core layer
+//!   includes core 0, so core layers still serialize pairwise exactly as
+//!   a fused complex would, and the schedule is unchanged);
 //! * IMA-mapped layers without a placement (e.g. dw-on-IMA under the
 //!   `IMA_cjob` strategies) serialize on one shared virtual IMA resource;
 //! * activations between consecutive layers are double-buffered: layer k
@@ -39,10 +43,11 @@
 //!
 //! Two extensions ride on the same resource machinery:
 //!
-//! * every batch now emits a [`ReservationProfile`] — per resource, the
-//!   offsets of first occupancy and final release plus busy cycles — so
-//!   the serving arbiter can overlap batches of different tenants whose
-//!   resource envelopes are disjoint (see [`super::timeline`]);
+//! * every batch emits a [`ReservationProfile`] — per resource, the merged
+//!   busy intervals (plus the first-use/last-release envelope summary) —
+//!   so the serving arbiter can overlap batches of different tenants and
+//!   backfill later batches into committed idle gaps (see
+//!   [`super::timeline`]);
 //! * with [`BatchConfig::stream_weights`] set, staged plans *stream* their
 //!   PCM updates: pass k+1's program-and-verify runs array by array on the
 //!   single programming port, each array starting the moment pass k's
@@ -62,8 +67,8 @@ use crate::sim::dma::DmaModel;
 use crate::tilepack::StagedPlacement;
 
 use super::timeline::{
-    ProfileBuilder, ReservationProfile, RES_ARRAY0, RES_CORES, RES_DMA, RES_DWACC, RES_IMA_MUX,
-    RES_PROG,
+    ProfileBuilder, ReservationProfile, N_CORES, RES_ARRAY0, RES_CORE0, RES_DMA, RES_DWACC,
+    RES_IMA_MUX, RES_PROG,
 };
 use super::{Engine, Executor, Strategy};
 
@@ -127,9 +132,10 @@ pub struct BatchReport {
     pub sequential_cycles: u64,
     /// Name of the layer whose resources bound the pipeline.
     pub bottleneck_layer: String,
-    /// Per-resource reservation envelope of this batch (offsets relative
-    /// to dispatch; array ids are plan-local) — what the serving arbiter
-    /// reserves on its pool timeline.
+    /// Per-resource reservation profile of this batch — merged busy
+    /// intervals plus the envelope summary (offsets relative to dispatch;
+    /// array/core ids are plan-local) — what the serving arbiter
+    /// intersects against its pool timeline.
     pub profile: ReservationProfile,
 }
 
@@ -177,33 +183,40 @@ pub fn run_batched(
     let ex = Executor::new(cfg, pm, strategy);
     let pool = ImaArrayPool::new(cfg, pm);
 
-    // per-layer (cycles, energy, engine), computed once — requests are
-    // identical and the engine choice feeds the resource mapping
-    let costs: Vec<(u64, EnergyAccount, Engine)> = net
+    // per-layer (cycles, energy, engine, cores engaged), computed once —
+    // requests are identical and the engine choice feeds the resource
+    // mapping
+    let costs: Vec<(u64, EnergyAccount, Engine, usize)> = net
         .layers
         .iter()
         .map(|l| {
             let (rep, acc) = ex.layer(l);
-            (rep.cycles, acc, rep.engine)
+            (rep.cycles, acc, rep.engine, rep.cores_used)
         })
         .collect();
-    let per_request_cycles: u64 = costs.iter().map(|(cy, _, _)| *cy).sum();
+    let per_request_cycles: u64 = costs.iter().map(|(cy, _, _, _)| *cy).sum();
     let per_request_energy: f64 = {
         let mut acc = EnergyAccount::default();
-        for (_, e, _) in &costs {
+        for (_, e, _, _) in &costs {
             acc.add(e);
         }
         acc.total_j(pm, cfg)
     };
 
-    // resources each layer occupies (within its pass)
+    // resources each layer occupies (within its pass); core layers hold
+    // the per-core prefix their parallel section engages — every core
+    // layer includes core 0, so the intra-batch schedule is identical to
+    // the fused-complex model
     let layer_resources = |pass: &crate::tilepack::PoolPlacement,
                            range: (usize, usize)|
      -> Vec<Vec<usize>> {
         let mut out = Vec::new();
         for li in range.0..range.1 {
             let res = match costs[li].2 {
-                Engine::Cores => vec![RES_CORES],
+                Engine::Cores => {
+                    let k = costs[li].3.clamp(1, N_CORES);
+                    (0..k).map(|c| RES_CORE0 + c).collect()
+                }
                 Engine::DwAcc => vec![RES_DWACC],
                 Engine::Ima => {
                     let arrays = &pass.layer_arrays[li];
@@ -519,9 +532,10 @@ mod tests {
     }
 
     #[test]
-    fn profile_envelopes_are_consistent() {
-        // resident plan: spans stay inside the makespan, busy fits the
-        // envelope, and no DMA resource appears
+    fn profile_intervals_are_consistent() {
+        // resident plan: spans stay inside the makespan, interval sets are
+        // canonical and account exactly for the busy cycles, and no DMA
+        // resource appears
         let (cfg, pm) = setup();
         let net = bottleneck();
         let mut cache = PlanCache::new();
@@ -550,11 +564,31 @@ mod tests {
                 prof.len
             );
             assert!(s.busy <= s.last_release - s.first_use);
+            // interval lists are sorted, disjoint, non-adjacent, bracket
+            // the envelope, and sum exactly to the busy cycles
+            assert!(!s.intervals.is_empty());
+            for w in s.intervals.windows(2) {
+                assert!(w[0].1 < w[1].0, "res {}: {:?}", s.res, s.intervals);
+            }
+            assert_eq!(s.intervals.first().unwrap().0, s.first_use);
+            assert_eq!(s.intervals.last().unwrap().1, s.last_release);
+            let total: u64 = s.intervals.iter().map(|&(a, b)| b - a).sum();
+            assert_eq!(total, s.busy, "res {}", s.res);
         }
         assert!(prof.span(RES_DMA).is_none(), "resident plans never touch L2");
         assert!(prof.span(RES_PROG).is_none(), "resident plans never reprogram");
-        assert!(prof.span(RES_CORES).is_some());
         assert!(prof.span(RES_DWACC).is_some());
+        // the residual/pool sections engage the whole complex: all eight
+        // per-core resources appear, and core 0 dominates every other
+        // core's envelope (the fused-complex equivalence precondition)
+        let c0 = prof.span(RES_CORE0).expect("core layers reserve core 0");
+        for c in 1..N_CORES {
+            if let Some(s) = prof.span(RES_CORE0 + c) {
+                assert!(s.first_use >= c0.first_use, "core{c}");
+                assert!(s.last_release <= c0.last_release, "core{c}");
+            }
+        }
+        assert!(prof.span(RES_CORE0 + 7).is_some(), "bottleneck adds fill 8 cores");
     }
 
     #[test]

@@ -1,62 +1,77 @@
-//! Per-resource busy timelines: the contention vocabulary shared by the
-//! batch scheduler and the serving arbiter.
+//! Per-resource busy **interval timelines**: the contention vocabulary
+//! shared by the batch scheduler and the serving arbiter.
 //!
-//! PR 2's serving loop modeled the whole pool as one opaque server — a
-//! dispatched batch held "the pool" for its full makespan, so two tenants
-//! on *disjoint* array slices could never overlap, and a staged tenant's
-//! PCM reprogramming stalled everyone. This module replaces that scalar
-//! clock with explicit resources:
+//! PR 2's serving loop modeled the whole pool as one opaque server; PR 3
+//! replaced that with explicit resources, but reserved each batch as one
+//! conservative busy *envelope* per resource (first use → last release),
+//! so a later batch could never slot into an earlier batch's idle gaps.
+//! This module keeps the full story: every resource's occupancy is a
+//! sorted, merged set of `[start, end)` busy intervals ([`IntervalSet`]),
+//! and the pool timeline can *backfill* — place a batch into the idle
+//! gaps of already-committed batches whenever every busy interval of its
+//! profile fits.
 //!
-//! * the 8-core complex ([`RES_CORES`]),
-//! * the depth-wise accelerator ([`RES_DWACC`]),
+//! The resources:
+//!
+//! * each RISC-V core of the 8-core complex ([`RES_CORE0`]` + c`) — a
+//!   core-mapped layer occupies the prefix `core0..coresₖ` its parallel
+//!   section engages, so small ancillary layers of different tenants can
+//!   share the complex (the serving arbiter rotates each tenant's core
+//!   affinity, see [`ResMap`]);
+//! * the depth-wise accelerator ([`RES_DWACC`]);
 //! * the shared IMA mux that serializes IMA jobs without a pool placement
-//!   ([`RES_IMA_MUX`]),
+//!   ([`RES_IMA_MUX`]);
 //! * the L2/DMA port that carries staged cut-boundary activations
-//!   ([`RES_DMA`]),
+//!   ([`RES_DMA`]);
 //! * the PCM program-and-verify port that serializes all reprogramming
-//!   ([`RES_PROG`]),
+//!   ([`RES_PROG`]);
 //! * and every crossbar array as its own resource ([`RES_ARRAY0`]` + i`).
 //!
-//! [`run_batched`](super::scheduler::run_batched) already schedules over
-//! these resources internally; what it now *emits* is a
-//! [`ReservationProfile`] — for each resource the batch touches, the
-//! offsets (relative to batch start) of its first occupancy and final
-//! release, plus the cycles actually held. The serving loop keeps one
-//! [`ResourceTimeline`] of scalar next-free times over the whole pool and
-//! dispatches a tenant's batch at the earliest instant every required
-//! resource is free — so tenants on disjoint slices genuinely overlap
-//! while contended shared resources (cores, DW accelerator, mux, DMA)
-//! still serialize correctly.
+//! [`run_batched`](super::scheduler::run_batched) emits a
+//! [`ReservationProfile`]: for each resource the batch touches, the merged
+//! busy intervals (offsets relative to batch start) plus the envelope
+//! summary (`first_use`/`last_release`/`busy`). The serving loop keeps one
+//! [`ResourceTimeline`] over the whole pool and dispatches a tenant's
+//! batch at the earliest instant its profile fits:
 //!
-//! The envelope model is deliberately conservative: within a batch a
-//! resource is considered held from its first use to its last release, so
-//! a later batch may not backfill into idle gaps of an earlier batch's
-//! envelope. That keeps the timeline a scalar per resource (exact event
-//! jumps, no interval sets) and makes overlap claims safe: the reported
-//! makespan is an upper bound on what a cleverer arbiter could do, and is
-//! still strictly below the serialized sum whenever envelopes are
-//! disjoint.
+//! * in **backfill** mode ([`ResourceTimeline::backfilling`]) the search
+//!   is an interval intersection — a batch may start while an earlier
+//!   batch is still draining, as long as none of their busy intervals on
+//!   any shared resource overlap;
+//! * in **envelope** mode ([`ResourceTimeline::envelope`]) the search
+//!   reproduces the PR 3 scalar next-free-time model bit-identically
+//!   (`--no-backfill` in the serving CLI): each resource is considered
+//!   held from its first use to its last release, which makes the
+//!   reported makespan an upper bound on what the backfilling arbiter
+//!   achieves — the conservation the regression and property suites pin
+//!   (`tests/backfill_regression.rs`, `tests/prop_backfill.rs`).
+//!
+//! Committed intervals are never pruned: a serving run holds the full
+//! occupancy history (the per-resource utilization breakdown reads it),
+//! and the gap search stays `O(log n)` per probe via binary search.
 
 use std::collections::BTreeMap;
 
-/// The RISC-V core complex (one shared resource).
-pub const RES_CORES: usize = 0;
+/// Cores in the complex; core `c` is resource `RES_CORE0 + c`.
+pub const N_CORES: usize = 8;
+/// First per-core resource (the complex is eight resources, not one).
+pub const RES_CORE0: usize = 0;
 /// The depth-wise accelerator.
-pub const RES_DWACC: usize = 1;
+pub const RES_DWACC: usize = 8;
 /// Shared IMA mux: serializes IMA jobs that have no pool placement.
-pub const RES_IMA_MUX: usize = 2;
+pub const RES_IMA_MUX: usize = 9;
 /// The cluster L2/DMA port (staged cut-boundary spills/refills).
-pub const RES_DMA: usize = 3;
+pub const RES_DMA: usize = 10;
 /// The PCM program-and-verify port: all reprogramming — within a batch
 /// and across tenants — serializes here.
-pub const RES_PROG: usize = 4;
+pub const RES_PROG: usize = 11;
 /// First crossbar array; array `i` is resource `RES_ARRAY0 + i`.
-pub const RES_ARRAY0: usize = 5;
+pub const RES_ARRAY0: usize = 12;
 
 /// Human-readable name of a resource id (pool-absolute array indices).
 pub fn res_label(res: usize) -> String {
     match res {
-        RES_CORES => "cores".into(),
+        c if c < N_CORES => format!("core{c}"),
         RES_DWACC => "dw_acc".into(),
         RES_IMA_MUX => "ima_mux".into(),
         RES_DMA => "dma".into(),
@@ -65,12 +80,109 @@ pub fn res_label(res: usize) -> String {
     }
 }
 
-/// One resource's envelope within a scheduled batch. All offsets are
+/// A sorted, merged, non-adjacent set of `[start, end)` busy intervals —
+/// the canonical representation every profile span and committed timeline
+/// carries. Inserting an interval merges it with any overlapping or
+/// adjacent neighbors, so the invariants (sorted, pairwise disjoint,
+/// non-adjacent, non-empty) hold by construction.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct IntervalSet {
+    ivs: Vec<(u64, u64)>,
+}
+
+impl IntervalSet {
+    pub fn new() -> IntervalSet {
+        IntervalSet::default()
+    }
+
+    /// The canonical interval list.
+    pub fn as_slice(&self) -> &[(u64, u64)] {
+        &self.ivs
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ivs.is_empty()
+    }
+
+    /// Total covered time (sum of interval lengths).
+    pub fn total(&self) -> u64 {
+        self.ivs.iter().map(|&(a, b)| b - a).sum()
+    }
+
+    /// First covered instant (0 when empty).
+    pub fn start(&self) -> u64 {
+        self.ivs.first().map_or(0, |&(a, _)| a)
+    }
+
+    /// One past the last covered instant (0 when empty).
+    pub fn end(&self) -> u64 {
+        self.ivs.last().map_or(0, |&(_, b)| b)
+    }
+
+    /// Does `[start, end)` intersect any stored interval?
+    pub fn overlaps(&self, start: u64, end: u64) -> bool {
+        self.first_conflict_end(start, end).is_some()
+    }
+
+    /// End of the earliest stored interval intersecting `[start, end)` —
+    /// the instant a conflicting probe must be pushed past.
+    pub fn first_conflict_end(&self, start: u64, end: u64) -> Option<u64> {
+        if start >= end {
+            return None;
+        }
+        let i = self.ivs.partition_point(|&(_, b)| b <= start);
+        let &(a, b) = self.ivs.get(i)?;
+        if a < end {
+            Some(b)
+        } else {
+            None
+        }
+    }
+
+    /// Insert `[start, end)`, merging overlapping or adjacent intervals
+    /// (empty intervals are ignored).
+    pub fn insert(&mut self, start: u64, end: u64) {
+        if start >= end {
+            return;
+        }
+        // lo: first interval whose end touches `start`; hi: one past the
+        // last interval whose start touches `end` — everything in
+        // `lo..hi` fuses with the newcomer
+        let lo = self.ivs.partition_point(|&(_, b)| b < start);
+        let hi = self.ivs.partition_point(|&(a, _)| a <= end);
+        if lo == hi {
+            self.ivs.insert(lo, (start, end));
+            return;
+        }
+        let s = start.min(self.ivs[lo].0);
+        let e = end.max(self.ivs[hi - 1].1);
+        self.ivs.splice(lo..hi, std::iter::once((s, e)));
+    }
+
+    /// Panic unless the canonical invariants hold: entries non-empty,
+    /// sorted, pairwise disjoint, and non-adjacent (used by the property
+    /// suite; `insert` maintains them by construction).
+    pub fn check_invariants(&self) {
+        for &(a, b) in &self.ivs {
+            assert!(a < b, "empty interval in {:?}", self.ivs);
+        }
+        for w in self.ivs.windows(2) {
+            assert!(
+                w[0].1 < w[1].0,
+                "intervals must stay sorted, disjoint and non-adjacent: {:?}",
+                self.ivs
+            );
+        }
+    }
+}
+
+/// One resource's occupancy within a scheduled batch. All offsets are
 /// cycles relative to the batch's start instant.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ResourceSpan {
     /// Resource id (`RES_*`; arrays are plan-local, i.e. relative to the
-    /// tenant's slice base).
+    /// tenant's slice base; cores are logical, relative to the tenant's
+    /// core affinity).
     pub res: usize,
     /// Offset of the first cycle the batch occupies this resource.
     pub first_use: u64,
@@ -78,6 +190,10 @@ pub struct ResourceSpan {
     pub last_release: u64,
     /// Cycles the resource is actually held (≤ `last_release - first_use`).
     pub busy: u64,
+    /// The merged busy intervals themselves, sorted and non-adjacent —
+    /// `first_use`/`last_release` bracket them and `busy` is their total.
+    /// This is what the backfilling arbiter intersects against the pool.
+    pub intervals: Vec<(u64, u64)>,
 }
 
 /// The per-resource reservation profile of one scheduled batch: which
@@ -104,11 +220,13 @@ impl ReservationProfile {
 }
 
 /// Accumulates per-resource occupancy while a schedule is being built,
-/// then freezes into a [`ReservationProfile`].
+/// then freezes into a [`ReservationProfile`]. Occupancies of one
+/// resource must not overlap each other (the scheduler serializes every
+/// resource internally); adjacent occupancies merge into one interval.
 #[derive(Debug, Default)]
 pub struct ProfileBuilder {
-    /// res → (first_use, last_release, busy)
-    spans: BTreeMap<usize, (u64, u64, u64)>,
+    /// res → (busy intervals, accumulated busy cycles)
+    spans: BTreeMap<usize, (IntervalSet, u64)>,
 }
 
 impl ProfileBuilder {
@@ -119,10 +237,9 @@ impl ProfileBuilder {
     /// Record that `res` is held over `[start, finish)`.
     pub fn occupy(&mut self, res: usize, start: u64, finish: u64) {
         debug_assert!(finish >= start);
-        let e = self.spans.entry(res).or_insert((start, finish, 0));
-        e.0 = e.0.min(start);
-        e.1 = e.1.max(finish);
-        e.2 += finish - start;
+        let e = self.spans.entry(res).or_default();
+        e.0.insert(start, finish);
+        e.1 += finish - start;
     }
 
     /// Freeze into a profile with batch makespan `len`.
@@ -131,11 +248,12 @@ impl ProfileBuilder {
             spans: self
                 .spans
                 .into_iter()
-                .map(|(res, (first_use, last_release, busy))| ResourceSpan {
+                .map(|(res, (set, busy))| ResourceSpan {
                     res,
-                    first_use,
-                    last_release,
+                    first_use: set.start(),
+                    last_release: set.end(),
                     busy,
+                    intervals: set.ivs,
                 })
                 .collect(),
             len,
@@ -143,31 +261,89 @@ impl ProfileBuilder {
     }
 }
 
-/// Scalar next-free times over every resource of one pool, plus cumulative
-/// busy cycles for the utilization breakdown. Array ids are pool-absolute;
-/// profiles carry slice-local array ids, so every operation takes the
-/// tenant's `array_base` and relocates `RES_ARRAY0 + a` to
-/// `RES_ARRAY0 + array_base + a` (shared resources map to themselves).
-#[derive(Clone, Debug, Default)]
-pub struct ResourceTimeline {
-    free: BTreeMap<usize, u64>,
-    busy: BTreeMap<usize, u64>,
+/// Relocation of a profile's slice-local resource ids onto the pool:
+/// arrays shift by `array_base` (a tenant's slice starts there), per-core
+/// resources rotate by `core_base` modulo [`N_CORES`] (so tenants whose
+/// small core sections engage fewer than eight cores land on disjoint
+/// physical cores), and the shared engines map to themselves. The
+/// envelope arbiter always uses `core_base = 0` — rotation is a backfill
+/// refinement, and with every core engaged it is a no-op permutation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResMap {
+    pub array_base: usize,
+    pub core_base: usize,
 }
 
-impl ResourceTimeline {
-    pub fn new() -> ResourceTimeline {
-        ResourceTimeline::default()
+impl ResMap {
+    /// Array relocation only (core affinity 0) — the PR 3 mapping.
+    pub fn arrays(array_base: usize) -> ResMap {
+        ResMap { array_base, core_base: 0 }
     }
 
-    fn map_res(res: usize, array_base: usize) -> usize {
+    /// Pool-absolute resource id for a profile-local one.
+    pub fn map(&self, res: usize) -> usize {
         if res >= RES_ARRAY0 {
-            res + array_base
+            res + self.array_base
+        } else if res < N_CORES {
+            (res + self.core_base) % N_CORES
         } else {
             res
         }
     }
+}
 
-    /// When `res` (pool-absolute) next becomes free.
+/// Committed occupancy over every resource of one pool, plus cumulative
+/// busy cycles for the utilization breakdown. Array ids are pool-absolute;
+/// profiles carry slice-local ids, so every operation takes the tenant's
+/// [`ResMap`] and relocates arrays/cores onto the pool.
+///
+/// Two dispatch disciplines share the structure:
+///
+/// * [`backfilling`](ResourceTimeline::backfilling) — `earliest_start`
+///   intersects the profile's busy intervals against the committed
+///   interval sets and may place a batch inside idle gaps of
+///   already-committed batches;
+/// * [`envelope`](ResourceTimeline::envelope) — `earliest_start` uses
+///   scalar next-free times (the committed envelope), bit-identical to
+///   the PR 3 arbiter; on any one timeline state the envelope answer is
+///   never earlier than the backfilled one.
+#[derive(Clone, Debug)]
+pub struct ResourceTimeline {
+    backfill: bool,
+    /// res → committed busy intervals (absolute cycles).
+    busy_iv: BTreeMap<usize, IntervalSet>,
+    /// res → scalar next-free time (max committed release).
+    free: BTreeMap<usize, u64>,
+    /// res → cumulative busy cycles.
+    busy: BTreeMap<usize, u64>,
+}
+
+impl ResourceTimeline {
+    pub fn new(backfill: bool) -> ResourceTimeline {
+        ResourceTimeline {
+            backfill,
+            busy_iv: BTreeMap::new(),
+            free: BTreeMap::new(),
+            busy: BTreeMap::new(),
+        }
+    }
+
+    /// Interval-intersection dispatch: batches may slot into idle gaps.
+    pub fn backfilling() -> ResourceTimeline {
+        ResourceTimeline::new(true)
+    }
+
+    /// Conservative envelope dispatch (the PR 3 model, `--no-backfill`).
+    pub fn envelope() -> ResourceTimeline {
+        ResourceTimeline::new(false)
+    }
+
+    pub fn is_backfilling(&self) -> bool {
+        self.backfill
+    }
+
+    /// When `res` (pool-absolute) next becomes free of *all* committed
+    /// work — the envelope frontier, maintained in both modes.
     pub fn free_at(&self, res: usize) -> u64 {
         *self.free.get(&res).unwrap_or(&0)
     }
@@ -182,29 +358,74 @@ impl ResourceTimeline {
         &self.busy
     }
 
-    /// Earliest instant ≥ `not_before` at which a batch with this profile
-    /// can start: every resource it needs must be free by the offset the
-    /// batch first touches it.
-    pub fn earliest_start(
-        &self,
-        prof: &ReservationProfile,
-        array_base: usize,
-        not_before: u64,
-    ) -> u64 {
-        let mut t = not_before;
-        for s in &prof.spans {
-            let free = self.free_at(Self::map_res(s.res, array_base));
-            t = t.max(free.saturating_sub(s.first_use));
-        }
-        t
+    /// Committed busy intervals of `res` (pool-absolute), canonical form.
+    pub fn intervals(&self, res: usize) -> &[(u64, u64)] {
+        self.busy_iv.get(&res).map_or(&[], |s| s.as_slice())
     }
 
-    /// Commit a batch dispatched at `t`: push each touched resource's
-    /// next-free time to the batch's release offset and accumulate busy
-    /// cycles. Callers must have chosen `t ≥ earliest_start(..)`.
-    pub fn commit(&mut self, t: u64, prof: &ReservationProfile, array_base: usize) {
+    /// Does `[start, end)` intersect committed work on `res`?
+    pub fn overlaps(&self, res: usize, start: u64, end: u64) -> bool {
+        self.busy_iv.get(&res).is_some_and(|s| s.overlaps(start, end))
+    }
+
+    /// Earliest instant ≥ `not_before` at which a batch with this profile
+    /// can start. Envelope mode: every needed resource must be free of all
+    /// committed work by the offset the batch first touches it. Backfill
+    /// mode: every busy interval of the profile must avoid every committed
+    /// interval — the search jumps the candidate past the earliest
+    /// conflict until a feasible placement (possibly inside gaps) is
+    /// found, so the result is never later than the envelope answer.
+    pub fn earliest_start(&self, prof: &ReservationProfile, map: ResMap, not_before: u64) -> u64 {
+        if !self.backfill {
+            let mut t = not_before;
+            for s in &prof.spans {
+                let free = self.free_at(map.map(s.res));
+                t = t.max(free.saturating_sub(s.first_use));
+            }
+            return t;
+        }
+        let mut t = not_before;
+        'search: loop {
+            for s in &prof.spans {
+                let Some(set) = self.busy_iv.get(&map.map(s.res)) else {
+                    continue;
+                };
+                for &(a, b) in &s.intervals {
+                    if let Some(end) = set.first_conflict_end(t + a, t + b) {
+                        // the conflicting interval ends past t + a, so
+                        // this strictly advances t — termination follows
+                        // from the finite committed set
+                        t = end - a;
+                        continue 'search;
+                    }
+                }
+            }
+            return t;
+        }
+    }
+
+    /// Commit a batch dispatched at `t`. Backfill mode records each busy
+    /// interval; envelope mode records the whole first-use→last-release
+    /// envelope (exactly what the PR 3 arbiter reserved). Both push the
+    /// scalar next-free frontier and accumulate busy cycles. Callers must
+    /// have chosen `t ≥ earliest_start(..)`.
+    pub fn commit(&mut self, t: u64, prof: &ReservationProfile, map: ResMap) {
         for s in &prof.spans {
-            let res = Self::map_res(s.res, array_base);
+            let res = map.map(s.res);
+            let set = self.busy_iv.entry(res).or_default();
+            if self.backfill {
+                for &(a, b) in &s.intervals {
+                    debug_assert!(
+                        !set.overlaps(t + a, t + b),
+                        "double-booked res {res} over [{}, {})",
+                        t + a,
+                        t + b
+                    );
+                    set.insert(t + a, t + b);
+                }
+            } else {
+                set.insert(t + s.first_use, t + s.last_release);
+            }
             let release = t + s.last_release;
             let e = self.free.entry(res).or_insert(0);
             *e = (*e).max(release);
@@ -217,76 +438,176 @@ impl ResourceTimeline {
 mod tests {
     use super::*;
 
-    fn prof(spans: &[(usize, u64, u64, u64)], len: u64) -> ReservationProfile {
-        ReservationProfile {
-            spans: spans
-                .iter()
-                .map(|&(res, first_use, last_release, busy)| ResourceSpan {
-                    res,
-                    first_use,
-                    last_release,
-                    busy,
-                })
-                .collect(),
-            len,
+    /// Profile from (res, disjoint sorted occupancy list) pairs.
+    fn prof(spans: &[(usize, &[(u64, u64)])], len: u64) -> ReservationProfile {
+        let mut b = ProfileBuilder::new();
+        for &(res, ivs) in spans {
+            for &(s, e) in ivs {
+                b.occupy(res, s, e);
+            }
         }
+        b.build(len)
+    }
+
+    #[test]
+    fn interval_set_merges_overlap_and_adjacency() {
+        let mut s = IntervalSet::new();
+        s.insert(10, 20);
+        s.insert(30, 40);
+        assert_eq!(s.as_slice(), &[(10, 20), (30, 40)]);
+        s.insert(20, 25); // adjacent to [10, 20)
+        assert_eq!(s.as_slice(), &[(10, 25), (30, 40)]);
+        s.insert(24, 31); // bridges both
+        assert_eq!(s.as_slice(), &[(10, 40)]);
+        s.insert(5, 5); // empty: ignored
+        assert_eq!(s.as_slice(), &[(10, 40)]);
+        s.insert(0, 2);
+        assert_eq!(s.as_slice(), &[(0, 2), (10, 40)]);
+        s.check_invariants();
+        assert_eq!(s.total(), 32);
+        assert_eq!((s.start(), s.end()), (0, 40));
+    }
+
+    #[test]
+    fn interval_set_conflict_probes() {
+        let mut s = IntervalSet::new();
+        s.insert(10, 20);
+        s.insert(40, 50);
+        assert!(!s.overlaps(0, 10), "touching ends do not conflict");
+        assert!(!s.overlaps(20, 40), "the gap is free");
+        assert!(s.overlaps(15, 16));
+        assert!(s.overlaps(5, 45));
+        assert_eq!(s.first_conflict_end(5, 45), Some(20), "earliest conflict");
+        assert_eq!(s.first_conflict_end(25, 45), Some(50));
+        assert_eq!(s.first_conflict_end(20, 40), None);
+        assert_eq!(s.first_conflict_end(7, 7), None, "empty probe");
     }
 
     #[test]
     fn disjoint_profiles_overlap_fully() {
-        let mut tl = ResourceTimeline::new();
-        let a = prof(&[(RES_ARRAY0, 0, 100, 100)], 100);
-        let b = prof(&[(RES_ARRAY0 + 1, 0, 80, 80)], 80);
-        let ta = tl.earliest_start(&a, 0, 0);
-        tl.commit(ta, &a, 0);
-        let tb = tl.earliest_start(&b, 0, 0);
-        assert_eq!((ta, tb), (0, 0), "disjoint resources must not serialize");
-        tl.commit(tb, &b, 0);
-        assert_eq!(tl.free_at(RES_ARRAY0), 100);
-        assert_eq!(tl.free_at(RES_ARRAY0 + 1), 80);
+        for mut tl in [ResourceTimeline::backfilling(), ResourceTimeline::envelope()] {
+            let a = prof(&[(RES_ARRAY0, &[(0, 100)])], 100);
+            let b = prof(&[(RES_ARRAY0 + 1, &[(0, 80)])], 80);
+            let ta = tl.earliest_start(&a, ResMap::default(), 0);
+            tl.commit(ta, &a, ResMap::default());
+            let tb = tl.earliest_start(&b, ResMap::default(), 0);
+            assert_eq!((ta, tb), (0, 0), "disjoint resources must not serialize");
+            tl.commit(tb, &b, ResMap::default());
+            assert_eq!(tl.free_at(RES_ARRAY0), 100);
+            assert_eq!(tl.free_at(RES_ARRAY0 + 1), 80);
+        }
     }
 
     #[test]
-    fn shared_resource_serializes_on_its_span_only() {
-        let mut tl = ResourceTimeline::new();
-        // batch A holds cores over [90, 100) of a 100-cycle batch
-        let a = prof(&[(RES_ARRAY0, 0, 100, 100), (RES_CORES, 90, 100, 10)], 100);
-        // batch B needs cores at offset 50 of an 80-cycle batch
-        let b = prof(&[(RES_ARRAY0 + 1, 0, 80, 80), (RES_CORES, 50, 60, 10)], 80);
-        tl.commit(0, &a, 0);
-        // B may start at 50: its cores use (offset 50) then lands at 100
-        assert_eq!(tl.earliest_start(&b, 0, 0), 50);
+    fn envelope_serializes_on_the_span_backfill_finds_the_gap() {
+        // batch A holds array0 over [0, 100) and core0 over [90, 100);
+        // batch B needs array1 over [0, 80) and core0 over [50, 60)
+        let a = prof(&[(RES_ARRAY0, &[(0, 100)]), (RES_CORE0, &[(90, 100)])], 100);
+        let b = prof(&[(RES_ARRAY0 + 1, &[(0, 80)]), (RES_CORE0, &[(50, 60)])], 80);
+        // envelope: core0 is "held" over [90, 100), so B may start at 50
+        // (its core use, offset 50, then lands exactly at the release)
+        let mut env = ResourceTimeline::envelope();
+        env.commit(0, &a, ResMap::default());
+        assert_eq!(env.earliest_start(&b, ResMap::default(), 0), 50);
+        // backfill: B's core interval [50, 60) fits before A's [90, 100)
+        let mut bf = ResourceTimeline::backfilling();
+        bf.commit(0, &a, ResMap::default());
+        assert_eq!(bf.earliest_start(&b, ResMap::default(), 0), 0);
+        bf.commit(0, &b, ResMap::default());
+        assert_eq!(bf.intervals(RES_CORE0), &[(50, 60), (90, 100)]);
+    }
+
+    #[test]
+    fn backfill_jumps_conflicts_to_the_first_fitting_gap() {
+        let mut tl = ResourceTimeline::backfilling();
+        let held = prof(&[(RES_DWACC, &[(0, 10), (20, 30)])], 30);
+        tl.commit(0, &held, ResMap::default());
+        // a 5-cycle accelerator job fits the [10, 20) gap
+        let short = prof(&[(RES_DWACC, &[(0, 5)])], 5);
+        assert_eq!(tl.earliest_start(&short, ResMap::default(), 0), 10);
+        // respecting not_before inside the gap
+        assert_eq!(tl.earliest_start(&short, ResMap::default(), 12), 12);
+        // a 15-cycle job cannot: it lands past the second interval
+        let long = prof(&[(RES_DWACC, &[(0, 15)])], 15);
+        assert_eq!(tl.earliest_start(&long, ResMap::default(), 0), 30);
+    }
+
+    #[test]
+    fn backfill_never_later_than_envelope_on_one_state() {
+        // same committed content, same probe: the backfilled answer can
+        // only be earlier (busy intervals are subsets of envelopes)
+        let committed = prof(&[(RES_CORE0, &[(5, 10), (90, 100)]), (RES_DMA, &[(0, 40)])], 100);
+        let probe = prof(&[(RES_CORE0, &[(0, 6)]), (RES_DMA, &[(50, 60)])], 60);
+        let mut bf = ResourceTimeline::backfilling();
+        let mut env = ResourceTimeline::envelope();
+        bf.commit(0, &committed, ResMap::default());
+        env.commit(0, &committed, ResMap::default());
+        let t_bf = bf.earliest_start(&probe, ResMap::default(), 0);
+        let t_env = env.earliest_start(&probe, ResMap::default(), 0);
+        assert!(t_bf <= t_env, "{t_bf} > {t_env}");
+        assert_eq!(t_env, 100, "envelope waits out core0's last release");
+        assert_eq!(t_bf, 10, "backfill slots between core0's intervals");
+    }
+
+    #[test]
+    fn res_map_relocates_arrays_and_rotates_cores() {
+        let m = ResMap { array_base: 4, core_base: 4 };
+        assert_eq!(m.map(RES_ARRAY0), RES_ARRAY0 + 4);
+        assert_eq!(m.map(RES_CORE0), RES_CORE0 + 4);
+        assert_eq!(m.map(RES_CORE0 + 6), RES_CORE0 + 2, "cores wrap mod 8");
+        assert_eq!(m.map(RES_DWACC), RES_DWACC);
+        assert_eq!(m.map(RES_PROG), RES_PROG);
+        assert_eq!(ResMap::arrays(3).map(RES_CORE0 + 5), RES_CORE0 + 5);
     }
 
     #[test]
     fn array_base_relocates_slices() {
-        let mut tl = ResourceTimeline::new();
-        let p = prof(&[(RES_ARRAY0, 0, 10, 10)], 10);
-        tl.commit(0, &p, 0);
+        let mut tl = ResourceTimeline::backfilling();
+        let p = prof(&[(RES_ARRAY0, &[(0, 10)])], 10);
+        tl.commit(0, &p, ResMap::arrays(0));
         // same plan-local array in a slice based at 4 is a different
         // physical array — no contention
-        assert_eq!(tl.earliest_start(&p, 4, 0), 0);
-        tl.commit(0, &p, 4);
+        assert_eq!(tl.earliest_start(&p, ResMap::arrays(4), 0), 0);
+        tl.commit(0, &p, ResMap::arrays(4));
         assert_eq!(tl.free_at(RES_ARRAY0 + 4), 10);
         // but the same slice contends with itself
-        assert_eq!(tl.earliest_start(&p, 0, 0), 10);
+        assert_eq!(tl.earliest_start(&p, ResMap::arrays(0), 0), 10);
+    }
+
+    #[test]
+    fn core_rotation_lets_small_sections_share_the_complex() {
+        // two tenants whose parallel sections engage two cores each: with
+        // rotated affinity they land on disjoint physical cores
+        let p = prof(&[(RES_CORE0, &[(0, 50)]), (RES_CORE0 + 1, &[(0, 50)])], 50);
+        let mut tl = ResourceTimeline::backfilling();
+        let a = ResMap::default();
+        let b = ResMap { array_base: 0, core_base: 4 };
+        tl.commit(tl.earliest_start(&p, a, 0), &p, a);
+        assert_eq!(tl.earliest_start(&p, b, 0), 0, "disjoint cores overlap");
+        tl.commit(0, &p, b);
+        assert_eq!(tl.busy_cycles(RES_CORE0 + 4), 50);
+        // a third tenant colliding with the first waits
+        assert_eq!(tl.earliest_start(&p, a, 0), 50);
     }
 
     #[test]
     fn earliest_start_respects_not_before_and_first_use() {
-        let mut tl = ResourceTimeline::new();
-        let a = prof(&[(RES_DWACC, 0, 40, 40)], 40);
-        tl.commit(0, &a, 0);
-        // a batch that first touches the DW accelerator at offset 30 may
-        // start at 10 (so its use begins exactly at 40)
-        let b = prof(&[(RES_DWACC, 30, 50, 20)], 60);
-        assert_eq!(tl.earliest_start(&b, 0, 0), 10);
-        assert_eq!(tl.earliest_start(&b, 0, 25), 25);
+        for mk in [ResourceTimeline::backfilling, ResourceTimeline::envelope] {
+            let mut tl = mk();
+            let a = prof(&[(RES_DWACC, &[(0, 40)])], 40);
+            tl.commit(0, &a, ResMap::default());
+            // a batch that first touches the DW accelerator at offset 30
+            // may start at 10 (so its use begins exactly at 40)
+            let b = prof(&[(RES_DWACC, &[(30, 50)])], 60);
+            assert_eq!(tl.earliest_start(&b, ResMap::default(), 0), 10);
+            assert_eq!(tl.earliest_start(&b, ResMap::default(), 25), 25);
+        }
     }
 
     #[test]
     fn labels_are_stable() {
-        assert_eq!(res_label(RES_CORES), "cores");
+        assert_eq!(res_label(RES_CORE0), "core0");
+        assert_eq!(res_label(RES_CORE0 + 7), "core7");
         assert_eq!(res_label(RES_DWACC), "dw_acc");
         assert_eq!(res_label(RES_IMA_MUX), "ima_mux");
         assert_eq!(res_label(RES_DMA), "dma");
@@ -295,17 +616,20 @@ mod tests {
     }
 
     #[test]
-    fn builder_merges_occupancy_into_envelopes() {
+    fn builder_merges_occupancy_into_canonical_spans() {
         let mut b = ProfileBuilder::new();
-        b.occupy(RES_CORES, 10, 20);
-        b.occupy(RES_CORES, 40, 45);
+        b.occupy(RES_CORE0, 10, 20);
+        b.occupy(RES_CORE0, 40, 45);
         b.occupy(RES_ARRAY0 + 2, 0, 5);
+        b.occupy(RES_ARRAY0 + 2, 5, 9); // adjacent: merges
         let p = b.build(50);
         assert_eq!(p.len, 50);
-        let c = p.span(RES_CORES).unwrap();
+        let c = p.span(RES_CORE0).unwrap();
         assert_eq!((c.first_use, c.last_release, c.busy), (10, 45, 15));
+        assert_eq!(c.intervals, vec![(10, 20), (40, 45)]);
         let a = p.span(RES_ARRAY0 + 2).unwrap();
-        assert_eq!((a.first_use, a.last_release, a.busy), (0, 5, 5));
-        assert_eq!(p.total_busy(), 20);
+        assert_eq!((a.first_use, a.last_release, a.busy), (0, 9, 9));
+        assert_eq!(a.intervals, vec![(0, 9)]);
+        assert_eq!(p.total_busy(), 24);
     }
 }

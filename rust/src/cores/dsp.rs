@@ -29,7 +29,7 @@ impl<'a> DspKernels<'a> {
         e.wall_cy = wall;
         e.core_active_cy = wall * self.cfg.n_cores as u64;
         e.tcdm_duty_millicycles = (wall as f64 * duty * 1000.0) as u64;
-        CoresCost { cycles: wall, energy: e }
+        CoresCost { cycles: wall, energy: e, cores: self.cfg.n_cores }
     }
 
     /// Radix-2 complex FFT of `n` points (fixed-point): 5·n·log2(n) MAC-ish

@@ -1,19 +1,35 @@
 //! Cycle/energy costs of the PULP-NN-style software kernels.
+//!
+//! Every kernel is a parallel section: the work splits into chunks (one
+//! per [`PAR_GRAIN_MACS`] MACs or [`PAR_GRAIN_ELEMS`] elements) and
+//! engages `min(n_cores, chunks)` cores. Layers big enough to fill the
+//! cluster — everything in the paper's workloads — engage all eight and
+//! cost exactly what the original 8-core model charged; a tiny ancillary
+//! section engages fewer, which the batch scheduler turns into a shorter
+//! per-core resource prefix so other tenants' sections can share the
+//! complex (see `coordinator::timeline`).
 
 use crate::arch::{EnergyAccount, SystemConfig};
 use crate::net::{Layer, LayerKind};
 use crate::sim::event_unit::EventUnit;
 
+/// MACs per parallel work chunk (conv/dw/fc kernels).
+pub const PAR_GRAIN_MACS: usize = 4096;
+/// Elements per parallel work chunk (ancillary element-wise kernels).
+pub const PAR_GRAIN_ELEMS: usize = 512;
+
 #[derive(Clone, Debug, Default)]
 pub struct CoresCost {
     pub cycles: u64,
     pub energy: EnergyAccount,
+    /// Cores the parallel section engages (0 for a zero-cost section).
+    pub cores: usize,
 }
 
 pub struct SwKernels<'a> {
     pub cfg: &'a SystemConfig,
     pub eu: EventUnit,
-    /// Cores participating (8 in the cluster; 1 models the MCU baselines).
+    /// Cores available (8 in the cluster; 1 models the MCU baselines).
     pub n_cores: usize,
 }
 
@@ -31,51 +47,64 @@ impl<'a> SwKernels<'a> {
         self
     }
 
-    /// Scale an 8-core throughput rate to `n_cores` (linear with a mild
+    /// Cores a section of `chunks` work chunks engages.
+    fn engaged(&self, chunks: usize) -> usize {
+        chunks.clamp(1, self.n_cores)
+    }
+
+    /// Scale an 8-core throughput rate to `n` cores (linear with a mild
     /// parallel-efficiency knee below 8 — PULP-NN scales ~0.95/core).
-    fn scale_rate(&self, rate_8core: f64) -> f64 {
-        let n = self.n_cores as f64;
-        if self.n_cores >= 8 {
+    fn scale_rate(&self, rate_8core: f64, n_cores: usize) -> f64 {
+        let n = n_cores as f64;
+        if n_cores >= 8 {
             rate_8core * (n / 8.0)
         } else {
             rate_8core * (n / 8.0) * (1.0 + 0.05 * (8.0 - n) / 8.0)
         }
     }
 
-    fn cost(&self, cycles: u64, tcdm_duty: f64) -> CoresCost {
+    fn cost(&self, k: usize, cycles: u64, tcdm_duty: f64) -> CoresCost {
         let mut e = EnergyAccount::default();
-        let wall = cycles + self.eu.parallel_section_overhead_cy(self.n_cores, self.n_cores);
+        let wall = cycles + self.eu.parallel_section_overhead_cy(k, k);
         e.wall_cy = wall;
-        e.core_active_cy = wall * self.n_cores as u64;
-        e.core_idle_cy = wall * (self.cfg.n_cores.saturating_sub(self.n_cores)) as u64;
+        e.core_active_cy = wall * k as u64;
+        e.core_idle_cy = wall * (self.cfg.n_cores.saturating_sub(k)) as u64;
         e.tcdm_duty_millicycles = (wall as f64 * tcdm_duty * 1000.0) as u64;
-        CoresCost { cycles: wall, energy: e }
+        CoresCost { cycles: wall, energy: e, cores: k }
+    }
+
+    /// Element-wise section of `elems` at `rate_8core` elems/cycle.
+    fn elemwise(&self, elems: usize, rate_8core: f64, tcdm_duty: f64) -> CoresCost {
+        let k = self.engaged(elems.div_ceil(PAR_GRAIN_ELEMS));
+        let rate = self.scale_rate(rate_8core, k);
+        self.cost(k, (elems as f64 / rate).ceil() as u64, tcdm_duty)
     }
 
     /// A whole layer in software (the CORES baseline of Fig. 9).
     pub fn layer_cost(&self, l: &Layer) -> CoresCost {
         match l.kind {
             LayerKind::Conv | LayerKind::Fc => {
-                let rate = self.scale_rate(self.cfg.sw_pw_macs_per_cycle);
-                self.cost((l.macs() as f64 / rate).ceil() as u64, 0.5)
+                let k = self.engaged((l.macs() as usize).div_ceil(PAR_GRAIN_MACS));
+                let rate = self.scale_rate(self.cfg.sw_pw_macs_per_cycle, k);
+                self.cost(k, (l.macs() as f64 / rate).ceil() as u64, 0.5)
             }
             LayerKind::Dw => {
-                let rate = if self.n_cores == 1 {
+                let k = self.engaged((l.macs() as usize).div_ceil(PAR_GRAIN_MACS));
+                let rate = if k == 1 {
                     self.cfg.sw_dw_macs_per_cycle_1core
                 } else {
-                    self.scale_rate(self.cfg.sw_dw_macs_per_cycle)
+                    self.scale_rate(self.cfg.sw_dw_macs_per_cycle, k)
                 };
-                self.cost((l.macs() as f64 / rate).ceil() as u64, 0.6)
+                self.cost(k, (l.macs() as f64 / rate).ceil() as u64, 0.6)
             }
             LayerKind::Add => self.residual(l.out_pixels() * l.cout),
             LayerKind::Pool => self.pool(l.hin * l.win * l.cin),
-            }
+        }
     }
 
     /// Residual connection: int8 saturating add of `elems` elements.
     pub fn residual(&self, elems: usize) -> CoresCost {
-        let rate = self.scale_rate(self.cfg.sw_residual_elems_per_cycle);
-        self.cost((elems as f64 / rate).ceil() as u64, 0.8)
+        self.elemwise(elems, self.cfg.sw_residual_elems_per_cycle, 0.8)
     }
 
     /// Digital accumulation of `n_partials` int32 partial tensors of
@@ -85,26 +114,22 @@ impl<'a> SwKernels<'a> {
             return CoresCost::default();
         }
         let adds = elems * (n_partials - 1);
-        let rate = self.scale_rate(self.cfg.sw_accum_elems_per_cycle);
-        self.cost((adds as f64 / rate).ceil() as u64, 0.9)
+        self.elemwise(adds, self.cfg.sw_accum_elems_per_cycle, 0.9)
     }
 
     /// Requantization (shift-round-clip int32→int8) of `elems` elements.
     pub fn requant(&self, elems: usize) -> CoresCost {
-        let rate = self.scale_rate(self.cfg.sw_requant_elems_per_cycle);
-        self.cost((elems as f64 / rate).ceil() as u64, 0.7)
+        self.elemwise(elems, self.cfg.sw_requant_elems_per_cycle, 0.7)
     }
 
     /// HWC↔CHW marshaling of `elems` elements (HYBRID mapping, §V-C).
     pub fn marshal(&self, elems: usize) -> CoresCost {
-        let rate = self.scale_rate(self.cfg.sw_marshal_elems_per_cycle);
-        self.cost((elems as f64 / rate).ceil() as u64, 0.9)
+        self.elemwise(elems, self.cfg.sw_marshal_elems_per_cycle, 0.9)
     }
 
     /// Global average pooling over `elems` inputs.
     pub fn pool(&self, elems: usize) -> CoresCost {
-        let rate = self.scale_rate(self.cfg.sw_pool_elems_per_cycle);
-        self.cost((elems as f64 / rate).ceil() as u64, 0.6)
+        self.elemwise(elems, self.cfg.sw_pool_elems_per_cycle, 0.6)
     }
 }
 
@@ -125,6 +150,7 @@ mod tests {
         let c = sw(&cfg).layer_cost(&l);
         let rate = l.macs() as f64 / c.cycles as f64;
         assert!((rate - 15.5).abs() < 0.5, "{rate}");
+        assert_eq!(c.cores, 8, "a full-size layer engages the cluster");
     }
 
     #[test]
@@ -147,6 +173,7 @@ mod tests {
         let c = sw(&cfg).with_cores(1).layer_cost(&l);
         let rate = l.macs() as f64 / c.cycles as f64;
         assert!((rate - 1.14).abs() < 0.05, "{rate}");
+        assert_eq!(c.cores, 1);
     }
 
     #[test]
@@ -176,5 +203,21 @@ mod tests {
         let c8 = sw(&cfg).layer_cost(&l).cycles;
         let c2 = sw(&cfg).with_cores(2).layer_cost(&l).cycles;
         assert!(c2 > 3 * c8);
+    }
+
+    #[test]
+    fn tiny_sections_engage_fewer_cores() {
+        let cfg = SystemConfig::paper();
+        let s = sw(&cfg);
+        // one chunk of work: a single core
+        assert_eq!(s.residual(64).cores, 1);
+        // four chunks: four cores
+        assert_eq!(s.residual(4 * PAR_GRAIN_ELEMS).cores, 4);
+        // everything at or past eight chunks engages the whole cluster
+        assert_eq!(s.residual(8 * PAR_GRAIN_ELEMS).cores, 8);
+        assert_eq!(s.residual(100 * PAR_GRAIN_ELEMS).cores, 8);
+        // the paper workloads' smallest ancillary section still fills it:
+        // MobileNetV2's 7×7×160 residual add
+        assert_eq!(s.residual(7 * 7 * 160).cores, 8);
     }
 }

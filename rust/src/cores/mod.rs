@@ -11,4 +11,4 @@ pub mod dsp;
 pub mod kernels;
 
 pub use dsp::DspKernels;
-pub use kernels::{CoresCost, SwKernels};
+pub use kernels::{CoresCost, SwKernels, PAR_GRAIN_ELEMS, PAR_GRAIN_MACS};

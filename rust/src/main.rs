@@ -52,7 +52,10 @@ options:
   --deadline-ms D         `serve`: abandon after D ms waiting  (default off)
   --weights A,B           `serve`: WRR weights per model       (default 1,1)
   --no-overlap            `serve`: serialize batches on the pool (the PR 2
-                          model; default is per-resource overlapped dispatch)
+                          model; default is per-resource backfilled dispatch)
+  --no-backfill           `serve`: conservative envelope reservations (the
+                          PR 3 model; default backfills batches into idle
+                          gaps of committed reservations)
   --stream-weights        `serve`/`scaleup`: stream staged PCM reprogramming
                           under the previous pass's compute tail
   --json [FILE]           `scaleup`/`serve`: also write a machine-readable
@@ -60,7 +63,8 @@ options:
                           BENCH_serve.json)
   --sweep                 `serve`: rate × policy percentile table over the
                           default model pair; honors only --arrays --rate
-                          --policy --duration --seed --no-overlap --json
+                          --policy --duration --seed --no-overlap
+                          --no-backfill --json
 ";
 
 fn config_from(args: &Args) -> SystemConfig {
@@ -102,12 +106,15 @@ fn write_json(path: &str, doc: &Json) -> Result<(), String> {
 
 /// `imcc serve --sweep`: the rate × policy percentile table, honoring the
 /// serve flags that apply to a sweep (`--arrays --rate --policy
-/// --duration --seed --no-overlap --json`).
+/// --duration --seed --no-overlap --no-backfill --json`).
 fn run_serve_sweep(args: &Args, pm: &PowerModel) -> Result<(), String> {
     use imcc::serve::{Policy, DEFAULT_SEED};
 
     if args.flag("overlap") && args.flag("no-overlap") {
         return Err("--overlap and --no-overlap are mutually exclusive".into());
+    }
+    if args.flag("backfill") && args.flag("no-backfill") {
+        return Err("--backfill and --no-backfill are mutually exclusive".into());
     }
     if args.flag("stream-weights") {
         return Err(
@@ -117,6 +124,7 @@ fn run_serve_sweep(args: &Args, pm: &PowerModel) -> Result<(), String> {
         );
     }
     let overlap = !args.flag("no-overlap");
+    let backfill = !args.flag("no-backfill");
     let arrays: usize = args.opt_parse("arrays", 64usize);
     let duration_s: f64 = args.opt_parse("duration", 0.25);
     let seed = match args.opt("seed") {
@@ -131,8 +139,16 @@ fn run_serve_sweep(args: &Args, pm: &PowerModel) -> Result<(), String> {
         None => report::serving::DEFAULT_POLICIES.to_vec(),
         Some(p) => vec![Policy::parse(p)?],
     };
-    let rep =
-        report::serving::generate_sweep(pm, arrays, &rates, &policies, duration_s, seed, overlap);
+    let rep = report::serving::generate_sweep(
+        pm,
+        arrays,
+        &rates,
+        &policies,
+        duration_s,
+        seed,
+        overlap,
+        backfill,
+    );
     rep.print();
     if let Some(path) = json_out(args, "BENCH_serve.json") {
         let doc = obj([("bench", "serve_sweep".into()), ("points", rep.data)]);
@@ -197,6 +213,9 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
     if args.flag("overlap") && args.flag("no-overlap") {
         return Err("--overlap and --no-overlap are mutually exclusive".into());
     }
+    if args.flag("backfill") && args.flag("no-backfill") {
+        return Err("--backfill and --no-backfill are mutually exclusive".into());
+    }
     let scfg = ServeConfig {
         n_arrays: arrays,
         policy,
@@ -206,6 +225,7 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
         },
         pipeline: !args.flag("no-pipeline"),
         overlap: !args.flag("no-overlap"),
+        backfill: !args.flag("no-backfill"),
         stream_weights: args.flag("stream-weights"),
         seed,
         duration_s,

@@ -14,7 +14,9 @@
 
 use crate::arch::PowerModel;
 use crate::coordinator::PlanCache;
-use crate::serve::{mnv2_bottleneck_pair, simulate_with_cache, Policy, ServeConfig, DEFAULT_SEED};
+use crate::serve::{
+    dispatch_label, mnv2_bottleneck_pair, simulate_with_cache, Policy, ServeConfig, DEFAULT_SEED,
+};
 use crate::util::json::{obj, Json};
 use crate::util::table::{f, Table};
 
@@ -24,9 +26,10 @@ pub const DEFAULT_RATES: &[f64] = &[25.0, 50.0, 100.0, 200.0];
 pub const DEFAULT_POLICIES: &[Policy] = &[Policy::Fifo, Policy::Wrr, Policy::Sjf];
 
 pub fn generate(pm: &PowerModel) -> Report {
-    generate_sweep(pm, 64, DEFAULT_RATES, DEFAULT_POLICIES, 0.25, DEFAULT_SEED, true)
+    generate_sweep(pm, 64, DEFAULT_RATES, DEFAULT_POLICIES, 0.25, DEFAULT_SEED, true, true)
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn generate_sweep(
     pm: &PowerModel,
     n_arrays: usize,
@@ -35,11 +38,12 @@ pub fn generate_sweep(
     duration_s: f64,
     seed: u64,
     overlap: bool,
+    backfill: bool,
 ) -> Report {
+    let dispatch = dispatch_label(overlap, backfill);
     let title = format!(
         "Serving — latency percentiles vs offered load ({n_arrays} arrays, \
-         {duration_s} s Poisson horizon/model, seed {seed:#x}, {} dispatch)",
-        if overlap { "overlapped" } else { "serialized" }
+         {duration_s} s Poisson horizon/model, seed {seed:#x}, {dispatch} dispatch)"
     );
     let mut t = Table::new(
         &title,
@@ -59,6 +63,7 @@ pub fn generate_sweep(
                 n_arrays,
                 policy,
                 overlap,
+                backfill,
                 seed,
                 duration_s,
                 ..ServeConfig::default()
@@ -109,6 +114,7 @@ pub fn generate_sweep(
                     ("peak_queue", s.peak_queue.into()),
                     ("utilization", util.into()),
                     ("overlap", rep.overlap.into()),
+                    ("backfill", rep.backfill.into()),
                     ("inf_per_s", rep.inferences_per_s().into()),
                 ]));
             }
@@ -118,7 +124,8 @@ pub fn generate_sweep(
     let mut text = t.render();
     text.push_str(
         "open-loop Poisson per model, both models weights-resident in one pool, \
-         per-resource overlapped dispatch (disjoint slices run concurrently); \
+         per-resource interval dispatch (disjoint slices run concurrently, \
+         backfilled batches slot into committed idle gaps); \
          latencies include queueing (p50/p95/p99 from the log histogram). \
          Past saturation FIFO couples the models, WRR shares the pool, SJF \
          shields the light model by starving the heavy one.\n",
@@ -138,7 +145,16 @@ mod tests {
     #[test]
     fn sweep_generates_all_points() {
         let pm = PowerModel::paper();
-        let r = generate_sweep(&pm, 64, &[50.0], &[Policy::Fifo, Policy::Sjf], 0.05, 0xAB, true);
+        let r = generate_sweep(
+            &pm,
+            64,
+            &[50.0],
+            &[Policy::Fifo, Policy::Sjf],
+            0.05,
+            0xAB,
+            true,
+            true,
+        );
         let pts = r.data.as_arr().unwrap();
         // 2 policies × 1 rate × 2 models
         assert_eq!(pts.len(), 4);
@@ -152,7 +168,7 @@ mod tests {
     #[test]
     fn overload_inflates_the_tail() {
         let pm = PowerModel::paper();
-        let r = generate_sweep(&pm, 64, &[25.0, 800.0], &[Policy::Fifo], 0.05, 0xAB, true);
+        let r = generate_sweep(&pm, 64, &[25.0, 800.0], &[Policy::Fifo], 0.05, 0xAB, true, true);
         let pts = r.data.as_arr().unwrap();
         let p99_of = |rate: f64| -> f64 {
             pts.iter()

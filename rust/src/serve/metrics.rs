@@ -121,10 +121,10 @@ impl LogHistogram {
 }
 
 /// One pool resource's share of a serving run — the per-resource
-/// utilization breakdown (cores, DW accelerator, IMA mux, DMA port, PCM
-/// programming port, the array aggregate, the busiest array). `units` is
-/// how many physical units the entry aggregates: utilization =
-/// busy / (units × makespan).
+/// utilization breakdown (the core-complex aggregate, each core0..7 row,
+/// DW accelerator, IMA mux, DMA port, PCM programming port, the array
+/// aggregate, the busiest array). `units` is how many physical units the
+/// entry aggregates: utilization = busy / (units × makespan).
 #[derive(Clone, Debug)]
 pub struct ResourceUtil {
     pub name: String,
@@ -158,11 +158,17 @@ pub struct TenantStats {
     pub batches: u64,
     /// End-to-end request latency (arrival → batch completion), cycles.
     pub latency: LogHistogram,
-    /// Deepest backlog observed at this tenant's dispatch-candidate
-    /// instants, sampled before expired requests are dropped (backlog
-    /// only grows between a tenant's dispatches, so sampling there
-    /// captures the peak a waiting client would have seen).
+    /// Deepest backlog observed for this tenant: sampled at *every*
+    /// event-loop step (each dispatch instant, for all tenants) and
+    /// additionally at this tenant's own dispatch-candidate instants
+    /// before expired requests are dropped — so it is never below
+    /// [`peak_queue_at_dispatch`](Self::peak_queue_at_dispatch).
     pub peak_queue: usize,
+    /// The PR 3 instrument, retained for comparison: backlog sampled only
+    /// at this tenant's own dispatch-candidate instants (pre-drop).
+    /// `tests/peak_queue_regression.rs` pins its relation to the
+    /// every-event sample and to the pool-wide simultaneous backlog.
+    pub peak_queue_at_dispatch: usize,
     /// Cycles this tenant's batches held their resources (sum of batch
     /// makespans — overlapped batches each count in full).
     pub busy_cycles: u64,
@@ -183,6 +189,7 @@ impl TenantStats {
             batches: 0,
             latency: LogHistogram::new(),
             peak_queue: 0,
+            peak_queue_at_dispatch: 0,
             busy_cycles: 0,
             energy_j: 0.0,
         }

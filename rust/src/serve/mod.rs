@@ -24,14 +24,20 @@
 //!   histogram (p50/p95/p99 bit-identical under a fixed seed), queue
 //!   depth, per-resource utilization, and drop statistics.
 //!
-//! Dispatch is *per-resource*, not per-pool: every batch carries a
-//! [`ReservationProfile`] (which cores/accelerator/mux/DMA/array resources
-//! it occupies, and when), and the simulator keeps one
-//! [`ResourceTimeline`] of next-free times across the pool. A tenant's
-//! batch dispatches at the earliest instant *its* resources are free — so
-//! two tenants on disjoint array slices genuinely overlap, while contended
-//! shared resources (cores, DW accelerator, IMA mux, the L2/DMA port)
-//! still serialize correctly. A staged tenant's PCM reprogramming charges
+//! Dispatch is *per-resource* and interval-precise: every batch carries a
+//! [`ReservationProfile`] (the merged busy intervals of every core,
+//! accelerator, mux, DMA/programming port and array it occupies), and the
+//! simulator keeps one [`ResourceTimeline`] of committed busy-interval
+//! sets across the pool. The default **backfilling** arbiter dispatches a
+//! tenant's batch at the earliest instant every busy interval of its
+//! profile fits — including inside idle gaps of batches already committed
+//! — so two tenants on disjoint array slices genuinely overlap, small
+//! core sections of different tenants share the (per-core, affinity-
+//! rotated) complex, and contended shared engines still serialize
+//! correctly. [`ServeConfig::backfill`]` = false` (`--no-backfill`) falls
+//! back to the conservative PR 3 envelope reservation bit-identically —
+//! the regression suite pins that, and that the backfilled makespan never
+//! exceeds the envelope one. A staged tenant's PCM reprogramming charges
 //! its own array timelines, not a global clock, and with
 //! [`ServeConfig::stream_weights`] the reprogramming of pass k+1 streams
 //! under pass k's compute tail. `overlap: false` restores the PR 2 model —
@@ -59,7 +65,8 @@ use std::rc::Rc;
 
 use crate::arch::{PowerModel, SystemConfig};
 use crate::coordinator::timeline::{
-    res_label, ResourceTimeline, RES_ARRAY0, RES_CORES, RES_DMA, RES_DWACC, RES_IMA_MUX, RES_PROG,
+    res_label, IntervalSet, ResMap, ResourceTimeline, N_CORES, RES_ARRAY0, RES_CORE0, RES_DMA,
+    RES_DWACC, RES_IMA_MUX, RES_PROG,
 };
 use crate::coordinator::{run_batched, BatchConfig, PlanCache, ReservationProfile, Strategy};
 use crate::net::bottleneck::bottleneck;
@@ -76,6 +83,20 @@ pub use traffic::TrafficModel;
 /// Default traffic seed, shared by the library default, the CLI, and the
 /// serving report so "default" means one thing everywhere.
 pub const DEFAULT_SEED: u64 = 0xC0FF_EE00;
+
+/// Human label of a dispatch discipline — shared by the serve table and
+/// the serving-report sweep so the two can never drift: `serialized`
+/// (PR 2 single server), `overlapped` (PR 3 envelopes), or `backfilled`
+/// (interval gaps).
+pub fn dispatch_label(overlap: bool, backfill: bool) -> &'static str {
+    if !overlap {
+        "serialized"
+    } else if backfill {
+        "backfilled"
+    } else {
+        "overlapped"
+    }
+}
 
 /// One model's serving contract: its network, arrival process, and WRR
 /// weight.
@@ -101,6 +122,14 @@ pub struct ServeConfig {
     /// Per-resource dispatch: overlap batches whose reservation profiles
     /// are disjoint. Off = the PR 2 model (one opaque pool server).
     pub overlap: bool,
+    /// Backfill batches into idle gaps of committed reservations (busy
+    /// interval sets, plus per-tenant core-affinity rotation). Off = the
+    /// conservative PR 3 envelope reservation, bit-identical
+    /// (`--no-backfill`). Per timeline state the backfilled start is
+    /// never later than the envelope one; the end-to-end makespan
+    /// conservation is pinned empirically by the regression/property
+    /// suites and the CI smoke on the shipped scenarios.
+    pub backfill: bool,
     /// Stream staged PCM reprogramming under the previous pass's compute
     /// tail (see `scheduler::BatchConfig::stream_weights`).
     pub stream_weights: bool,
@@ -127,6 +156,7 @@ impl Default for ServeConfig {
             pipeline: true,
             charge_dma: true,
             overlap: true,
+            backfill: true,
             stream_weights: false,
             seed: DEFAULT_SEED,
             duration_s: 0.25,
@@ -146,6 +176,8 @@ pub struct ServeReport {
     pub n_arrays: usize,
     /// Per-resource dispatch was enabled (config echo).
     pub overlap: bool,
+    /// Backfilling dispatch was enabled (config echo).
+    pub backfill: bool,
     /// Streamed staged reprogramming was enabled (config echo).
     pub stream_weights: bool,
     /// Arrival horizon, cycles.
@@ -157,10 +189,15 @@ pub struct ServeReport {
     /// exceeds the makespan; without overlap it is the plain sum).
     pub busy_cycles: u64,
     pub cycle_ns: f64,
+    /// Deepest pool-wide simultaneous backlog (sum of every tenant's
+    /// pending queue) observed at any event-loop step — the quantity
+    /// per-tenant peaks cannot reconstruct (aligned bursts add up,
+    /// disjoint bursts do not).
+    pub peak_backlog: u64,
     pub tenants: Vec<TenantStats>,
-    /// Busy cycles per pool resource (cores, DW accelerator, IMA mux,
-    /// DMA port, PCM programming port, the array aggregate, and the
-    /// busiest single array).
+    /// Busy cycles per pool resource (the core-complex aggregate, each
+    /// core, DW accelerator, IMA mux, DMA port, PCM programming port, the
+    /// array aggregate, and the busiest single array).
     pub resource_busy: Vec<ResourceUtil>,
 }
 
@@ -211,12 +248,13 @@ impl ServeReport {
     /// runs with the same seed (the determinism tests compare this
     /// string). A per-resource utilization line follows the table.
     pub fn render_table(&self) -> String {
+        let dispatch = dispatch_label(self.overlap, self.backfill);
         let title = format!(
             "serving — {} policy, {} arrays, seed {:#x}, {} dispatch, pool util {:.0}%",
             self.policy.label(),
             self.n_arrays,
             self.seed,
-            if self.overlap { "overlapped" } else { "serialized" },
+            dispatch,
             self.utilization() * 100.0
         );
         let mut t = Table::new(
@@ -251,6 +289,7 @@ impl ServeReport {
             .map(|r| format!("{} {:.0}%", r.name, self.resource_utilization(r) * 100.0))
             .collect();
         out.push_str(&format!("per-resource utilization: {}\n", util.join(", ")));
+        out.push_str(&format!("peak simultaneous backlog: {} requests\n", self.peak_backlog));
         out
     }
 
@@ -276,6 +315,7 @@ impl ServeReport {
                     ("p95_ms", self.ms(p95).into()),
                     ("p99_ms", self.ms(p99).into()),
                     ("peak_queue", s.peak_queue.into()),
+                    ("peak_queue_at_dispatch", s.peak_queue_at_dispatch.into()),
                 ])
             })
             .collect();
@@ -296,10 +336,12 @@ impl ServeReport {
             ("seed", format!("{:#x}", self.seed).into()),
             ("arrays", self.n_arrays.into()),
             ("overlap", self.overlap.into()),
+            ("backfill", self.backfill.into()),
             ("stream_weights", self.stream_weights.into()),
             ("duration_cycles", (self.duration_cycles as f64).into()),
             ("makespan_cycles", (self.makespan_cycles as f64).into()),
             ("busy_cycles", (self.busy_cycles as f64).into()),
+            ("peak_backlog", (self.peak_backlog as f64).into()),
             ("pool_utilization", self.utilization().into()),
             ("inf_per_s", self.inferences_per_s().into()),
             ("served", (self.total_served() as f64).into()),
@@ -399,20 +441,22 @@ fn validate_candidate(
     ctx: &mut SimCtx<'_>,
     timeline: &ResourceTimeline,
     pool_free: u64,
-    array_base: usize,
+    rmap: ResMap,
 ) -> Option<(u64, usize, u64)> {
     let scfg = ctx.scfg;
     loop {
         let r = q.ready_at(&scfg.window)?;
         // fixed point: waiting for resources may let more arrivals join
         // the window, which may change the profile, which may move the
-        // instant — batch size only grows, so this converges fast
+        // instant — batch size normally only grows, so this converges in
+        // a round or two
         let mut b = q.depth_at(r).min(scfg.window.max_batch).max(1);
         let mut td;
+        let mut rounds = 0usize;
         loop {
             let cost = ctx.batch_cost(tenant, b);
             td = if scfg.overlap {
-                timeline.earliest_start(&cost.profile, array_base, r)
+                timeline.earliest_start(&cost.profile, rmap, r)
             } else {
                 r.max(pool_free)
             };
@@ -420,12 +464,28 @@ fn validate_candidate(
             if b2 == b {
                 break;
             }
+            rounds += 1;
+            if rounds > scfg.window.max_batch {
+                // cycle guard: a staged profile's intervals move with the
+                // batch size, so under backfilling a bigger batch can fit
+                // an *earlier* gap and the fixed point may oscillate.
+                // Shrink strictly until the size is admissible at its own
+                // dispatch instant — the dispatcher admits exactly the
+                // validated size, so the committed profile is always the
+                // one checked here.
+                if b2 > b {
+                    break; // enough arrivals by td to admit exactly b
+                }
+            }
             b = b2;
         }
         // backlog snapshot at the candidate instant, taken before lazy
         // drops so expired-but-still-queued requests count toward the
-        // peak a client would have observed
-        st.peak_queue = st.peak_queue.max(q.depth_at(td));
+        // peak a client would have observed; the every-event sample in
+        // the main loop augments this, never undercuts it
+        let depth = q.depth_at(td);
+        st.peak_queue = st.peak_queue.max(depth);
+        st.peak_queue_at_dispatch = st.peak_queue_at_dispatch.max(depth);
         // lazy abandonment: clients that waited past their deadline are
         // gone by the time this tenant would dispatch
         if scfg.deadline_cy > 0 {
@@ -496,11 +556,31 @@ pub fn simulate_with_cache(
         memo: HashMap::new(),
     };
 
-    let mut timeline = ResourceTimeline::new();
+    // core-affinity rotation is a backfill refinement: the envelope
+    // arbiter keeps affinity 0 so `--no-backfill` reproduces the PR 3
+    // fused-complex dispatch bit-identically
+    let rmaps: Vec<ResMap> = tenancy
+        .tenants
+        .iter()
+        .map(|ten| ResMap {
+            array_base: ten.array_base,
+            core_base: if scfg.backfill && scfg.overlap {
+                ten.core_base
+            } else {
+                0
+            },
+        })
+        .collect();
+    let mut timeline = ResourceTimeline::new(scfg.backfill);
     let mut pool_free: u64 = 0; // serialized-mode single-server clock
-    let mut busy_union: u64 = 0;
-    let mut busy_end: u64 = 0;
+    // union of batch spans — an interval set, because a backfilled batch
+    // validated later may legitimately start in an idle gap *before* an
+    // earlier-dispatched batch (that is the point of backfilling; every
+    // start still respects its requests' arrivals and the resource
+    // timeline)
+    let mut inflight = IntervalSet::new();
     let mut makespan: u64 = 0;
+    let mut peak_backlog: u64 = 0;
 
     // next-event queue keyed by (dispatch instant, tenant id); stored
     // instants are lower bounds (queues only fill, resources only get
@@ -525,7 +605,6 @@ pub fn simulate_with_cache(
                 break;
             }
             heap.pop();
-            let base = tenancy.tenants[i].array_base;
             let Some((td, b, cycles)) = validate_candidate(
                 &mut queues[i],
                 &mut stats[i],
@@ -533,7 +612,7 @@ pub fn simulate_with_cache(
                 &mut ctx,
                 &timeline,
                 pool_free,
-                base,
+                rmaps[i],
             ) else {
                 continue; // queue drained (e.g. emptied by drops)
             };
@@ -566,6 +645,17 @@ pub fn simulate_with_cache(
         let Some(t) = t_min else { break };
         debug_assert!(!claims.is_empty());
 
+        // every-event backlog sampling (pre-admission): each tenant's
+        // pending depth at this dispatch instant, and the pool-wide
+        // simultaneous backlog no per-tenant instrument can reconstruct
+        let mut backlog: usize = 0;
+        for (i, q) in queues.iter().enumerate() {
+            let d = q.depth_at(t);
+            stats[i].peak_queue = stats[i].peak_queue.max(d);
+            backlog += d;
+        }
+        peak_backlog = peak_backlog.max(backlog as u64);
+
         let pick_tenant = arbiter.pick(&claims);
         // losers stay candidates at the same instant (still lower bounds)
         for c in &claims {
@@ -576,21 +666,20 @@ pub fn simulate_with_cache(
         let pick_ix = claims.iter().position(|c| c.tenant == pick_tenant).unwrap();
         let b_claim = claim_batches[pick_ix];
 
-        let admitted = queues[pick_tenant].admit(t, scfg.window.max_batch);
+        // admit exactly the validated batch: the timeline was checked
+        // against profile(b_claim), and validation guarantees at least
+        // b_claim arrivals are pending at `t`
+        let admitted = queues[pick_tenant].admit(t, b_claim);
         let bsz = admitted.len();
         debug_assert!(bsz >= 1);
         debug_assert_eq!(bsz, b_claim);
         let cost = ctx.batch_cost(pick_tenant, bsz);
         let end = t + cost.cycles;
-        timeline.commit(t, &cost.profile, tenancy.tenants[pick_tenant].array_base);
+        timeline.commit(t, &cost.profile, rmaps[pick_tenant]);
         pool_free = pool_free.max(end);
         makespan = makespan.max(end);
         // pool-busy union: overlapped spans do not double-count
-        let from = t.max(busy_end);
-        if end > from {
-            busy_union += end - from;
-        }
-        busy_end = busy_end.max(end);
+        inflight.insert(t, end);
 
         let st = &mut stats[pick_tenant];
         st.batches += 1;
@@ -605,14 +694,24 @@ pub fn simulate_with_cache(
         }
     }
 
-    // per-resource utilization breakdown from the committed timelines
-    let mut resource_busy = vec![
-        ResourceUtil::new("cores", timeline.busy_cycles(RES_CORES), 1),
+    // per-resource utilization breakdown from the committed timelines:
+    // the core-complex aggregate (8 units), each core's own row, then the
+    // shared engines
+    let cores_busy: u64 = (0..N_CORES).map(|c| timeline.busy_cycles(RES_CORE0 + c)).sum();
+    let mut resource_busy = vec![ResourceUtil::new("cores", cores_busy, N_CORES as u64)];
+    for c in 0..N_CORES {
+        resource_busy.push(ResourceUtil::new(
+            &res_label(RES_CORE0 + c),
+            timeline.busy_cycles(RES_CORE0 + c),
+            1,
+        ));
+    }
+    resource_busy.extend([
         ResourceUtil::new("dw_acc", timeline.busy_cycles(RES_DWACC), 1),
         ResourceUtil::new("ima_mux", timeline.busy_cycles(RES_IMA_MUX), 1),
         ResourceUtil::new("dma", timeline.busy_cycles(RES_DMA), 1),
         ResourceUtil::new("pcm_prog", timeline.busy_cycles(RES_PROG), 1),
-    ];
+    ]);
     let mut arrays_total = 0u64;
     let mut array_peak = (0u64, RES_ARRAY0);
     for (&res, &busy) in timeline.busy_map() {
@@ -631,11 +730,13 @@ pub fn simulate_with_cache(
         seed: scfg.seed,
         n_arrays: scfg.n_arrays,
         overlap: scfg.overlap,
+        backfill: scfg.backfill,
         stream_weights: scfg.stream_weights,
         duration_cycles: duration_cy,
         makespan_cycles: makespan,
-        busy_cycles: busy_union,
+        busy_cycles: inflight.total(),
         cycle_ns,
+        peak_backlog,
         tenants: stats,
         resource_busy,
     })
@@ -759,9 +860,16 @@ mod tests {
         let j = rep.to_json();
         assert!(j.req("inf_per_s").as_f64().unwrap() > 0.0);
         assert_eq!(j.req("overlap"), &Json::Bool(true));
+        assert_eq!(j.req("backfill"), &Json::Bool(true));
+        assert!(j.req("peak_backlog").as_f64().unwrap() >= 0.0);
         assert_eq!(j.req("tenants").as_arr().unwrap().len(), 2);
         let res = j.req("resources").as_arr().unwrap();
         assert!(res.iter().any(|r| r.req("name").as_str() == Some("cores")));
+        // the per-core rows ride along with the aggregate
+        for c in 0..8 {
+            let name = format!("core{c}");
+            assert!(res.iter().any(|r| r.req("name").as_str() == Some(name.as_str())));
+        }
         for r in res {
             let u = r.req("utilization").as_f64().unwrap();
             assert!((0.0..=1.0).contains(&u));

@@ -10,17 +10,31 @@
 //! inside its own slice and pays reprogramming + boundary DMA per batch,
 //! exactly as `coordinator::scheduler` charges it.
 //!
-//! Cross-tenant timing: dispatch is per-resource. Every batch carries a
-//! reservation profile over the pool's explicit resources (each array of
-//! the tenant's slice, plus the shared cores, DW accelerator, IMA mux,
-//! and L2/DMA port — see `coordinator::timeline`), so two tenants on
-//! disjoint slices overlap up to their contention on the shared engines,
-//! while `overlap: false` restores the one-batch-in-flight pool of PR 2.
+//! Cross-tenant timing: dispatch is per-resource and interval-precise.
+//! Every batch carries a reservation profile of merged busy `[start, end)`
+//! intervals over the pool's explicit resources — each array of the
+//! tenant's slice, each of the eight cores, the DW accelerator, the IMA
+//! mux, and the L2/DMA and PCM-programming ports (see
+//! `coordinator::timeline`). The backfilling arbiter (default) places a
+//! batch at the earliest instant its intervals fit, including inside idle
+//! gaps of batches already committed; `backfill: false` falls back to the
+//! conservative first-use→last-release envelope reservation, and
+//! `overlap: false` restores the one-batch-in-flight pool of PR 2.
+//!
+//! Core affinity: each tenant also gets a `core_base` — a rotation of the
+//! per-core resources `core0..7`. A big parallel section still engages
+//! all eight cores (rotation is then a no-op permutation), but small
+//! residual/ancillary sections of different tenants land on disjoint
+//! physical cores and genuinely share the complex, the way disjoint array
+//! slices already overlap. The envelope arbiter ignores the rotation so
+//! `--no-backfill` stays bit-identical to the PR 3 fused-complex model.
+//!
 //! The arbiter below only breaks ties between tenants dispatchable at the
 //! same instant.
 
 use std::rc::Rc;
 
+use crate::coordinator::timeline::N_CORES;
 use crate::coordinator::PlanCache;
 use crate::net::Network;
 use crate::tilepack::StagedPlacement;
@@ -33,6 +47,10 @@ pub struct Tenant {
     pub array_base: usize,
     /// Arrays in the slice (max over passes for staged tenants).
     pub arrays: usize,
+    /// Core-affinity rotation: this tenant's logical core `c` runs on
+    /// physical core `(core_base + c) % 8`. Only the backfilling arbiter
+    /// applies it (see the module docs).
+    pub core_base: usize,
     pub plan: Rc<StagedPlacement>,
     /// Device occupancy within the slice, in [0, 1].
     pub occupancy: f64,
@@ -74,7 +92,10 @@ pub fn place_tenants(
 ) -> Result<Tenancy, String> {
     let mut tenants = Vec::with_capacity(nets.len());
     let mut base = 0usize;
-    for net in nets {
+    // spread core affinities evenly: 2 tenants → bases 0 and 4, 4 tenants
+    // → 0/2/4/6, ≥ 8 tenants wrap
+    let core_stride = N_CORES / nets.len().clamp(1, N_CORES);
+    for (ti, net) in nets.iter().enumerate() {
         if base >= n_arrays {
             return Err(format!(
                 "no arrays left for `{}`: {base} of {n_arrays} already carved",
@@ -101,6 +122,7 @@ pub fn place_tenants(
             name: net.name.clone(),
             array_base: base,
             arrays,
+            core_base: (ti * core_stride) % N_CORES,
             plan,
             occupancy,
         });
@@ -233,6 +255,19 @@ mod tests {
         assert!(t.arrays_used() <= 64);
         assert!(a.occupancy > 0.0 && a.occupancy <= 1.0);
         assert!(b.occupancy > 0.0 && b.occupancy <= 1.0);
+    }
+
+    #[test]
+    fn core_affinity_spreads_across_tenants() {
+        let mut cache = PlanCache::new();
+        let nets = vec![mobilenet_v2(224), bottleneck()];
+        let t = place_tenants(&nets, 256, 64, false, &mut cache).unwrap();
+        assert_eq!(t.tenants[0].core_base, 0);
+        assert_eq!(t.tenants[1].core_base, 4);
+        // a lone tenant keeps affinity 0
+        let mut cache = PlanCache::new();
+        let t1 = place_tenants(&[bottleneck()], 256, 8, false, &mut cache).unwrap();
+        assert_eq!(t1.tenants[0].core_base, 0);
     }
 
     #[test]

@@ -58,6 +58,8 @@ impl Args {
                 | "sweep"
                 | "overlap"
                 | "no-overlap"
+                | "backfill"
+                | "no-backfill"
                 | "stream-weights"
         )
     }
@@ -138,6 +140,11 @@ mod tests {
         assert!(a.flag("no-overlap"));
         assert!(a.flag("stream-weights"));
         assert_eq!(a.opt("json"), Some("out.json"));
+        // the backfill switches are boolean too: a following token stays
+        // positional (or feeds --json), never becomes the flag's "value"
+        let c = argv("serve --no-backfill --json out.json");
+        assert!(c.flag("no-backfill"));
+        assert_eq!(c.opt("json"), Some("out.json"));
         let b = argv("scaleup --stream-weights positional --json");
         assert!(b.flag("stream-weights"));
         assert_eq!(b.positional, vec!["positional"]);

@@ -128,7 +128,11 @@ fn overlapped_tables_are_bit_identical_under_a_seed() {
 #[test]
 fn streamed_weights_beat_blocking_reprogramming_when_staged() {
     // the acceptance scenario: a staged MobileNetV2 tenant drains the
-    // same backlog strictly faster with `--stream-weights`
+    // same backlog strictly faster with `--stream-weights`. Pinned under
+    // envelope dispatch (the PR 3 discipline this property was proven
+    // for): batches serialize on their shared envelopes, so the per-batch
+    // strict win carries to the serve makespan — backfilling interleaves
+    // same-tenant batches and no longer guarantees strictness per se.
     let pm = PowerModel::paper();
     let models = vec![ModelTraffic {
         net: mobilenet_v2(224),
@@ -144,6 +148,7 @@ fn streamed_weights_beat_blocking_reprogramming_when_staged() {
             max_wait_cy: 0,
         },
         duration_s: 0.01,
+        backfill: false,
         ..ServeConfig::default()
     };
     let block = simulate(&models, &base, &pm).unwrap();

@@ -1,0 +1,142 @@
+//! Queue-depth sampling regressions (no artifacts needed).
+//!
+//! PR 3 sampled backlog only at each tenant's own dispatch-candidate
+//! instants. The serving loop now samples every tenant's depth at every
+//! event-loop step and aggregates the pool-wide simultaneous backlog
+//! (`ServeReport::peak_backlog`) — the quantity per-tenant dispatch
+//! sampling cannot see: two tenants whose bursts align stress the pool
+//! twice as hard as two tenants whose bursts are disjoint, yet the old
+//! per-tenant rows are identical in both cases. These tests pin:
+//!
+//! * the every-event sample never undercuts the retained PR 3 instrument
+//!   (`peak_queue ≥ peak_queue_at_dispatch`) on a bursty MMPP-2 mix;
+//! * the pool-wide peak is bracketed by the per-tenant peaks
+//!   (`max ≤ peak_backlog ≤ sum`);
+//! * exactly-aligned bursts add up (`peak_backlog = sum`) while
+//!   provably-disjoint bursts do not (`peak_backlog = max`), with
+//!   identical per-tenant rows in both scenarios — the undercount the
+//!   old output could never distinguish.
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::coordinator::{run_batched, BatchConfig, PlanCache, Strategy};
+use imcc::net::bottleneck::bottleneck;
+use imcc::serve::{
+    mnv2_bottleneck_pair, simulate, BatchWindow, ModelTraffic, ServeConfig, TrafficModel,
+};
+
+#[test]
+fn every_event_sampling_never_undercuts_dispatch_sampling_on_mmpp2() {
+    let pm = PowerModel::paper();
+    let mut models = mnv2_bottleneck_pair(400.0);
+    for m in &mut models {
+        m.traffic = TrafficModel::Bursty {
+            rate_per_s: 400.0,
+            burst: 8.0,
+            dwell_s: 0.005,
+        };
+    }
+    let scfg = ServeConfig {
+        duration_s: 0.05,
+        ..ServeConfig::default()
+    };
+    let rep = simulate(&models, &scfg, &pm).unwrap();
+    let mut max_peak = 0usize;
+    let mut sum_peak = 0usize;
+    for t in &rep.tenants {
+        assert_eq!(t.served, t.arrivals, "{}", t.name);
+        assert!(
+            t.peak_queue >= t.peak_queue_at_dispatch,
+            "{}: every-event peak {} < dispatch-instant peak {}",
+            t.name,
+            t.peak_queue,
+            t.peak_queue_at_dispatch
+        );
+        max_peak = max_peak.max(t.peak_queue);
+        sum_peak += t.peak_queue;
+    }
+    assert!(max_peak > 0, "bursty traffic must queue");
+    // the pool-wide simultaneous backlog is bracketed by the per-tenant
+    // peaks: it sees at least the busiest tenant (its peak is attained at
+    // a sampled event instant when no deadlines drop requests) and never
+    // more than all peaks stacked
+    assert!(rep.peak_backlog >= max_peak as u64, "{} < {max_peak}", rep.peak_backlog);
+    assert!(rep.peak_backlog <= sum_peak as u64, "{} > {sum_peak}", rep.peak_backlog);
+}
+
+/// `n` bottleneck tenants whose `n_req` requests all land at the given
+/// instants.
+fn burst_fleet(arrivals: &[Vec<u64>]) -> Vec<ModelTraffic> {
+    arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, arr)| {
+            let mut net = bottleneck();
+            net.name = format!("bn-{i}");
+            ModelTraffic {
+                net,
+                traffic: TrafficModel::Trace {
+                    arrivals_cy: arr.clone(),
+                },
+                weight: 1,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn aligned_bursts_stack_the_pool_backlog_disjoint_bursts_do_not() {
+    let pm = PowerModel::paper();
+    let n_req = 20usize;
+    let n_arrays = 16usize;
+    let scfg = ServeConfig {
+        n_arrays,
+        window: BatchWindow {
+            max_batch: 4,
+            max_wait_cy: 0,
+        },
+        duration_s: 0.2,
+        ..ServeConfig::default()
+    };
+
+    // aligned: both tenants burst at t=0 — the first event-loop step
+    // samples both full queues, so the pool peak is the *sum*
+    let aligned = simulate(&burst_fleet(&[vec![0; n_req], vec![0; n_req]]), &scfg, &pm).unwrap();
+    assert_eq!(aligned.peak_backlog, 2 * n_req as u64);
+
+    // disjoint: tenant B bursts only after tenant A has provably fully
+    // drained. Each of A's 5 batches of 4 dispatches no later than the
+    // previous batch's completion, so A's drain is bounded by 5× the
+    // 4-batch makespan — place B's burst past that bound.
+    let cfg = SystemConfig::scaled_up(n_arrays);
+    let mut cache = PlanCache::new();
+    let plan = cache.get_or_place(&bottleneck(), 256, n_arrays, false).unwrap();
+    let rep4 = run_batched(
+        &bottleneck(),
+        Strategy::ImaDw,
+        &cfg,
+        &pm,
+        &plan,
+        BatchConfig {
+            batch: 4,
+            ..BatchConfig::default()
+        },
+    );
+    let t_late = 5 * rep4.cycles + 10_000;
+    let duration_cy = (scfg.duration_s * 1e9 / cfg.freq.cycle_ns()) as u64;
+    assert!(t_late < duration_cy, "burst must land inside the horizon");
+    let disjoint =
+        simulate(&burst_fleet(&[vec![0; n_req], vec![t_late; n_req]]), &scfg, &pm).unwrap();
+    assert_eq!(disjoint.peak_backlog, n_req as u64);
+
+    // the per-tenant rows — all the PR 3 output had — are identical in
+    // the two scenarios: dispatch-instant sampling undercounts the
+    // aligned pool stress by exactly 2×
+    for (a, d) in aligned.tenants.iter().zip(disjoint.tenants.iter()) {
+        assert_eq!(a.served, n_req as u64);
+        assert_eq!(d.served, n_req as u64);
+        assert_eq!(a.peak_queue, n_req);
+        assert_eq!(d.peak_queue, n_req);
+        assert_eq!(a.peak_queue_at_dispatch, d.peak_queue_at_dispatch);
+    }
+    assert!(aligned.peak_backlog > disjoint.peak_backlog);
+}

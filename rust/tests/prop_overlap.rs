@@ -11,7 +11,7 @@
 //! tenants.
 
 use imcc::arch::{PowerModel, SystemConfig};
-use imcc::coordinator::timeline::RES_ARRAY0;
+use imcc::coordinator::timeline::{N_CORES, RES_ARRAY0, RES_CORE0};
 use imcc::coordinator::{run_batched, BatchConfig, PlanCache, Strategy};
 use imcc::net::bottleneck::bottleneck;
 use imcc::net::mobilenetv2::mobilenet_v2;
@@ -36,7 +36,7 @@ fn batch_profile_conservation_on_random_configs() {
         };
         let rep = run_batched(&net, Strategy::ImaDw, &cfg, &pm, &plan, cfgb);
 
-        // per-resource busy ≤ envelope ≤ makespan
+        // per-resource busy ≤ envelope ≤ makespan, interval sets canonical
         assert_eq!(rep.profile.len, rep.cycles);
         assert!(!rep.profile.spans.is_empty());
         for s in &rep.profile.spans {
@@ -45,6 +45,32 @@ fn batch_profile_conservation_on_random_configs() {
             assert!(s.busy <= s.last_release - s.first_use, "res {}", s.res);
             if s.res >= RES_ARRAY0 {
                 assert!(s.res - RES_ARRAY0 < plan.n_arrays);
+            }
+            // intervals: sorted, disjoint, non-adjacent, bracketing the
+            // envelope, summing exactly to the busy cycles
+            assert!(!s.intervals.is_empty(), "res {}", s.res);
+            for w in s.intervals.windows(2) {
+                assert!(w[0].1 < w[1].0, "res {}: {:?}", s.res, s.intervals);
+            }
+            assert_eq!(s.intervals.first().map(|&(a, _)| a), Some(s.first_use));
+            assert_eq!(s.intervals.last().map(|&(_, b)| b), Some(s.last_release));
+            let total: u64 = s.intervals.iter().map(|&(a, b)| b - a).sum();
+            assert_eq!(total, s.busy, "res {}", s.res);
+        }
+        // per-core prefix: core 0 carries every core layer, so it
+        // dominates every other core's envelope — the precondition that
+        // makes envelope dispatch equivalent to the PR 3 fused complex
+        if let Some(c0) = rep.profile.span(RES_CORE0) {
+            for c in 1..N_CORES {
+                if let Some(s) = rep.profile.span(RES_CORE0 + c) {
+                    assert!(s.first_use >= c0.first_use, "core{c}");
+                    assert!(s.last_release <= c0.last_release, "core{c}");
+                    assert!(s.busy <= c0.busy, "core{c}");
+                }
+            }
+        } else {
+            for c in 1..N_CORES {
+                assert!(rep.profile.span(RES_CORE0 + c).is_none(), "core{c}");
             }
         }
         // never faster than one request, never slower than the honest
