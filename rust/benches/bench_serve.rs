@@ -1,33 +1,19 @@
 //! Bench: the event-driven serving simulator — wall cost of simulating
 //! multi-model traffic (the tool itself must stay interactive for sweeps),
 //! the heap-based next-event queue at high tenant counts, histogram
-//! hot-path cost, the overlapped-vs-serialized dispatch comparison, and
-//! weight-update streaming on a staged tenant.
+//! hot-path cost, the overlapped-vs-serialized dispatch comparison,
+//! weight-update streaming on a staged tenant, and the long-horizon
+//! pruned-vs-unpruned timeline section (wall clock here; the
+//! deterministic counter baseline lives in `imcc bench-timeline`).
 
 use imcc::arch::PowerModel;
 use imcc::coordinator::PlanCache;
-use imcc::net::bottleneck::bottleneck;
 use imcc::net::mobilenetv2::mobilenet_v2;
 use imcc::serve::{
-    mnv2_bottleneck_pair as models, simulate, simulate_with_cache, LogHistogram, ModelTraffic,
-    Policy, ServeConfig, TrafficModel,
+    bottleneck_fleet as tenant_fleet, mnv2_bottleneck_pair as models, simulate,
+    simulate_with_cache, LogHistogram, ModelTraffic, Policy, ServeConfig, TrafficModel,
 };
 use imcc::util::bench::bench;
-
-/// `n` bottleneck tenants with distinct names under equal Poisson load.
-fn tenant_fleet(n: usize, rate_per_s: f64) -> Vec<ModelTraffic> {
-    (0..n)
-        .map(|i| {
-            let mut net = bottleneck();
-            net.name = format!("bn-{i}");
-            ModelTraffic {
-                net,
-                traffic: TrafficModel::Poisson { rate_per_s },
-                weight: 1,
-            }
-        })
-        .collect()
-}
 
 fn main() {
     println!("== bench_serve (event-driven multi-model serving) ==");
@@ -128,6 +114,40 @@ fn main() {
             rep.makespan_cycles as f64 * rep.cycle_ns * 1e-6,
             rep.inferences_per_s()
         );
+    }
+
+    // long-horizon pruning: same dispatch table, less gap-search work —
+    // wall clock here, counter deltas in the printed summary
+    println!("\npruned vs --no-prune, 4 tenants @ 150 req/s, long horizons:");
+    let mut prune_cache = PlanCache::with_capacity(64);
+    let fleet = tenant_fleet(4, 150.0);
+    for &duration_s in &[0.25f64, 1.0, 2.5] {
+        let mut row = format!("  {duration_s:>5.2} s:");
+        let mut probes = [0u64; 2];
+        for (slot, prune) in [(0usize, true), (1usize, false)] {
+            let scfg = ServeConfig {
+                n_arrays: 24,
+                prune,
+                duration_s,
+                ..ServeConfig::default()
+            };
+            let r = bench(
+                &format!("simulate_{}_{duration_s}s", if prune { "pruned" } else { "noprune" }),
+                2,
+                3000,
+                || simulate_with_cache(&fleet, &scfg, &pm, &mut prune_cache).unwrap(),
+            );
+            let rep = simulate_with_cache(&fleet, &scfg, &pm, &mut prune_cache).unwrap();
+            probes[slot] = rep.counters.probes;
+            row.push_str(&format!(
+                " {} {:>9.3} ms wall, {:>9} probes, {:>6} live iv;",
+                if prune { "pruned" } else { "no-prune" },
+                r.median_ns / 1e6,
+                rep.counters.probes,
+                rep.counters.live_intervals
+            ));
+        }
+        println!("{row} probe work x{:.2}", probes[1] as f64 / probes[0].max(1) as f64);
     }
 
     println!("\nper-policy tables, 2 models, 0.1 s @ 150 req/s/model:");

@@ -52,6 +52,31 @@ impl PowerModel {
         }
     }
 
+    /// Identity fingerprint (FNV-1a over the field bits) — the cache key
+    /// ingredient that keeps batch results computed under different power
+    /// models from ever aliasing (`coordinator::plan_cache`).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for f in [
+            self.core_active_w,
+            self.core_idle_w,
+            self.tcdm_active_w,
+            self.infra_w,
+            self.dw_active_w,
+            self.dw_idle_w,
+            self.ima_digital_active_w,
+            self.ima_digital_idle_w,
+            self.ima_analog_w,
+            self.ima_analog_fixed_frac,
+        ] {
+            for b in f.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        h
+    }
+
     /// Energy of one analog MVM job using `rows_used` word-lines and
     /// `cols_used` bit-lines (J). Unused bit-lines (and their ADCs) are
     /// clock/power-gated — HERMES has per-column ADCs — so energy scales

@@ -33,10 +33,12 @@ pub use l1_planner::{plan as l1_plan, L1Plan};
 pub use metrics::{LayerReport, RunReport};
 pub use plan_cache::{PlanCache, PlanKey};
 pub use scheduler::{run_batched, BatchConfig, BatchReport};
-pub use timeline::{IntervalSet, ResMap, ReservationProfile, ResourceSpan, ResourceTimeline};
+pub use timeline::{
+    IntervalSet, ResMap, ReservationProfile, ResourceSpan, ResourceTimeline, TimelineStats,
+};
 
 /// The four computation mappings of Fig. 9 (+ Fig. 13's taxonomy).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Strategy {
     Cores,
     ImaOnly { c_job: usize },

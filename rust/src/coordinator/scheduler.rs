@@ -58,8 +58,6 @@
 //!   schedule — only the makespan shrinks. With the flag off the schedule
 //!   is bit-identical to the original barrier model.
 
-use std::collections::BTreeMap;
-
 use crate::arch::{EnergyAccount, PowerModel, SystemConfig};
 use crate::ima::ImaArrayPool;
 use crate::net::Network;
@@ -260,9 +258,16 @@ pub fn run_batched(
     // greedy list schedule, batch-major across passes
     let mut reprogram_cycles: u64 = 0;
     let mut dma_cycles: u64 = 0;
-    // deterministic maps: the bottleneck tie-break iterates these
-    let mut busy_cy: BTreeMap<usize, u64> = BTreeMap::new();
-    let mut layer_contrib: BTreeMap<(usize, usize), u64> = BTreeMap::new(); // (res, layer)
+    // dense scratch over the plan's resource ids — the schedule loops are
+    // the hottest code in the crate, so no per-(request, layer) map ops.
+    // Programming chunks and layer arrays both stay below arrays_used.
+    let n_layers_total = net.layers.len();
+    let n_res = RES_ARRAY0 + plan.passes.iter().map(|p| p.arrays_used).max().unwrap_or(0);
+    let mut busy_cy: Vec<u64> = vec![0; n_res];
+    let mut touched: Vec<bool> = vec![false; n_res];
+    // busy cycles layer `li` contributed on resource `res`, at
+    // `res * n_layers_total + li` (the bottleneck attribution)
+    let mut layer_contrib: Vec<u64> = vec![0; n_res * n_layers_total];
     let mut builder = ProfileBuilder::new();
 
     let streamed = cfgb.stream_weights && !plan.is_resident();
@@ -274,7 +279,7 @@ pub fn run_batched(
         // their own arrays are programmed and their request's boundary
         // activation has refilled (DMA overlaps programming on its own
         // port). Resource state therefore persists across passes.
-        let mut res_free: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut res_free: Vec<u64> = vec![0; n_res];
         let mut prog_free: u64 = 0; // the programming port
         let mut dma_free: u64 = 0; // the cluster DMA port
         let mut req_end: Vec<u64> = vec![0; cfgb.batch];
@@ -284,11 +289,11 @@ pub fn run_batched(
             let chunks = pool.program_cycles_by_array(pass);
             for (&a, &cy) in &chunks {
                 let res = RES_ARRAY0 + a;
-                let start = prog_free.max(*res_free.get(&res).unwrap_or(&0));
+                let start = prog_free.max(res_free[res]);
                 let finish = start + cy;
                 builder.occupy(res, start, finish);
                 builder.occupy(RES_PROG, start, finish);
-                res_free.insert(res, finish);
+                res_free[res] = finish;
                 prog_free = finish;
             }
             reprogram_cycles += reprogram_per_pass[pi];
@@ -320,18 +325,19 @@ pub fn run_batched(
                 for (k, li) in (range.0..range.1).enumerate() {
                     let cy = costs[li].0;
                     let mut start = t;
-                    for res in &res_of[k] {
-                        start = start.max(*res_free.get(res).unwrap_or(&0));
+                    for &res in &res_of[k] {
+                        start = start.max(res_free[res]);
                     }
                     if k + 1 < n_layers {
                         start = start.max(finish_prev2[k + 1]);
                     }
                     let finish = start + cy;
-                    for res in &res_of[k] {
-                        builder.occupy(*res, start, finish);
-                        res_free.insert(*res, finish);
-                        *busy_cy.entry(*res).or_insert(0) += cy;
-                        *layer_contrib.entry((*res, li)).or_insert(0) += cy;
+                    for &res in &res_of[k] {
+                        builder.occupy(res, start, finish);
+                        res_free[res] = finish;
+                        busy_cy[res] += cy;
+                        touched[res] = true;
+                        layer_contrib[res * n_layers_total + li] += cy;
                     }
                     finish_cur[k] = finish;
                     t = finish;
@@ -349,6 +355,7 @@ pub fn run_batched(
     } else {
         // ---- blocking barrier schedule (bit-identical to PR 1/2) -----
         let mut now: u64 = 0; // global clock across passes
+        let mut res_free: Vec<u64> = vec![0; n_res];
         for (pi, (pass, &range)) in plan.passes.iter().zip(plan.pass_ranges.iter()).enumerate() {
             // crossing a cut: every request's boundary activation spills
             // to L2 and refills into L1 around the reprogramming barrier
@@ -378,7 +385,8 @@ pub fn run_batched(
 
             let res_of = layer_resources(pass, range);
             let n_layers = range.1 - range.0;
-            let mut res_free: BTreeMap<usize, u64> = BTreeMap::new();
+            // every resource opens the pass free at the barrier
+            res_free.fill(now);
             // per-layer finish times of the previous two requests — the
             // double-buffer backpressure (request r's layer k may not
             // start until request r−2 has consumed the k/k+1 boundary
@@ -397,8 +405,8 @@ pub fn run_batched(
                 for (k, li) in (range.0..range.1).enumerate() {
                     let cy = costs[li].0;
                     let mut start = t;
-                    for res in &res_of[k] {
-                        start = start.max(*res_free.get(res).unwrap_or(&now));
+                    for &res in &res_of[k] {
+                        start = start.max(res_free[res]);
                     }
                     // buffer slot at the output boundary frees once
                     // request r−2 has finished the consuming layer k+1
@@ -406,11 +414,12 @@ pub fn run_batched(
                         start = start.max(finish_prev2[k + 1]);
                     }
                     let finish = start + cy;
-                    for res in &res_of[k] {
-                        builder.occupy(*res, start, finish);
-                        res_free.insert(*res, finish);
-                        *busy_cy.entry(*res).or_insert(0) += cy;
-                        *layer_contrib.entry((*res, li)).or_insert(0) += cy;
+                    for &res in &res_of[k] {
+                        builder.occupy(res, start, finish);
+                        res_free[res] = finish;
+                        busy_cy[res] += cy;
+                        touched[res] = true;
+                        layer_contrib[res * n_layers_total + li] += cy;
                     }
                     finish_cur[k] = finish;
                     t = finish;
@@ -425,15 +434,29 @@ pub fn run_batched(
     };
 
     // pipeline bottleneck: the busiest resource, attributed to the layer
-    // that contributed the most busy time on it (deterministic: BTreeMap
-    // order breaks ties by lowest resource id / layer index last-wins)
+    // that contributed the most busy time on it (deterministic: ascending
+    // scan with ties falling to the later entry — the same winner the
+    // old BTreeMap + max_by_key tie-break produced)
     let mut bottleneck_layer = String::from("none");
-    if let Some((&res, _)) = busy_cy.iter().max_by_key(|(_, &cy)| cy) {
-        let top = layer_contrib
-            .iter()
-            .filter(|((r, _), _)| *r == res)
-            .max_by_key(|(_, &cy)| cy);
-        if let Some((&(_, li), _)) = top {
+    let mut best_res: Option<usize> = None;
+    let mut best_busy: u64 = 0;
+    for res in 0..n_res {
+        if touched[res] && busy_cy[res] >= best_busy {
+            best_res = Some(res);
+            best_busy = busy_cy[res];
+        }
+    }
+    if let Some(res) = best_res {
+        let mut top_li: Option<usize> = None;
+        let mut top_cy: u64 = 0;
+        for li in 0..n_layers_total {
+            let cy = layer_contrib[res * n_layers_total + li];
+            if cy > 0 && cy >= top_cy {
+                top_li = Some(li);
+                top_cy = cy;
+            }
+        }
+        if let Some(li) = top_li {
             bottleneck_layer = net.layers[li].name.clone();
         }
     }

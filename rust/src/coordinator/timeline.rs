@@ -46,10 +46,23 @@
 //!   achieves — the conservation the regression and property suites pin
 //!   (`tests/backfill_regression.rs`, `tests/prop_backfill.rs`).
 //!
-//! Committed intervals are never pruned: a serving run holds the full
-//! occupancy history (the per-resource utilization breakdown reads it),
-//! and the gap search stays `O(log n)` per probe via binary search.
+//! Long-horizon hygiene: committed intervals that end at or before a
+//! **watermark** — the oldest instant any future dispatch could probe
+//! (the serving loop threads the minimum over its tenants' next
+//! admission instants) — can be folded away with
+//! [`ResourceTimeline::prune_before`], bounding the gap search to the
+//! live window. Pruning is invisible to dispatch decisions: every future
+//! probe `[t+a, t+b)` has `t ≥ watermark`, so a pruned interval could
+//! never have conflicted again (`tests/prop_prune.rs` and the CI pruning
+//! smoke pin bit-identity against `--no-prune`). The cumulative busy
+//! tallies and scalar next-free frontiers survive pruning, so the
+//! utilization breakdown is unchanged. Storage is dense: per-resource
+//! state lives in `Vec`s indexed by the pool-absolute resource id, and
+//! [`TimelineStats`] counts the search work deterministically
+//! (binary-search halving steps, live/pruned interval nodes) so perf
+//! regressions pin on counters instead of wall clock.
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 
 /// Cores in the complex; core `c` is resource `RES_CORE0 + c`.
@@ -104,6 +117,11 @@ impl IntervalSet {
         self.ivs.is_empty()
     }
 
+    /// Stored interval nodes.
+    pub fn len(&self) -> usize {
+        self.ivs.len()
+    }
+
     /// Total covered time (sum of interval lengths).
     pub fn total(&self) -> u64 {
         self.ivs.iter().map(|&(a, b)| b - a).sum()
@@ -140,10 +158,31 @@ impl IntervalSet {
     }
 
     /// Insert `[start, end)`, merging overlapping or adjacent intervals
-    /// (empty intervals are ignored).
+    /// (empty intervals are ignored). Inserts that land at or beyond the
+    /// last stored interval — the common case for committed schedules,
+    /// whose occupancies arrive in nondecreasing order per resource —
+    /// append or extend the tail in O(1) amortized; only an insert that
+    /// begins strictly before the tail pays the general merge.
     pub fn insert(&mut self, start: u64, end: u64) {
         if start >= end {
             return;
+        }
+        match self.ivs.last().copied() {
+            None => {
+                self.ivs.push((start, end));
+                return;
+            }
+            Some((ls, le)) => {
+                if start > le {
+                    self.ivs.push((start, end));
+                    return;
+                }
+                if start >= ls {
+                    // overlaps or touches the tail interval only
+                    self.ivs.last_mut().unwrap().1 = le.max(end);
+                    return;
+                }
+            }
         }
         // lo: first interval whose end touches `start`; hi: one past the
         // last interval whose start touches `end` — everything in
@@ -157,6 +196,17 @@ impl IntervalSet {
         let s = start.min(self.ivs[lo].0);
         let e = end.max(self.ivs[hi - 1].1);
         self.ivs.splice(lo..hi, std::iter::once((s, e)));
+    }
+
+    /// Drop every interval that ends at or before `watermark`; an
+    /// interval straddling the watermark stays whole. Returns how many
+    /// nodes were removed.
+    pub fn prune_before(&mut self, watermark: u64) -> usize {
+        let k = self.ivs.partition_point(|&(_, b)| b <= watermark);
+        if k > 0 {
+            self.ivs.drain(..k);
+        }
+        k
     }
 
     /// Panic unless the canonical invariants hold: entries non-empty,
@@ -292,10 +342,41 @@ impl ResMap {
     }
 }
 
+/// Deterministic work/occupancy counters of one [`ResourceTimeline`] —
+/// what the perf trajectory pins on (counters, not wall clock, so the
+/// regression checks are not flaky).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TimelineStats {
+    /// Gap-search probe work: binary-search halving steps spent inside
+    /// [`ResourceTimeline::earliest_start`] (envelope mode counts one
+    /// step per span frontier check). Shrinking the committed sets —
+    /// pruning — shrinks this at identical dispatch decisions.
+    pub probes: u64,
+    /// Interval nodes currently stored across all resources.
+    pub live_nodes: u64,
+    /// High-water mark of `live_nodes` over the run.
+    pub peak_live_nodes: u64,
+    /// Interval nodes folded into the watermark so far.
+    pub pruned_nodes: u64,
+    /// Everything ending at or before this instant has been folded away.
+    pub watermark: u64,
+}
+
+/// Binary-search halving steps over a sorted set of `n > 0` nodes — the
+/// deterministic unit [`TimelineStats::probes`] counts (`partition_point`
+/// always runs the full halving sequence, so the count is a pure
+/// function of the set size).
+fn search_steps(n: usize) -> u64 {
+    (usize::BITS - n.leading_zeros()) as u64
+}
+
 /// Committed occupancy over every resource of one pool, plus cumulative
 /// busy cycles for the utilization breakdown. Array ids are pool-absolute;
 /// profiles carry slice-local ids, so every operation takes the tenant's
-/// [`ResMap`] and relocates arrays/cores onto the pool.
+/// [`ResMap`] and relocates arrays/cores onto the pool. Per-resource
+/// state is dense (`Vec`s indexed by resource id), grown on demand —
+/// [`with_resources`](ResourceTimeline::with_resources) preallocates a
+/// whole pool.
 ///
 /// Two dispatch disciplines share the structure:
 ///
@@ -307,24 +388,57 @@ impl ResMap {
 ///   scalar next-free times (the committed envelope), bit-identical to
 ///   the PR 3 arbiter; on any one timeline state the envelope answer is
 ///   never earlier than the backfilled one.
+///
+/// Long-horizon runs call [`prune_before`](ResourceTimeline::prune_before)
+/// with the oldest instant any future dispatch could probe; everything
+/// committed wholly before it folds into the pruned tally and the gap
+/// search walks only the live window.
 #[derive(Clone, Debug)]
 pub struct ResourceTimeline {
     backfill: bool,
-    /// res → committed busy intervals (absolute cycles).
-    busy_iv: BTreeMap<usize, IntervalSet>,
-    /// res → scalar next-free time (max committed release).
-    free: BTreeMap<usize, u64>,
-    /// res → cumulative busy cycles.
-    busy: BTreeMap<usize, u64>,
+    /// Committed busy intervals per pool-absolute resource id.
+    busy_iv: Vec<IntervalSet>,
+    /// Scalar next-free time per resource (max committed release).
+    free: Vec<u64>,
+    /// Cumulative busy cycles per resource.
+    busy: Vec<u64>,
+    /// Everything ending at or before this has been folded away.
+    watermark: u64,
+    /// Interval nodes currently stored across all resources.
+    live_nodes: usize,
+    peak_live_nodes: usize,
+    pruned_nodes: u64,
+    /// Gap-search probe steps; a `Cell` because `earliest_start` is a
+    /// read-only query of the committed state.
+    probes: Cell<u64>,
 }
 
 impl ResourceTimeline {
     pub fn new(backfill: bool) -> ResourceTimeline {
+        ResourceTimeline::with_resources(backfill, 0)
+    }
+
+    /// A timeline preallocated for resource ids `0..n_res` (committing a
+    /// higher id still works — storage grows on demand).
+    pub fn with_resources(backfill: bool, n_res: usize) -> ResourceTimeline {
         ResourceTimeline {
             backfill,
-            busy_iv: BTreeMap::new(),
-            free: BTreeMap::new(),
-            busy: BTreeMap::new(),
+            busy_iv: vec![IntervalSet::new(); n_res],
+            free: vec![0; n_res],
+            busy: vec![0; n_res],
+            watermark: 0,
+            live_nodes: 0,
+            peak_live_nodes: 0,
+            pruned_nodes: 0,
+            probes: Cell::new(0),
+        }
+    }
+
+    fn grow(&mut self, res: usize) {
+        if res >= self.busy_iv.len() {
+            self.busy_iv.resize_with(res + 1, IntervalSet::new);
+            self.free.resize(res + 1, 0);
+            self.busy.resize(res + 1, 0);
         }
     }
 
@@ -343,29 +457,67 @@ impl ResourceTimeline {
     }
 
     /// When `res` (pool-absolute) next becomes free of *all* committed
-    /// work — the envelope frontier, maintained in both modes.
+    /// work — the envelope frontier, maintained in both modes and never
+    /// affected by pruning.
     pub fn free_at(&self, res: usize) -> u64 {
-        *self.free.get(&res).unwrap_or(&0)
+        self.free.get(res).copied().unwrap_or(0)
     }
 
-    /// Cycles `res` (pool-absolute) has been held so far.
+    /// Cycles `res` (pool-absolute) has been held so far (pruning never
+    /// forgets busy tallies).
     pub fn busy_cycles(&self, res: usize) -> u64 {
-        *self.busy.get(&res).unwrap_or(&0)
+        self.busy.get(res).copied().unwrap_or(0)
     }
 
-    /// Cumulative busy cycles per pool-absolute resource id.
-    pub fn busy_map(&self) -> &BTreeMap<usize, u64> {
-        &self.busy
+    /// Cumulative busy cycles per pool-absolute resource id, ascending;
+    /// resources never committed are skipped.
+    pub fn busy_per_resource(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.busy.iter().copied().enumerate().filter(|&(_, b)| b > 0)
     }
 
-    /// Committed busy intervals of `res` (pool-absolute), canonical form.
+    /// Committed busy intervals of `res` (pool-absolute), canonical form
+    /// (intervals older than the watermark may have been pruned away).
     pub fn intervals(&self, res: usize) -> &[(u64, u64)] {
-        self.busy_iv.get(&res).map_or(&[], |s| s.as_slice())
+        self.busy_iv.get(res).map_or(&[], |s| s.as_slice())
     }
 
-    /// Does `[start, end)` intersect committed work on `res`?
+    /// Does `[start, end)` intersect committed (unpruned) work on `res`?
     pub fn overlaps(&self, res: usize, start: u64, end: u64) -> bool {
-        self.busy_iv.get(&res).is_some_and(|s| s.overlaps(start, end))
+        self.busy_iv.get(res).is_some_and(|s| s.overlaps(start, end))
+    }
+
+    /// Deterministic work/occupancy counters (see [`TimelineStats`]).
+    pub fn stats(&self) -> TimelineStats {
+        TimelineStats {
+            probes: self.probes.get(),
+            live_nodes: self.live_nodes as u64,
+            peak_live_nodes: self.peak_live_nodes as u64,
+            pruned_nodes: self.pruned_nodes,
+            watermark: self.watermark,
+        }
+    }
+
+    /// Fold every committed interval that ends at or before `watermark`
+    /// into the pruned tally, bounding the gap search to the live window.
+    ///
+    /// Sound whenever no future `earliest_start`/`commit` touches an
+    /// instant before `watermark`: a probe `[t+a, t+b)` with
+    /// `t ≥ watermark` cannot intersect an interval ending at or before
+    /// it, so pruning never changes a dispatch decision — only how much
+    /// committed history the search walks. The serving loop passes the
+    /// minimum over its tenants' next admission instants, which
+    /// lower-bounds every future `not_before`. Watermarks are monotone;
+    /// calls that do not advance it are free.
+    pub fn prune_before(&mut self, watermark: u64) {
+        if watermark <= self.watermark {
+            return;
+        }
+        self.watermark = watermark;
+        for set in &mut self.busy_iv {
+            let dropped = set.prune_before(watermark);
+            self.live_nodes -= dropped;
+            self.pruned_nodes += dropped as u64;
+        }
     }
 
     /// Earliest instant ≥ `not_before` at which a batch with this profile
@@ -376,61 +528,80 @@ impl ResourceTimeline {
     /// conflict until a feasible placement (possibly inside gaps) is
     /// found, so the result is never later than the envelope answer.
     pub fn earliest_start(&self, prof: &ReservationProfile, map: ResMap, not_before: u64) -> u64 {
-        if !self.backfill {
+        let mut steps: u64 = 0;
+        let found = if !self.backfill {
             let mut t = not_before;
             for s in &prof.spans {
+                steps += 1;
                 let free = self.free_at(map.map(s.res));
                 t = t.max(free.saturating_sub(s.first_use));
             }
-            return t;
-        }
-        let mut t = not_before;
-        'search: loop {
-            for s in &prof.spans {
-                let Some(set) = self.busy_iv.get(&map.map(s.res)) else {
-                    continue;
-                };
-                for &(a, b) in &s.intervals {
-                    if let Some(end) = set.first_conflict_end(t + a, t + b) {
-                        // the conflicting interval ends past t + a, so
-                        // this strictly advances t — termination follows
-                        // from the finite committed set
-                        t = end - a;
-                        continue 'search;
+            t
+        } else {
+            let mut t = not_before;
+            'search: loop {
+                for s in &prof.spans {
+                    let Some(set) = self.busy_iv.get(map.map(s.res)) else {
+                        continue;
+                    };
+                    if set.is_empty() {
+                        continue;
+                    }
+                    let cost = search_steps(set.len());
+                    for &(a, b) in &s.intervals {
+                        steps += cost;
+                        if let Some(end) = set.first_conflict_end(t + a, t + b) {
+                            // the conflicting interval ends past t + a, so
+                            // this strictly advances t — termination
+                            // follows from the finite committed set
+                            t = end - a;
+                            continue 'search;
+                        }
                     }
                 }
+                break t;
             }
-            return t;
-        }
+        };
+        self.probes.set(self.probes.get() + steps);
+        found
     }
 
     /// Commit a batch dispatched at `t`. Backfill mode records each busy
     /// interval; envelope mode records the whole first-use→last-release
     /// envelope (exactly what the PR 3 arbiter reserved). Both push the
     /// scalar next-free frontier and accumulate busy cycles. Callers must
-    /// have chosen `t ≥ earliest_start(..)`.
+    /// have chosen `t ≥ earliest_start(..)`, and must not commit behind
+    /// the pruning watermark (such intervals would be invisible).
     pub fn commit(&mut self, t: u64, prof: &ReservationProfile, map: ResMap) {
+        debug_assert!(
+            t >= self.watermark,
+            "commit at {t} behind the pruning watermark {}",
+            self.watermark
+        );
         for s in &prof.spans {
             let res = map.map(s.res);
-            let set = self.busy_iv.entry(res).or_default();
+            self.grow(res);
+            let before = self.busy_iv[res].len();
             if self.backfill {
                 for &(a, b) in &s.intervals {
                     debug_assert!(
-                        !set.overlaps(t + a, t + b),
+                        !self.busy_iv[res].overlaps(t + a, t + b),
                         "double-booked res {res} over [{}, {})",
                         t + a,
                         t + b
                     );
-                    set.insert(t + a, t + b);
+                    self.busy_iv[res].insert(t + a, t + b);
                 }
             } else {
-                set.insert(t + s.first_use, t + s.last_release);
+                self.busy_iv[res].insert(t + s.first_use, t + s.last_release);
             }
+            self.live_nodes += self.busy_iv[res].len();
+            self.live_nodes -= before;
             let release = t + s.last_release;
-            let e = self.free.entry(res).or_insert(0);
-            *e = (*e).max(release);
-            *self.busy.entry(res).or_insert(0) += s.busy;
+            self.free[res] = self.free[res].max(release);
+            self.busy[res] += s.busy;
         }
+        self.peak_live_nodes = self.peak_live_nodes.max(self.live_nodes);
     }
 }
 
@@ -631,5 +802,113 @@ mod tests {
         assert_eq!((a.first_use, a.last_release, a.busy), (0, 9, 9));
         assert_eq!(a.intervals, vec![(0, 9)]);
         assert_eq!(p.total_busy(), 24);
+    }
+
+    #[test]
+    fn insert_append_fast_path_keeps_canonical_form() {
+        // nondecreasing inserts hit the O(1) tail path in every flavor:
+        // disjoint append, adjacency, overlap, nesting
+        let mut t = IntervalSet::new();
+        t.insert(0, 5);
+        t.insert(5, 9); // adjacent: fuses with the tail
+        t.insert(7, 12); // overlapping: extends the tail
+        t.insert(3, 4); // nested in the tail: bounds unchanged
+        assert_eq!(t.as_slice(), &[(0, 12)]);
+        t.insert(20, 30); // strictly past the tail: appended
+        t.insert(1, 2); // before the tail: general path, still nested
+        assert_eq!(t.as_slice(), &[(0, 12), (20, 30)]);
+        t.check_invariants();
+        let mut s = IntervalSet::new();
+        for i in 0..100u64 {
+            s.insert(i * 10, i * 10 + 5);
+        }
+        assert_eq!(s.len(), 100);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn interval_set_prunes_only_the_dead_prefix() {
+        let mut s = IntervalSet::new();
+        s.insert(0, 10);
+        s.insert(20, 30);
+        s.insert(40, 50);
+        assert_eq!(s.prune_before(25), 1, "only [0, 10) is fully dead");
+        // [20, 30) straddles the watermark and stays whole
+        assert_eq!(s.as_slice(), &[(20, 30), (40, 50)]);
+        assert_eq!(s.prune_before(30), 1);
+        assert_eq!(s.prune_before(30), 0, "idempotent at the same watermark");
+        assert_eq!(s.as_slice(), &[(40, 50)]);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn pruning_is_invisible_to_future_probes() {
+        // two identical timelines, one pruned at the oldest future probe:
+        // every earliest_start at or past the watermark must agree, and
+        // the envelope frontier / busy tallies must survive the fold
+        let committed = prof(&[(RES_DWACC, &[(0, 10), (20, 30), (50, 60)])], 60);
+        let mut a = ResourceTimeline::backfilling();
+        let mut b = ResourceTimeline::backfilling();
+        a.commit(0, &committed, ResMap::default());
+        b.commit(0, &committed, ResMap::default());
+        b.prune_before(40);
+        assert_eq!(b.stats().pruned_nodes, 2);
+        assert_eq!(b.stats().watermark, 40);
+        assert!(b.stats().live_nodes < a.stats().live_nodes);
+        let probe = prof(&[(RES_DWACC, &[(0, 15)])], 15);
+        for nb in [40u64, 45, 55, 100] {
+            assert_eq!(
+                a.earliest_start(&probe, ResMap::default(), nb),
+                b.earliest_start(&probe, ResMap::default(), nb),
+                "not_before {nb}"
+            );
+        }
+        assert_eq!(b.free_at(RES_DWACC), 60, "frontier survives pruning");
+        assert_eq!(b.busy_cycles(RES_DWACC), 30, "busy tally survives pruning");
+        assert_eq!(b.intervals(RES_DWACC), &[(50, 60)]);
+    }
+
+    #[test]
+    fn stats_count_probes_and_live_nodes_deterministically() {
+        let mut tl = ResourceTimeline::with_resources(true, RES_ARRAY0 + 4);
+        let p = prof(&[(RES_CORE0, &[(0, 10)])], 10);
+        assert_eq!(tl.stats(), TimelineStats::default());
+        let _ = tl.earliest_start(&p, ResMap::default(), 0);
+        assert_eq!(tl.stats().probes, 0, "empty committed sets cost nothing");
+        tl.commit(0, &p, ResMap::default());
+        assert_eq!(tl.stats().live_nodes, 1);
+        assert_eq!(tl.stats().peak_live_nodes, 1);
+        let _ = tl.earliest_start(&p, ResMap::default(), 0);
+        let probes_once = tl.stats().probes;
+        assert!(probes_once > 0);
+        let _ = tl.earliest_start(&p, ResMap::default(), 0);
+        assert_eq!(tl.stats().probes, 2 * probes_once, "probe cost is deterministic");
+    }
+
+    #[test]
+    fn live_node_accounting_tracks_merges() {
+        let mut tl = ResourceTimeline::backfilling();
+        let a = prof(&[(RES_DMA, &[(0, 10)])], 10);
+        let b = prof(&[(RES_DMA, &[(10, 20)])], 20);
+        tl.commit(0, &a, ResMap::default());
+        assert_eq!(tl.stats().live_nodes, 1);
+        tl.commit(0, &b, ResMap::default());
+        // adjacent intervals fuse: still one node
+        assert_eq!(tl.stats().live_nodes, 1);
+        assert_eq!(tl.stats().peak_live_nodes, 1);
+        assert_eq!(tl.intervals(RES_DMA), &[(0, 20)]);
+        tl.prune_before(20);
+        assert_eq!(tl.stats().live_nodes, 0);
+        assert_eq!(tl.stats().pruned_nodes, 1);
+        assert_eq!(tl.busy_cycles(RES_DMA), 20);
+    }
+
+    #[test]
+    fn busy_per_resource_skips_untouched_ids() {
+        let mut tl = ResourceTimeline::with_resources(true, RES_ARRAY0 + 8);
+        let p = prof(&[(RES_ARRAY0 + 2, &[(0, 10)]), (RES_DWACC, &[(0, 4)])], 10);
+        tl.commit(0, &p, ResMap::default());
+        let got: Vec<(usize, u64)> = tl.busy_per_resource().collect();
+        assert_eq!(got, vec![(RES_DWACC, 4), (RES_ARRAY0 + 2, 10)]);
     }
 }

@@ -27,6 +27,10 @@ commands (one per paper exhibit):
   serve                   event-driven multi-model serving: open-loop traffic
                           into one pool, dynamic batching, latency percentiles
                           (--sweep for the rate × policy table)
+  bench-timeline          long-horizon timeline perf harness: multi-tenant
+                          serve at several horizons, pruned vs --no-prune,
+                          wall-clock + deterministic counters; exits non-zero
+                          on any dispatch divergence or counter regression
   infer [--tiny]          functional MobileNetV2 inference (bit-exact vs the
                           JAX golden logits when artifacts are present)
   all [--json FILE]       run everything; optionally dump JSON
@@ -56,11 +60,18 @@ options:
   --no-backfill           `serve`: conservative envelope reservations (the
                           PR 3 model; default backfills batches into idle
                           gaps of committed reservations)
+  --no-prune              `serve`: keep the full committed interval history
+                          instead of folding intervals behind the watermark
+                          (dispatch tables are bit-identical either way;
+                          only counters move; `bench-timeline` always runs
+                          both modes and rejects the flag)
   --stream-weights        `serve`/`scaleup`: stream staged PCM reprogramming
                           under the previous pass's compute tail
-  --json [FILE]           `scaleup`/`serve`: also write a machine-readable
-                          bench baseline (default BENCH_scaleup.json /
-                          BENCH_serve.json)
+  --tenants N             `bench-timeline`: fleet size          (default 4)
+  --json [FILE]           `scaleup`/`serve`/`bench-timeline`: also write a
+                          machine-readable bench baseline (default
+                          BENCH_scaleup.json / BENCH_serve.json /
+                          BENCH_timeline.json)
   --sweep                 `serve`: rate × policy percentile table over the
                           default model pair; honors only --arrays --rate
                           --policy --duration --seed --no-overlap
@@ -216,6 +227,9 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
     if args.flag("backfill") && args.flag("no-backfill") {
         return Err("--backfill and --no-backfill are mutually exclusive".into());
     }
+    if args.flag("prune") && args.flag("no-prune") {
+        return Err("--prune and --no-prune are mutually exclusive".into());
+    }
     let scfg = ServeConfig {
         n_arrays: arrays,
         policy,
@@ -227,6 +241,7 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
         overlap: !args.flag("no-overlap"),
         backfill: !args.flag("no-backfill"),
         stream_weights: args.flag("stream-weights"),
+        prune: !args.flag("no-prune"),
         seed,
         duration_s,
         deadline_cy: (deadline_ms * 1e6 / cycle_ns) as u64,
@@ -242,8 +257,48 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
         makespan_s * 1e3,
         rep.inferences_per_s(),
     );
+    let c = rep.counters;
+    println!(
+        "counters: {} steps, {} validations, {} probe steps, {} live / {} peak / {} pruned \
+         interval nodes",
+        c.steps,
+        c.validations,
+        c.probes,
+        c.live_intervals,
+        c.peak_live_intervals,
+        c.pruned_intervals
+    );
     if let Some(path) = json_out(args, "BENCH_serve.json") {
         write_json(&path, &rep.to_json())?;
+    }
+    Ok(())
+}
+
+/// `imcc bench-timeline`: the long-horizon timeline perf harness —
+/// multi-tenant serve at several horizons, pruned vs unpruned, wall-clock
+/// and deterministic counters; errors (non-zero exit) on any dispatch
+/// divergence or counter regression.
+fn run_bench_timeline(args: &Args, pm: &PowerModel) -> Result<(), String> {
+    use imcc::serve::DEFAULT_SEED;
+
+    if args.flag("prune") || args.flag("no-prune") {
+        return Err(
+            "bench-timeline always runs pruned and unpruned side by side; drop \
+             --prune/--no-prune (use `serve --no-prune` for a single mode)"
+                .into(),
+        );
+    }
+    let tenants: usize = args.opt_parse("tenants", 4usize);
+    let rate: f64 = args.opt_parse("rate", 150.0);
+    let duration_s: f64 = args.opt_parse("duration", 0.25);
+    let seed = match args.opt("seed") {
+        None => DEFAULT_SEED,
+        Some(s) => parse_seed(s)?,
+    };
+    let rep = report::bench_timeline::generate(pm, tenants, rate, duration_s, seed)?;
+    rep.print();
+    if let Some(path) = json_out(args, "BENCH_timeline.json") {
+        write_json(&path, &rep.data)?;
     }
     Ok(())
 }
@@ -363,6 +418,12 @@ fn main() {
             };
             if let Err(e) = run {
                 eprintln!("serve failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        "bench-timeline" => {
+            if let Err(e) = run_bench_timeline(&args, &pm) {
+                eprintln!("bench-timeline failed: {e}");
                 std::process::exit(1);
             }
         }

@@ -1,0 +1,208 @@
+//! `imcc bench-timeline` — the long-horizon timeline performance harness.
+//!
+//! Serves a multi-tenant bottleneck fleet at several arrival horizons
+//! (the largest is 10× the base — the long-horizon acceptance point),
+//! once with watermark pruning and once with `--no-prune`, and reports
+//! *both* measurements the perf trajectory needs:
+//!
+//! * **deterministic counters** (`ServeCounters`: event-loop steps,
+//!   candidate validations, gap-search probe steps, live/pruned interval
+//!   nodes) — reproducible under the fixed seed, so CI can gate on them
+//!   without flaking;
+//! * **wall clock** per simulation — the human-facing number, recorded in
+//!   `BENCH_timeline.json` but never gated on.
+//!
+//! The harness hard-fails (the CLI exits non-zero) if the pruned and
+//! unpruned dispatch tables diverge anywhere, or if, at the longest
+//! horizon, pruning does not strictly reduce both the probe work and the
+//! live-interval footprint — the two regressions this PR's tentpole
+//! exists to prevent.
+
+use std::time::Instant;
+
+use crate::arch::PowerModel;
+use crate::coordinator::PlanCache;
+use crate::serve::{bottleneck_fleet, simulate_with_cache, ServeConfig, ServeReport};
+use crate::util::json::{obj, Json};
+use crate::util::table::{f, Table};
+
+use super::Report;
+
+/// Horizon multipliers over the base duration; the last entry is the
+/// ≥ 10× long-horizon point the acceptance criteria pin.
+pub const DEFAULT_MULTIPLIERS: &[u64] = &[1, 4, 10];
+
+/// The dispatch table and every aggregate derived from it must be
+/// bit-identical between the pruned and unpruned runs.
+fn check_identical(pruned: &ServeReport, unpruned: &ServeReport) -> Result<(), String> {
+    if pruned.render_table() != unpruned.render_table() {
+        return Err("pruned and unpruned dispatch tables diverge".into());
+    }
+    if pruned.makespan_cycles != unpruned.makespan_cycles
+        || pruned.busy_cycles != unpruned.busy_cycles
+        || pruned.peak_backlog != unpruned.peak_backlog
+    {
+        return Err(format!(
+            "pruned/unpruned aggregates diverge: makespan {} vs {}, busy {} vs {}, \
+             peak backlog {} vs {}",
+            pruned.makespan_cycles,
+            unpruned.makespan_cycles,
+            pruned.busy_cycles,
+            unpruned.busy_cycles,
+            pruned.peak_backlog,
+            unpruned.peak_backlog
+        ));
+    }
+    Ok(())
+}
+
+/// Run the sweep: `n_tenants` bottleneck tenants at `rate` req/s each,
+/// horizons `base_duration_s × DEFAULT_MULTIPLIERS`, pruned vs unpruned.
+pub fn generate(
+    pm: &PowerModel,
+    n_tenants: usize,
+    rate: f64,
+    base_duration_s: f64,
+    seed: u64,
+) -> Result<Report, String> {
+    let models = bottleneck_fleet(n_tenants, rate);
+    let n_arrays = 6 * n_tenants.max(1);
+    let title = format!(
+        "Timeline perf — {n_tenants} tenants, {rate} req/s each, {n_arrays} arrays, \
+         seed {seed:#x}, pruned vs --no-prune"
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "horizon s",
+            "mode",
+            "wall ms",
+            "makespan cy",
+            "served",
+            "steps",
+            "probes",
+            "live iv",
+            "peak iv",
+            "pruned iv",
+        ],
+    );
+    let mut points = Vec::new();
+    // one cache for the whole sweep: placement runs once, batch profiles
+    // intern across every (duration, mode) point
+    let mut cache = PlanCache::with_capacity(32);
+
+    for &mult in DEFAULT_MULTIPLIERS {
+        let duration_s = base_duration_s * mult as f64;
+        let mut reports: Vec<(bool, ServeReport, f64)> = Vec::new();
+        for prune in [true, false] {
+            let scfg = ServeConfig {
+                n_arrays,
+                prune,
+                seed,
+                duration_s,
+                ..ServeConfig::default()
+            };
+            let t0 = Instant::now();
+            let rep = simulate_with_cache(&models, &scfg, pm, &mut cache)?;
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            reports.push((prune, rep, wall_ms));
+        }
+        let (_, pruned_rep, _) = &reports[0];
+        let (_, unpruned_rep, _) = &reports[1];
+        check_identical(pruned_rep, unpruned_rep)
+            .map_err(|e| format!("horizon {duration_s} s: {e}"))?;
+        if mult == *DEFAULT_MULTIPLIERS.last().unwrap() {
+            let (p, u) = (pruned_rep.counters, unpruned_rep.counters);
+            if p.probes >= u.probes {
+                return Err(format!(
+                    "long horizon: pruned probe work {} is not below unpruned {}",
+                    p.probes,
+                    u.probes
+                ));
+            }
+            if p.live_intervals >= u.live_intervals {
+                return Err(format!(
+                    "long horizon: pruned live intervals {} not below unpruned {}",
+                    p.live_intervals,
+                    u.live_intervals
+                ));
+            }
+        }
+        for (prune, rep, wall_ms) in &reports {
+            let c = rep.counters;
+            let mode = if *prune { "pruned" } else { "no-prune" };
+            t.row([
+                f(duration_s, 2),
+                mode.into(),
+                f(*wall_ms, 2),
+                rep.makespan_cycles.to_string(),
+                rep.total_served().to_string(),
+                c.steps.to_string(),
+                c.probes.to_string(),
+                c.live_intervals.to_string(),
+                c.peak_live_intervals.to_string(),
+                c.pruned_intervals.to_string(),
+            ]);
+            points.push(obj([
+                ("duration_s", duration_s.into()),
+                ("prune", (*prune).into()),
+                ("wall_ms", (*wall_ms).into()),
+                ("makespan_cycles", (rep.makespan_cycles as f64).into()),
+                ("served", (rep.total_served() as f64).into()),
+                ("steps", (c.steps as f64).into()),
+                ("validations", (c.validations as f64).into()),
+                ("probes", (c.probes as f64).into()),
+                ("live_intervals", (c.live_intervals as f64).into()),
+                ("peak_live_intervals", (c.peak_live_intervals as f64).into()),
+                ("pruned_intervals", (c.pruned_intervals as f64).into()),
+                ("watermark", (c.watermark as f64).into()),
+            ]));
+        }
+    }
+
+    let mut text = t.render();
+    text.push_str(
+        "identical dispatch tables pruned vs unpruned at every horizon (hard-checked); \
+         probe work and live-interval footprint strictly smaller pruned at the longest \
+         horizon. Counters are deterministic under the seed; wall clock is informative \
+         only.\n",
+    );
+
+    Ok(Report {
+        title: "bench-timeline".into(),
+        text,
+        data: obj([
+            ("bench", "timeline".into()),
+            ("tenants", n_tenants.into()),
+            ("rate_per_s", rate.into()),
+            ("arrays", n_arrays.into()),
+            ("seed", format!("{seed:#x}").into()),
+            ("base_duration_s", base_duration_s.into()),
+            ("points", Json::Arr(points)),
+        ]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::DEFAULT_SEED;
+
+    #[test]
+    fn harness_passes_and_emits_all_points() {
+        let pm = PowerModel::paper();
+        // short base horizon keeps the test quick; the 10× point still
+        // exercises the long-horizon checks
+        let rep = generate(&pm, 2, 200.0, 0.01, DEFAULT_SEED).unwrap();
+        let points = rep.data.req("points").as_arr().unwrap();
+        assert_eq!(points.len(), 2 * DEFAULT_MULTIPLIERS.len());
+        for p in points {
+            assert!(p.req("wall_ms").as_f64().unwrap() >= 0.0);
+            assert!(p.req("steps").as_f64().unwrap() > 0.0);
+            assert!(p.req("makespan_cycles").as_f64().unwrap() > 0.0);
+        }
+        // the JSON payload round-trips through the writer
+        let text = rep.data.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), rep.data);
+    }
+}

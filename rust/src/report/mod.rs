@@ -12,8 +12,10 @@
 //! | `fig13_models` | Fig. 13 four computing models |
 //! | `scaleup`      | pool-size × batch sweep (the Fig. 12b/13 story, serving regime) |
 //! | `serving`      | multi-model latency percentiles vs offered load, per policy |
+//! | `bench_timeline` | long-horizon timeline perf: pruned vs unpruned counters + wall clock |
 
 pub mod ablations;
+pub mod bench_timeline;
 pub mod fig10_breakdown;
 pub mod fig12_e2e;
 pub mod fig13_models;

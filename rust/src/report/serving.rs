@@ -93,7 +93,7 @@ pub fn generate_sweep(
                 t.row([
                     policy.label().into(),
                     f(rate, 0),
-                    s.name.clone(),
+                    s.name.to_string(),
                     s.served.to_string(),
                     f(ms(p50), 2),
                     f(ms(p95), 2),
@@ -104,7 +104,7 @@ pub fn generate_sweep(
                 points.push(obj([
                     ("policy", policy.label().into()),
                     ("rate_per_s", rate.into()),
-                    ("model", s.name.clone().into()),
+                    ("model", s.name.as_ref().into()),
                     ("arrivals", (s.arrivals as f64).into()),
                     ("served", (s.served as f64).into()),
                     ("dropped", (s.dropped as f64).into()),

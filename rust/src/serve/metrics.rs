@@ -9,6 +9,8 @@
 //! integers the reported p50/p95/p99 are *bit-identical* across runs with
 //! the same seed, which the determinism tests pin.
 
+use std::rc::Rc;
+
 /// Linear sub-bins per octave: 2^3 = 8.
 const SUB_BITS: u32 = 3;
 const SUB: usize = 1 << SUB_BITS;
@@ -124,10 +126,12 @@ impl LogHistogram {
 /// utilization breakdown (the core-complex aggregate, each core0..7 row,
 /// DW accelerator, IMA mux, DMA port, PCM programming port, the array
 /// aggregate, the busiest array). `units` is how many physical units the
-/// entry aggregates: utilization = busy / (units × makespan).
+/// entry aggregates: utilization = busy / (units × makespan). Names are
+/// shared `Rc<str>`s so cloning stats/report structs is a pointer bump,
+/// not a string copy.
 #[derive(Clone, Debug)]
 pub struct ResourceUtil {
-    pub name: String,
+    pub name: Rc<str>,
     pub busy_cycles: u64,
     pub units: u64,
 }
@@ -135,17 +139,41 @@ pub struct ResourceUtil {
 impl ResourceUtil {
     pub fn new(name: &str, busy_cycles: u64, units: u64) -> ResourceUtil {
         ResourceUtil {
-            name: name.to_string(),
+            name: Rc::from(name),
             busy_cycles,
             units,
         }
     }
 }
 
+/// Deterministic performance counters of one serving run: the event-loop
+/// work plus the timeline's gap-search/occupancy counters
+/// (`coordinator::timeline::TimelineStats`). Counter-based perf pins are
+/// reproducible under a fixed seed — unlike wall clock, they cannot flake
+/// — and the pruned-vs-unpruned comparisons in the regression suite and
+/// the CI smoke are stated entirely in these.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeCounters {
+    /// Event-loop dispatch steps (batches committed).
+    pub steps: u64,
+    /// Candidate validations (heap pops that re-ran the gap search).
+    pub validations: u64,
+    /// Gap-search probe work (binary-search halving steps).
+    pub probes: u64,
+    /// Interval nodes live in the timeline when the run drained.
+    pub live_intervals: u64,
+    /// High-water mark of live interval nodes.
+    pub peak_live_intervals: u64,
+    /// Interval nodes folded into the pruning watermark.
+    pub pruned_intervals: u64,
+    /// Final pruning watermark (0 when pruning is off).
+    pub watermark: u64,
+}
+
 /// Per-model serving outcome, accumulated by the event loop.
 #[derive(Clone, Debug)]
 pub struct TenantStats {
-    pub name: String,
+    pub name: Rc<str>,
     /// Arrays this tenant's weights occupy (its pool slice).
     pub arrays: usize,
     /// Passes per request (1 = weights resident in the slice).
@@ -179,7 +207,7 @@ pub struct TenantStats {
 impl TenantStats {
     pub fn new(name: &str, arrays: usize, n_passes: usize, occupancy: f64) -> TenantStats {
         TenantStats {
-            name: name.to_string(),
+            name: Rc::from(name),
             arrays,
             n_passes,
             occupancy,

@@ -25,7 +25,8 @@
 //!   depth, per-resource utilization, and drop statistics.
 //!
 //! Dispatch is *per-resource* and interval-precise: every batch carries a
-//! [`ReservationProfile`] (the merged busy intervals of every core,
+//! [`ReservationProfile`](crate::coordinator::ReservationProfile) (the
+//! merged busy intervals of every core,
 //! accelerator, mux, DMA/programming port and array it occupies), and the
 //! simulator keeps one [`ResourceTimeline`] of committed busy-interval
 //! sets across the pool. The default **backfilling** arbiter dispatches a
@@ -53,6 +54,22 @@
 //! bit-identical to the scheduler's sequential baseline — the regression
 //! tests pin that, and the seeded-trace determinism of the percentile
 //! tables.
+//!
+//! Long horizons stay flat: before each event the loop threads the
+//! minimum over its tenants' next admission instants into
+//! [`ResourceTimeline::prune_before`] as a **watermark**, folding
+//! committed busy intervals that can never conflict again — so the gap
+//! search walks the live window, not the whole serving history.
+//! `--no-prune` ([`ServeConfig::prune`]` = false`) keeps everything, and
+//! the dispatch table is bit-identical either way (pinned by
+//! `tests/prop_prune.rs` and the CI pruning smoke). The hot path is
+//! allocation-lean: batch costs and their reservation profiles are
+//! interned in the shared plan cache (`PlanCache::get_or_batch`), claim
+//! scratch is reused across events, and the run's work is counted
+//! deterministically in [`ServeCounters`] (event-loop steps, candidate
+//! validations, gap-search probe steps, live/pruned interval nodes) so
+//! perf regressions pin on counters instead of wall clock — `imcc
+//! bench-timeline` writes both as the machine-readable baseline.
 
 pub mod batcher;
 pub mod metrics;
@@ -68,7 +85,7 @@ use crate::coordinator::timeline::{
     res_label, IntervalSet, ResMap, ResourceTimeline, N_CORES, RES_ARRAY0, RES_CORE0, RES_DMA,
     RES_DWACC, RES_IMA_MUX, RES_PROG,
 };
-use crate::coordinator::{run_batched, BatchConfig, PlanCache, ReservationProfile, Strategy};
+use crate::coordinator::{BatchConfig, BatchReport, PlanCache, Strategy};
 use crate::net::bottleneck::bottleneck;
 use crate::net::mobilenetv2::mobilenet_v2;
 use crate::net::Network;
@@ -76,7 +93,7 @@ use crate::util::json::{obj, Json};
 use crate::util::table::{f, Table};
 
 pub use batcher::{BatchWindow, TenantQueue};
-pub use metrics::{LogHistogram, ResourceUtil, TenantStats};
+pub use metrics::{LogHistogram, ResourceUtil, ServeCounters, TenantStats};
 pub use tenancy::{place_tenants, Arbiter, Claim, Policy, Tenancy, Tenant};
 pub use traffic::TrafficModel;
 
@@ -133,6 +150,12 @@ pub struct ServeConfig {
     /// Stream staged PCM reprogramming under the previous pass's compute
     /// tail (see `scheduler::BatchConfig::stream_weights`).
     pub stream_weights: bool,
+    /// Fold committed timeline intervals behind the oldest possible
+    /// future dispatch into a watermark (`--no-prune` disables). Pruning
+    /// is invisible to the dispatch table — only the gap-search work and
+    /// live-interval footprint shrink (both counted in
+    /// [`ServeCounters`]).
+    pub prune: bool,
     /// Master seed; per-model arrival seeds derive from it.
     pub seed: u64,
     /// Open-loop arrival horizon in seconds (the sim then drains).
@@ -158,6 +181,7 @@ impl Default for ServeConfig {
             overlap: true,
             backfill: true,
             stream_weights: false,
+            prune: true,
             seed: DEFAULT_SEED,
             duration_s: 0.25,
             deadline_cy: 0,
@@ -180,6 +204,10 @@ pub struct ServeReport {
     pub backfill: bool,
     /// Streamed staged reprogramming was enabled (config echo).
     pub stream_weights: bool,
+    /// Watermark pruning was enabled (config echo). Never affects the
+    /// dispatch table — [`render_table`](Self::render_table) is
+    /// bit-identical with it on or off.
+    pub prune: bool,
     /// Arrival horizon, cycles.
     pub duration_cycles: u64,
     /// Completion of the last batch (≥ duration while draining).
@@ -199,6 +227,10 @@ pub struct ServeReport {
     /// core, DW accelerator, IMA mux, DMA port, PCM programming port, the
     /// array aggregate, and the busiest single array).
     pub resource_busy: Vec<ResourceUtil>,
+    /// Deterministic perf counters of the run (event-loop steps,
+    /// validations, gap-search probes, live/pruned interval nodes) —
+    /// reported in the JSON baseline, never in the dispatch table.
+    pub counters: ServeCounters,
 }
 
 impl ServeReport {
@@ -267,7 +299,7 @@ impl ServeReport {
         for s in &self.tenants {
             let (p50, p95, p99) = s.latency.percentiles();
             t.row([
-                s.name.clone(),
+                s.name.to_string(),
                 s.arrays.to_string(),
                 s.n_passes.to_string(),
                 format!("{:.0}%", s.occupancy * 100.0),
@@ -303,7 +335,7 @@ impl ServeReport {
             .map(|s| {
                 let (p50, p95, p99) = s.latency.percentiles();
                 obj([
-                    ("model", s.name.clone().into()),
+                    ("model", s.name.as_ref().into()),
                     ("arrays", s.arrays.into()),
                     ("passes", s.n_passes.into()),
                     ("arrivals", (s.arrivals as f64).into()),
@@ -324,13 +356,23 @@ impl ServeReport {
             .iter()
             .map(|r| {
                 obj([
-                    ("name", r.name.clone().into()),
+                    ("name", r.name.as_ref().into()),
                     ("busy_cycles", (r.busy_cycles as f64).into()),
                     ("units", (r.units as f64).into()),
                     ("utilization", self.resource_utilization(r).into()),
                 ])
             })
             .collect();
+        let c = &self.counters;
+        let counters = obj([
+            ("steps", (c.steps as f64).into()),
+            ("validations", (c.validations as f64).into()),
+            ("probes", (c.probes as f64).into()),
+            ("live_intervals", (c.live_intervals as f64).into()),
+            ("peak_live_intervals", (c.peak_live_intervals as f64).into()),
+            ("pruned_intervals", (c.pruned_intervals as f64).into()),
+            ("watermark", (c.watermark as f64).into()),
+        ]);
         obj([
             ("policy", self.policy.label().into()),
             ("seed", format!("{:#x}", self.seed).into()),
@@ -338,6 +380,7 @@ impl ServeReport {
             ("overlap", self.overlap.into()),
             ("backfill", self.backfill.into()),
             ("stream_weights", self.stream_weights.into()),
+            ("prune", self.prune.into()),
             ("duration_cycles", (self.duration_cycles as f64).into()),
             ("makespan_cycles", (self.makespan_cycles as f64).into()),
             ("busy_cycles", (self.busy_cycles as f64).into()),
@@ -346,6 +389,7 @@ impl ServeReport {
             ("inf_per_s", self.inferences_per_s().into()),
             ("served", (self.total_served() as f64).into()),
             ("dropped", (self.total_dropped() as f64).into()),
+            ("counters", counters),
             ("tenants", Json::Arr(tenants)),
             ("resources", Json::Arr(resources)),
         ])
@@ -380,51 +424,59 @@ pub fn mnv2_bottleneck_pair(rate_per_s: f64) -> Vec<ModelTraffic> {
     ]
 }
 
-/// Memoized outcome of dispatching one (tenant, batch-size) point:
-/// requests are identical, so this fully determines the scheduler's
-/// result, including the reservation profile the arbiter schedules with.
-struct BatchCost {
-    cycles: u64,
-    energy_j: f64,
-    profile: ReservationProfile,
+/// `n` bottleneck tenants with distinct names under equal Poisson load —
+/// the multi-tenant fleet the serve bench and `imcc bench-timeline` both
+/// measure, so their numbers describe the same tenancy.
+pub fn bottleneck_fleet(n: usize, rate_per_s: f64) -> Vec<ModelTraffic> {
+    (0..n)
+        .map(|i| {
+            let mut net = bottleneck();
+            net.name = format!("bn-{i}");
+            ModelTraffic {
+                net,
+                traffic: TrafficModel::Poisson { rate_per_s },
+                weight: 1,
+            }
+        })
+        .collect()
 }
 
-/// Shared simulation context: the placed tenants plus the batch-cost memo.
+/// Shared simulation context: the placed tenants, the plan cache the
+/// batch reports (cycles, energy, reservation profile) are interned in —
+/// repeated (tenant, batch-size) points share one allocation, within this
+/// run and across sweep points reusing the cache — and a thin per-run
+/// memo in front of it so the event loop's repeated lookups are one
+/// small-key hash, not a full cache-key rebuild per validation.
 struct SimCtx<'a> {
     models: &'a [ModelTraffic],
     tenancy: &'a Tenancy,
     cfg: &'a SystemConfig,
     pm: &'a PowerModel,
     scfg: &'a ServeConfig,
-    memo: HashMap<(usize, usize), Rc<BatchCost>>,
+    cache: &'a mut PlanCache,
+    memo: HashMap<(usize, usize), Rc<BatchReport>>,
 }
 
 impl SimCtx<'_> {
-    fn batch_cost(&mut self, tenant: usize, batch: usize) -> Rc<BatchCost> {
-        // shared refs are Copy: lift them out so the closure does not
-        // capture `self` alongside the `memo` borrow
-        let (models, tenancy) = (self.models, self.tenancy);
-        let (cfg, pm, scfg) = (self.cfg, self.pm, self.scfg);
-        Rc::clone(self.memo.entry((tenant, batch)).or_insert_with(|| {
-            let rep = run_batched(
-                &models[tenant].net,
-                scfg.strategy,
-                cfg,
-                pm,
-                &tenancy.tenants[tenant].plan,
-                BatchConfig {
-                    batch,
-                    pipeline: scfg.pipeline,
-                    charge_dma: scfg.charge_dma,
-                    stream_weights: scfg.stream_weights,
-                },
-            );
-            Rc::new(BatchCost {
-                cycles: rep.cycles,
-                energy_j: rep.energy_j,
-                profile: rep.profile,
-            })
-        }))
+    fn batch_cost(&mut self, tenant: usize, batch: usize) -> Rc<BatchReport> {
+        if let Some(rep) = self.memo.get(&(tenant, batch)) {
+            return Rc::clone(rep);
+        }
+        let rep = self.cache.get_or_batch(
+            &self.models[tenant].net,
+            self.scfg.strategy,
+            self.cfg,
+            self.pm,
+            &self.tenancy.tenants[tenant].plan,
+            BatchConfig {
+                batch,
+                pipeline: self.scfg.pipeline,
+                charge_dma: self.scfg.charge_dma,
+                stream_weights: self.scfg.stream_weights,
+            },
+        );
+        self.memo.insert((tenant, batch), Rc::clone(&rep));
+        rep
     }
 }
 
@@ -529,7 +581,8 @@ pub fn simulate_with_cache(
     let cycle_ns = cfg.freq.cycle_ns();
     let duration_cy = (scfg.duration_s * 1e9 / cycle_ns) as u64;
 
-    let nets: Vec<Network> = models.iter().map(|m| m.net.clone()).collect();
+    // borrow the networks — placement only reads them, no clones
+    let nets: Vec<&Network> = models.iter().map(|m| &m.net).collect();
     let tenancy = place_tenants(&nets, cfg.xbar_rows, scfg.n_arrays, scfg.rotate, cache)?;
 
     // seeded, per-model arrival streams
@@ -553,6 +606,7 @@ pub fn simulate_with_cache(
         cfg: &cfg,
         pm,
         scfg,
+        cache,
         memo: HashMap::new(),
     };
 
@@ -571,7 +625,7 @@ pub fn simulate_with_cache(
             },
         })
         .collect();
-    let mut timeline = ResourceTimeline::new(scfg.backfill);
+    let mut timeline = ResourceTimeline::with_resources(scfg.backfill, RES_ARRAY0 + scfg.n_arrays);
     let mut pool_free: u64 = 0; // serialized-mode single-server clock
     // union of batch spans — an interval set, because a backfilled batch
     // validated later may legitimately start in an idle gap *before* an
@@ -593,18 +647,36 @@ pub fn simulate_with_cache(
         }
     }
 
+    // event-loop work counters (deterministic under a fixed seed)
+    let mut steps: u64 = 0;
+    let mut validations: u64 = 0;
+    // claim scratch, reused across events — the loop allocates nothing
+    // once the memoized batch costs are warm
+    let mut claims: Vec<Claim> = Vec::new();
+    let mut claim_batches: Vec<usize> = Vec::new();
+
     loop {
+        // watermark pruning: no future dispatch can probe before the
+        // earliest next admission instant across tenants (`ready_at` is
+        // nondecreasing per queue), so committed intervals wholly before
+        // it can never conflict again — fold them away
+        if scfg.prune {
+            if let Some(w) = queues.iter().filter_map(|q| q.ready_at(&scfg.window)).min() {
+                timeline.prune_before(w);
+            }
+        }
         // pop-and-validate until every remaining stored key exceeds the
         // best validated instant: `claims` then holds exactly the tenants
         // dispatchable at `t_min`
-        let mut claims: Vec<Claim> = Vec::new();
-        let mut claim_batches: Vec<usize> = Vec::new();
+        claims.clear();
+        claim_batches.clear();
         let mut t_min: Option<u64> = None;
         while let Some(&Reverse((t_est, i))) = heap.peek() {
             if t_min.is_some_and(|tm| t_est > tm) {
                 break;
             }
             heap.pop();
+            validations += 1;
             let Some((td, b, cycles)) = validate_candidate(
                 &mut queues[i],
                 &mut stats[i],
@@ -644,6 +716,7 @@ pub fn simulate_with_cache(
         }
         let Some(t) = t_min else { break };
         debug_assert!(!claims.is_empty());
+        steps += 1;
 
         // every-event backlog sampling (pre-admission): each tenant's
         // pending depth at this dispatch instant, and the pool-wide
@@ -714,7 +787,7 @@ pub fn simulate_with_cache(
     ]);
     let mut arrays_total = 0u64;
     let mut array_peak = (0u64, RES_ARRAY0);
-    for (&res, &busy) in timeline.busy_map() {
+    for (res, busy) in timeline.busy_per_resource() {
         if res >= RES_ARRAY0 {
             arrays_total += busy;
             if busy > array_peak.0 {
@@ -725,6 +798,17 @@ pub fn simulate_with_cache(
     resource_busy.push(ResourceUtil::new("arrays", arrays_total, scfg.n_arrays as u64));
     resource_busy.push(ResourceUtil::new(&res_label(array_peak.1), array_peak.0, 1));
 
+    let tl_stats = timeline.stats();
+    let counters = ServeCounters {
+        steps,
+        validations,
+        probes: tl_stats.probes,
+        live_intervals: tl_stats.live_nodes,
+        peak_live_intervals: tl_stats.peak_live_nodes,
+        pruned_intervals: tl_stats.pruned_nodes,
+        watermark: tl_stats.watermark,
+    };
+
     Ok(ServeReport {
         policy: scfg.policy,
         seed: scfg.seed,
@@ -732,6 +816,7 @@ pub fn simulate_with_cache(
         overlap: scfg.overlap,
         backfill: scfg.backfill,
         stream_weights: scfg.stream_weights,
+        prune: scfg.prune,
         duration_cycles: duration_cy,
         makespan_cycles: makespan,
         busy_cycles: inflight.total(),
@@ -739,6 +824,7 @@ pub fn simulate_with_cache(
         peak_backlog,
         tenants: stats,
         resource_busy,
+        counters,
     })
 }
 
@@ -768,7 +854,7 @@ mod tests {
         }
         // the breakdown names every shared resource and no resource is
         // busier than the run is long
-        assert!(rep.resource_busy.iter().any(|r| r.name == "cores"));
+        assert!(rep.resource_busy.iter().any(|r| r.name.as_ref() == "cores"));
         for r in &rep.resource_busy {
             let u = rep.resource_utilization(r);
             assert!((0.0..=1.0).contains(&u), "{} at {u}", r.name);
@@ -861,7 +947,17 @@ mod tests {
         assert!(j.req("inf_per_s").as_f64().unwrap() > 0.0);
         assert_eq!(j.req("overlap"), &Json::Bool(true));
         assert_eq!(j.req("backfill"), &Json::Bool(true));
+        assert_eq!(j.req("prune"), &Json::Bool(true));
         assert!(j.req("peak_backlog").as_f64().unwrap() >= 0.0);
+        // the deterministic perf counters ride along for the baselines
+        let c = j.req("counters");
+        assert!(c.req("steps").as_f64().unwrap() > 0.0);
+        assert!(c.req("probes").as_f64().unwrap() > 0.0);
+        assert!(c.req("pruned_intervals").as_f64().unwrap() > 0.0);
+        assert!(
+            c.req("peak_live_intervals").as_f64().unwrap()
+                >= c.req("live_intervals").as_f64().unwrap()
+        );
         assert_eq!(j.req("tenants").as_arr().unwrap().len(), 2);
         let res = j.req("resources").as_arr().unwrap();
         assert!(res.iter().any(|r| r.req("name").as_str() == Some("cores")));

@@ -32,6 +32,7 @@
 //! The arbiter below only breaks ties between tenants dispatchable at the
 //! same instant.
 
+use std::borrow::Borrow;
 use std::rc::Rc;
 
 use crate::coordinator::timeline::N_CORES;
@@ -82,9 +83,11 @@ impl Tenancy {
 
 /// Carve `n_arrays` among `nets` in order. Every tenant must at least fit
 /// staged in what is left — a single layer larger than the remaining slice
-/// is an error (the pool is simply too small for that mix).
-pub fn place_tenants(
-    nets: &[Network],
+/// is an error (the pool is simply too small for that mix). Generic over
+/// owned and borrowed networks so callers (the serving loop) can pass
+/// `&[&Network]` without cloning every model.
+pub fn place_tenants<N: Borrow<Network>>(
+    nets: &[N],
     s: usize,
     n_arrays: usize,
     rotate: bool,
@@ -96,6 +99,7 @@ pub fn place_tenants(
     // → 0/2/4/6, ≥ 8 tenants wrap
     let core_stride = N_CORES / nets.len().clamp(1, N_CORES);
     for (ti, net) in nets.iter().enumerate() {
+        let net = net.borrow();
         if base >= n_arrays {
             return Err(format!(
                 "no arrays left for `{}`: {base} of {n_arrays} already carved",

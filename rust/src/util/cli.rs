@@ -61,6 +61,8 @@ impl Args {
                 | "backfill"
                 | "no-backfill"
                 | "stream-weights"
+                | "prune"
+                | "no-prune"
         )
     }
 
@@ -145,6 +147,11 @@ mod tests {
         let c = argv("serve --no-backfill --json out.json");
         assert!(c.flag("no-backfill"));
         assert_eq!(c.opt("json"), Some("out.json"));
+        // --no-prune is boolean too: the pruning smoke passes it right
+        // before --json FILE
+        let d = argv("serve --no-prune --json out.json");
+        assert!(d.flag("no-prune"));
+        assert_eq!(d.opt("json"), Some("out.json"));
         let b = argv("scaleup --stream-weights positional --json");
         assert!(b.flag("stream-weights"));
         assert_eq!(b.positional, vec!["positional"]);

@@ -310,7 +310,7 @@ fn core_rotation_shares_the_complex_between_small_tenants() {
     let busy_of = |rep: &imcc::serve::ServeReport, name: &str| {
         rep.resource_busy
             .iter()
-            .find(|r| r.name == name)
+            .find(|r| r.name.as_ref() == name)
             .map(|r| r.busy_cycles)
             .unwrap_or(0)
     };

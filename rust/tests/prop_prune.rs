@@ -1,0 +1,145 @@
+//! Property tests for watermark pruning (no artifacts needed).
+//!
+//! The pruning contract: folding committed intervals behind the oldest
+//! possible future dispatch is **invisible** to everything a serving run
+//! reports — dispatch tables, makespans, busy-cycle unions, peak
+//! backlogs, per-tenant percentiles — while strictly shrinking the
+//! gap-search state on long runs. Checked over random Poisson and MMPP-2
+//! backlogs, random fleet sizes, and both dispatch disciplines; plus a
+//! unit check that a long run really does drop interval nodes.
+
+use imcc::arch::PowerModel;
+use imcc::serve::{simulate, ModelTraffic, ServeConfig, ServeReport, TrafficModel};
+use imcc::util::prop;
+use imcc::util::rng::SplitMix64;
+
+/// `n` bottleneck tenants with one random traffic model each.
+fn random_fleet(rng: &mut SplitMix64, n: usize) -> Vec<ModelTraffic> {
+    (0..n)
+        .map(|i| {
+            let mut net = imcc::net::bottleneck::bottleneck();
+            net.name = format!("bn-{i}");
+            let rate_per_s = 50.0 + rng.next_f64() * 350.0;
+            let traffic = if rng.below(2) == 1 {
+                TrafficModel::Bursty {
+                    rate_per_s,
+                    burst: 2.0 + rng.next_f64() * 4.0,
+                    dwell_s: 0.002 + rng.next_f64() * 0.01,
+                }
+            } else {
+                TrafficModel::Poisson { rate_per_s }
+            };
+            ModelTraffic {
+                net,
+                traffic,
+                weight: 1,
+            }
+        })
+        .collect()
+}
+
+/// Everything the dispatch table derives from must be bit-identical.
+fn assert_reports_identical(p: &ServeReport, u: &ServeReport, ctx: &str) {
+    assert_eq!(p.render_table(), u.render_table(), "{ctx}: dispatch tables");
+    assert_eq!(p.makespan_cycles, u.makespan_cycles, "{ctx}: makespan");
+    assert_eq!(p.busy_cycles, u.busy_cycles, "{ctx}: busy-cycle union");
+    assert_eq!(p.peak_backlog, u.peak_backlog, "{ctx}: peak backlog");
+    assert_eq!(p.counters.steps, u.counters.steps, "{ctx}: event-loop steps");
+    assert_eq!(p.counters.validations, u.counters.validations, "{ctx}: validations");
+    for (x, y) in p.tenants.iter().zip(u.tenants.iter()) {
+        assert_eq!(x.latency.percentiles(), y.latency.percentiles(), "{ctx}: {}", x.name);
+        assert_eq!(
+            (x.served, x.dropped, x.batches, x.busy_cycles),
+            (y.served, y.dropped, y.batches, y.busy_cycles),
+            "{ctx}: {}",
+            x.name
+        );
+        assert_eq!(x.peak_queue, y.peak_queue, "{ctx}: {}", x.name);
+    }
+    // the busy-interval union history feeds the utilization breakdown —
+    // pruning must not forget a cycle of it
+    for (a, b) in p.resource_busy.iter().zip(u.resource_busy.iter()) {
+        assert_eq!(a.name, b.name, "{ctx}");
+        assert_eq!(a.busy_cycles, b.busy_cycles, "{ctx}: {}", a.name);
+    }
+}
+
+#[test]
+fn pruned_and_unpruned_serves_are_bit_identical_on_random_backlogs() {
+    prop::check("prune_bit_identity", 10, |rng: &mut SplitMix64| {
+        let pm = PowerModel::paper();
+        let n = rng.range_i64(1, 4) as usize;
+        let models = random_fleet(rng, n);
+        let backfill = rng.below(2) == 1;
+        let base = ServeConfig {
+            n_arrays: 6 * n,
+            backfill,
+            seed: rng.next_u64(),
+            duration_s: 0.02 + rng.next_f64() * 0.03,
+            deadline_cy: [0u64, 2_000_000][rng.below(2) as usize],
+            ..ServeConfig::default()
+        };
+        assert!(base.prune, "pruning is the default");
+        let pruned = simulate(&models, &base, &pm).unwrap();
+        let unpruned = simulate(
+            &models,
+            &ServeConfig {
+                prune: false,
+                ..base.clone()
+            },
+            &pm,
+        )
+        .unwrap();
+        let ctx = format!("n {n}, backfill {backfill}, seed {:#x}", base.seed);
+        assert!(pruned.prune && !unpruned.prune);
+        assert_reports_identical(&pruned, &unpruned, &ctx);
+        // pruning only ever shrinks the search state
+        let (pc, uc) = (pruned.counters, unpruned.counters);
+        assert!(pc.live_intervals <= uc.live_intervals, "{ctx}: live");
+        assert!(pc.probes <= uc.probes, "{ctx}: probe work");
+        assert_eq!(uc.pruned_intervals, 0, "{ctx}");
+        assert_eq!(uc.watermark, 0, "{ctx}");
+    });
+}
+
+#[test]
+fn long_run_pruning_strictly_drops_interval_nodes() {
+    // the unit pin: on a long multi-tenant run the pruned timeline holds
+    // strictly fewer live interval nodes (and did fold some away), at a
+    // bit-identical dispatch table
+    let pm = PowerModel::paper();
+    let models = imcc::serve::bottleneck_fleet(4, 150.0);
+    let base = ServeConfig {
+        n_arrays: 24,
+        duration_s: 0.25,
+        ..ServeConfig::default()
+    };
+    let pruned = simulate(&models, &base, &pm).unwrap();
+    let unpruned = simulate(
+        &models,
+        &ServeConfig {
+            prune: false,
+            ..base
+        },
+        &pm,
+    )
+    .unwrap();
+    assert_reports_identical(&pruned, &unpruned, "long run");
+    let (pc, uc) = (pruned.counters, unpruned.counters);
+    assert!(pc.pruned_intervals > 0, "a long run must fold intervals away");
+    assert!(
+        pc.live_intervals < uc.live_intervals,
+        "live nodes {} !< {}",
+        pc.live_intervals,
+        uc.live_intervals
+    );
+    assert!(pc.watermark > 0);
+    // peak footprint shrinks too: the live window never holds the whole
+    // history
+    assert!(
+        pc.peak_live_intervals < uc.peak_live_intervals,
+        "peak {} !< {}",
+        pc.peak_live_intervals,
+        uc.peak_live_intervals
+    );
+}

@@ -1,0 +1,113 @@
+//! Regression pins for the timeline perf counters (no artifacts needed).
+//!
+//! * probe/step counters are *exactly* reproducible under a fixed seed —
+//!   the property CI's counter-based gating relies on (wall clock flakes,
+//!   counters cannot);
+//! * on a long-horizon (10× the default serve duration) multi-tenant run
+//!   the pruned dispatch produces a bit-identical table at strictly lower
+//!   probe work and live-interval footprint than `--no-prune`;
+//! * interning batch reports in a shared plan cache changes nothing:
+//!   sweeping the same point through one cache is bit-identical to fresh
+//!   private caches.
+
+use imcc::arch::PowerModel;
+use imcc::coordinator::PlanCache;
+use imcc::serve::{
+    bottleneck_fleet, mnv2_bottleneck_pair, simulate, simulate_with_cache, ServeConfig,
+};
+
+#[test]
+fn counters_are_exactly_reproducible_under_a_fixed_seed() {
+    let pm = PowerModel::paper();
+    let scfg = ServeConfig {
+        seed: 0x00C0_FFEE,
+        duration_s: 0.1,
+        ..ServeConfig::default()
+    };
+    let a = simulate(&mnv2_bottleneck_pair(250.0), &scfg, &pm).unwrap();
+    let b = simulate(&mnv2_bottleneck_pair(250.0), &scfg, &pm).unwrap();
+    assert_eq!(a.counters, b.counters, "counters must be deterministic");
+    assert!(a.counters.steps > 0);
+    assert!(a.counters.validations >= a.counters.steps);
+    assert!(a.counters.probes > 0);
+    assert!(a.counters.peak_live_intervals >= a.counters.live_intervals);
+    // a different seed moves the traffic and with it the counted work
+    let other = simulate(
+        &mnv2_bottleneck_pair(250.0),
+        &ServeConfig {
+            seed: 0xBADC_0DE5,
+            ..scfg
+        },
+        &pm,
+    )
+    .unwrap();
+    assert_ne!(a.counters, other.counters, "seeds must move the counters");
+}
+
+#[test]
+fn long_horizon_pruned_probe_work_is_strictly_below_unpruned() {
+    // 10× the default 0.25 s serve horizon, four tenants — the acceptance
+    // scenario: equal makespan (and whole dispatch table), strictly less
+    // gap-search work and live state
+    let pm = PowerModel::paper();
+    let models = bottleneck_fleet(4, 150.0);
+    let base = ServeConfig {
+        n_arrays: 24,
+        duration_s: 2.5,
+        ..ServeConfig::default()
+    };
+    let pruned = simulate(&models, &base, &pm).unwrap();
+    let unpruned = simulate(
+        &models,
+        &ServeConfig {
+            prune: false,
+            ..base
+        },
+        &pm,
+    )
+    .unwrap();
+    assert_eq!(pruned.makespan_cycles, unpruned.makespan_cycles);
+    assert_eq!(pruned.render_table(), unpruned.render_table());
+    assert_eq!(pruned.counters.steps, unpruned.counters.steps);
+    assert!(
+        pruned.counters.probes < unpruned.counters.probes,
+        "probe work {} !< {}",
+        pruned.counters.probes,
+        unpruned.counters.probes
+    );
+    assert!(
+        pruned.counters.live_intervals < unpruned.counters.live_intervals,
+        "live {} !< {}",
+        pruned.counters.live_intervals,
+        unpruned.counters.live_intervals
+    );
+    assert!(pruned.counters.pruned_intervals > 0);
+}
+
+#[test]
+fn shared_cache_interning_is_bit_identical_to_private_caches() {
+    let pm = PowerModel::paper();
+    let models = mnv2_bottleneck_pair(200.0);
+    let scfg = ServeConfig {
+        duration_s: 0.05,
+        ..ServeConfig::default()
+    };
+    // one shared cache across repeated runs: placements and batch
+    // profiles intern and are reused on the second pass
+    let mut shared = PlanCache::with_capacity(32);
+    let first = simulate_with_cache(&models, &scfg, &pm, &mut shared).unwrap();
+    let warm_batch_hits = shared.batch_hits();
+    let second = simulate_with_cache(&models, &scfg, &pm, &mut shared).unwrap();
+    assert!(
+        shared.batch_hits() > warm_batch_hits,
+        "the second run must hit the interned batch reports"
+    );
+    // a private cache per run (the `simulate` path) must agree exactly
+    let private = simulate(&models, &scfg, &pm).unwrap();
+    for rep in [&first, &second] {
+        assert_eq!(rep.render_table(), private.render_table());
+        assert_eq!(rep.makespan_cycles, private.makespan_cycles);
+        assert_eq!(rep.busy_cycles, private.busy_cycles);
+        assert_eq!(rep.counters, private.counters);
+    }
+}
