@@ -67,6 +67,22 @@ options:
                           both modes and rejects the flag)
   --stream-weights        `serve`/`scaleup`: stream staged PCM reprogramming
                           under the previous pass's compute tail
+  --slo-p95 CY            `serve`: p95 latency budget in cycles; arrivals
+                          predicted to blow it are refused at the front
+                          door instead of queueing (default off). JSON
+                          gains `rejected` totals and per-tenant `slo_p95`
+  --no-admission          `serve`: keep the --slo-p95 budget as a config
+                          echo but never refuse a request at the door
+  --autoscale             `serve`: online pool resizing — sustained backlog
+                          grows a tenant's array slice out of the free run
+                          (sustained idle shrinks it), re-planning through
+                          the plan cache and charging PCM reprogramming of
+                          the moved arrays (streamed with --stream-weights);
+                          JSON gains the `scale_events` decision trace
+  --no-autoscale          `serve`: pin the resizing controller off (the
+                          controlled-vs-uncontrolled baseline switch)
+  --headroom N            `serve`: hold N arrays back from the initial
+                          carve for the autoscaler to hand out (default 0)
   --tenants N             `bench-timeline`: fleet size          (default 4)
   --json [FILE]           `scaleup`/`serve`/`bench-timeline`: also write a
                           machine-readable bench baseline (default
@@ -230,6 +246,9 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
     if args.flag("prune") && args.flag("no-prune") {
         return Err("--prune and --no-prune are mutually exclusive".into());
     }
+    if args.flag("autoscale") && args.flag("no-autoscale") {
+        return Err("--autoscale and --no-autoscale are mutually exclusive".into());
+    }
     let scfg = ServeConfig {
         n_arrays: arrays,
         policy,
@@ -245,15 +264,20 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
         seed,
         duration_s,
         deadline_cy: (deadline_ms * 1e6 / cycle_ns) as u64,
+        slo_p95_cy: args.opt_parse("slo-p95", 0u64),
+        admission: !args.flag("no-admission"),
+        autoscale: args.flag("autoscale"),
+        headroom: args.opt_parse("headroom", 0usize),
         ..ServeConfig::default()
     };
     let rep = serve::simulate(&models, &scfg, pm)?;
     print!("{}", rep.render_table());
     let makespan_s = rep.makespan_cycles as f64 * rep.cycle_ns * 1e-9;
     println!(
-        "{} served / {} dropped over {:.1} ms makespan — {:.1} inf/s aggregate",
+        "{} served / {} dropped / {} rejected over {:.1} ms makespan — {:.1} inf/s aggregate",
         rep.total_served(),
         rep.total_dropped(),
+        rep.total_rejected(),
         makespan_s * 1e3,
         rep.inferences_per_s(),
     );
@@ -464,6 +488,7 @@ fn main() {
                 report::fig13_models::generate(&pm),
                 report::scaleup::generate(&pm),
                 report::serving::generate(&pm),
+                report::serving::generate_controlled(&pm),
             ];
             let mut all = Vec::new();
             for r in &reports {

@@ -11,7 +11,7 @@
 //! | `table1`       | Table I SoA comparison |
 //! | `fig13_models` | Fig. 13 four computing models |
 //! | `scaleup`      | pool-size × batch sweep (the Fig. 12b/13 story, serving regime) |
-//! | `serving`      | multi-model latency percentiles vs offered load, per policy |
+//! | `serving`      | multi-model latency percentiles vs offered load, per policy; plus controlled-vs-uncontrolled shed/latency curves (admission + autoscale) |
 //! | `bench_timeline` | long-horizon timeline perf: pruned vs unpruned counters + wall clock |
 
 pub mod ablations;

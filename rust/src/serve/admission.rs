@@ -1,0 +1,172 @@
+//! Reject-on-arrival admission control against a per-tenant latency
+//! budget.
+//!
+//! Deadlines (`--deadline-ms`) shed load *lazily*: a request queues, ages
+//! past its budget, and is only discovered dead at the tenant's next
+//! dispatch instant — the client waited the whole time for nothing.
+//! Admission control refuses the request at the front door instead, the
+//! moment it arrives, whenever the latency it would see is predicted to
+//! blow the tenant's p95 budget (`--slo-p95`, cycles). Refused requests
+//! never enter the queue, so they cannot inflate anyone else's wait.
+//!
+//! The predictor combines the two pressure signals the simulator already
+//! has with one new one:
+//!
+//! * the **per-event queue sample** — the depth `d` of accepted requests
+//!   still pending ahead of the arrival (the same quantity
+//!   `TenantStats::peak_queue` tracks the maximum of);
+//! * a **worst-case drain bound** from the tenant's own service ceiling
+//!   `svc_max` (its costliest admissible batch): everything ahead drains
+//!   in `ceil((d+1)/max_batch)` full-window batches, each preceded by at
+//!   most the window's wait cap and followed by at most one in-flight
+//!   batch remainder — so a request admitted at depth `d` completes
+//!   within `max_wait + (ceil((d+1)/w) + 1) · svc_max` cycles of its
+//!   arrival on an uncontended slice (`tests/prop_admission.rs` pins
+//!   that the per-tenant p95 stays within budget wherever the
+//!   uncontrolled run blew it);
+//! * the **online p95 estimate** — a [`LogHistogram`] over latencies of
+//!   this tenant's *completed* requests, fed back by the event loop. On a
+//!   contended pool the analytic bound is optimistic (another tenant may
+//!   hold shared engines); the observed p95 closes that loop: once the
+//!   tail degrades past the bound, it takes over as the prediction.
+//!
+//! A request is admitted iff `max(observed_p95, bound(d)) ≤ budget`.
+//! Everything is a deterministic function of simulator state — no wall
+//! clock — so admission decisions replay bit-identically under a seed.
+
+use super::batcher::BatchWindow;
+use super::metrics::LogHistogram;
+
+/// Per-tenant admission state: the service ceiling and the online
+/// latency histogram the predictor reads.
+struct TenantSlo {
+    /// Cycles of this tenant's costliest admissible batch (max over
+    /// batch sizes `1..=max_batch` of the planned batch cycles).
+    svc_max: u64,
+    /// Latencies of completed requests (arrival → batch completion).
+    hist: LogHistogram,
+}
+
+/// Front-door admission gate for every tenant of one serving run.
+pub struct AdmissionControl {
+    /// p95 latency budget, cycles (> 0; 0 would admit nothing).
+    budget: u64,
+    w_max: u64,
+    max_wait_cy: u64,
+    tenants: Vec<TenantSlo>,
+}
+
+impl AdmissionControl {
+    /// `svc_max[i]` is tenant `i`'s service ceiling — the planned cycles
+    /// of its costliest admissible batch.
+    pub fn new(budget: u64, window: &BatchWindow, svc_max: Vec<u64>) -> AdmissionControl {
+        AdmissionControl {
+            budget,
+            w_max: window.max_batch.max(1) as u64,
+            max_wait_cy: window.max_wait_cy,
+            tenants: svc_max
+                .into_iter()
+                .map(|s| TenantSlo {
+                    svc_max: s,
+                    hist: LogHistogram::new(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Worst-case completion latency of a request entering behind `depth`
+    /// accepted requests: window wait, full-window drain of everything up
+    /// to and including it, plus one in-flight batch remainder.
+    fn bound(&self, tenant: usize, depth: usize) -> u64 {
+        let s = self.tenants[tenant].svc_max;
+        let batches = (depth as u64 + 1).div_ceil(self.w_max);
+        self.max_wait_cy
+            .saturating_add((batches + 1).saturating_mul(s))
+    }
+
+    /// The latency the predictor expects this arrival to see: the larger
+    /// of the analytic drain bound and the observed p95 tail.
+    pub fn predicted(&self, tenant: usize, depth: usize) -> u64 {
+        self.observed_p95(tenant).max(self.bound(tenant, depth))
+    }
+
+    /// Admit iff the predicted latency fits the budget.
+    pub fn admit(&self, tenant: usize, depth: usize) -> bool {
+        self.predicted(tenant, depth) <= self.budget
+    }
+
+    /// Re-price a tenant's service ceiling after the autoscaler
+    /// re-planned its slice. The observed histogram is kept: the tail is
+    /// a property of the workload the tenant already saw, and a stale
+    /// high tail decays as post-resize completions land on top of it.
+    pub fn set_svc_max(&mut self, tenant: usize, svc_max: u64) {
+        self.tenants[tenant].svc_max = svc_max;
+    }
+
+    /// Feed back one completed request's latency (the same value the
+    /// serving table's percentiles are built from).
+    pub fn observe(&mut self, tenant: usize, latency_cy: u64) {
+        self.tenants[tenant].hist.record(latency_cy);
+    }
+
+    /// Online p95 estimate over completed requests (0 before the first
+    /// completion).
+    pub fn observed_p95(&self, tenant: usize) -> u64 {
+        self.tenants[tenant].hist.quantile(0.95)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(max_batch: usize, max_wait_cy: u64) -> BatchWindow {
+        BatchWindow {
+            max_batch,
+            max_wait_cy,
+        }
+    }
+
+    #[test]
+    fn empty_queue_admits_within_budget() {
+        // depth 0, w=8: bound = wait + 2·svc
+        let ac = AdmissionControl::new(2_100, &window(8, 100), vec![1_000]);
+        assert_eq!(ac.predicted(0, 0), 2_100);
+        assert!(ac.admit(0, 0));
+        let tight = AdmissionControl::new(2_099, &window(8, 100), vec![1_000]);
+        assert!(!tight.admit(0, 0));
+    }
+
+    #[test]
+    fn depth_raises_the_prediction_by_full_windows() {
+        let ac = AdmissionControl::new(u64::MAX, &window(4, 0), vec![100]);
+        // depths 0..=3 ride the first batch, 4..=7 the second, ...
+        assert_eq!(ac.predicted(0, 0), 200);
+        assert_eq!(ac.predicted(0, 3), 200);
+        assert_eq!(ac.predicted(0, 4), 300);
+        assert_eq!(ac.predicted(0, 8), 400);
+    }
+
+    #[test]
+    fn observed_tail_takes_over_when_worse() {
+        let mut ac = AdmissionControl::new(1_000, &window(8, 0), vec![100]);
+        assert!(ac.admit(0, 0)); // bound 200 ≤ 1000
+        for _ in 0..100 {
+            ac.observe(0, 5_000);
+        }
+        // the online p95 (a bin floor ≤ 5000, ≥ 4096) now dominates
+        assert!(ac.observed_p95(0) > 1_000);
+        assert_eq!(ac.predicted(0, 0), ac.observed_p95(0));
+        assert!(!ac.admit(0, 0));
+    }
+
+    #[test]
+    fn tenants_are_independent() {
+        let mut ac = AdmissionControl::new(10_000, &window(8, 0), vec![100, 4_000]);
+        ac.observe(0, 60_000);
+        assert!(!ac.admit(0, 0), "tenant 0's tail blows its budget");
+        assert!(ac.admit(1, 0), "tenant 1 is unaffected");
+        // the heavy tenant's own svc ceiling prices its drain
+        assert!(ac.predicted(1, 8) > ac.predicted(1, 0));
+    }
+}

@@ -1,0 +1,385 @@
+//! Online pool-resizing: grow or shrink a tenant's array slice when its
+//! queue pressure stays across a hysteresis threshold for a full window.
+//!
+//! The serving loop samples every tenant's backlog at every event step
+//! (the same per-event queue samples `TenantStats::peak_queue` maxes
+//! over). This module turns those samples into scaling decisions:
+//!
+//! * **pressure windows** — a per-tenant sample deque over the last
+//!   hysteresis window. A condition is *sustained* only when every
+//!   retained sample meets the threshold **and** the evidence spans at
+//!   least `window_cy` cycles — one spike never scales anything, and a
+//!   freshly scaled tenant starts from a clean slate;
+//! * **staleness** — samples land only at event-loop steps, so a tenant
+//!   idle since its last dispatch would keep "reporting" its final
+//!   backlog forever. [`Pressure`] therefore ages out samples older than
+//!   twice the window at the event horizon *before* any sustained check
+//!   reads them; without the age-out, one ancient sample both fakes the
+//!   window-spanning coverage and freezes a dead backlog into the
+//!   controller's view (the premature-grow regression in
+//!   `tests/autoscale_regression.rs` pins the fix);
+//! * **slice accounting** — a pool-wide free map of arrays not carved by
+//!   any tenant. Grows free the tenant's old slice first and then take
+//!   the lowest-base free run that fits (so in-place growth happens
+//!   whenever the neighboring arrays are free, relocation otherwise, and
+//!   arrays returned by a co-tenant's shrink coalesce and are claimable);
+//!   shrinks stay at the tenant's base and return the tail;
+//! * **decision trace** — every applied resize is a [`ScaleEvent`]
+//!   carrying the migration price: the PCM reprogramming cycles of the
+//!   moved arrays (exactly `ImaArrayPool::program_cycles_by_array` of the
+//!   new plan's first pass) and how long the tenant's dispatches were
+//!   blocked behind it (0-extra when the migration streams under the
+//!   `--stream-weights` overlap path).
+//!
+//! Everything here is a pure function of seeded simulator state — no wall
+//! clock — so a decision trace replays bit-identically under its seed and
+//! moves only when the seed does.
+
+use std::collections::VecDeque;
+
+/// Hysteresis thresholds and windows of the resizing controller.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// Sustained backlog ≥ this → grow the tenant's slice.
+    pub hi_depth: usize,
+    /// Sustained backlog ≤ this → shrink the tenant's slice.
+    pub lo_depth: usize,
+    /// Cycles a condition must hold before the controller acts.
+    pub window_cy: u64,
+    /// Cycles a tenant must wait between its own scale events.
+    pub cooldown_cy: u64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            hi_depth: 16,
+            lo_depth: 0,
+            // 2 ms / 6 ms at 500 MHz
+            window_cy: 1_000_000,
+            cooldown_cy: 3_000_000,
+        }
+    }
+}
+
+/// Per-tenant sliding pressure windows over the event-step depth samples.
+pub struct Pressure {
+    window_cy: u64,
+    samples: Vec<VecDeque<(u64, usize)>>,
+}
+
+impl Pressure {
+    pub fn new(n_tenants: usize, window_cy: u64) -> Pressure {
+        Pressure {
+            window_cy: window_cy.max(1),
+            samples: vec![VecDeque::new(); n_tenants],
+        }
+    }
+
+    /// Record one event-step sample (`t` nondecreasing per tenant).
+    pub fn record(&mut self, tenant: usize, t: u64, depth: usize) {
+        self.samples[tenant].push_back((t, depth));
+    }
+
+    /// The stale-pressure fix: drop samples older than twice the window
+    /// at the event horizon `t`. A sample that old describes a backlog
+    /// the tenant may long since have drained (samples only land at
+    /// event steps); left in place it would both pass for coverage and
+    /// pin its dead depth into every sustained check.
+    pub fn age_out(&mut self, tenant: usize, t: u64) {
+        let horizon = t.saturating_sub(2 * self.window_cy);
+        let q = &mut self.samples[tenant];
+        while q.front().is_some_and(|&(ts, _)| ts < horizon) {
+            q.pop_front();
+        }
+    }
+
+    /// Forget everything (after a scale event: fresh evidence required).
+    pub fn clear(&mut self, tenant: usize) {
+        self.samples[tenant].clear();
+    }
+
+    /// Retained sample count (regression tests watch the age-out).
+    pub fn len(&self, tenant: usize) -> usize {
+        self.samples[tenant].len()
+    }
+
+    fn sustained(&mut self, tenant: usize, t: u64, pred: impl Fn(usize) -> bool) -> bool {
+        self.age_out(tenant, t);
+        let q = &self.samples[tenant];
+        let Some(&(first_ts, _)) = q.front() else {
+            return false;
+        };
+        // coverage: the retained evidence must span a full window
+        first_ts.saturating_add(self.window_cy) <= t && q.iter().all(|&(_, d)| pred(d))
+    }
+
+    /// Backlog ≥ `hi` for a full window ending at `t`.
+    pub fn sustained_hi(&mut self, tenant: usize, t: u64, hi: usize) -> bool {
+        self.sustained(tenant, t, |d| d >= hi)
+    }
+
+    /// Backlog ≤ `lo` for a full window ending at `t`.
+    pub fn sustained_lo(&mut self, tenant: usize, t: u64, lo: usize) -> bool {
+        self.sustained(tenant, t, |d| d <= lo)
+    }
+}
+
+/// Grow or shrink, as recorded in the decision trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleKind {
+    Grow,
+    Shrink,
+}
+
+impl ScaleKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleKind::Grow => "grow",
+            ScaleKind::Shrink => "shrink",
+        }
+    }
+}
+
+/// One applied resize: the slice move plus its migration price.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleEvent {
+    pub tenant: usize,
+    /// Event-loop instant the resize was applied (cycles).
+    pub t: u64,
+    pub kind: ScaleKind,
+    pub from_base: usize,
+    pub from_arrays: usize,
+    pub to_base: usize,
+    pub to_arrays: usize,
+    /// PCM reprogramming charged for the moved arrays (the new plan's
+    /// first-pass `program_cycles_by_array` total).
+    pub program_cycles: u64,
+    /// How long the tenant's own dispatches were floored behind the
+    /// migration (0 when the reprogramming streams under compute).
+    pub blocked_cycles: u64,
+    /// Migration rode the `--stream-weights` overlap path.
+    pub streamed: bool,
+}
+
+/// What the controller wants for a tenant at this instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Grow { target: usize },
+    Shrink { target: usize },
+}
+
+/// The resizing controller: pressure windows + the pool free map +
+/// per-tenant cooldowns + the decision trace.
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    pressure: Pressure,
+    /// `free[a]` — pool array `a` is carved by no tenant.
+    free: Vec<bool>,
+    cooldown_until: Vec<u64>,
+    pub events: Vec<ScaleEvent>,
+}
+
+impl Autoscaler {
+    /// `slices` are the initially carved `(array_base, arrays)` spans.
+    pub fn new(cfg: AutoscaleConfig, n_arrays: usize, slices: &[(usize, usize)]) -> Autoscaler {
+        let mut free = vec![true; n_arrays];
+        for &(base, len) in slices {
+            for f in &mut free[base..base + len] {
+                debug_assert!(*f, "initial slices overlap");
+                *f = false;
+            }
+        }
+        Autoscaler {
+            cfg,
+            pressure: Pressure::new(slices.len(), cfg.window_cy),
+            free,
+            cooldown_until: vec![0; slices.len()],
+            events: Vec::new(),
+        }
+    }
+
+    /// Feed one event-step backlog sample.
+    pub fn record(&mut self, tenant: usize, t: u64, depth: usize) {
+        self.pressure.record(tenant, t, depth);
+    }
+
+    pub fn pressure_mut(&mut self) -> &mut Pressure {
+        &mut self.pressure
+    }
+
+    /// Evaluate one tenant's hysteresis state at instant `t`. Growing
+    /// takes priority; a tenant in cooldown (or with nothing sustained)
+    /// gets `None`. Pure read apart from sample aging.
+    pub fn decide(&mut self, tenant: usize, t: u64, cur_arrays: usize) -> Option<ScaleDecision> {
+        if t < self.cooldown_until[tenant] {
+            return None;
+        }
+        let step = (cur_arrays / 2).max(1);
+        if self.pressure.sustained_hi(tenant, t, self.cfg.hi_depth) {
+            return Some(ScaleDecision::Grow {
+                target: cur_arrays + step,
+            });
+        }
+        if cur_arrays > 1 && self.pressure.sustained_lo(tenant, t, self.cfg.lo_depth) {
+            return Some(ScaleDecision::Shrink {
+                target: cur_arrays - step,
+            });
+        }
+        None
+    }
+
+    /// Return a slice to the free map.
+    pub fn release(&mut self, base: usize, len: usize) {
+        for f in &mut self.free[base..base + len] {
+            debug_assert!(!*f, "double free of a pool array");
+            *f = true;
+        }
+    }
+
+    /// Carve a slice out of the free map.
+    pub fn reserve(&mut self, base: usize, len: usize) {
+        for f in &mut self.free[base..base + len] {
+            debug_assert!(*f, "reserving a carved pool array");
+            *f = false;
+        }
+    }
+
+    /// Lowest-base maximal free run of length ≥ `min_len`, clipped to
+    /// `want`. Does not reserve — callers reserve what the re-placed
+    /// plan actually uses.
+    pub fn find_run(&self, min_len: usize, want: usize) -> Option<(usize, usize)> {
+        let mut a = 0;
+        while a < self.free.len() {
+            if self.free[a] {
+                let mut end = a;
+                while end < self.free.len() && self.free[end] {
+                    end += 1;
+                }
+                let len = end - a;
+                if len >= min_len {
+                    return Some((a, len.min(want)));
+                }
+                a = end;
+            } else {
+                a += 1;
+            }
+        }
+        None
+    }
+
+    /// Free arrays currently carved by nobody.
+    pub fn free_arrays(&self) -> usize {
+        self.free.iter().filter(|&&f| f).count()
+    }
+
+    /// Record an applied resize: trace it, clear the tenant's samples
+    /// (fresh evidence required) and start its cooldown.
+    pub fn committed(&mut self, ev: ScaleEvent) {
+        self.pressure.clear(ev.tenant);
+        self.cooldown_until[ev.tenant] = ev.t.saturating_add(self.cfg.cooldown_cy);
+        self.events.push(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(hi: usize, lo: usize, window: u64, cooldown: u64) -> AutoscaleConfig {
+        AutoscaleConfig {
+            hi_depth: hi,
+            lo_depth: lo,
+            window_cy: window,
+            cooldown_cy: cooldown,
+        }
+    }
+
+    #[test]
+    fn sustained_needs_a_full_window_of_evidence() {
+        let mut p = Pressure::new(1, 1_000);
+        p.record(0, 5_000, 20);
+        // one fresh sample: no coverage yet
+        assert!(!p.sustained_hi(0, 5_000, 10));
+        p.record(0, 5_400, 25);
+        p.record(0, 6_100, 30);
+        // evidence now spans ≥ window (5_000 + 1_000 ≤ 6_100)
+        assert!(p.sustained_hi(0, 6_100, 10));
+        // one low sample inside the window breaks the streak
+        p.record(0, 6_200, 3);
+        assert!(!p.sustained_hi(0, 6_200, 10));
+    }
+
+    #[test]
+    fn stale_samples_age_out_at_the_horizon() {
+        // the latent bug this pins: a tenant idle since its last dispatch
+        // keeps its old backlog on record; without aging, that ancient
+        // sample fakes window coverage and a single fresh burst sample
+        // "sustains" immediately
+        let mut p = Pressure::new(1, 1_000_000);
+        p.record(0, 0, 50); // ancient high-water sample
+        p.record(0, 10_000_000, 60); // burst begins much later
+        assert_eq!(p.len(0), 2);
+        // aged at the horizon: the ancient sample is gone, coverage fails,
+        // nothing fires on the first burst event
+        assert!(!p.sustained_hi(0, 10_000_000, 10));
+        assert_eq!(p.len(0), 1, "ancient sample aged out");
+        // the burst must genuinely span the window before firing
+        p.record(0, 10_400_000, 55);
+        assert!(!p.sustained_hi(0, 10_400_000, 10));
+        p.record(0, 11_100_000, 70);
+        assert!(p.sustained_hi(0, 11_100_000, 10));
+    }
+
+    #[test]
+    fn decide_honors_hysteresis_and_cooldown() {
+        let mut a = Autoscaler::new(cfg(10, 0, 1_000, 100_000), 8, &[(0, 4)]);
+        for t in [0u64, 400, 1_100] {
+            a.record(0, t, 20);
+        }
+        assert_eq!(a.decide(0, 1_100, 4), Some(ScaleDecision::Grow { target: 6 }));
+        // an applied event clears the evidence and starts the cooldown
+        a.committed(ScaleEvent {
+            tenant: 0,
+            t: 1_100,
+            kind: ScaleKind::Grow,
+            from_base: 0,
+            from_arrays: 4,
+            to_base: 0,
+            to_arrays: 6,
+            program_cycles: 10,
+            blocked_cycles: 10,
+            streamed: false,
+        });
+        a.record(0, 1_200, 20);
+        a.record(0, 2_300, 20);
+        assert_eq!(a.decide(0, 2_300, 6), None, "cooldown holds");
+        assert_eq!(a.events.len(), 1);
+    }
+
+    #[test]
+    fn shrink_fires_on_sustained_idle_but_never_below_one() {
+        let mut a = Autoscaler::new(cfg(10, 0, 1_000, 0), 8, &[(0, 4), (4, 1)]);
+        for t in [0u64, 500, 1_200] {
+            a.record(0, t, 0);
+            a.record(1, t, 0);
+        }
+        assert_eq!(a.decide(0, 1_200, 4), Some(ScaleDecision::Shrink { target: 2 }));
+        assert_eq!(a.decide(1, 1_200, 1), None, "one array is the floor");
+    }
+
+    #[test]
+    fn free_runs_coalesce_and_first_fit_allocates() {
+        let mut a = Autoscaler::new(cfg(10, 0, 1, 0), 12, &[(0, 4), (4, 3)]);
+        assert_eq!(a.free_arrays(), 5);
+        assert_eq!(a.find_run(4, 6), Some((7, 5)));
+        assert_eq!(a.find_run(6, 6), None);
+        // tenant 1 shrinks: its tail returns and coalesces with the pool
+        // tail into one run a co-tenant can claim
+        a.release(5, 2);
+        assert_eq!(a.find_run(6, 9), Some((5, 7)));
+        a.reserve(5, 6);
+        assert_eq!(a.free_arrays(), 1);
+        assert_eq!(a.find_run(1, 4), Some((11, 1)));
+    }
+}

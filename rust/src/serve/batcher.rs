@@ -37,17 +37,26 @@ impl Default for BatchWindow {
 
 /// One tenant's open-loop arrival queue. `next` marks the first request
 /// not yet served (or dropped); everything before it is history.
+/// `screened` marks how far admission control has looked: requests before
+/// it were accepted at the front door (rejected ones are removed from
+/// `arrivals` outright, so they never count toward depth, drops, or
+/// batches). With admission off `screened` stays 0 and nothing changes.
 #[derive(Clone, Debug)]
 pub struct TenantQueue {
     arrivals: Vec<u64>,
     next: usize,
+    screened: usize,
 }
 
 impl TenantQueue {
     /// `arrivals` must be sorted ascending (as `traffic::arrivals` emits).
     pub fn new(arrivals: Vec<u64>) -> TenantQueue {
         debug_assert!(arrivals.windows(2).all(|w| w[0] <= w[1]));
-        TenantQueue { arrivals, next: 0 }
+        TenantQueue {
+            arrivals,
+            next: 0,
+            screened: 0,
+        }
     }
 
     pub fn total_arrivals(&self) -> usize {
@@ -100,6 +109,33 @@ impl TenantQueue {
             }
         }
         out
+    }
+
+    /// Run admission control over every arrival that has landed by `t`
+    /// and has not been screened yet, oldest first. The predicate sees
+    /// `(arrival_cycle, queue_depth_ahead)` — the number of already
+    /// accepted requests still pending when this one reaches the front
+    /// door — and returns `true` to accept. Refused requests are removed
+    /// from the queue entirely (they were never admitted, so they cannot
+    /// later be dropped or served). Returns how many were refused. Each
+    /// arrival is screened exactly once, so accept/reject decisions are
+    /// final — `ready_at` can only move later, never earlier, preserving
+    /// the event heap's lower-bound invariant.
+    pub fn screen_arrivals(&mut self, t: u64, mut accept: impl FnMut(u64, usize) -> bool) -> u64 {
+        self.screened = self.screened.max(self.next);
+        let mut rejected = 0;
+        while let Some(&a) = self.arrivals.get(self.screened) {
+            if a > t {
+                break;
+            }
+            if accept(a, self.screened - self.next) {
+                self.screened += 1;
+            } else {
+                self.arrivals.remove(self.screened);
+                rejected += 1;
+            }
+        }
+        rejected
     }
 
     /// Abandon pending requests whose `deadline_cy` wait budget had
@@ -172,6 +208,36 @@ mod tests {
         assert_eq!(q.depth_at(160), 2);
         q.admit(160, 1);
         assert_eq!(q.depth_at(160), 1);
+    }
+
+    #[test]
+    fn screening_refuses_and_forgets() {
+        let mut q = TenantQueue::new(vec![100, 150, 200, 900]);
+        // refuse anything arriving when ≥ 2 accepted requests are ahead
+        let r = q.screen_arrivals(300, |_, depth| depth < 2);
+        assert_eq!(r, 1); // 200 saw [100, 150] ahead → refused
+        assert_eq!(q.outstanding(), 3);
+        assert_eq!(q.depth_at(300), 2);
+        // already-screened arrivals are never re-screened
+        let r = q.screen_arrivals(300, |_, _| false);
+        assert_eq!(r, 0);
+        // the late arrival gets screened once it lands
+        let r = q.screen_arrivals(900, |a, depth| {
+            assert_eq!((a, depth), (900, 2));
+            true
+        });
+        assert_eq!(r, 0);
+        assert_eq!(q.admit(900, 8), vec![100, 150, 900]);
+    }
+
+    #[test]
+    fn screening_tracks_serves_and_drops() {
+        let mut q = TenantQueue::new(vec![0, 10, 20]);
+        assert_eq!(q.screen_arrivals(5, |_, _| true), 0);
+        q.admit(5, 8); // serves 0; next passes ahead of nothing
+        assert_eq!(q.screen_arrivals(25, |_, depth| depth == 0), 1); // 10 ok, 20 sees 10 ahead
+        assert_eq!(q.head_arrival(), Some(10));
+        assert_eq!(q.outstanding(), 1);
     }
 
     #[test]

@@ -183,6 +183,12 @@ pub struct TenantStats {
     pub arrivals: u64,
     pub served: u64,
     pub dropped: u64,
+    /// Requests refused at the front door by admission control (never
+    /// queued, so never served or dropped). 0 with admission off.
+    pub rejected: u64,
+    /// Latency budget admission enforced for this tenant (cycles; 0 =
+    /// no budget — config echo for the JSON baseline).
+    pub slo_p95_cy: u64,
     pub batches: u64,
     /// End-to-end request latency (arrival → batch completion), cycles.
     pub latency: LogHistogram,
@@ -214,6 +220,8 @@ impl TenantStats {
             arrivals: 0,
             served: 0,
             dropped: 0,
+            rejected: 0,
+            slo_p95_cy: 0,
             batches: 0,
             latency: LogHistogram::new(),
             peak_queue: 0,

@@ -5,7 +5,8 @@
 //! batch of B"; this subsystem answers the production question the ROADMAP
 //! asks — *what latency does a user see at a given offered load?* It is a
 //! deterministic discrete-event simulator over the same cycle-accurate
-//! models, composed of four pieces:
+//! models, composed of a data plane (traffic, tenancy, batching, metrics)
+//! and a control plane (admission, autoscaling) on top of it:
 //!
 //! * [`traffic`] — seeded open-loop arrival processes per model (Poisson,
 //!   MMPP-2 bursts, replayable traces) built on `util::rng`; open-loop
@@ -22,7 +23,21 @@
 //!   cut-boundary DMA) is exactly the batch engine's;
 //! * [`metrics`] — per-model latency percentiles from a fixed-bin log
 //!   histogram (p50/p95/p99 bit-identical under a fixed seed), queue
-//!   depth, per-resource utilization, and drop statistics.
+//!   depth, per-resource utilization, and drop/refusal statistics;
+//! * [`admission`] — reject-on-arrival admission control against a
+//!   per-tenant p95 latency budget (`--slo-p95`, cycles): every arrival
+//!   faces a predictor built from the per-event queue sample, a
+//!   worst-case drain bound over the tenant's service ceiling, and the
+//!   online p95 of its completed requests — and is refused at the front
+//!   door instead of aging in the queue toward a lazy deadline drop;
+//! * [`autoscale`] — an online pool-resizing controller (`--autoscale`):
+//!   backlog sustained across a hysteresis window grows a tenant's
+//!   disjoint array slice out of the pool's free run (sustained idleness
+//!   shrinks it, returning the tail for co-tenants to claim), re-planning
+//!   through the shared plan cache and charging the PCM reprogramming of
+//!   the moved arrays on the pool timeline — streamed under the
+//!   `--stream-weights` overlap path, blocking the tenant's next dispatch
+//!   otherwise.
 //!
 //! Dispatch is *per-resource* and interval-precise: every batch carries a
 //! [`ReservationProfile`](crate::coordinator::ReservationProfile) (the
@@ -70,7 +85,17 @@
 //! validations, gap-search probe steps, live/pruned interval nodes) so
 //! perf regressions pin on counters instead of wall clock — `imcc
 //! bench-timeline` writes both as the machine-readable baseline.
+//!
+//! Both controllers are strictly additive: with the budget unset (or
+//! `--no-admission`) and `--no-autoscale` the loop takes exactly the
+//! uncontrolled code paths and the dispatch table is bit-identical to the
+//! uncontrolled baseline — `tests/prop_admission.rs` pins that, arrival
+//! conservation (served + dropped + rejected = offered), and the SLO
+//! conformance property; `tests/autoscale_regression.rs` pins the seeded
+//! decision traces, the migration price, and the stale-pressure age-out.
 
+pub mod admission;
+pub mod autoscale;
 pub mod batcher;
 pub mod metrics;
 pub mod tenancy;
@@ -82,16 +107,19 @@ use std::rc::Rc;
 
 use crate::arch::{PowerModel, SystemConfig};
 use crate::coordinator::timeline::{
-    res_label, IntervalSet, ResMap, ResourceTimeline, N_CORES, RES_ARRAY0, RES_CORE0, RES_DMA,
-    RES_DWACC, RES_IMA_MUX, RES_PROG,
+    res_label, IntervalSet, ProfileBuilder, ResMap, ResourceTimeline, N_CORES, RES_ARRAY0,
+    RES_CORE0, RES_DMA, RES_DWACC, RES_IMA_MUX, RES_PROG,
 };
 use crate::coordinator::{BatchConfig, BatchReport, PlanCache, Strategy};
+use crate::ima::ImaArrayPool;
 use crate::net::bottleneck::bottleneck;
 use crate::net::mobilenetv2::mobilenet_v2;
 use crate::net::Network;
 use crate::util::json::{obj, Json};
 use crate::util::table::{f, Table};
 
+pub use admission::AdmissionControl;
+pub use autoscale::{AutoscaleConfig, Autoscaler, Pressure, ScaleDecision, ScaleEvent, ScaleKind};
 pub use batcher::{BatchWindow, TenantQueue};
 pub use metrics::{LogHistogram, ResourceUtil, ServeCounters, TenantStats};
 pub use tenancy::{place_tenants, Arbiter, Claim, Policy, Tenancy, Tenant};
@@ -163,6 +191,21 @@ pub struct ServeConfig {
     /// Abandon requests that waited longer than this before dispatch
     /// (cycles; 0 disables deadlines).
     pub deadline_cy: u64,
+    /// Refuse arrivals at the front door whenever the predicted
+    /// completion latency blows this p95 budget (cycles; 0 disables
+    /// admission control entirely).
+    pub slo_p95_cy: u64,
+    /// Master switch for front-door admission (`--no-admission` keeps
+    /// the budget as a config echo but never refuses a request).
+    pub admission: bool,
+    /// Online pool-resizing controller (`--autoscale`): grow/shrink
+    /// tenant slices on sustained pressure, charging migrations.
+    pub autoscale: bool,
+    /// Hysteresis thresholds and windows of the resizing controller.
+    pub autoscale_cfg: AutoscaleConfig,
+    /// Arrays held back from the initial carve, claimable only by the
+    /// resizing controller (0 = carve the whole pool).
+    pub headroom: usize,
     /// Allow 90° tile rotation during placement.
     pub rotate: bool,
     pub strategy: Strategy,
@@ -185,6 +228,11 @@ impl Default for ServeConfig {
             seed: DEFAULT_SEED,
             duration_s: 0.25,
             deadline_cy: 0,
+            slo_p95_cy: 0,
+            admission: true,
+            autoscale: false,
+            autoscale_cfg: AutoscaleConfig::default(),
+            headroom: 0,
             rotate: false,
             strategy: Strategy::ImaDw,
             plan_cache_cap: 32,
@@ -208,6 +256,14 @@ pub struct ServeReport {
     /// dispatch table — [`render_table`](Self::render_table) is
     /// bit-identical with it on or off.
     pub prune: bool,
+    /// p95 latency budget handed to admission control (cycles; config
+    /// echo, 0 = no budget).
+    pub slo_p95_cy: u64,
+    /// Front-door admission control was active (budget set and not
+    /// switched off).
+    pub admission: bool,
+    /// The online pool-resizing controller was active (config echo).
+    pub autoscale: bool,
     /// Arrival horizon, cycles.
     pub duration_cycles: u64,
     /// Completion of the last batch (≥ duration while draining).
@@ -223,6 +279,9 @@ pub struct ServeReport {
     /// disjoint bursts do not).
     pub peak_backlog: u64,
     pub tenants: Vec<TenantStats>,
+    /// Every resize the autoscaler applied, in event order (empty with
+    /// the controller off). Deterministic under the seed.
+    pub scale_events: Vec<ScaleEvent>,
     /// Busy cycles per pool resource (the core-complex aggregate, each
     /// core, DW accelerator, IMA mux, DMA port, PCM programming port, the
     /// array aggregate, and the busiest single array).
@@ -262,6 +321,11 @@ impl ServeReport {
         self.tenants.iter().map(|t| t.dropped).sum()
     }
 
+    /// Requests refused at the front door by admission control.
+    pub fn total_rejected(&self) -> u64 {
+        self.tenants.iter().map(|t| t.rejected).sum()
+    }
+
     /// Aggregate served throughput over the makespan, inferences/s.
     pub fn inferences_per_s(&self) -> f64 {
         let makespan_s = self.makespan_cycles as f64 * self.cycle_ns * 1e-9;
@@ -292,8 +356,8 @@ impl ServeReport {
         let mut t = Table::new(
             &title,
             &[
-                "model", "arrays", "passes", "occ", "arrivals", "served", "dropped", "batches",
-                "mean B", "p50 ms", "p95 ms", "p99 ms", "peak q",
+                "model", "arrays", "passes", "occ", "arrivals", "served", "dropped", "rejected",
+                "batches", "mean B", "p50 ms", "p95 ms", "p99 ms", "peak q",
             ],
         );
         for s in &self.tenants {
@@ -306,6 +370,7 @@ impl ServeReport {
                 s.arrivals.to_string(),
                 s.served.to_string(),
                 s.dropped.to_string(),
+                s.rejected.to_string(),
                 s.batches.to_string(),
                 f(s.mean_batch(), 1),
                 f(self.ms(p50), 3),
@@ -322,6 +387,24 @@ impl ServeReport {
             .collect();
         out.push_str(&format!("per-resource utilization: {}\n", util.join(", ")));
         out.push_str(&format!("peak simultaneous backlog: {} requests\n", self.peak_backlog));
+        if self.autoscale {
+            out.push_str(&format!("scale events: {}\n", self.scale_events.len()));
+            for ev in &self.scale_events {
+                out.push_str(&format!(
+                    "  {} {} @{}: [{}, {}) -> [{}, {}) arrays, {} prog cy, {} blocked{}\n",
+                    ev.kind.label(),
+                    self.tenants[ev.tenant].name,
+                    ev.t,
+                    ev.from_base,
+                    ev.from_base + ev.from_arrays,
+                    ev.to_base,
+                    ev.to_base + ev.to_arrays,
+                    ev.program_cycles,
+                    ev.blocked_cycles,
+                    if ev.streamed { " (streamed)" } else { "" },
+                ));
+            }
+        }
         out
     }
 
@@ -341,6 +424,8 @@ impl ServeReport {
                     ("arrivals", (s.arrivals as f64).into()),
                     ("served", (s.served as f64).into()),
                     ("dropped", (s.dropped as f64).into()),
+                    ("rejected", (s.rejected as f64).into()),
+                    ("slo_p95", (s.slo_p95_cy as f64).into()),
                     ("batches", (s.batches as f64).into()),
                     ("mean_batch", s.mean_batch().into()),
                     ("p50_ms", self.ms(p50).into()),
@@ -363,6 +448,24 @@ impl ServeReport {
                 ])
             })
             .collect();
+        let events: Vec<Json> = self
+            .scale_events
+            .iter()
+            .map(|ev| {
+                obj([
+                    ("tenant", self.tenants[ev.tenant].name.as_ref().into()),
+                    ("t_cycles", (ev.t as f64).into()),
+                    ("kind", ev.kind.label().into()),
+                    ("from_base", ev.from_base.into()),
+                    ("from_arrays", ev.from_arrays.into()),
+                    ("to_base", ev.to_base.into()),
+                    ("to_arrays", ev.to_arrays.into()),
+                    ("program_cycles", (ev.program_cycles as f64).into()),
+                    ("blocked_cycles", (ev.blocked_cycles as f64).into()),
+                    ("streamed", ev.streamed.into()),
+                ])
+            })
+            .collect();
         let c = &self.counters;
         let counters = obj([
             ("steps", (c.steps as f64).into()),
@@ -381,6 +484,9 @@ impl ServeReport {
             ("backfill", self.backfill.into()),
             ("stream_weights", self.stream_weights.into()),
             ("prune", self.prune.into()),
+            ("slo_p95_cy", (self.slo_p95_cy as f64).into()),
+            ("admission", self.admission.into()),
+            ("autoscale", self.autoscale.into()),
             ("duration_cycles", (self.duration_cycles as f64).into()),
             ("makespan_cycles", (self.makespan_cycles as f64).into()),
             ("busy_cycles", (self.busy_cycles as f64).into()),
@@ -389,6 +495,8 @@ impl ServeReport {
             ("inf_per_s", self.inferences_per_s().into()),
             ("served", (self.total_served() as f64).into()),
             ("dropped", (self.total_dropped() as f64).into()),
+            ("rejected", (self.total_rejected() as f64).into()),
+            ("scale_events", Json::Arr(events)),
             ("counters", counters),
             ("tenants", Json::Arr(tenants)),
             ("resources", Json::Arr(resources)),
@@ -449,7 +557,9 @@ pub fn bottleneck_fleet(n: usize, rate_per_s: f64) -> Vec<ModelTraffic> {
 /// small-key hash, not a full cache-key rebuild per validation.
 struct SimCtx<'a> {
     models: &'a [ModelTraffic],
-    tenancy: &'a Tenancy,
+    /// Owned, not borrowed: the autoscaler rewrites a tenant's slice and
+    /// plan mid-run.
+    tenancy: Tenancy,
     cfg: &'a SystemConfig,
     pm: &'a PowerModel,
     scfg: &'a ServeConfig,
@@ -483,7 +593,10 @@ impl SimCtx<'_> {
 /// Validate one tenant's next dispatch: the earliest instant its batch can
 /// start given its queue and (in overlap mode) the pool timeline, plus the
 /// batch it would form there. Expired requests are dropped lazily at the
-/// would-be dispatch instant (charged to `st`). `None` once the queue is
+/// would-be dispatch instant (charged to `st`); with admission control on,
+/// unscreened arrivals face the front-door gate first and refusals are
+/// charged to `st.rejected`. `not_before` floors this tenant's dispatch
+/// (a blocking migration's tail); 0 = no floor. `None` once the queue is
 /// drained.
 #[allow(clippy::too_many_arguments)]
 fn validate_candidate(
@@ -494,23 +607,36 @@ fn validate_candidate(
     timeline: &ResourceTimeline,
     pool_free: u64,
     rmap: ResMap,
+    not_before: u64,
+    mut admission: Option<&mut AdmissionControl>,
 ) -> Option<(u64, usize, u64)> {
     let scfg = ctx.scfg;
     loop {
         let r = q.ready_at(&scfg.window)?;
+        // front-door screening at the admission instant: every arrival
+        // landed by `r` faces the predictor before it may join a window
+        if let Some(ac) = admission.as_deref_mut() {
+            let rej = q.screen_arrivals(r, |_, depth| ac.admit(tenant, depth));
+            if rej > 0 {
+                st.rejected += rej;
+                continue; // window state changed — recompute
+            }
+        }
+        // a migration floor delays the dispatch, never the window math
+        let floor = r.max(not_before);
         // fixed point: waiting for resources may let more arrivals join
         // the window, which may change the profile, which may move the
         // instant — batch size normally only grows, so this converges in
         // a round or two
-        let mut b = q.depth_at(r).min(scfg.window.max_batch).max(1);
+        let mut b = q.depth_at(floor).min(scfg.window.max_batch).max(1);
         let mut td;
         let mut rounds = 0usize;
         loop {
             let cost = ctx.batch_cost(tenant, b);
             td = if scfg.overlap {
-                timeline.earliest_start(&cost.profile, rmap, r)
+                timeline.earliest_start(&cost.profile, rmap, floor)
             } else {
-                r.max(pool_free)
+                floor.max(pool_free)
             };
             let b2 = q.depth_at(td).min(scfg.window.max_batch).max(1);
             if b2 == b {
@@ -531,6 +657,15 @@ fn validate_candidate(
             }
             b = b2;
         }
+        // late arrivals that landed while the batch waited for resources
+        // face the same gate before they may join at the dispatch instant
+        if let Some(ac) = admission.as_deref_mut() {
+            let rej = q.screen_arrivals(td, |_, depth| ac.admit(tenant, depth));
+            if rej > 0 {
+                st.rejected += rej;
+                continue;
+            }
+        }
         // backlog snapshot at the candidate instant, taken before lazy
         // drops so expired-but-still-queued requests count toward the
         // peak a client would have observed; the every-event sample in
@@ -550,6 +685,143 @@ fn validate_candidate(
         let cycles = ctx.batch_cost(tenant, b).cycles;
         return Some((td, b, cycles));
     }
+}
+
+/// Actuate one autoscale decision at instant `t`: re-plan the tenant's
+/// network into the new slice through the shared plan cache, charge the
+/// PCM reprogramming of the moved arrays on the pool timeline (chained on
+/// the programming port, landing on the destination array timelines),
+/// floor the tenant's next dispatch when the migration blocks, and trace
+/// the event. Every abort path restores the free map untouched — the
+/// controller simply retries while the pressure persists. Grows free the
+/// old slice before searching, so in-place growth coalesces with
+/// neighboring free arrays and a co-tenant's shrink return is claimable;
+/// a plan that would not actually spread into more arrays than it already
+/// holds is kept where it is (growing a resident tenant buys nothing).
+#[allow(clippy::too_many_arguments)]
+fn apply_scale(
+    decision: ScaleDecision,
+    tenant: usize,
+    t: u64,
+    ctx: &mut SimCtx<'_>,
+    auto: &mut Autoscaler,
+    timeline: &mut ResourceTimeline,
+    rmaps: &mut [ResMap],
+    stats: &mut [TenantStats],
+    not_before: &mut [u64],
+    admission: Option<&mut AdmissionControl>,
+) {
+    let scfg = ctx.scfg;
+    let (old_base, old_arrays) = {
+        let ten = &ctx.tenancy.tenants[tenant];
+        (ten.array_base, ten.arrays)
+    };
+    auto.release(old_base, old_arrays);
+    let (new_base, trial, kind) = match decision {
+        ScaleDecision::Grow { target } => {
+            let Some((base, len)) = auto.find_run(old_arrays + 1, target) else {
+                auto.reserve(old_base, old_arrays);
+                return; // no free run wide enough — retry later
+            };
+            (base, len, ScaleKind::Grow)
+        }
+        ScaleDecision::Shrink { target } => (old_base, target, ScaleKind::Shrink),
+    };
+    let s = ctx.cfg.xbar_rows;
+    let plan = match ctx
+        .cache
+        .get_or_place(&ctx.models[tenant].net, s, trial, scfg.rotate)
+    {
+        Ok(p) => p,
+        Err(_) => {
+            // a single layer outgrows the trial slice — keep the old one
+            auto.reserve(old_base, old_arrays);
+            return;
+        }
+    };
+    let used = plan.passes.iter().map(|p| p.arrays_used).max().unwrap_or(0);
+    if used == 0 || (kind == ScaleKind::Grow && used <= old_arrays) {
+        auto.reserve(old_base, old_arrays);
+        return;
+    }
+    auto.reserve(new_base, used);
+
+    // migration price: PCM reprogramming of every array the new plan's
+    // first pass touches, serialized on the programming port and charged
+    // to the destination array timelines after whatever already holds them
+    let pool = ImaArrayPool::new(ctx.cfg, ctx.pm);
+    let by_array = pool.program_cycles_by_array(&plan.passes[0]);
+    let program_cycles: u64 = by_array.values().sum();
+    let mut pb = ProfileBuilder::new();
+    let mut prog_free = timeline.free_at(RES_PROG).saturating_sub(t);
+    let mut end_max = 0u64;
+    for (&a, &cy) in &by_array {
+        let res = RES_ARRAY0 + new_base + a;
+        let start = prog_free.max(timeline.free_at(res).saturating_sub(t));
+        let fin = start + cy;
+        pb.occupy(RES_PROG, start, fin);
+        pb.occupy(res, start, fin);
+        prog_free = fin;
+        end_max = end_max.max(fin);
+    }
+    timeline.commit(
+        t,
+        &pb.build(end_max),
+        ResMap {
+            array_base: 0,
+            core_base: 0,
+        },
+    );
+    // a blocking migration floors the tenant's next dispatch past the
+    // reprogramming tail; with --stream-weights it rides the overlap
+    // path and only the destination array timelines carry the cost
+    let blocked_cycles = if scfg.stream_weights { 0 } else { end_max };
+    not_before[tenant] = not_before[tenant].max(t + blocked_cycles);
+
+    // swap the slice in: tenant record, stats echo, resource map, the
+    // per-run cost memo, and the admission predictor's service ceiling
+    let slice_devices = used * s * s;
+    let occupancy = if slice_devices == 0 {
+        0.0
+    } else {
+        plan.passes
+            .iter()
+            .map(|p| p.devices_used() as f64 / slice_devices as f64)
+            .fold(0.0, f64::max)
+    };
+    let n_passes = plan.passes.len();
+    {
+        let ten = &mut ctx.tenancy.tenants[tenant];
+        ten.array_base = new_base;
+        ten.arrays = used;
+        ten.plan = Rc::clone(&plan);
+        ten.occupancy = occupancy;
+    }
+    stats[tenant].arrays = used;
+    stats[tenant].n_passes = n_passes;
+    stats[tenant].occupancy = occupancy;
+    stats[tenant].energy_j += pool.program_energy_j(&plan.passes[0]);
+    rmaps[tenant].array_base = new_base;
+    ctx.memo.retain(|&(tn, _), _| tn != tenant);
+    if let Some(ac) = admission {
+        let svc = (1..=scfg.window.max_batch)
+            .map(|b| ctx.batch_cost(tenant, b).cycles)
+            .max()
+            .unwrap_or(0);
+        ac.set_svc_max(tenant, svc);
+    }
+    auto.committed(ScaleEvent {
+        tenant,
+        t,
+        kind,
+        from_base: old_base,
+        from_arrays: old_arrays,
+        to_base: new_base,
+        to_arrays: used,
+        program_cycles,
+        blocked_cycles,
+        streamed: scfg.stream_weights,
+    });
 }
 
 /// Run the serving simulation to completion (arrival horizon + drain)
@@ -581,9 +853,24 @@ pub fn simulate_with_cache(
     let cycle_ns = cfg.freq.cycle_ns();
     let duration_cy = (scfg.duration_s * 1e9 / cycle_ns) as u64;
 
-    // borrow the networks — placement only reads them, no clones
+    if scfg.headroom >= scfg.n_arrays {
+        return Err(format!(
+            "headroom {} leaves no arrays to carve (pool has {})",
+            scfg.headroom, scfg.n_arrays
+        ));
+    }
+    let admission_on = scfg.slo_p95_cy > 0 && scfg.admission;
+
+    // borrow the networks — placement only reads them, no clones; held-
+    // back headroom arrays stay free for the resizing controller
     let nets: Vec<&Network> = models.iter().map(|m| &m.net).collect();
-    let tenancy = place_tenants(&nets, cfg.xbar_rows, scfg.n_arrays, scfg.rotate, cache)?;
+    let tenancy = place_tenants(
+        &nets,
+        cfg.xbar_rows,
+        scfg.n_arrays - scfg.headroom,
+        scfg.rotate,
+        cache,
+    )?;
 
     // seeded, per-model arrival streams
     let mut queues: Vec<TenantQueue> = Vec::with_capacity(models.len());
@@ -595,25 +882,20 @@ pub fn simulate_with_cache(
         let arr = traffic::arrivals(&m.traffic, seed_i, duration_cy, cycle_ns);
         let mut st = TenantStats::new(&ten.name, ten.arrays, ten.n_passes(), ten.occupancy);
         st.arrivals = arr.len() as u64;
+        if admission_on {
+            st.slo_p95_cy = scfg.slo_p95_cy;
+        }
         queues.push(TenantQueue::new(arr));
         stats.push(st);
     }
     let weights: Vec<u64> = models.iter().map(|m| m.weight).collect();
     let mut arbiter = Arbiter::new(scfg.policy, &weights);
-    let mut ctx = SimCtx {
-        models,
-        tenancy: &tenancy,
-        cfg: &cfg,
-        pm,
-        scfg,
-        cache,
-        memo: HashMap::new(),
-    };
 
     // core-affinity rotation is a backfill refinement: the envelope
     // arbiter keeps affinity 0 so `--no-backfill` reproduces the PR 3
-    // fused-complex dispatch bit-identically
-    let rmaps: Vec<ResMap> = tenancy
+    // fused-complex dispatch bit-identically; the autoscaler rewrites a
+    // tenant's array base when it relocates a slice
+    let mut rmaps: Vec<ResMap> = tenancy
         .tenants
         .iter()
         .map(|ten| ResMap {
@@ -625,6 +907,44 @@ pub fn simulate_with_cache(
             },
         })
         .collect();
+    // the resizing controller and the per-tenant migration floors — both
+    // inert (and the floors all 0) with autoscale off
+    let mut auto: Option<Autoscaler> = if scfg.autoscale {
+        let slices: Vec<(usize, usize)> = tenancy
+            .tenants
+            .iter()
+            .map(|ten| (ten.array_base, ten.arrays))
+            .collect();
+        Some(Autoscaler::new(scfg.autoscale_cfg, scfg.n_arrays, &slices))
+    } else {
+        None
+    };
+    let mut not_before: Vec<u64> = vec![0; models.len()];
+
+    let mut ctx = SimCtx {
+        models,
+        tenancy,
+        cfg: &cfg,
+        pm,
+        scfg,
+        cache,
+        memo: HashMap::new(),
+    };
+    // the admission gate prices every tenant's service ceiling up front
+    // (warming the cost memo changes nothing the dispatcher observes)
+    let mut admission: Option<AdmissionControl> = if admission_on {
+        let svc_max: Vec<u64> = (0..models.len())
+            .map(|ti| {
+                (1..=scfg.window.max_batch)
+                    .map(|b| ctx.batch_cost(ti, b).cycles)
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        Some(AdmissionControl::new(scfg.slo_p95_cy, &scfg.window, svc_max))
+    } else {
+        None
+    };
     let mut timeline = ResourceTimeline::with_resources(scfg.backfill, RES_ARRAY0 + scfg.n_arrays);
     let mut pool_free: u64 = 0; // serialized-mode single-server clock
     // union of batch spans — an interval set, because a backfilled batch
@@ -685,6 +1005,8 @@ pub fn simulate_with_cache(
                 &timeline,
                 pool_free,
                 rmaps[i],
+                not_before[i],
+                admission.as_mut(),
             ) else {
                 continue; // queue drained (e.g. emptied by drops)
             };
@@ -726,6 +1048,11 @@ pub fn simulate_with_cache(
             let d = q.depth_at(t);
             stats[i].peak_queue = stats[i].peak_queue.max(d);
             backlog += d;
+            // the same samples feed the resizing controller's pressure
+            // windows (aged out at the horizon before any decision)
+            if let Some(a) = auto.as_mut() {
+                a.record(i, t, d);
+            }
         }
         peak_backlog = peak_backlog.max(backlog as u64);
 
@@ -762,8 +1089,39 @@ pub fn simulate_with_cache(
         for a in &admitted {
             st.latency.record(end - a);
         }
+        // close the admission predictor's loop with the same latencies
+        // the percentile table is built from
+        if let Some(ac) = admission.as_mut() {
+            for a in &admitted {
+                ac.observe(pick_tenant, end - a);
+            }
+        }
         if let Some(r) = queues[pick_tenant].ready_at(&scfg.window) {
             heap.push(Reverse((r.max(t), pick_tenant)));
+        }
+
+        // controller pass, tenant-id order (deterministic): stored heap
+        // instants stay safe — a re-plan only changes future validations,
+        // which recompute from scratch on pop, and the migration floor
+        // only moves dispatches later
+        if let Some(auto_ref) = auto.as_mut() {
+            for ti in 0..queues.len() {
+                let cur = ctx.tenancy.tenants[ti].arrays;
+                if let Some(d) = auto_ref.decide(ti, t, cur) {
+                    apply_scale(
+                        d,
+                        ti,
+                        t,
+                        &mut ctx,
+                        auto_ref,
+                        &mut timeline,
+                        &mut rmaps,
+                        &mut stats,
+                        &mut not_before,
+                        admission.as_mut(),
+                    );
+                }
+            }
         }
     }
 
@@ -817,12 +1175,16 @@ pub fn simulate_with_cache(
         backfill: scfg.backfill,
         stream_weights: scfg.stream_weights,
         prune: scfg.prune,
+        slo_p95_cy: scfg.slo_p95_cy,
+        admission: admission_on,
+        autoscale: scfg.autoscale,
         duration_cycles: duration_cy,
         makespan_cycles: makespan,
         busy_cycles: inflight.total(),
         cycle_ns,
         peak_backlog,
         tenants: stats,
+        scale_events: auto.map(|a| a.events).unwrap_or_default(),
         resource_busy,
         counters,
     })

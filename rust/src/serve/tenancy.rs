@@ -10,6 +10,15 @@
 //! inside its own slice and pays reprogramming + boundary DMA per batch,
 //! exactly as `coordinator::scheduler` charges it.
 //!
+//! The carve is the *initial* layout, not a lifetime contract: under
+//! `--autoscale` the resizing controller in [`super::autoscale`] rewrites
+//! a [`Tenant`]'s `array_base`/`arrays`/`plan` mid-run — growing a
+//! pressured tenant into the pool's free run (arrays held back by
+//! `ServeConfig::headroom` or returned by a co-tenant's shrink) and
+//! re-planning through the same shared cache, with the PCM reprogramming
+//! of the moved arrays charged on the pool timeline. Slices stay disjoint
+//! at every instant; only their boundaries move.
+//!
 //! Cross-tenant timing: dispatch is per-resource and interval-precise.
 //! Every batch carries a reservation profile of merged busy `[start, end)`
 //! intervals over the pool's explicit resources — each array of the

@@ -63,6 +63,9 @@ impl Args {
                 | "stream-weights"
                 | "prune"
                 | "no-prune"
+                | "autoscale"
+                | "no-autoscale"
+                | "no-admission"
         )
     }
 
@@ -157,5 +160,19 @@ mod tests {
         assert_eq!(b.positional, vec!["positional"]);
         assert!(b.flag("json"));
         assert_eq!(b.opt("json"), None);
+    }
+
+    #[test]
+    fn admission_and_autoscale_flags_parse() {
+        // --slo-p95 takes a value; the controller switches are boolean and
+        // never swallow the token after them
+        let a = argv("serve --slo-p95 4000000 --autoscale --json out.json");
+        assert_eq!(a.opt_parse("slo-p95", 0u64), 4_000_000);
+        assert!(a.flag("autoscale"));
+        assert_eq!(a.opt("json"), Some("out.json"));
+        let b = argv("serve --no-admission --no-autoscale --json out.json");
+        assert!(b.flag("no-admission"));
+        assert!(b.flag("no-autoscale"));
+        assert_eq!(b.opt("json"), Some("out.json"));
     }
 }

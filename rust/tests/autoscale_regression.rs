@@ -1,0 +1,277 @@
+//! Autoscaler regression pins (no artifacts needed).
+//!
+//! Seeded decision-trace pins for the online pool-resizing controller:
+//!
+//! * a load step triggers **exactly one grow**, only after the hysteresis
+//!   window of sustained evidence, and the trace replays bit-identically
+//!   under the same configuration (and moves when the seed does);
+//! * the migration price charged on the event is **exactly** the PCM
+//!   reprogramming of the arrays the re-planned slice touches —
+//!   `ImaArrayPool::program_cycles_by_array` of the new plan's first pass,
+//!   recomputed here independently;
+//! * a shrink **returns arrays a co-tenant's grow then claims**: the
+//!   grown slice starts exactly where the shrunken one now ends;
+//! * a **streamed** migration (`--stream-weights`) never floors the
+//!   tenant's dispatches and the drain finishes strictly earlier than
+//!   with a blocking migration (pinned under serialized dispatch, where
+//!   the per-batch strict win provably carries to the makespan).
+//!
+//! The expected slice geometry is recomputed from the same pure placement
+//! functions the simulator uses (`PlanCache::get_or_place` is a pure
+//! function of the geometry key), so these pins survive cost-model tuning
+//! — they break only when the controller's decisions change.
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::coordinator::PlanCache;
+use imcc::ima::ImaArrayPool;
+use imcc::net::bottleneck::bottleneck;
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::net::Network;
+use imcc::serve::{
+    simulate, AutoscaleConfig, ModelTraffic, ScaleKind, ServeConfig, TrafficModel,
+};
+use imcc::tilepack::StagedPlacement;
+
+/// Arrays the slice actually spans — the max over passes, exactly what
+/// `place_tenants` carves and the autoscaler reserves.
+fn max_used(plan: &StagedPlacement) -> usize {
+    plan.passes.iter().map(|p| p.arrays_used).max().unwrap_or(0)
+}
+
+/// The controller's grow step for a tenant holding `cur` arrays.
+fn grow_target(cur: usize) -> usize {
+    cur + (cur / 2).max(1)
+}
+
+fn trace_tenant(net: Network, arrivals_cy: Vec<u64>) -> ModelTraffic {
+    ModelTraffic {
+        net,
+        traffic: TrafficModel::Trace { arrivals_cy },
+        weight: 1,
+    }
+}
+
+/// One-scale-only controller config: default hysteresis, but a cooldown no
+/// run outlives — each tenant scales at most once.
+fn one_shot_cfg() -> AutoscaleConfig {
+    AutoscaleConfig {
+        cooldown_cy: u64::MAX / 2,
+        ..AutoscaleConfig::default()
+    }
+}
+
+#[test]
+fn load_step_triggers_exactly_one_grow_after_the_window() {
+    let pm = PowerModel::paper();
+    let n_arrays = 40usize;
+    let headroom = 32usize; // carve 8: MobileNetV2 starts staged
+    let acfg = one_shot_cfg();
+
+    // recompute the expected geometry from the same pure placement
+    let mut cache = PlanCache::new();
+    let net = mobilenet_v2(224);
+    let init = max_used(&cache.get_or_place(&net, 256, n_arrays - headroom, false).unwrap());
+    let target = grow_target(init);
+    let grown = cache.get_or_place(&net, 256, target, false).unwrap();
+    let used_t = max_used(&grown);
+    assert!(
+        used_t > init,
+        "precondition: the grow step must spread the staged plan ({init} -> {used_t})"
+    );
+
+    let models = vec![trace_tenant(mobilenet_v2(224), vec![0; 120])];
+    let scfg = ServeConfig {
+        n_arrays,
+        headroom,
+        autoscale: true,
+        autoscale_cfg: acfg,
+        duration_s: 0.01,
+        ..ServeConfig::default()
+    };
+    let rep = simulate(&models, &scfg, &pm).unwrap();
+    assert_eq!(rep.scale_events.len(), 1, "one load step, one grow");
+    let ev = rep.scale_events[0];
+    assert_eq!(ev.kind, ScaleKind::Grow);
+    assert_eq!(ev.tenant, 0);
+    assert_eq!((ev.from_base, ev.from_arrays), (0, init));
+    assert_eq!((ev.to_base, ev.to_arrays), (0, used_t));
+    assert!(
+        ev.t >= acfg.window_cy,
+        "grow at {} fired before the {}-cycle hysteresis window",
+        ev.t,
+        acfg.window_cy
+    );
+    assert!(!ev.streamed);
+    // blocking migration: the dispatch floor covers at least the whole
+    // serialized reprogramming chain
+    assert!(ev.blocked_cycles >= ev.program_cycles);
+    assert!(rep.tenants[0].arrays == used_t, "stats echo the new slice");
+    assert_eq!(rep.total_served(), 120, "the drain completes after the resize");
+
+    // migration price: exactly the PCM reprogramming of the arrays the
+    // new plan's first pass touches, recomputed independently
+    let cfg = SystemConfig::scaled_up(n_arrays);
+    let pool = ImaArrayPool::new(&cfg, &pm);
+    let expected: u64 = pool.program_cycles_by_array(&grown.passes[0]).values().sum();
+    assert!(expected > 0);
+    assert_eq!(ev.program_cycles, expected);
+
+    // bit-identical replay under the same configuration
+    let again = simulate(&models, &scfg, &pm).unwrap();
+    assert_eq!(format!("{:?}", again.scale_events), format!("{:?}", rep.scale_events));
+    assert_eq!(again.render_table(), rep.render_table());
+}
+
+#[test]
+fn decision_trace_replays_under_a_seed_and_moves_with_it() {
+    let pm = PowerModel::paper();
+    let models = vec![ModelTraffic {
+        net: mobilenet_v2(224),
+        traffic: TrafficModel::Poisson { rate_per_s: 5_000.0 },
+        weight: 1,
+    }];
+    let mk = |seed: u64| ServeConfig {
+        n_arrays: 40,
+        headroom: 32,
+        autoscale: true,
+        autoscale_cfg: one_shot_cfg(),
+        seed,
+        duration_s: 0.01,
+        ..ServeConfig::default()
+    };
+    let a = simulate(&models, &mk(0xA11CE), &pm).unwrap();
+    let b = simulate(&models, &mk(0xA11CE), &pm).unwrap();
+    assert_eq!(format!("{:?}", a.scale_events), format!("{:?}", b.scale_events));
+    assert_eq!(a.render_table(), b.render_table());
+    assert_eq!(a.makespan_cycles, b.makespan_cycles);
+
+    let c = simulate(&models, &mk(0xB0B), &pm).unwrap();
+    let moved = format!("{:?}", a.scale_events) != format!("{:?}", c.scale_events)
+        || a.tenants[0].arrivals != c.tenants[0].arrivals
+        || a.makespan_cycles != c.makespan_cycles;
+    assert!(moved, "a different seed must move the trace or the arrivals");
+}
+
+#[test]
+fn shrink_returns_arrays_a_cotenants_grow_claims() {
+    let pm = PowerModel::paper();
+    let acfg = AutoscaleConfig::default();
+    let w = acfg.window_cy;
+
+    // tenant A: resident bottleneck, one request at t=0, idle forever
+    // after — sustained-low once its old depth sample ages out. Tenant B:
+    // staged MobileNetV2 bursting at 3·window — sustained-high during the
+    // drain. Both become eligible at the same event step ≥ burst + window;
+    // the controller pass runs in tenant order, so A's shrink frees its
+    // tail first and B's grow (which could not fit before: no free run
+    // wider than its own slice) claims the returned arrays.
+    let mut cache = PlanCache::new();
+    let net_a = bottleneck();
+    let net_b = mobilenet_v2(224);
+    let resident = max_used(&cache.get_or_place(&net_a, 256, 64, false).unwrap());
+    assert!(resident >= 2, "shrink needs at least 2 arrays to halve");
+    // the co-tenant must fill its carve exactly (else the pool keeps a
+    // free tail and the grow never waits for the shrink) and must be
+    // staged, so a wider run genuinely spreads its plan — search for the
+    // smallest such carve instead of hard-coding packer geometry
+    let b_carve = (4..=12)
+        .find(|&k| max_used(&cache.get_or_place(&net_b, 256, k, false).unwrap()) == k)
+        .expect("no carve in 4..=12 that MobileNetV2 fills exactly");
+    let b_init = b_carve;
+    let n_arrays = resident + b_carve;
+
+    // A's shrink geometry
+    let a_target = resident - (resident / 2).max(1);
+    let a_new = max_used(&cache.get_or_place(&net_a, 256, a_target, false).unwrap());
+    assert!(a_new < resident, "precondition: the shrink must return arrays");
+    // B's grow geometry after the return: the coalesced run starts at A's
+    // new end and spans everything to the pool edge
+    let run_len = n_arrays - a_new;
+    let b_trial = run_len.min(grow_target(b_init));
+    assert!(run_len >= b_init + 1, "the returned tail must widen B's run");
+    let b_new = max_used(&cache.get_or_place(&net_b, 256, b_trial, false).unwrap());
+    assert!(
+        b_new > b_init,
+        "precondition: the claimed run must spread B's plan ({b_init} -> {b_new})"
+    );
+
+    let burst_t = 3 * w;
+    let models = vec![
+        trace_tenant(net_a, vec![0]),
+        trace_tenant(net_b, vec![burst_t; 300]),
+    ];
+    let scfg = ServeConfig {
+        n_arrays,
+        autoscale: true,
+        autoscale_cfg: one_shot_cfg(),
+        duration_s: 0.05,
+        ..ServeConfig::default()
+    };
+    let rep = simulate(&models, &scfg, &pm).unwrap();
+    assert_eq!(
+        rep.scale_events.len(),
+        2,
+        "one shrink + one grow: {:?}",
+        rep.scale_events
+    );
+    let shrink = rep.scale_events[0];
+    let grow = rep.scale_events[1];
+    assert_eq!((shrink.kind, shrink.tenant), (ScaleKind::Shrink, 0));
+    assert_eq!((grow.kind, grow.tenant), (ScaleKind::Grow, 1));
+    assert_eq!((shrink.from_base, shrink.from_arrays), (0, resident));
+    assert_eq!((shrink.to_base, shrink.to_arrays), (0, a_new));
+    assert_eq!((grow.from_base, grow.from_arrays), (resident, b_init));
+    // the claim: B's grown slice starts exactly where A's shrunken slice
+    // now ends — the returned arrays are what made the run wide enough
+    assert_eq!(grow.to_base, shrink.to_base + shrink.to_arrays);
+    assert_eq!(grow.to_arrays, b_new);
+    assert!(shrink.t >= burst_t + w, "eligibility needs post-burst coverage");
+    assert!(grow.t >= shrink.t, "the shrink frees the run the grow claims");
+}
+
+#[test]
+fn streamed_migration_never_floors_and_beats_blocking() {
+    let pm = PowerModel::paper();
+    // serialized dispatch: the single-server clock ignores the timeline,
+    // so a blocking migration's floor is the *only* coupling — and the
+    // per-batch streamed-reprogramming win provably carries to the
+    // makespan (see overlap_regression for the batch-level pin)
+    let base = ServeConfig {
+        n_arrays: 40,
+        headroom: 32,
+        autoscale: true,
+        autoscale_cfg: one_shot_cfg(),
+        overlap: false,
+        backfill: false,
+        duration_s: 0.01,
+        ..ServeConfig::default()
+    };
+    let models = vec![trace_tenant(mobilenet_v2(224), vec![0; 120])];
+    let block = simulate(&models, &base, &pm).unwrap();
+    let stream = simulate(
+        &models,
+        &ServeConfig {
+            stream_weights: true,
+            ..base
+        },
+        &pm,
+    )
+    .unwrap();
+    assert_eq!(block.scale_events.len(), 1);
+    assert_eq!(stream.scale_events.len(), 1);
+    let bev = block.scale_events[0];
+    let sev = stream.scale_events[0];
+    // same slice move, same migration price — only the charging differs
+    assert_eq!((bev.from_arrays, bev.to_arrays), (sev.from_arrays, sev.to_arrays));
+    assert_eq!(bev.program_cycles, sev.program_cycles);
+    assert!(bev.program_cycles > 0);
+    assert!(!bev.streamed && bev.blocked_cycles >= bev.program_cycles);
+    assert!(sev.streamed && sev.blocked_cycles == 0);
+    assert_eq!(stream.total_served(), block.total_served());
+    assert!(
+        stream.makespan_cycles < block.makespan_cycles,
+        "{} !< {}",
+        stream.makespan_cycles,
+        block.makespan_cycles
+    );
+}

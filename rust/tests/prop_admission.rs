@@ -1,0 +1,164 @@
+//! Admission-control properties (no artifacts needed).
+//!
+//! Three contracts of the front-door gate (`--slo-p95`):
+//!
+//! * **conservation** — every offered arrival is accounted exactly once:
+//!   `served + dropped + rejected = arrivals`, per tenant, across random
+//!   Poisson and MMPP-2 fleets with deadlines and the autoscaler in every
+//!   combination;
+//! * **SLO conformance** — on an uncontended slice the drain bound the
+//!   predictor admits against is a hard guarantee, so whenever the
+//!   *uncontrolled* run blows a p95 budget, the *controlled* run's served
+//!   p95 stays within it (the refusals land on `rejected` instead of the
+//!   tail);
+//! * **off switch** — with the budget unset or `--no-admission`, and
+//!   `--no-autoscale`, the dispatch table and the deterministic work
+//!   counters are bit-identical to the uncontrolled baseline: the
+//!   controllers are strictly additive.
+
+use imcc::arch::PowerModel;
+use imcc::serve::{
+    bottleneck_fleet, mnv2_bottleneck_pair, simulate, ModelTraffic, ServeConfig, TrafficModel,
+};
+
+/// The pair fleet with every tenant's arrival process replaced.
+fn with_traffic(mut models: Vec<ModelTraffic>, traffic: &TrafficModel) -> Vec<ModelTraffic> {
+    for m in &mut models {
+        m.traffic = traffic.clone();
+    }
+    models
+}
+
+#[test]
+fn admission_conserves_every_offered_arrival() {
+    let pm = PowerModel::paper();
+    for seed in [0x11u64, 0xBEEF, 0xC0FF_EE77] {
+        for rate in [200.0f64, 900.0] {
+            let traffics = [
+                TrafficModel::Poisson { rate_per_s: rate },
+                TrafficModel::Bursty {
+                    rate_per_s: rate,
+                    burst: 4.0,
+                    dwell_s: 0.005,
+                },
+            ];
+            for traffic in &traffics {
+                for autoscale in [false, true] {
+                    let scfg = ServeConfig {
+                        n_arrays: 64,
+                        seed,
+                        duration_s: 0.02,
+                        deadline_cy: 400_000,
+                        slo_p95_cy: 600_000,
+                        autoscale,
+                        headroom: if autoscale { 8 } else { 0 },
+                        ..ServeConfig::default()
+                    };
+                    let models = with_traffic(mnv2_bottleneck_pair(rate), traffic);
+                    let rep = simulate(&models, &scfg, &pm).unwrap();
+                    for s in &rep.tenants {
+                        assert_eq!(
+                            s.served + s.dropped + s.rejected,
+                            s.arrivals,
+                            "{} seed {seed:#x} rate {rate} autoscale {autoscale}: \
+                             {} + {} + {} != {}",
+                            s.name,
+                            s.served,
+                            s.dropped,
+                            s.rejected,
+                            s.arrivals
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn controlled_p95_meets_the_budget_the_uncontrolled_run_blew() {
+    let pm = PowerModel::paper();
+    // one bottleneck tenant alone in a small pool: resident, uncontended —
+    // the regime where the predictor's drain bound is a hard guarantee
+    let rate = 20_000.0;
+    let models = bottleneck_fleet(1, rate);
+    let base = ServeConfig {
+        n_arrays: 8,
+        seed: 0xABCD,
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    let unc = simulate(&models, &base, &pm).unwrap();
+    let s = &unc.tenants[0];
+    assert_eq!(s.served, s.arrivals, "uncontrolled run never sheds");
+    let p95_unc = s.latency.quantile(0.95);
+    let budget = (p95_unc / 2).max(1);
+    assert!(p95_unc > budget, "overload must blow the halved budget");
+
+    let ctrl_cfg = ServeConfig {
+        slo_p95_cy: budget,
+        ..base.clone()
+    };
+    let ctrl = simulate(&models, &ctrl_cfg, &pm).unwrap();
+    let c = &ctrl.tenants[0];
+    assert_eq!(c.served + c.rejected, c.arrivals, "no deadline: only refusals shed");
+    assert!(c.rejected > 0, "overload under a halved budget must refuse something");
+    let p95_ctrl = c.latency.quantile(0.95);
+    assert!(
+        p95_ctrl <= budget,
+        "served p95 {p95_ctrl} blows the admitted budget {budget} (uncontrolled {p95_unc})"
+    );
+}
+
+#[test]
+fn budget_off_switch_is_bit_identical_to_the_uncontrolled_baseline() {
+    let pm = PowerModel::paper();
+    for seed in [0x5EED_u64, 0xFACE] {
+        for backfill in [true, false] {
+            for rate in [150.0f64, 600.0] {
+                let models = mnv2_bottleneck_pair(rate);
+                let base_cfg = ServeConfig {
+                    n_arrays: 64,
+                    seed,
+                    backfill,
+                    duration_s: 0.02,
+                    deadline_cy: 2_000_000,
+                    ..ServeConfig::default()
+                };
+                let base = simulate(&models, &base_cfg, &pm).unwrap();
+                assert_eq!(base.total_rejected(), 0);
+                assert!(base.scale_events.is_empty());
+
+                // budget set but the master switch off (--no-admission
+                // --no-autoscale): the run must take exactly the
+                // uncontrolled code paths
+                let off_cfg = ServeConfig {
+                    slo_p95_cy: 5_000_000,
+                    admission: false,
+                    autoscale: false,
+                    ..base_cfg.clone()
+                };
+                let off = simulate(&models, &off_cfg, &pm).unwrap();
+                assert_eq!(
+                    off.render_table(),
+                    base.render_table(),
+                    "seed {seed:#x} backfill {backfill} rate {rate}"
+                );
+                assert_eq!(off.counters, base.counters);
+                assert_eq!(off.makespan_cycles, base.makespan_cycles);
+                assert!(off.scale_events.is_empty());
+                assert!(!off.admission, "budget echo without the gate");
+
+                // budget unset with the switch on is the same baseline too
+                let unset_cfg = ServeConfig {
+                    slo_p95_cy: 0,
+                    admission: true,
+                    ..base_cfg.clone()
+                };
+                let unset = simulate(&models, &unset_cfg, &pm).unwrap();
+                assert_eq!(unset.render_table(), base.render_table());
+                assert_eq!(unset.counters, base.counters);
+            }
+        }
+    }
+}
