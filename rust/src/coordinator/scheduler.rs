@@ -138,6 +138,14 @@ pub struct BatchReport {
 }
 
 impl BatchReport {
+    /// The plan runs staged passes — weights are reprogrammed between
+    /// passes instead of being fully resident in the tenant's slice.
+    /// Rides in the execution trace's batch spans, since staged batches
+    /// are the ones whose occupancy includes the programming port.
+    pub fn staged(&self) -> bool {
+        self.n_passes > 1
+    }
+
     pub fn inferences_per_s(&self) -> f64 {
         if self.time_s > 0.0 {
             self.batch as f64 / self.time_s

@@ -267,6 +267,28 @@ impl ReservationProfile {
     pub fn total_busy(&self) -> u64 {
         self.spans.iter().map(|s| s.busy).sum()
     }
+
+    /// The intervals [`ResourceTimeline::commit`] records for this profile
+    /// (offsets relative to the dispatch instant): every merged busy
+    /// interval in backfill mode, the first-use→last-release envelope
+    /// otherwise. Resource ids stay profile-local — callers relocate them
+    /// through the tenant's [`ResMap`]. The serve tracer replays exactly
+    /// this to build its per-resource occupancy tracks, so traced
+    /// occupancy merges to the committed timeline by construction.
+    pub fn committed_spans(&self, backfill: bool) -> impl Iterator<Item = (usize, u64, u64)> + '_ {
+        self.spans.iter().flat_map(move |s| span_committed(s, backfill))
+    }
+}
+
+/// One span's committed intervals (see
+/// [`ReservationProfile::committed_spans`]): each merged busy interval
+/// when backfilling, the envelope once otherwise.
+fn span_committed(s: &ResourceSpan, backfill: bool) -> Box<dyn Iterator<Item = (usize, u64, u64)> + '_> {
+    if backfill {
+        Box::new(s.intervals.iter().map(move |&(a, b)| (s.res, a, b)))
+    } else {
+        Box::new(std::iter::once((s.res, s.first_use, s.last_release)))
+    }
 }
 
 /// Accumulates per-resource occupancy while a schedule is being built,
@@ -528,20 +550,44 @@ impl ResourceTimeline {
     /// conflict until a feasible placement (possibly inside gaps) is
     /// found, so the result is never later than the envelope answer.
     pub fn earliest_start(&self, prof: &ReservationProfile, map: ResMap, not_before: u64) -> u64 {
+        self.earliest_start_blocked(prof, map, not_before).0
+    }
+
+    /// [`earliest_start`](Self::earliest_start) plus attribution: the
+    /// pool-absolute id of the resource that last pushed the start past
+    /// `not_before` (`None` when the profile fits at the floor — nothing
+    /// stalled it). Envelope mode: the resource whose frontier set the
+    /// final start (ties keep the earlier claimant). Backfill mode: the
+    /// resource whose committed interval forced the final jump of the gap
+    /// search. Probe accounting is byte-identical to the unattributed
+    /// query — `earliest_start` delegates here — so tracing the blocker
+    /// cannot perturb the counters the perf gates pin.
+    pub fn earliest_start_blocked(
+        &self,
+        prof: &ReservationProfile,
+        map: ResMap,
+        not_before: u64,
+    ) -> (u64, Option<usize>) {
         let mut steps: u64 = 0;
+        let mut blocker: Option<usize> = None;
         let found = if !self.backfill {
             let mut t = not_before;
             for s in &prof.spans {
                 steps += 1;
-                let free = self.free_at(map.map(s.res));
-                t = t.max(free.saturating_sub(s.first_use));
+                let res = map.map(s.res);
+                let cand = self.free_at(res).saturating_sub(s.first_use);
+                if cand > t {
+                    t = cand;
+                    blocker = Some(res);
+                }
             }
             t
         } else {
             let mut t = not_before;
             'search: loop {
                 for s in &prof.spans {
-                    let Some(set) = self.busy_iv.get(map.map(s.res)) else {
+                    let res = map.map(s.res);
+                    let Some(set) = self.busy_iv.get(res) else {
                         continue;
                     };
                     if set.is_empty() {
@@ -555,6 +601,7 @@ impl ResourceTimeline {
                             // this strictly advances t — termination
                             // follows from the finite committed set
                             t = end - a;
+                            blocker = Some(res);
                             continue 'search;
                         }
                     }
@@ -563,7 +610,19 @@ impl ResourceTimeline {
             }
         };
         self.probes.set(self.probes.get() + steps);
-        found
+        (found, blocker)
+    }
+
+    /// Committed (unpruned) busy-interval sets per pool-absolute resource
+    /// id, skipping never-touched resources — the final-occupancy snapshot
+    /// the serve tracer captures at drain for its span-conservation
+    /// invariant.
+    pub fn committed_intervals(&self) -> impl Iterator<Item = (usize, &[(u64, u64)])> + '_ {
+        self.busy_iv
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.is_empty())
+            .map(|(r, s)| (r, s.as_slice()))
     }
 
     /// Commit a batch dispatched at `t`. Backfill mode records each busy
@@ -901,6 +960,56 @@ mod tests {
         assert_eq!(tl.stats().live_nodes, 0);
         assert_eq!(tl.stats().pruned_nodes, 1);
         assert_eq!(tl.busy_cycles(RES_DMA), 20);
+    }
+
+    #[test]
+    fn blocked_query_attributes_the_binding_resource() {
+        // backfill: the DW accelerator's committed interval forces the jump
+        let mut bf = ResourceTimeline::backfilling();
+        let held = prof(&[(RES_DWACC, &[(0, 40)]), (RES_DMA, &[(0, 10)])], 40);
+        bf.commit(0, &held, ResMap::default());
+        let probe = prof(&[(RES_DWACC, &[(0, 15)]), (RES_DMA, &[(20, 30)])], 30);
+        let (t, blk) = bf.earliest_start_blocked(&probe, ResMap::default(), 0);
+        assert_eq!((t, blk), (40, Some(RES_DWACC)));
+        // fits at the floor: nothing to blame
+        let (t, blk) = bf.earliest_start_blocked(&probe, ResMap::default(), 40);
+        assert_eq!((t, blk), (40, None));
+        // envelope: the frontier that set the final start wins
+        let mut env = ResourceTimeline::envelope();
+        env.commit(0, &held, ResMap::default());
+        let (t, blk) = env.earliest_start_blocked(&probe, ResMap::default(), 0);
+        assert_eq!((t, blk), (40, Some(RES_DWACC)));
+        // attribution delegates: the unattributed answer and the probe
+        // count are identical
+        let plain = ResourceTimeline::backfilling();
+        let mut a = plain.clone();
+        let mut b = plain;
+        a.commit(0, &held, ResMap::default());
+        b.commit(0, &held, ResMap::default());
+        assert_eq!(
+            a.earliest_start(&probe, ResMap::default(), 0),
+            b.earliest_start_blocked(&probe, ResMap::default(), 0).0
+        );
+        assert_eq!(a.stats().probes, b.stats().probes, "probe accounting must match");
+    }
+
+    #[test]
+    fn committed_spans_match_commit_in_both_modes() {
+        let p = prof(&[(RES_DWACC, &[(0, 10), (20, 30)]), (RES_DMA, &[(5, 15)])], 30);
+        for backfill in [true, false] {
+            let mut tl = ResourceTimeline::new(backfill);
+            tl.commit(100, &p, ResMap::default());
+            // replaying committed_spans at the same dispatch offset must
+            // reproduce the committed sets exactly
+            let mut replay: BTreeMap<usize, IntervalSet> = BTreeMap::new();
+            for (res, a, b) in p.committed_spans(backfill) {
+                replay.entry(res).or_default().insert(100 + a, 100 + b);
+            }
+            for (res, ivs) in tl.committed_intervals() {
+                assert_eq!(replay[&res].as_slice(), ivs, "res {res}, backfill {backfill}");
+            }
+            assert_eq!(replay.len(), tl.committed_intervals().count());
+        }
     }
 
     #[test]

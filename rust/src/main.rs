@@ -84,6 +84,15 @@ options:
   --headroom N            `serve`: hold N arrays back from the initial
                           carve for the autoscaler to hand out (default 0)
   --tenants N             `bench-timeline`: fleet size          (default 4)
+  --trace [FILE]          `serve`: record a deterministic execution trace
+                          and export it as Chrome trace_event JSON (open
+                          at ui.perfetto.dev or chrome://tracing; default
+                          file BENCH_trace.json) plus a summary line.
+                          Tracing never perturbs the run — tables, serve
+                          JSON, and counters are bit-identical on or off
+  --trace-limit N         `serve`: cap recorded trace events at N; past it
+                          the oldest events are dropped and counted in the
+                          export's `truncated_events` (default 1048576)
   --json [FILE]           `scaleup`/`serve`/`bench-timeline`: also write a
                           machine-readable bench baseline (default
                           BENCH_scaleup.json / BENCH_serve.json /
@@ -91,7 +100,8 @@ options:
   --sweep                 `serve`: rate × policy percentile table over the
                           default model pair; honors only --arrays --rate
                           --policy --duration --seed --no-overlap
-                          --no-backfill --json
+                          --no-backfill --json (--trace is accepted but
+                          sweeps skip the export)
 ";
 
 fn config_from(args: &Args) -> SystemConfig {
@@ -166,6 +176,12 @@ fn run_serve_sweep(args: &Args, pm: &PowerModel) -> Result<(), String> {
         None => report::serving::DEFAULT_POLICIES.to_vec(),
         Some(p) => vec![Policy::parse(p)?],
     };
+    if args.opt("trace").is_some() || args.flag("trace") {
+        println!(
+            "note: --sweep skips trace export; every point still runs the \
+             no-op recorder path (use `serve --trace` for a single run)"
+        );
+    }
     let rep = report::serving::generate_sweep(
         pm,
         arrays,
@@ -270,8 +286,24 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
         headroom: args.opt_parse("headroom", 0usize),
         ..ServeConfig::default()
     };
-    let rep = serve::simulate(&models, &scfg, pm)?;
+    // trace export mirrors --json: `--trace FILE` names it, bare
+    // `--trace` picks the default, absent = the zero-overhead recorder
+    let trace_path = match args.opt("trace") {
+        Some(p) => Some(p.to_string()),
+        None if args.flag("trace") => Some("BENCH_trace.json".to_string()),
+        None => None,
+    };
+    let trace_limit: usize =
+        args.opt_parse("trace-limit", imcc::serve::trace::DEFAULT_TRACE_LIMIT);
+    let mut rec = if trace_path.is_some() {
+        serve::TraceRecorder::on(trace_limit)
+    } else {
+        serve::TraceRecorder::Off
+    };
+    let mut cache = imcc::coordinator::PlanCache::with_capacity(scfg.plan_cache_cap);
+    let rep = serve::simulate_traced(&models, &scfg, pm, &mut cache, &mut rec)?;
     print!("{}", rep.render_table());
+    print!("{}", rep.render_breakdown());
     let makespan_s = rep.makespan_cycles as f64 * rep.cycle_ns * 1e-9;
     println!(
         "{} served / {} dropped / {} rejected over {:.1} ms makespan — {:.1} inf/s aggregate",
@@ -292,6 +324,11 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
         c.peak_live_intervals,
         c.pruned_intervals
     );
+    if let Some(path) = trace_path {
+        let tr = rec.finish().expect("recorder was on");
+        print!("{}", tr.render_summary());
+        write_json(&path, &imcc::serve::trace::chrome_trace(&rep, &tr))?;
+    }
     if let Some(path) = json_out(args, "BENCH_serve.json") {
         write_json(&path, &rep.to_json())?;
     }

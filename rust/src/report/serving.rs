@@ -16,8 +16,8 @@ use crate::arch::PowerModel;
 use crate::coordinator::PlanCache;
 use crate::net::mobilenetv2::mobilenet_v2;
 use crate::serve::{
-    dispatch_label, mnv2_bottleneck_pair, simulate_with_cache, ModelTraffic, Policy,
-    ServeConfig, TrafficModel, DEFAULT_SEED,
+    dispatch_label, mnv2_bottleneck_pair, simulate_traced, simulate_with_cache, ModelTraffic,
+    Policy, ServeConfig, TraceRecorder, TrafficModel, DEFAULT_SEED,
 };
 use crate::util::json::{obj, Json};
 use crate::util::table::{f, Table};
@@ -70,8 +70,16 @@ pub fn generate_sweep(
                 duration_s,
                 ..ServeConfig::default()
             };
-            let rep = match simulate_with_cache(&mnv2_bottleneck_pair(rate), &scfg, pm, &mut cache)
-            {
+            // sweeps never export a trace, but they deliberately run the
+            // explicit no-op recorder path — the same call `serve --trace`
+            // takes, minus the buffer
+            let rep = match simulate_traced(
+                &mnv2_bottleneck_pair(rate),
+                &scfg,
+                pm,
+                &mut cache,
+                &mut TraceRecorder::Off,
+            ) {
                 Ok(r) => r,
                 Err(e) => {
                     t.row([
@@ -113,6 +121,12 @@ pub fn generate_sweep(
                     ("p50_ms", ms(p50).into()),
                     ("p95_ms", ms(p95).into()),
                     ("p99_ms", ms(p99).into()),
+                    // where the p95 tail lives, phase by phase (queue wait,
+                    // resource stall, service) — the decomposition's sweep
+                    // view
+                    ("p95_queue_ms", ms(s.breakdown.queue_wait.quantile(0.95)).into()),
+                    ("p95_stall_ms", ms(s.breakdown.resource_stall.quantile(0.95)).into()),
+                    ("p95_service_ms", ms(s.breakdown.service.quantile(0.95)).into()),
                     ("peak_queue", s.peak_queue.into()),
                     ("utilization", util.into()),
                     ("overlap", rep.overlap.into()),
@@ -285,6 +299,14 @@ pub fn generate_controlled_sweep(
                     ("rejected", (s.rejected as f64).into()),
                     ("shed_rate", (shed_pct / 100.0).into()),
                     ("p95_ms", (p95 as f64 * rep.cycle_ns * 1e-6).into()),
+                    // the controller's footprint in the decomposition: how
+                    // long requests stalled behind its migrations (0 for
+                    // the uncontrolled arm by construction)
+                    (
+                        "p95_migration_ms",
+                        (s.breakdown.migration_stall.quantile(0.95) as f64 * rep.cycle_ns * 1e-6)
+                            .into(),
+                    ),
                     ("slo_p95_cy", (rep.slo_p95_cy as f64).into()),
                     ("deadline_cy", (deadline_cy as f64).into()),
                     ("scale_events", rep.scale_events.len().into()),
@@ -334,6 +356,16 @@ mod tests {
             assert!(p.req("p99_ms").as_f64().unwrap() >= p.req("p50_ms").as_f64().unwrap());
             let u = p.req("utilization").as_f64().unwrap();
             assert!((0.0..=1.0).contains(&u), "{u}");
+            // decomposition view: every phase tail present and sane
+            for k in ["p95_queue_ms", "p95_stall_ms", "p95_service_ms"] {
+                assert!(p.req(k).as_f64().unwrap() >= 0.0, "{k}");
+            }
+            if p.req("served").as_f64().unwrap() > 0.0 {
+                assert!(
+                    p.req("p95_service_ms").as_f64().unwrap() > 0.0,
+                    "served requests spend real service time"
+                );
+            }
         }
     }
 
@@ -353,6 +385,7 @@ mod tests {
             assert_eq!(arrivals, accounted, "admission must conserve arrivals");
             let shed = p.req("shed_rate").as_f64().unwrap();
             assert!((0.0..=1.0).contains(&shed), "{shed}");
+            assert!(p.req("p95_migration_ms").as_f64().unwrap() >= 0.0);
             if *p.req("controlled") == Json::Bool(false) {
                 uncontrolled += 1;
                 // the uncontrolled arm never refuses at the front door and
@@ -360,6 +393,11 @@ mod tests {
                 assert_eq!(p.req("rejected").as_f64().unwrap(), 0.0);
                 assert_eq!(p.req("scale_events").as_f64().unwrap(), 0.0);
                 assert_eq!(p.req("slo_p95_cy").as_f64().unwrap(), 0.0);
+                assert_eq!(
+                    p.req("p95_migration_ms").as_f64().unwrap(),
+                    0.0,
+                    "no migrations, no migration stall"
+                );
             } else {
                 assert!(p.req("slo_p95_cy").as_f64().unwrap() > 0.0);
             }

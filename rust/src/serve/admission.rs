@@ -95,6 +95,13 @@ impl AdmissionControl {
         self.predicted(tenant, depth) <= self.budget
     }
 
+    /// The p95 budget the gate enforces (cycles) — the threshold every
+    /// traced rejection's `predicted_cy` exceeded (the trace tests check
+    /// exactly that).
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
     /// Re-price a tenant's service ceiling after the autoscaler
     /// re-planned its slice. The observed histogram is kept: the tail is
     /// a property of the workload the tenant already saw, and a stale

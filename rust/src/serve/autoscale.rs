@@ -141,7 +141,10 @@ impl ScaleKind {
     }
 }
 
-/// One applied resize: the slice move plus its migration price.
+/// One applied resize: the slice move plus its migration price. `Copy`,
+/// deliberately: the execution trace records the same value the
+/// controller commits ([`serve::trace`](super::trace) renders it as an
+/// instant event on the tenant's control track).
 #[derive(Clone, Copy, Debug)]
 pub struct ScaleEvent {
     pub tenant: usize,

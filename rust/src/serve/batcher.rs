@@ -95,6 +95,16 @@ impl TenantQueue {
         }
     }
 
+    /// When the window now being dispatched at `t` actually closed:
+    /// [`Self::ready_at`], capped at the dispatch instant itself (a batch
+    /// can never close after it dispatches — and when deeper backlog let
+    /// the dispatcher form a larger batch than the head window, `t` *is*
+    /// the close). Feeds the `batch_wait` phase of the latency
+    /// decomposition; call before [`Self::admit`] consumes the window.
+    pub fn window_close_at(&self, w: &BatchWindow, t: u64) -> u64 {
+        self.ready_at(w).map_or(t, |r| r.min(t))
+    }
+
     /// Pop up to `max_batch` requests that have arrived by `t`; returns
     /// their arrival cycles (≥ 1 entry whenever `ready_at ≤ t`).
     pub fn admit(&mut self, t: u64, max_batch: usize) -> Vec<u64> {
@@ -163,6 +173,23 @@ mod tests {
             max_batch,
             max_wait_cy,
         }
+    }
+
+    #[test]
+    fn window_close_caps_at_dispatch_and_tracks_ready() {
+        let q = TenantQueue::new(vec![100, 150, 200, 900]);
+        let w = window(4, 1000);
+        assert_eq!(q.ready_at(&w), Some(900)); // 4th arrival fills it
+        // dispatched late: the close stays where the window filled
+        assert_eq!(q.window_close_at(&w, 2000), 900);
+        // dispatched the instant it filled
+        assert_eq!(q.window_close_at(&w, 900), 900);
+        // a deeper-backlog batch dispatched before the head window closed:
+        // the dispatch instant is the close
+        assert_eq!(q.window_close_at(&w, 400), 400);
+        // drained queue: degenerate close at the dispatch instant
+        let empty = TenantQueue::new(vec![]);
+        assert_eq!(empty.window_close_at(&w, 500), 500);
     }
 
     #[test]

@@ -8,8 +8,23 @@
 //! run-to-run variation any real deployment sees), and because bins are
 //! integers the reported p50/p95/p99 are *bit-identical* across runs with
 //! the same seed, which the determinism tests pin.
+//!
+//! Reported percentiles are *auditable*: [`LogHistogram::quantile_bounds`]
+//! exposes the `[lo, hi)` bounds of the bin a quantile resolved to (the
+//! serve JSON carries them as `latency_bins`), so a consumer can verify
+//! that every reported p50/p95/p99 lies inside its own bin instead of
+//! trusting the floor convention blindly.
+//!
+//! [`LatencyBreakdown`] carries the per-request latency decomposition the
+//! event loop derives at every dispatch (see `serve::trace::decompose`):
+//! one histogram per phase — queue wait, batching wait, migration stall,
+//! resource stall, service — whose per-request components sum *exactly* to
+//! the end-to-end latency, so the phase `sum()`s conserve against the
+//! latency histogram's total cycle count.
 
 use std::rc::Rc;
+
+use super::trace::RequestPhases;
 
 /// Linear sub-bins per octave: 2^3 = 8.
 const SUB_BITS: u32 = 3;
@@ -120,6 +135,112 @@ impl LogHistogram {
     pub fn percentiles(&self) -> (u64, u64, u64) {
         (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
     }
+
+    /// Exact total of all recorded values (no binning error).
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// The bin a value lands in — public so audits can cross-check a
+    /// reported percentile against [`Self::bin_bounds`].
+    pub fn bin_index(v: u64) -> usize {
+        Self::bin_of(v)
+    }
+
+    /// Half-open value range `[lo, hi)` covered by bin `b`. The last
+    /// bin's true upper edge is 2^64, which does not fit in a `u64`, so
+    /// it saturates to `u64::MAX`.
+    pub fn bin_bounds(b: usize) -> (u64, u64) {
+        let lo = Self::bin_floor(b);
+        let hi = if b + 1 >= BINS {
+            u64::MAX
+        } else {
+            Self::bin_floor(b + 1)
+        };
+        (lo, hi)
+    }
+
+    /// The `[lo, hi)` bounds of the bin quantile `q` resolves to:
+    /// `quantile(q)` reports exactly `lo`, and the sample it stands for
+    /// is `< hi`. Surfaced in the serve JSON as `latency_bins` so the
+    /// reported percentiles are auditable. `(0, 0)` when empty.
+    pub fn quantile_bounds(&self, q: f64) -> (u64, u64) {
+        if self.n == 0 {
+            return (0, 0);
+        }
+        let target = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bin_bounds(b);
+            }
+        }
+        (self.max, u64::MAX)
+    }
+}
+
+/// Per-phase latency decomposition for one tenant: five histograms whose
+/// per-request components telescope exactly to the end-to-end latency
+/// (`serve::trace::decompose` guarantees the sum). Always on — deriving
+/// the phases is a handful of clamps per dispatched request — so the
+/// serve JSON carries the same breakdown whether or not tracing is.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyBreakdown {
+    /// Arrival → the batch window opening (head-of-line wait behind the
+    /// tenant's previous dispatch).
+    pub queue_wait: LogHistogram,
+    /// Waiting for the batch window to fill or time out.
+    pub batch_wait: LogHistogram,
+    /// Held back by an in-flight autoscale migration (`not_before`).
+    pub migration_stall: LogHistogram,
+    /// Ready but resources busy — attributed to the blocking resource
+    /// in [`StallShare`].
+    pub resource_stall: LogHistogram,
+    /// Dispatch → batch completion.
+    pub service: LogHistogram,
+}
+
+impl LatencyBreakdown {
+    pub fn record(&mut self, ph: &RequestPhases) {
+        self.queue_wait.record(ph.queue_wait);
+        self.batch_wait.record(ph.batch_wait);
+        self.migration_stall.record(ph.migration_stall);
+        self.resource_stall.record(ph.resource_stall);
+        self.service.record(ph.service);
+    }
+
+    /// Phase name → histogram, in decomposition order.
+    pub fn phases(&self) -> [(&'static str, &LogHistogram); 5] {
+        [
+            ("queue_wait", &self.queue_wait),
+            ("batch_wait", &self.batch_wait),
+            ("migration_stall", &self.migration_stall),
+            ("resource_stall", &self.resource_stall),
+            ("service", &self.service),
+        ]
+    }
+
+    /// Total cycles across all phases — equals the end-to-end latency
+    /// histogram's `sum()` exactly (the conservation law
+    /// `tests/trace_regression.rs` pins).
+    pub fn components_sum(&self) -> u128 {
+        self.phases().iter().map(|(_, h)| h.sum()).sum()
+    }
+}
+
+/// One resource's share of all resource-stall cycles: when a dispatch
+/// was delayed past its floor by a busy resource, the stalled cycles of
+/// every request in the batch are charged to the resource the gap
+/// search last advanced past
+/// (`ResourceTimeline::earliest_start_blocked`), or to the whole pool
+/// (`serve::trace::RES_POOL`) in `--no-overlap` mode.
+#[derive(Clone, Debug)]
+pub struct StallShare {
+    pub name: Rc<str>,
+    /// Pool-absolute resource id (`trace::RES_POOL` when serialized).
+    pub res: usize,
+    pub stalled_cycles: u64,
 }
 
 /// One pool resource's share of a serving run — the per-resource
@@ -192,6 +313,9 @@ pub struct TenantStats {
     pub batches: u64,
     /// End-to-end request latency (arrival → batch completion), cycles.
     pub latency: LogHistogram,
+    /// Where that latency went, phase by phase (components sum to
+    /// `latency`'s total exactly).
+    pub breakdown: LatencyBreakdown,
     /// Deepest backlog observed for this tenant: sampled at *every*
     /// event-loop step (each dispatch instant, for all tenants) and
     /// additionally at this tenant's own dispatch-candidate instants
@@ -224,6 +348,7 @@ impl TenantStats {
             slo_p95_cy: 0,
             batches: 0,
             latency: LogHistogram::new(),
+            breakdown: LatencyBreakdown::default(),
             peak_queue: 0,
             peak_queue_at_dispatch: 0,
             busy_cycles: 0,
@@ -291,6 +416,49 @@ mod tests {
         assert_eq!(h.min(), 1);
         assert_eq!(h.max(), 1000);
         assert!((h.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_lie_within_their_bin_bounds() {
+        let mut h = LogHistogram::new();
+        let mut x = 1u64;
+        for i in 0..4096u64 {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            h.record((x >> 33) % (1u64 << (i % 48 + 4)));
+        }
+        for q in [0.0, 0.25, 0.50, 0.90, 0.95, 0.99, 1.0] {
+            let v = h.quantile(q);
+            let (lo, hi) = h.quantile_bounds(q);
+            assert_eq!(v, lo, "quantile({q}) must report its bin's floor");
+            assert!(lo < hi, "degenerate bin [{lo},{hi}) at q={q}");
+            // the bounds are exactly the owning bin's bounds
+            assert_eq!(LogHistogram::bin_bounds(LogHistogram::bin_index(v)), (lo, hi));
+        }
+        // last-bin upper edge saturates instead of overflowing 2^64
+        assert_eq!(LogHistogram::bin_index(u64::MAX), BINS - 1);
+        assert_eq!(LogHistogram::bin_bounds(BINS - 1).1, u64::MAX);
+        // empty histogram: bounds degenerate to (0, 0), matching quantile = 0
+        assert_eq!(LogHistogram::new().quantile_bounds(0.95), (0, 0));
+    }
+
+    #[test]
+    fn breakdown_components_sum_to_latency() {
+        let mut bd = LatencyBreakdown::default();
+        let mut lat = LogHistogram::new();
+        for (a, prev, close, nb, t, e) in [
+            (0u64, 2u64, 5u64, 7u64, 10u64, 30u64), // all five phases non-zero
+            (7, 4, 9, 12, 12, 40),                  // no resource stall
+            (15, 4, 9, 12, 20, 40),                 // late arrival: a past close and nb
+        ] {
+            let ph = crate::serve::trace::decompose(a, prev, close, nb, t, e);
+            assert_eq!(ph.total(), e - a, "phases must telescope to latency");
+            bd.record(&ph);
+            lat.record(e - a);
+        }
+        assert_eq!(bd.components_sum(), lat.sum());
+        assert_eq!(bd.phases().len(), 5);
     }
 
     #[test]

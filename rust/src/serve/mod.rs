@@ -93,16 +93,40 @@
 //! conservation (served + dropped + rejected = offered), and the SLO
 //! conformance property; `tests/autoscale_regression.rs` pins the seeded
 //! decision traces, the migration price, and the stale-pressure age-out.
+//!
+//! Every served request's latency is **decomposed** at its dispatch into
+//! five telescoping phases that sum to it exactly ([`trace::decompose`]):
+//! *queue wait* (arrival → the tenant's previous dispatch: head-of-line
+//! blocking behind the batch in front), *batching wait* (→ the batch
+//! window's close: filling or timing out), *migration stall* (→ the
+//! autoscale `not_before` floor), *resource stall* (→ dispatch: the batch
+//! was formed but its reservation profile did not fit the committed
+//! timeline — charged to the resource the gap search last advanced the
+//! start past, or to the whole pool in `--no-overlap` mode), and
+//! *service* (→ completion). Each boundary is clamped into the window
+//! the previous one leaves, so out-of-order instants (a request arriving
+//! after its window closed, a floor already in the past) fold into the
+//! neighboring phase instead of going negative. The decomposition is
+//! always on — per-tenant phase percentiles ([`LatencyBreakdown`]) and
+//! the pool-wide stall attribution ([`StallShare`]) ride in
+//! [`ServeReport`] whether or not a trace is captured — while the
+//! [`trace`] module's event recorder (batch lifecycles, per-resource
+//! occupancy replayed from the committed profiles, admission/drop/scale
+//! instants, Chrome `trace_event` export for Perfetto) is strictly
+//! opt-in: [`TraceRecorder::Off`] is a no-op on the hot path, and
+//! `tests/trace_regression.rs` pins traced and untraced runs
+//! bit-identical on dispatch tables and counters.
 
 pub mod admission;
 pub mod autoscale;
 pub mod batcher;
 pub mod metrics;
 pub mod tenancy;
+pub mod trace;
 pub mod traffic;
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 use std::rc::Rc;
 
 use crate::arch::{PowerModel, SystemConfig};
@@ -121,8 +145,11 @@ use crate::util::table::{f, Table};
 pub use admission::AdmissionControl;
 pub use autoscale::{AutoscaleConfig, Autoscaler, Pressure, ScaleDecision, ScaleEvent, ScaleKind};
 pub use batcher::{BatchWindow, TenantQueue};
-pub use metrics::{LogHistogram, ResourceUtil, ServeCounters, TenantStats};
+pub use metrics::{
+    LatencyBreakdown, LogHistogram, ResourceUtil, ServeCounters, StallShare, TenantStats,
+};
 pub use tenancy::{place_tenants, Arbiter, Claim, Policy, Tenancy, Tenant};
+pub use trace::{ServeTrace, TraceRecorder};
 pub use traffic::TrafficModel;
 
 /// Default traffic seed, shared by the library default, the CLI, and the
@@ -286,6 +313,11 @@ pub struct ServeReport {
     /// core, DW accelerator, IMA mux, DMA port, PCM programming port, the
     /// array aggregate, and the busiest single array).
     pub resource_busy: Vec<ResourceUtil>,
+    /// Resource-stall attribution: total stalled request-cycles charged
+    /// to each blocking resource (ascending id, the `--no-overlap` pool
+    /// sentinel last; empty when nothing ever stalled). Sums to the
+    /// tenants' `breakdown.resource_stall` totals.
+    pub stall_by_resource: Vec<StallShare>,
     /// Deterministic perf counters of the run (event-loop steps,
     /// validations, gap-search probes, live/pruned interval nodes) —
     /// reported in the JSON baseline, never in the dispatch table.
@@ -408,6 +440,49 @@ impl ServeReport {
         out
     }
 
+    /// The per-tenant latency-decomposition table (phase percentiles and
+    /// each phase's share of total latency cycles), followed by the
+    /// resource-stall attribution line. Printed by the CLI below the
+    /// serving table; kept out of [`render_table`](Self::render_table) so
+    /// the pruned-vs-unpruned and traced-vs-untraced comparisons of that
+    /// string stay exactly as before.
+    pub fn render_breakdown(&self) -> String {
+        let mut t = Table::new(
+            "latency decomposition — phases sum to end-to-end latency",
+            &["model", "phase", "p50 ms", "p95 ms", "p99 ms", "mean ms", "share"],
+        );
+        for s in &self.tenants {
+            let total = s.latency.sum();
+            for (name, h) in s.breakdown.phases() {
+                let (p50, p95, p99) = h.percentiles();
+                let share = if total == 0 {
+                    0.0
+                } else {
+                    h.sum() as f64 / total as f64
+                };
+                t.row([
+                    s.name.to_string(),
+                    name.to_string(),
+                    f(self.ms(p50), 3),
+                    f(self.ms(p95), 3),
+                    f(self.ms(p99), 3),
+                    f(h.mean() * self.cycle_ns * 1e-6, 3),
+                    format!("{:.1}%", share * 100.0),
+                ]);
+            }
+        }
+        let mut out = t.render();
+        if !self.stall_by_resource.is_empty() {
+            let shares: Vec<String> = self
+                .stall_by_resource
+                .iter()
+                .map(|r| format!("{} {:.3} ms", r.name, self.ms(r.stalled_cycles)))
+                .collect();
+            out.push_str(&format!("resource-stall attribution: {}\n", shares.join(", ")));
+        }
+        out
+    }
+
     /// Machine-readable summary (the `BENCH_serve.json` payload): config
     /// echo, aggregate throughput, per-tenant percentiles, per-resource
     /// utilization.
@@ -417,7 +492,39 @@ impl ServeReport {
             .iter()
             .map(|s| {
                 let (p50, p95, p99) = s.latency.percentiles();
+                // per-phase decomposition: percentiles plus the exact
+                // cycle totals, which sum to total_cycles
+                let mut phases: Vec<(&'static str, Json)> = s
+                    .breakdown
+                    .phases()
+                    .iter()
+                    .map(|(n, h)| {
+                        let (q50, q95, q99) = h.percentiles();
+                        (
+                            *n,
+                            obj([
+                                ("p50_ms", self.ms(q50).into()),
+                                ("p95_ms", self.ms(q95).into()),
+                                ("p99_ms", self.ms(q99).into()),
+                                ("mean_ms", (h.mean() * self.cycle_ns * 1e-6).into()),
+                                ("sum_cycles", (h.sum() as f64).into()),
+                            ]),
+                        )
+                    })
+                    .collect();
+                phases.push(("total_cycles", (s.latency.sum() as f64).into()));
+                // the [lo, hi) bin bounds each reported percentile
+                // resolved to, so the floor convention is auditable
+                let bin = |q: f64| {
+                    let (lo, hi) = s.latency.quantile_bounds(q);
+                    Json::Arr(vec![(lo as f64).into(), (hi as f64).into()])
+                };
                 obj([
+                    ("latency_breakdown", obj(phases)),
+                    (
+                        "latency_bins",
+                        obj([("p50_cy", bin(0.50)), ("p95_cy", bin(0.95)), ("p99_cy", bin(0.99))]),
+                    ),
                     ("model", s.name.as_ref().into()),
                     ("arrays", s.arrays.into()),
                     ("passes", s.n_passes.into()),
@@ -466,6 +573,16 @@ impl ServeReport {
                 ])
             })
             .collect();
+        let stalls: Vec<Json> = self
+            .stall_by_resource
+            .iter()
+            .map(|r| {
+                obj([
+                    ("name", r.name.as_ref().into()),
+                    ("stalled_cycles", (r.stalled_cycles as f64).into()),
+                ])
+            })
+            .collect();
         let c = &self.counters;
         let counters = obj([
             ("steps", (c.steps as f64).into()),
@@ -498,6 +615,7 @@ impl ServeReport {
             ("rejected", (self.total_rejected() as f64).into()),
             ("scale_events", Json::Arr(events)),
             ("counters", counters),
+            ("stall_by_resource", Json::Arr(stalls)),
             ("tenants", Json::Arr(tenants)),
             ("resources", Json::Arr(resources)),
         ])
@@ -592,12 +710,15 @@ impl SimCtx<'_> {
 
 /// Validate one tenant's next dispatch: the earliest instant its batch can
 /// start given its queue and (in overlap mode) the pool timeline, plus the
-/// batch it would form there. Expired requests are dropped lazily at the
-/// would-be dispatch instant (charged to `st`); with admission control on,
-/// unscreened arrivals face the front-door gate first and refusals are
-/// charged to `st.rejected`. `not_before` floors this tenant's dispatch
-/// (a blocking migration's tail); 0 = no floor. `None` once the queue is
-/// drained.
+/// batch it would form there and the resource that pushed the start past
+/// its floor (`None` = fit at the floor; [`trace::RES_POOL`] = the
+/// serialized single-server clock). Expired requests are dropped lazily at
+/// the would-be dispatch instant (charged to `st`); with admission control
+/// on, unscreened arrivals face the front-door gate first and refusals are
+/// charged to `st.rejected`. Refusals and drops are also recorded on
+/// `rec` (a no-op when tracing is off). `not_before` floors this tenant's
+/// dispatch (a blocking migration's tail); 0 = no floor. `None` once the
+/// queue is drained.
 #[allow(clippy::too_many_arguments)]
 fn validate_candidate(
     q: &mut TenantQueue,
@@ -609,14 +730,21 @@ fn validate_candidate(
     rmap: ResMap,
     not_before: u64,
     mut admission: Option<&mut AdmissionControl>,
-) -> Option<(u64, usize, u64)> {
+    rec: &mut TraceRecorder,
+) -> Option<(u64, usize, u64, Option<usize>)> {
     let scfg = ctx.scfg;
     loop {
         let r = q.ready_at(&scfg.window)?;
         // front-door screening at the admission instant: every arrival
         // landed by `r` faces the predictor before it may join a window
         if let Some(ac) = admission.as_deref_mut() {
-            let rej = q.screen_arrivals(r, |_, depth| ac.admit(tenant, depth));
+            let rej = q.screen_arrivals(r, |a, depth| {
+                let ok = ac.admit(tenant, depth);
+                if !ok {
+                    rec.reject(tenant, r, a, depth, ac.predicted(tenant, depth));
+                }
+                ok
+            });
             if rej > 0 {
                 st.rejected += rej;
                 continue; // window state changed — recompute
@@ -630,13 +758,15 @@ fn validate_candidate(
         // a round or two
         let mut b = q.depth_at(floor).min(scfg.window.max_batch).max(1);
         let mut td;
+        let mut blocker;
         let mut rounds = 0usize;
         loop {
             let cost = ctx.batch_cost(tenant, b);
-            td = if scfg.overlap {
-                timeline.earliest_start(&cost.profile, rmap, floor)
+            (td, blocker) = if scfg.overlap {
+                timeline.earliest_start_blocked(&cost.profile, rmap, floor)
             } else {
-                floor.max(pool_free)
+                let start = floor.max(pool_free);
+                (start, (start > floor).then_some(trace::RES_POOL))
             };
             let b2 = q.depth_at(td).min(scfg.window.max_batch).max(1);
             if b2 == b {
@@ -660,7 +790,13 @@ fn validate_candidate(
         // late arrivals that landed while the batch waited for resources
         // face the same gate before they may join at the dispatch instant
         if let Some(ac) = admission.as_deref_mut() {
-            let rej = q.screen_arrivals(td, |_, depth| ac.admit(tenant, depth));
+            let rej = q.screen_arrivals(td, |a, depth| {
+                let ok = ac.admit(tenant, depth);
+                if !ok {
+                    rec.reject(tenant, td, a, depth, ac.predicted(tenant, depth));
+                }
+                ok
+            });
             if rej > 0 {
                 st.rejected += rej;
                 continue;
@@ -679,11 +815,12 @@ fn validate_candidate(
             let d = q.drop_expired(td, scfg.deadline_cy);
             if d > 0 {
                 st.dropped += d;
+                rec.drops(tenant, td, d);
                 continue; // window state changed — recompute
             }
         }
         let cycles = ctx.batch_cost(tenant, b).cycles;
-        return Some((td, b, cycles));
+        return Some((td, b, cycles, blocker));
     }
 }
 
@@ -710,6 +847,7 @@ fn apply_scale(
     stats: &mut [TenantStats],
     not_before: &mut [u64],
     admission: Option<&mut AdmissionControl>,
+    rec: &mut TraceRecorder,
 ) {
     let scfg = ctx.scfg;
     let (old_base, old_arrays) = {
@@ -764,14 +902,15 @@ fn apply_scale(
         prog_free = fin;
         end_max = end_max.max(fin);
     }
-    timeline.commit(
-        t,
-        &pb.build(end_max),
-        ResMap {
-            array_base: 0,
-            core_base: 0,
-        },
-    );
+    let prog_profile = pb.build(end_max);
+    let identity = ResMap {
+        array_base: 0,
+        core_base: 0,
+    };
+    timeline.commit(t, &prog_profile, identity);
+    // migration occupancy rides the trace under batch id 0, so traced
+    // occupancy still merges to the committed timeline with autoscale on
+    rec.occupancy(tenant, 0, t, &prog_profile, identity, scfg.backfill);
     // a blocking migration floors the tenant's next dispatch past the
     // reprogramming tail; with --stream-weights it rides the overlap
     // path and only the destination array timelines carry the cost
@@ -810,7 +949,7 @@ fn apply_scale(
             .unwrap_or(0);
         ac.set_svc_max(tenant, svc);
     }
-    auto.committed(ScaleEvent {
+    let ev = ScaleEvent {
         tenant,
         t,
         kind,
@@ -821,7 +960,9 @@ fn apply_scale(
         program_cycles,
         blocked_cycles,
         streamed: scfg.stream_weights,
-    });
+    };
+    rec.scale(ev);
+    auto.committed(ev);
 }
 
 /// Run the serving simulation to completion (arrival horizon + drain)
@@ -842,6 +983,22 @@ pub fn simulate_with_cache(
     scfg: &ServeConfig,
     pm: &PowerModel,
     cache: &mut PlanCache,
+) -> Result<ServeReport, String> {
+    simulate_traced(models, scfg, pm, cache, &mut TraceRecorder::Off)
+}
+
+/// [`simulate_with_cache`] with an execution-trace recorder. Pass
+/// [`TraceRecorder::Off`] (what every other entry point does) for a
+/// recorder that is a no-op on the hot path; a live recorder observes the
+/// run without perturbing it — the report, dispatch table, and counters
+/// are bit-identical either way (`tests/trace_regression.rs`). Consume
+/// the recorder with [`TraceRecorder::finish`] afterwards.
+pub fn simulate_traced(
+    models: &[ModelTraffic],
+    scfg: &ServeConfig,
+    pm: &PowerModel,
+    cache: &mut PlanCache,
+    rec: &mut TraceRecorder,
 ) -> Result<ServeReport, String> {
     if models.is_empty() {
         return Err("no models to serve".into());
@@ -920,6 +1077,10 @@ pub fn simulate_with_cache(
         None
     };
     let mut not_before: Vec<u64> = vec![0; models.len()];
+    // per-tenant previous dispatch instant and the pool-wide stall
+    // attribution — the always-on halves of the decomposition state
+    let mut prev_dispatch: Vec<u64> = vec![0; models.len()];
+    let mut stall_by_res: BTreeMap<usize, u64> = BTreeMap::new();
 
     let mut ctx = SimCtx {
         models,
@@ -974,6 +1135,7 @@ pub fn simulate_with_cache(
     // once the memoized batch costs are warm
     let mut claims: Vec<Claim> = Vec::new();
     let mut claim_batches: Vec<usize> = Vec::new();
+    let mut claim_blockers: Vec<Option<usize>> = Vec::new();
 
     loop {
         // watermark pruning: no future dispatch can probe before the
@@ -990,6 +1152,7 @@ pub fn simulate_with_cache(
         // dispatchable at `t_min`
         claims.clear();
         claim_batches.clear();
+        claim_blockers.clear();
         let mut t_min: Option<u64> = None;
         while let Some(&Reverse((t_est, i))) = heap.peek() {
             if t_min.is_some_and(|tm| t_est > tm) {
@@ -997,7 +1160,7 @@ pub fn simulate_with_cache(
             }
             heap.pop();
             validations += 1;
-            let Some((td, b, cycles)) = validate_candidate(
+            let Some((td, b, cycles, blocker)) = validate_candidate(
                 &mut queues[i],
                 &mut stats[i],
                 i,
@@ -1007,6 +1170,7 @@ pub fn simulate_with_cache(
                 rmaps[i],
                 not_before[i],
                 admission.as_mut(),
+                rec,
             ) else {
                 continue; // queue drained (e.g. emptied by drops)
             };
@@ -1020,6 +1184,7 @@ pub fn simulate_with_cache(
                 Some(tm) if td == tm => {
                     claims.push(claim);
                     claim_batches.push(b);
+                    claim_blockers.push(blocker);
                 }
                 _ => {
                     // strictly earlier: everything validated so far goes
@@ -1029,10 +1194,12 @@ pub fn simulate_with_cache(
                             heap.push(Reverse((tm_old, c.tenant)));
                         }
                         claim_batches.clear();
+                        claim_blockers.clear();
                     }
                     t_min = Some(td);
                     claims.push(claim);
                     claim_batches.push(b);
+                    claim_blockers.push(blocker);
                 }
             }
         }
@@ -1065,6 +1232,14 @@ pub fn simulate_with_cache(
         }
         let pick_ix = claims.iter().position(|c| c.tenant == pick_tenant).unwrap();
         let b_claim = claim_batches[pick_ix];
+        let blocker = claim_blockers[pick_ix];
+
+        // decomposition boundaries, snapshotted before `admit` advances
+        // the queue: the window close, the migration floor, and this
+        // tenant's previous dispatch
+        let close = queues[pick_tenant].window_close_at(&scfg.window, t);
+        let nb = not_before[pick_tenant];
+        let prev = prev_dispatch[pick_tenant];
 
         // admit exactly the validated batch: the timeline was checked
         // against profile(b_claim), and validation guarantees at least
@@ -1088,6 +1263,29 @@ pub fn simulate_with_cache(
         st.energy_j += cost.energy_j;
         for a in &admitted {
             st.latency.record(end - a);
+            let ph = trace::decompose(*a, prev, close, nb, t, end);
+            st.breakdown.record(&ph);
+            if ph.resource_stall > 0 {
+                *stall_by_res.entry(blocker.unwrap_or(trace::RES_POOL)).or_insert(0) +=
+                    ph.resource_stall;
+            }
+        }
+        prev_dispatch[pick_tenant] = t;
+        if rec.is_on() {
+            rec.batch(trace::BatchSpan {
+                tenant: pick_tenant,
+                batch: steps,
+                size: bsz,
+                head_arrival: admitted[0],
+                prev_dispatch: prev,
+                window_close: close,
+                not_before: nb,
+                dispatch: t,
+                end,
+                blocker,
+                staged: cost.staged(),
+            });
+            rec.occupancy(pick_tenant, steps, t, &cost.profile, rmaps[pick_tenant], scfg.backfill);
         }
         // close the admission predictor's loop with the same latencies
         // the percentile table is built from
@@ -1119,11 +1317,16 @@ pub fn simulate_with_cache(
                         &mut stats,
                         &mut not_before,
                         admission.as_mut(),
+                        rec,
                     );
                 }
             }
         }
     }
+
+    // the conservation ground truth for the trace: the committed
+    // interval sets as they stand at end of run
+    rec.capture_timeline(&timeline);
 
     // per-resource utilization breakdown from the committed timelines:
     // the core-complex aggregate (8 units), each core's own row, then the
@@ -1156,6 +1359,17 @@ pub fn simulate_with_cache(
     resource_busy.push(ResourceUtil::new("arrays", arrays_total, scfg.n_arrays as u64));
     resource_busy.push(ResourceUtil::new(&res_label(array_peak.1), array_peak.0, 1));
 
+    // ascending resource id; the serialized-pool sentinel (usize::MAX)
+    // sorts last by construction
+    let stall_by_resource: Vec<StallShare> = stall_by_res
+        .iter()
+        .map(|(&res, &cy)| StallShare {
+            name: Rc::from(trace::stall_label(res).as_str()),
+            res,
+            stalled_cycles: cy,
+        })
+        .collect();
+
     let tl_stats = timeline.stats();
     let counters = ServeCounters {
         steps,
@@ -1186,6 +1400,7 @@ pub fn simulate_with_cache(
         tenants: stats,
         scale_events: auto.map(|a| a.events).unwrap_or_default(),
         resource_busy,
+        stall_by_resource,
         counters,
     })
 }

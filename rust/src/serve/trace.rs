@@ -1,0 +1,694 @@
+//! Deterministic execution tracing for the serving simulator: structured
+//! events, per-request latency decomposition, and Chrome `trace_event`
+//! export.
+//!
+//! # Event model
+//!
+//! The event loop feeds a [`TraceRecorder`] at exactly the points where
+//! simulated time is spent or a control decision lands:
+//!
+//! * **Batch spans** ([`BatchSpan`], one per dispatch) carry the full
+//!   lifecycle of a formed batch — head arrival, the tenant's previous
+//!   dispatch, the batch-window close, the migration floor, the dispatch
+//!   instant, completion, which resource the gap search last advanced the
+//!   start past ([`BatchSpan::blocker`]), and whether the tenant is
+//!   staged.
+//! * **Occupancy intervals** replay, verbatim, the intervals
+//!   [`ResourceTimeline::commit`] records for the batch's
+//!   [`ReservationProfile`] (via
+//!   [`ReservationProfile::committed_spans`]), relocated to pool-absolute
+//!   resource ids — so the traced per-resource tracks merge to *exactly*
+//!   the committed timeline, by construction. Autoscale migrations replay
+//!   their reprogramming profile the same way (marked with batch id 0;
+//!   real batches are numbered from 1 by event-loop step).
+//! * **Instant events**: admission rejections (with the predictor's
+//!   verdict), lazy deadline drops, and autoscale decisions.
+//!
+//! # Latency decomposition
+//!
+//! [`decompose`] splits one request's end-to-end latency into five
+//! telescoping, non-negative phases that sum to it *exactly*: queue wait
+//! (arrival → the tenant's previous dispatch, head-of-line blocking),
+//! batching wait (→ window close), migration stall (→ the autoscale
+//! `not_before` floor), resource stall (→ dispatch; attributed to the
+//! blocking resource, or to the whole pool in `--no-overlap` mode), and
+//! service (→ completion). The decomposition is *always on* — it is a
+//! handful of clamps per request, recorded into
+//! [`LatencyBreakdown`](super::metrics::LatencyBreakdown) — so the serve
+//! JSON is bit-identical whether or not a trace is being captured.
+//!
+//! # Zero-overhead contract
+//!
+//! [`TraceRecorder::Off`] is a unit variant: every recording method is an
+//! inlined no-op behind a single discriminant test, the hot path
+//! allocates nothing, and dispatch tables plus all [`ServeCounters`]
+//! (`super::ServeCounters`) are pinned bit-identical with tracing on or
+//! off by `tests/trace_regression.rs` and the CI trace smoke. With the
+//! recorder on, events append to a bounded ring: past `limit` the oldest
+//! events are dropped and counted in `truncated_events` — a visible
+//! counter, never a silent cap.
+//!
+//! # Viewing a trace (Perfetto how-to)
+//!
+//! `imcc serve --trace out.json` writes Chrome `trace_event` JSON. Open
+//! <https://ui.perfetto.dev> (or `chrome://tracing`) and load the file:
+//! each tenant is one *process* (pid = tenant index + 1) whose first
+//! track holds the batch lifecycle phases (window/migration/stall/
+//! service), the second the control instants (rejections, drops, scale
+//! events), and one further track per pool resource the tenant occupied
+//! (core0..7, dw_acc, ima_mux, dma, pcm_prog, each array). Timestamps
+//! are microseconds of simulated time; batch/blocker metadata rides in
+//! each slice's `args`.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::coordinator::timeline::{res_label, IntervalSet, ResMap, ResourceTimeline};
+use crate::coordinator::ReservationProfile;
+use crate::util::json::{obj, Json};
+
+use super::autoscale::ScaleEvent;
+use super::ServeReport;
+
+/// Pseudo resource id for "the whole pool": resource stalls in
+/// `--no-overlap` mode (where batches serialize on one opaque server)
+/// are attributed here, since no single timeline resource is to blame.
+pub const RES_POOL: usize = usize::MAX;
+
+/// [`res_label`] extended with the pool sentinel.
+pub fn stall_label(res: usize) -> String {
+    if res == RES_POOL {
+        "pool".into()
+    } else {
+        res_label(res)
+    }
+}
+
+/// Default event cap (per run) before the ring starts dropping oldest
+/// events: ~1M events, far above any shipped scenario.
+pub const DEFAULT_TRACE_LIMIT: usize = 1 << 20;
+
+/// One request's latency, split into five phases that sum exactly to
+/// end-to-end (completion − arrival). All cycles.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestPhases {
+    /// Arrival → the tenant's previous dispatch (head-of-line wait).
+    pub queue_wait: u64,
+    /// → the batch window's close (filling or timing out).
+    pub batch_wait: u64,
+    /// → the autoscale migration floor (`not_before`).
+    pub migration_stall: u64,
+    /// → dispatch: ready but resources busy.
+    pub resource_stall: u64,
+    /// Dispatch → batch completion.
+    pub service: u64,
+}
+
+impl RequestPhases {
+    /// Sum of all phases — exactly the end-to-end latency.
+    pub fn total(&self) -> u64 {
+        self.queue_wait + self.batch_wait + self.migration_stall + self.resource_stall
+            + self.service
+    }
+}
+
+/// Split one admitted request's latency into phases. `a` is its arrival,
+/// `prev_dispatch` the tenant's previous dispatch instant (0 before the
+/// first), `close` the batch window's close, `not_before` the migration
+/// floor, `t` the dispatch instant, `end` the batch completion. Each
+/// boundary is clamped into the window left by the previous one, so the
+/// phases are non-negative and telescope to `end - a` no matter how the
+/// instants interleave (a request arriving after the window closed, a
+/// floor already in the past, …). Requires `a ≤ t ≤ end` — which the
+/// dispatcher guarantees for every admitted request.
+pub fn decompose(
+    a: u64,
+    prev_dispatch: u64,
+    close: u64,
+    not_before: u64,
+    t: u64,
+    end: u64,
+) -> RequestPhases {
+    let c1 = close.clamp(a, t);
+    let w = prev_dispatch.clamp(a, c1);
+    let c2 = not_before.clamp(c1, t);
+    RequestPhases {
+        queue_wait: w - a,
+        batch_wait: c1 - w,
+        migration_stall: c2 - c1,
+        resource_stall: t - c2,
+        service: end - t,
+    }
+}
+
+/// One dispatched batch's lifecycle (all instants in absolute cycles).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSpan {
+    pub tenant: usize,
+    /// Event-loop step that dispatched it (1-based; 0 marks autoscale
+    /// migration occupancy, which has no batch).
+    pub batch: u64,
+    /// Requests admitted.
+    pub size: usize,
+    /// Arrival of the batch's oldest request.
+    pub head_arrival: u64,
+    /// The tenant's previous dispatch (0 before the first).
+    pub prev_dispatch: u64,
+    /// When the batch window closed (head + max-wait, or the max-batch'th
+    /// arrival — clamped to the dispatch instant).
+    pub window_close: u64,
+    /// Migration floor active at dispatch (0 = none).
+    pub not_before: u64,
+    pub dispatch: u64,
+    pub end: u64,
+    /// Pool-absolute resource the gap search last advanced the start
+    /// past; `None` = the profile fit at its floor, [`RES_POOL`] = the
+    /// serialized single-server clock.
+    pub blocker: Option<usize>,
+    /// The tenant runs staged passes (weights reprogrammed per pass).
+    pub staged: bool,
+}
+
+/// One recorded event. Events are appended in simulation order, which is
+/// deterministic under a fixed seed — the exported bytes are too.
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// A dispatched batch's lifecycle span.
+    Batch(BatchSpan),
+    /// One committed busy interval on one pool resource (absolute
+    /// cycles, pool-absolute id) — replayed from the committed profile.
+    Occupancy {
+        tenant: usize,
+        batch: u64,
+        res: usize,
+        start: u64,
+        end: u64,
+    },
+    /// Admission refused an arrival at the front door.
+    Reject {
+        tenant: usize,
+        t: u64,
+        arrival: u64,
+        depth: usize,
+        predicted_cy: u64,
+    },
+    /// Lazy deadline expiry dropped `count` queued requests at `t`.
+    Drops { tenant: usize, t: u64, count: u64 },
+    /// The autoscaler applied a resize.
+    Scale(ScaleEvent),
+}
+
+/// The live recording state behind [`TraceRecorder::On`]: a bounded ring
+/// of events plus the end-of-run timeline snapshot.
+#[derive(Clone, Debug)]
+pub struct TraceBuffer {
+    events: VecDeque<TraceEvent>,
+    limit: usize,
+    truncated: u64,
+    final_intervals: Vec<(usize, Vec<(u64, u64)>)>,
+}
+
+impl TraceBuffer {
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() >= self.limit {
+            self.events.pop_front();
+            self.truncated += 1;
+        }
+        self.events.push_back(ev);
+    }
+}
+
+/// The recorder handed through the event loop. [`TraceRecorder::Off`] is
+/// the default everywhere (sweeps, the library entry points, benches):
+/// every method below is a no-op behind one discriminant test and the
+/// simulation allocates nothing for tracing.
+#[derive(Clone, Debug, Default)]
+pub enum TraceRecorder {
+    #[default]
+    Off,
+    On(Box<TraceBuffer>),
+}
+
+impl TraceRecorder {
+    /// A live recorder capped at `limit` events (oldest dropped past it,
+    /// counted — never silently).
+    pub fn on(limit: usize) -> TraceRecorder {
+        TraceRecorder::On(Box::new(TraceBuffer {
+            events: VecDeque::new(),
+            limit: limit.max(1),
+            truncated: 0,
+            final_intervals: Vec::new(),
+        }))
+    }
+
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        matches!(self, TraceRecorder::On(_))
+    }
+
+    #[inline]
+    pub fn batch(&mut self, span: BatchSpan) {
+        if let TraceRecorder::On(b) = self {
+            b.push(TraceEvent::Batch(span));
+        }
+    }
+
+    /// Replay the intervals `commit(t, prof, map)` records — every merged
+    /// busy interval in backfill mode, the first-use→last-release envelope
+    /// otherwise — as occupancy events in pool-absolute, absolute-time
+    /// coordinates. Empty intervals are skipped, exactly as `commit`
+    /// skips them.
+    #[inline]
+    pub fn occupancy(
+        &mut self,
+        tenant: usize,
+        batch: u64,
+        t: u64,
+        prof: &ReservationProfile,
+        map: ResMap,
+        backfill: bool,
+    ) {
+        if let TraceRecorder::On(b) = self {
+            for (res, a0, b0) in prof.committed_spans(backfill) {
+                if a0 < b0 {
+                    b.push(TraceEvent::Occupancy {
+                        tenant,
+                        batch,
+                        res: map.map(res),
+                        start: t + a0,
+                        end: t + b0,
+                    });
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn reject(&mut self, tenant: usize, t: u64, arrival: u64, depth: usize, predicted_cy: u64) {
+        if let TraceRecorder::On(b) = self {
+            b.push(TraceEvent::Reject {
+                tenant,
+                t,
+                arrival,
+                depth,
+                predicted_cy,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn drops(&mut self, tenant: usize, t: u64, count: u64) {
+        if let TraceRecorder::On(b) = self {
+            b.push(TraceEvent::Drops { tenant, t, count });
+        }
+    }
+
+    #[inline]
+    pub fn scale(&mut self, ev: ScaleEvent) {
+        if let TraceRecorder::On(b) = self {
+            b.push(TraceEvent::Scale(ev));
+        }
+    }
+
+    /// Snapshot the committed per-resource interval sets at end of run —
+    /// the ground truth the traced occupancy events must merge to
+    /// (`tests/trace_regression.rs` pins the conservation).
+    pub fn capture_timeline(&mut self, timeline: &ResourceTimeline) {
+        if let TraceRecorder::On(b) = self {
+            b.final_intervals = timeline
+                .committed_intervals()
+                .map(|(r, iv)| (r, iv.to_vec()))
+                .collect();
+        }
+    }
+
+    /// Consume the recorder into the finished trace (`None` when off).
+    pub fn finish(self) -> Option<ServeTrace> {
+        match self {
+            TraceRecorder::Off => None,
+            TraceRecorder::On(b) => Some(ServeTrace {
+                events: b.events.into(),
+                limit: b.limit,
+                truncated_events: b.truncated,
+                final_intervals: b.final_intervals,
+            }),
+        }
+    }
+}
+
+/// A finished recording: the event stream in simulation order, the cap it
+/// ran under, how many events the cap dropped (0 = complete), and the
+/// end-of-run committed timeline snapshot.
+#[derive(Clone, Debug)]
+pub struct ServeTrace {
+    pub events: Vec<TraceEvent>,
+    pub limit: usize,
+    pub truncated_events: u64,
+    /// `(pool-absolute resource, merged committed intervals)`, ascending.
+    pub final_intervals: Vec<(usize, Vec<(u64, u64)>)>,
+}
+
+impl ServeTrace {
+    /// Merge every recorded occupancy event per resource — with no
+    /// truncation and pruning off this equals [`Self::final_intervals`]
+    /// exactly (span conservation).
+    pub fn merged_occupancy(&self) -> BTreeMap<usize, IntervalSet> {
+        let mut merged: BTreeMap<usize, IntervalSet> = BTreeMap::new();
+        for ev in &self.events {
+            if let TraceEvent::Occupancy { res, start, end, .. } = *ev {
+                merged.entry(res).or_default().insert(start, end);
+            }
+        }
+        merged
+    }
+
+    fn counts(&self) -> (u64, u64, u64, u64, u64) {
+        let (mut batches, mut occ, mut rejects, mut drops, mut scales) = (0, 0, 0, 0, 0);
+        for ev in &self.events {
+            match ev {
+                TraceEvent::Batch(_) => batches += 1,
+                TraceEvent::Occupancy { .. } => occ += 1,
+                TraceEvent::Reject { .. } => rejects += 1,
+                TraceEvent::Drops { .. } => drops += 1,
+                TraceEvent::Scale(_) => scales += 1,
+            }
+        }
+        (batches, occ, rejects, drops, scales)
+    }
+
+    /// The compact summary the CLI prints next to the export path.
+    pub fn render_summary(&self) -> String {
+        let (batches, occ, rejects, drops, scales) = self.counts();
+        format!(
+            "trace: {} events ({} batch spans, {} occupancy intervals, {} rejects, \
+             {} drop batches, {} scale events), limit {}, truncated {}\n",
+            self.events.len(),
+            batches,
+            occ,
+            rejects,
+            drops,
+            scales,
+            self.limit,
+            self.truncated_events,
+        )
+    }
+}
+
+/// Microseconds of simulated time for a cycle count (Chrome traces use
+/// µs timestamps; `displayTimeUnit` renders them as ms).
+fn us(cy: u64, cycle_ns: f64) -> f64 {
+    cy as f64 * cycle_ns * 1e-3
+}
+
+fn pid_of(tenant: usize) -> i64 {
+    tenant as i64 + 1
+}
+
+/// Batch-lifecycle track.
+const TID_LIFE: i64 = 1;
+/// Control instants (rejects, drops, scale events).
+const TID_CTRL: i64 = 2;
+/// Resource `res` renders on thread `TID_RES0 + res`.
+const TID_RES0: i64 = 3;
+
+fn complete_event(
+    name: &str,
+    cat: &'static str,
+    pid: i64,
+    tid: i64,
+    ts_cy: u64,
+    dur_cy: u64,
+    cycle_ns: f64,
+    args: Json,
+) -> Json {
+    obj([
+        ("name", name.into()),
+        ("cat", cat.into()),
+        ("ph", "X".into()),
+        ("pid", pid.into()),
+        ("tid", tid.into()),
+        ("ts", us(ts_cy, cycle_ns).into()),
+        ("dur", us(dur_cy, cycle_ns).into()),
+        ("args", args),
+    ])
+}
+
+fn instant_event(
+    name: &'static str,
+    pid: i64,
+    tid: i64,
+    ts_cy: u64,
+    cycle_ns: f64,
+    args: Json,
+) -> Json {
+    obj([
+        ("name", name.into()),
+        ("cat", "control".into()),
+        ("ph", "i".into()),
+        ("s", "t".into()), // thread-scoped instant
+        ("pid", pid.into()),
+        ("tid", tid.into()),
+        ("ts", us(ts_cy, cycle_ns).into()),
+        ("args", args),
+    ])
+}
+
+fn metadata_event(name: &'static str, pid: i64, tid: Option<i64>, label: String) -> Json {
+    let mut fields = vec![
+        ("name", name.into()),
+        ("ph", "M".into()),
+        ("pid", pid.into()),
+        ("args", obj([("name", label.into())])),
+    ];
+    if let Some(tid) = tid {
+        fields.push(("tid", tid.into()));
+    }
+    obj(fields)
+}
+
+/// Render a finished trace as Chrome `trace_event` JSON (the
+/// `{"traceEvents": [...]}` object form): one *process* per tenant, the
+/// lifecycle/control/per-resource *threads* described in the module docs,
+/// metadata events naming them all. Deterministic bytes: events are
+/// emitted in recorded order behind sorted-key objects.
+pub fn chrome_trace(rep: &ServeReport, tr: &ServeTrace) -> Json {
+    // name every (pid, tid) pair actually used, so Perfetto shows model
+    // names and resource labels instead of bare ids
+    let mut tids: BTreeMap<(i64, i64), String> = BTreeMap::new();
+    for ev in &tr.events {
+        match ev {
+            TraceEvent::Batch(s) => {
+                tids.insert((pid_of(s.tenant), TID_LIFE), "batches".into());
+            }
+            TraceEvent::Occupancy { tenant, res, .. } => {
+                tids.insert((pid_of(*tenant), TID_RES0 + *res as i64), res_label(*res));
+            }
+            TraceEvent::Reject { tenant, .. } | TraceEvent::Drops { tenant, .. } => {
+                tids.insert((pid_of(*tenant), TID_CTRL), "control".into());
+            }
+            TraceEvent::Scale(ev) => {
+                tids.insert((pid_of(ev.tenant), TID_CTRL), "control".into());
+            }
+        }
+    }
+    let mut events: Vec<Json> = Vec::with_capacity(tr.events.len() + tids.len() + rep.tenants.len());
+    for (i, s) in rep.tenants.iter().enumerate() {
+        events.push(metadata_event(
+            "process_name",
+            pid_of(i),
+            None,
+            s.name.to_string(),
+        ));
+    }
+    for (&(pid, tid), label) in &tids {
+        events.push(metadata_event("thread_name", pid, Some(tid), label.clone()));
+    }
+    let cyns = rep.cycle_ns;
+    for ev in &tr.events {
+        match ev {
+            TraceEvent::Batch(s) => {
+                let pid = pid_of(s.tenant);
+                let c1 = s.window_close.clamp(s.head_arrival, s.dispatch);
+                let c2 = s.not_before.clamp(c1, s.dispatch);
+                let args = obj([
+                    ("batch", (s.batch as f64).into()),
+                    ("size", s.size.into()),
+                    (
+                        "blocker",
+                        match s.blocker {
+                            Some(r) => stall_label(r).into(),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("staged", s.staged.into()),
+                ]);
+                // zero-width phases are omitted; service always renders so
+                // every batch is visible even when it dispatched instantly
+                if c1 > s.head_arrival {
+                    events.push(complete_event(
+                        "window", "batch", pid, TID_LIFE, s.head_arrival, c1 - s.head_arrival,
+                        cyns, args.clone(),
+                    ));
+                }
+                if c2 > c1 {
+                    events.push(complete_event(
+                        "migration", "batch", pid, TID_LIFE, c1, c2 - c1, cyns, args.clone(),
+                    ));
+                }
+                if s.dispatch > c2 {
+                    events.push(complete_event(
+                        "stall", "batch", pid, TID_LIFE, c2, s.dispatch - c2, cyns, args.clone(),
+                    ));
+                }
+                events.push(complete_event(
+                    "service", "batch", pid, TID_LIFE, s.dispatch, s.end - s.dispatch, cyns, args,
+                ));
+            }
+            TraceEvent::Occupancy { tenant, batch, res, start, end } => {
+                events.push(complete_event(
+                    &res_label(*res),
+                    "occupancy",
+                    pid_of(*tenant),
+                    TID_RES0 + *res as i64,
+                    *start,
+                    end - start,
+                    cyns,
+                    obj([("batch", (*batch as f64).into())]),
+                ));
+            }
+            TraceEvent::Reject { tenant, t, arrival, depth, predicted_cy } => {
+                events.push(instant_event(
+                    "reject",
+                    pid_of(*tenant),
+                    TID_CTRL,
+                    *t,
+                    cyns,
+                    obj([
+                        ("arrival_cy", (*arrival as f64).into()),
+                        ("depth", (*depth).into()),
+                        ("predicted_cy", (*predicted_cy as f64).into()),
+                    ]),
+                ));
+            }
+            TraceEvent::Drops { tenant, t, count } => {
+                events.push(instant_event(
+                    "drop",
+                    pid_of(*tenant),
+                    TID_CTRL,
+                    *t,
+                    cyns,
+                    obj([("count", (*count as f64).into())]),
+                ));
+            }
+            TraceEvent::Scale(ev) => {
+                events.push(instant_event(
+                    ev.kind.label(),
+                    pid_of(ev.tenant),
+                    TID_CTRL,
+                    ev.t,
+                    cyns,
+                    obj([
+                        ("from_arrays", ev.from_arrays.into()),
+                        ("to_arrays", ev.to_arrays.into()),
+                        ("program_cycles", (ev.program_cycles as f64).into()),
+                        ("blocked_cycles", (ev.blocked_cycles as f64).into()),
+                        ("streamed", ev.streamed.into()),
+                    ]),
+                ));
+            }
+        }
+    }
+    obj([
+        ("displayTimeUnit", "ms".into()),
+        ("event_limit", tr.limit.into()),
+        ("seed", format!("{:#x}", rep.seed).into()),
+        ("truncated_events", (tr.truncated_events as f64).into()),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decompose_telescopes_for_any_instant_interleaving() {
+        // every phase boundary ordering, including degenerate ones
+        let pts = [0u64, 3, 5, 8, 10];
+        for &a in &pts {
+            for &prev in &pts {
+                for &close in &pts {
+                    for &nb in &pts {
+                        for &t in &pts {
+                            if t < a {
+                                continue; // dispatch precedes arrival: impossible
+                            }
+                            let end = t + 7;
+                            let ph = decompose(a, prev, close, nb, t, end);
+                            assert_eq!(ph.total(), end - a, "a={a} prev={prev} close={close} nb={nb} t={t}");
+                            assert_eq!(ph.service, 7);
+                        }
+                    }
+                }
+            }
+        }
+        // the canonical well-ordered case lands each phase exactly
+        let ph = decompose(0, 2, 5, 7, 10, 30);
+        assert_eq!(
+            ph,
+            RequestPhases {
+                queue_wait: 2,
+                batch_wait: 3,
+                migration_stall: 2,
+                resource_stall: 3,
+                service: 20,
+            }
+        );
+    }
+
+    #[test]
+    fn off_recorder_records_nothing_and_finishes_none() {
+        let mut rec = TraceRecorder::Off;
+        assert!(!rec.is_on());
+        rec.reject(0, 10, 5, 3, 99);
+        rec.drops(0, 10, 2);
+        assert!(rec.finish().is_none());
+    }
+
+    #[test]
+    fn truncation_drops_oldest_and_counts() {
+        let mut rec = TraceRecorder::on(2);
+        for i in 0..5u64 {
+            rec.drops(0, i, 1);
+        }
+        let tr = rec.finish().unwrap();
+        assert_eq!(tr.events.len(), 2);
+        assert_eq!(tr.truncated_events, 3);
+        // the survivors are the *newest* events
+        match (&tr.events[0], &tr.events[1]) {
+            (TraceEvent::Drops { t: t0, .. }, TraceEvent::Drops { t: t1, .. }) => {
+                assert_eq!((*t0, *t1), (3, 4));
+            }
+            other => panic!("unexpected events {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stall_labels_cover_pool_and_resources() {
+        assert_eq!(stall_label(RES_POOL), "pool");
+        assert_eq!(stall_label(0), "core0");
+        assert_eq!(stall_label(crate::coordinator::timeline::RES_DWACC), "dw_acc");
+    }
+
+    #[test]
+    fn merged_occupancy_merges_adjacent_intervals() {
+        let mut rec = TraceRecorder::on(DEFAULT_TRACE_LIMIT);
+        if let TraceRecorder::On(b) = &mut rec {
+            for (s, e) in [(0u64, 5u64), (5, 9), (12, 14)] {
+                b.push(TraceEvent::Occupancy { tenant: 0, batch: 1, res: 3, start: s, end: e });
+            }
+        }
+        let tr = rec.finish().unwrap();
+        let merged = tr.merged_occupancy();
+        assert_eq!(merged[&3].as_slice(), &[(0, 9), (12, 14)]);
+    }
+}

@@ -43,6 +43,10 @@ impl Args {
     }
 
     /// Flags that never take a value even when followed by a positional.
+    /// `--json`, `--trace`, and `--trace-limit` stay OFF this list on
+    /// purpose: the first two take an optional filename (bare use falls
+    /// through to the flag path below, picking the default name) and the
+    /// limit always takes a count.
     fn is_boolean_flag(name: &str) -> bool {
         matches!(
             name,
@@ -160,6 +164,23 @@ mod tests {
         assert_eq!(b.positional, vec!["positional"]);
         assert!(b.flag("json"));
         assert_eq!(b.opt("json"), None);
+    }
+
+    #[test]
+    fn trace_flags_parse() {
+        // --trace mirrors --json: keyed with a filename, or bare (default
+        // name) when followed by another --flag or nothing
+        let a = argv("serve --trace trace.json --trace-limit 5000 --json out.json");
+        assert_eq!(a.opt("trace"), Some("trace.json"));
+        assert_eq!(a.opt_parse("trace-limit", 0usize), 5000);
+        assert_eq!(a.opt("json"), Some("out.json"));
+        let b = argv("serve --no-overlap --trace --json out.json");
+        assert!(b.flag("trace"));
+        assert_eq!(b.opt("trace"), None);
+        assert_eq!(b.opt("json"), Some("out.json"));
+        let c = argv("serve --sweep --trace");
+        assert!(c.flag("sweep"));
+        assert!(c.flag("trace"));
     }
 
     #[test]

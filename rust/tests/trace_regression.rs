@@ -1,0 +1,390 @@
+//! Execution-trace regression pins (no artifacts needed).
+//!
+//! The trace recorder's contract is *observation without perturbation*,
+//! and its exported spans must be a faithful replay of what the
+//! simulator committed. Three families of pins:
+//!
+//! * **bit-identity** — a traced run and an untraced run of the same
+//!   seeded configuration produce the same dispatch table, the same
+//!   counters, and the same serve JSON, across Poisson and MMPP-2
+//!   traffic, with and without the admission/autoscale controllers, and
+//!   under serialized (`--no-overlap`) dispatch;
+//! * **conservation** — the trace's occupancy spans merge to exactly the
+//!   committed busy-interval sets the timeline drained with (pruning off
+//!   so the full history survives), every request's five decomposition
+//!   phases sum to its end-to-end latency, and every traced rejection's
+//!   `predicted_cy` exceeds the admission budget;
+//! * **determinism** — two runs under the same seed export byte-identical
+//!   Chrome traces, and the bounded buffer drops oldest-first with an
+//!   exact `truncated_events` count.
+
+use std::collections::BTreeMap;
+
+use imcc::arch::PowerModel;
+use imcc::coordinator::{IntervalSet, PlanCache};
+use imcc::net::bottleneck::bottleneck;
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::serve::trace::{chrome_trace, TraceEvent};
+use imcc::serve::{
+    mnv2_bottleneck_pair, simulate_traced, AdmissionControl, ModelTraffic, Policy, ServeConfig,
+    ServeReport, ServeTrace, TraceRecorder, TrafficModel,
+};
+
+/// Run one configuration twice — recorder off, recorder on — and return
+/// both reports plus the captured trace.
+fn run_pair(models: &[ModelTraffic], scfg: &ServeConfig) -> (ServeReport, ServeReport, ServeTrace) {
+    let pm = PowerModel::paper();
+    let mut cache = PlanCache::with_capacity(scfg.plan_cache_cap);
+    let off = simulate_traced(models, scfg, &pm, &mut cache, &mut TraceRecorder::Off)
+        .expect("untraced run");
+    let mut cache2 = PlanCache::with_capacity(scfg.plan_cache_cap);
+    let mut rec = TraceRecorder::on(1 << 22);
+    let on = simulate_traced(models, scfg, &pm, &mut cache2, &mut rec).expect("traced run");
+    let tr = rec.finish().expect("recorder was on");
+    (off, on, tr)
+}
+
+/// Every observable the regression suite pins elsewhere, compared across
+/// the traced/untraced pair.
+fn assert_identical(off: &ServeReport, on: &ServeReport, ctx: &str) {
+    assert_eq!(off.render_table(), on.render_table(), "{ctx}: dispatch tables");
+    assert_eq!(
+        off.render_breakdown(),
+        on.render_breakdown(),
+        "{ctx}: decomposition tables"
+    );
+    assert_eq!(
+        off.to_json().to_string_pretty(),
+        on.to_json().to_string_pretty(),
+        "{ctx}: serve JSON"
+    );
+    assert_eq!(off.counters.steps, on.counters.steps, "{ctx}: steps");
+    assert_eq!(off.counters.validations, on.counters.validations, "{ctx}: validations");
+    assert_eq!(off.counters.probes, on.counters.probes, "{ctx}: probes");
+    assert_eq!(
+        off.counters.live_intervals, on.counters.live_intervals,
+        "{ctx}: live intervals"
+    );
+}
+
+fn poisson_pair(rate: f64) -> Vec<ModelTraffic> {
+    mnv2_bottleneck_pair(rate)
+}
+
+fn bursty_pair(rate: f64) -> Vec<ModelTraffic> {
+    vec![
+        ModelTraffic {
+            net: mobilenet_v2(224),
+            traffic: TrafficModel::Bursty {
+                rate_per_s: rate,
+                burst: 6.0,
+                dwell_s: 0.004,
+            },
+            weight: 3,
+        },
+        ModelTraffic {
+            net: bottleneck(),
+            traffic: TrafficModel::Bursty {
+                rate_per_s: rate * 2.0,
+                burst: 4.0,
+                dwell_s: 0.002,
+            },
+            weight: 1,
+        },
+    ]
+}
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig {
+        n_arrays: 24,
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn traced_run_is_bit_identical_poisson() {
+    let scfg = base_cfg();
+    let (off, on, tr) = run_pair(&poisson_pair(400.0), &scfg);
+    assert_identical(&off, &on, "poisson/backfilled");
+    assert_eq!(tr.truncated_events, 0);
+    assert!(
+        tr.events.iter().any(|e| matches!(e, TraceEvent::Batch(_))),
+        "a served run must record batch spans"
+    );
+}
+
+#[test]
+fn traced_run_is_bit_identical_bursty_wrr() {
+    let scfg = ServeConfig {
+        policy: Policy::Wrr,
+        ..base_cfg()
+    };
+    let (off, on, _) = run_pair(&bursty_pair(600.0), &scfg);
+    assert_identical(&off, &on, "mmpp2/wrr");
+}
+
+#[test]
+fn traced_run_is_bit_identical_serialized() {
+    let scfg = ServeConfig {
+        overlap: false,
+        ..base_cfg()
+    };
+    let (off, on, tr) = run_pair(&poisson_pair(400.0), &scfg);
+    assert_identical(&off, &on, "serialized");
+    // serialized dispatch has no per-resource profile commits to replay
+    assert!(
+        !tr.events
+            .iter()
+            .any(|e| matches!(e, TraceEvent::Occupancy { .. })),
+        "no occupancy spans without per-resource dispatch"
+    );
+}
+
+#[test]
+fn traced_run_is_bit_identical_with_controllers() {
+    // staged MobileNetV2 under burst pressure with headroom: the
+    // autoscaler migrates, admission sheds — the trace must observe both
+    // without perturbing either
+    let scfg = ServeConfig {
+        n_arrays: 16,
+        headroom: 8,
+        autoscale: true,
+        slo_p95_cy: 3_000_000,
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    let models = vec![ModelTraffic {
+        net: mobilenet_v2(224),
+        traffic: TrafficModel::Bursty {
+            rate_per_s: 4_000.0,
+            burst: 8.0,
+            dwell_s: 0.005,
+        },
+        weight: 1,
+    }];
+    let (off, on, tr) = run_pair(&models, &scfg);
+    assert_identical(&off, &on, "autoscale+slo");
+    assert!(
+        !off.scale_events.is_empty(),
+        "precondition: the controller must actually migrate"
+    );
+    let scales = tr
+        .events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::Scale(_)))
+        .count();
+    assert_eq!(
+        scales,
+        off.scale_events.len(),
+        "one trace instant per applied resize"
+    );
+}
+
+#[test]
+fn occupancy_spans_merge_to_the_committed_timeline() {
+    // pruning off so the drained timeline still holds the whole history
+    for backfill in [true, false] {
+        let scfg = ServeConfig {
+            prune: false,
+            backfill,
+            ..base_cfg()
+        };
+        let (_, _, tr) = run_pair(&poisson_pair(400.0), &scfg);
+        let merged = tr.merged_occupancy();
+        let committed: BTreeMap<usize, IntervalSet> = tr
+            .final_intervals
+            .iter()
+            .map(|(res, iv)| {
+                let mut s = IntervalSet::default();
+                for &(a, b) in iv {
+                    s.insert(a, b);
+                }
+                (*res, s)
+            })
+            .collect();
+        assert!(!committed.is_empty(), "a served run commits busy intervals");
+        assert_eq!(
+            merged, committed,
+            "backfill={backfill}: trace occupancy must replay the committed timeline exactly"
+        );
+    }
+}
+
+#[test]
+fn occupancy_conservation_holds_under_autoscale() {
+    // migrations commit programming profiles outside the batch path; the
+    // recorder replays them as batch-0 occupancy so conservation holds
+    let scfg = ServeConfig {
+        n_arrays: 16,
+        headroom: 8,
+        autoscale: true,
+        prune: false,
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    let models = vec![ModelTraffic {
+        net: mobilenet_v2(224),
+        traffic: TrafficModel::Bursty {
+            rate_per_s: 4_000.0,
+            burst: 8.0,
+            dwell_s: 0.005,
+        },
+        weight: 1,
+    }];
+    let (off, _, tr) = run_pair(&models, &scfg);
+    assert!(!off.scale_events.is_empty(), "precondition: a migration happened");
+    assert!(
+        tr.events
+            .iter()
+            .any(|e| matches!(e, TraceEvent::Occupancy { batch: 0, .. })),
+        "migration programming must appear as batch-0 occupancy"
+    );
+    let merged = tr.merged_occupancy();
+    for (res, iv) in &tr.final_intervals {
+        let mut s = IntervalSet::default();
+        for &(a, b) in iv {
+            s.insert(a, b);
+        }
+        assert_eq!(
+            merged.get(res),
+            Some(&s),
+            "resource {res}: replayed occupancy must cover migrations too"
+        );
+    }
+}
+
+#[test]
+fn decomposition_sums_to_latency_for_every_tenant() {
+    for scfg in [
+        base_cfg(),
+        ServeConfig {
+            overlap: false,
+            ..base_cfg()
+        },
+        ServeConfig {
+            policy: Policy::Sjf,
+            backfill: false,
+            ..base_cfg()
+        },
+    ] {
+        let (off, _, _) = run_pair(&bursty_pair(800.0), &scfg);
+        for s in &off.tenants {
+            assert!(s.served > 0, "{}: precondition — something was served", s.name);
+            assert_eq!(
+                s.breakdown.components_sum(),
+                s.latency.sum(),
+                "{}: phase cycles must sum to end-to-end latency cycles",
+                s.name
+            );
+            let counts: Vec<u64> = s.breakdown.phases().iter().map(|(_, h)| h.count()).collect();
+            assert!(
+                counts.iter().all(|&c| c == s.served),
+                "{}: every phase histogram records every served request",
+                s.name
+            );
+        }
+        // pool-wide stall attribution re-aggregates the same cycles
+        let attributed: u64 = off.stall_by_resource.iter().map(|s| s.stalled_cycles).sum();
+        let stalled: u128 = off
+            .tenants
+            .iter()
+            .map(|s| s.breakdown.resource_stall.sum())
+            .sum();
+        assert_eq!(attributed as u128, stalled, "stall shares conserve stalled cycles");
+    }
+}
+
+#[test]
+fn traced_rejections_exceed_the_admission_budget() {
+    let budget = 2_000_000u64;
+    let scfg = ServeConfig {
+        n_arrays: 16,
+        slo_p95_cy: budget,
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    let models = vec![ModelTraffic {
+        net: mobilenet_v2(224),
+        traffic: TrafficModel::Poisson { rate_per_s: 5_000.0 },
+        weight: 1,
+    }];
+    let (off, _, tr) = run_pair(&models, &scfg);
+    assert!(off.tenants[0].rejected > 0, "precondition: the gate must refuse");
+    // the gate's documented contract: budget() is the threshold every
+    // traced rejection's prediction exceeded
+    let ac = AdmissionControl::new(budget, &scfg.window, vec![1]);
+    assert_eq!(ac.budget(), budget);
+    let mut rejects = 0u64;
+    for e in &tr.events {
+        if let TraceEvent::Reject { predicted_cy, arrival, t, .. } = e {
+            assert!(
+                *predicted_cy > budget,
+                "a traced rejection must carry a prediction over budget"
+            );
+            assert!(arrival <= t, "rejection instants follow their arrivals");
+            rejects += 1;
+        }
+    }
+    assert_eq!(rejects, off.tenants[0].rejected, "one Reject event per refusal");
+}
+
+#[test]
+fn chrome_trace_bytes_are_seed_deterministic() {
+    let scfg = ServeConfig {
+        n_arrays: 16,
+        headroom: 8,
+        autoscale: true,
+        slo_p95_cy: 3_000_000,
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    let models = bursty_pair(2_000.0);
+    let (_, on_a, tr_a) = run_pair(&models, &scfg);
+    let (_, on_b, tr_b) = run_pair(&models, &scfg);
+    let bytes_a = chrome_trace(&on_a, &tr_a).to_string_pretty();
+    let bytes_b = chrome_trace(&on_b, &tr_b).to_string_pretty();
+    assert_eq!(bytes_a, bytes_b, "identical seeds must export identical bytes");
+    // a different seed moves the arrivals, hence the trace
+    let moved = ServeConfig {
+        seed: scfg.seed ^ 1,
+        ..scfg
+    };
+    let (_, on_c, tr_c) = run_pair(&models, &moved);
+    assert_ne!(
+        bytes_a,
+        chrome_trace(&on_c, &tr_c).to_string_pretty(),
+        "a moved seed must move the trace"
+    );
+}
+
+#[test]
+fn trace_limit_drops_oldest_and_counts() {
+    let pm = PowerModel::paper();
+    let scfg = base_cfg();
+    let models = poisson_pair(400.0);
+    // unbounded first, to learn the full event count
+    let mut cache = PlanCache::with_capacity(scfg.plan_cache_cap);
+    let mut rec = TraceRecorder::on(1 << 22);
+    simulate_traced(&models, &scfg, &pm, &mut cache, &mut rec).expect("full run");
+    let full = rec.finish().expect("recorder was on");
+    assert!(full.events.len() > 8, "precondition: enough events to truncate");
+    assert_eq!(full.truncated_events, 0);
+
+    let limit = 8usize;
+    let mut cache2 = PlanCache::with_capacity(scfg.plan_cache_cap);
+    let mut rec2 = TraceRecorder::on(limit);
+    simulate_traced(&models, &scfg, &pm, &mut cache2, &mut rec2).expect("bounded run");
+    let cut = rec2.finish().expect("recorder was on");
+    assert_eq!(cut.events.len(), limit);
+    assert_eq!(
+        cut.truncated_events,
+        (full.events.len() - limit) as u64,
+        "dropped exactly the overflow"
+    );
+    // survivors are the *newest* events: the tail of the unbounded run
+    let tail = &full.events[full.events.len() - limit..];
+    for (a, b) in cut.events.iter().zip(tail) {
+        assert_eq!(format!("{a:?}"), format!("{b:?}"), "oldest-first truncation");
+    }
+}
