@@ -56,11 +56,45 @@
 //! never have conflicted again (`tests/prop_prune.rs` and the CI pruning
 //! smoke pin bit-identity against `--no-prune`). The cumulative busy
 //! tallies and scalar next-free frontiers survive pruning, so the
-//! utilization breakdown is unchanged. Storage is dense: per-resource
-//! state lives in `Vec`s indexed by the pool-absolute resource id, and
-//! [`TimelineStats`] counts the search work deterministically
-//! (binary-search halving steps, live/pruned interval nodes) so perf
-//! regressions pin on counters instead of wall clock.
+//! utilization breakdown is unchanged. Storage is dense *and
+//! struct-of-arrays*: each [`IntervalSet`] keeps its interval starts and
+//! ends in two parallel `u64` vectors, so the conflict probe's binary
+//! search walks one contiguous `ends[]` array (half the bytes of the
+//! old `(start, end)` pair layout) and per-resource state lives in
+//! `Vec`s indexed by the pool-absolute resource id. [`TimelineStats`]
+//! counts the search work deterministically (binary-search halving
+//! steps, live/pruned interval nodes) so perf regressions pin on
+//! counters instead of wall clock.
+//!
+//! **Gap-skip fast paths** (the long-horizon dispatch accelerator,
+//! [`ResourceTimeline::set_gap_skip`], `--no-gap-skip` in the serving
+//! CLI): the backfill search carries two O(1) short-circuits per span
+//! interval, both *exact* — they change how much work the search does
+//! (the `probes` counter), never where a batch lands:
+//!
+//! * **append-at-tail** — a probe starting at or past the resource's
+//!   last committed release (`t + a ≥ set.end()`) cannot conflict, so
+//!   the binary search is skipped outright. This is the common case of
+//!   steady-state serving, where each tenant's next batch lands after
+//!   its previous one.
+//! * **no-usable-gap** — every [`IntervalSet`] maintains an upper bound
+//!   on its largest *internal* idle gap ([`IntervalSet::max_internal_gap`],
+//!   monotone under inserts, conservative under pruning). A probe
+//!   interval strictly longer than that bound which overlaps the
+//!   committed window (`t + a < set.end()` and `t + b > set.start()`)
+//!   provably conflicts and provably fits no committed gap, so the
+//!   search jumps straight to the append-at-tail placement
+//!   (`t = set.end() - a`) instead of crawling conflict by conflict.
+//!   The invariant: a conflict-free placement inside `[start, end)`
+//!   would have to sit wholly inside one internal gap, whose width the
+//!   bound dominates — contradiction — and any candidate before the
+//!   jump target satisfies the same three conditions, so no feasible
+//!   start is skipped.
+//!
+//! With the fast paths off the search reproduces the PR 5 probe
+//! accounting exactly; dispatch decisions are bit-identical either way
+//! (pinned by `tests/prop_evq.rs` and the timeline unit suite), and the
+//! win is expressed purely in the deterministic `probes` counter.
 
 use std::cell::Cell;
 use std::collections::BTreeMap;
@@ -98,9 +132,32 @@ pub fn res_label(res: usize) -> String {
 /// carries. Inserting an interval merges it with any overlapping or
 /// adjacent neighbors, so the invariants (sorted, pairwise disjoint,
 /// non-adjacent, non-empty) hold by construction.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+///
+/// Storage is struct-of-arrays: `starts[]` and `ends[]` are parallel
+/// `u64` vectors, so the conflict probe's `partition_point` walks one
+/// contiguous array of ends instead of striding over `(start, end)`
+/// pairs. The set also maintains [`max_internal_gap`](Self::max_internal_gap),
+/// an upper bound on its widest internal idle gap, which the gap-skip
+/// fast path of [`ResourceTimeline::earliest_start`] consults. Equality
+/// compares the interval content only, never the gap bound (two sets
+/// built by different insert orders may carry different — equally valid
+/// — bounds).
+#[derive(Clone, Debug, Default, Eq)]
 pub struct IntervalSet {
-    ivs: Vec<(u64, u64)>,
+    starts: Vec<u64>,
+    ends: Vec<u64>,
+    /// Upper bound on the widest internal idle gap: monotone under
+    /// inserts (appends record the gap they close over; merges and
+    /// mid-inserts only shrink or destroy gaps) and left untouched by
+    /// pruning (removed gaps leave the bound conservative). Never an
+    /// underestimate, so the fast path never skips a usable gap.
+    max_gap: u64,
+}
+
+impl PartialEq for IntervalSet {
+    fn eq(&self, other: &Self) -> bool {
+        self.starts == other.starts && self.ends == other.ends
+    }
 }
 
 impl IntervalSet {
@@ -108,33 +165,46 @@ impl IntervalSet {
         IntervalSet::default()
     }
 
-    /// The canonical interval list.
-    pub fn as_slice(&self) -> &[(u64, u64)] {
-        &self.ivs
+    /// The canonical interval list, materialized as pairs.
+    pub fn to_vec(&self) -> Vec<(u64, u64)> {
+        self.iter().collect()
+    }
+
+    /// The canonical intervals, in order, as `(start, end)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.starts.iter().copied().zip(self.ends.iter().copied())
     }
 
     pub fn is_empty(&self) -> bool {
-        self.ivs.is_empty()
+        self.starts.is_empty()
     }
 
     /// Stored interval nodes.
     pub fn len(&self) -> usize {
-        self.ivs.len()
+        self.starts.len()
     }
 
     /// Total covered time (sum of interval lengths).
     pub fn total(&self) -> u64 {
-        self.ivs.iter().map(|&(a, b)| b - a).sum()
+        self.iter().map(|(a, b)| b - a).sum()
     }
 
     /// First covered instant (0 when empty).
     pub fn start(&self) -> u64 {
-        self.ivs.first().map_or(0, |&(a, _)| a)
+        self.starts.first().copied().unwrap_or(0)
     }
 
     /// One past the last covered instant (0 when empty).
     pub fn end(&self) -> u64 {
-        self.ivs.last().map_or(0, |&(_, b)| b)
+        self.ends.last().copied().unwrap_or(0)
+    }
+
+    /// Upper bound on the widest idle gap strictly *between* stored
+    /// intervals (never the open space before the first or after the
+    /// last). A probe interval longer than this bound cannot fit any
+    /// internal gap — the exactness the gap-skip fast path rests on.
+    pub fn max_internal_gap(&self) -> u64 {
+        self.max_gap
     }
 
     /// Does `[start, end)` intersect any stored interval?
@@ -148,10 +218,9 @@ impl IntervalSet {
         if start >= end {
             return None;
         }
-        let i = self.ivs.partition_point(|&(_, b)| b <= start);
-        let &(a, b) = self.ivs.get(i)?;
-        if a < end {
-            Some(b)
+        let i = self.ends.partition_point(|&b| b <= start);
+        if i < self.starts.len() && self.starts[i] < end {
+            Some(self.ends[i])
         } else {
             None
         }
@@ -167,60 +236,86 @@ impl IntervalSet {
         if start >= end {
             return;
         }
-        match self.ivs.last().copied() {
+        match self.ends.last().copied() {
             None => {
-                self.ivs.push((start, end));
+                self.starts.push(start);
+                self.ends.push(end);
                 return;
             }
-            Some((ls, le)) => {
+            Some(le) => {
                 if start > le {
-                    self.ivs.push((start, end));
+                    // a strict append opens a new internal gap [le, start)
+                    self.max_gap = self.max_gap.max(start - le);
+                    self.starts.push(start);
+                    self.ends.push(end);
                     return;
                 }
+                let ls = *self.starts.last().unwrap();
                 if start >= ls {
                     // overlaps or touches the tail interval only
-                    self.ivs.last_mut().unwrap().1 = le.max(end);
+                    *self.ends.last_mut().unwrap() = le.max(end);
                     return;
                 }
             }
         }
         // lo: first interval whose end touches `start`; hi: one past the
         // last interval whose start touches `end` — everything in
-        // `lo..hi` fuses with the newcomer
-        let lo = self.ivs.partition_point(|&(_, b)| b < start);
-        let hi = self.ivs.partition_point(|&(a, _)| a <= end);
+        // `lo..hi` fuses with the newcomer. A mid-insert splits an
+        // existing gap (both halves stay under the bound) and a fuse only
+        // shrinks its neighbors, so `max_gap` stays a bound — except a
+        // plain insert *before the first interval*, which turns open
+        // space into a brand-new internal gap the bound must absorb.
+        let lo = self.ends.partition_point(|&b| b < start);
+        let hi = self.starts.partition_point(|&a| a <= end);
         if lo == hi {
-            self.ivs.insert(lo, (start, end));
+            if lo == 0 {
+                self.max_gap = self.max_gap.max(self.starts[0] - end);
+            }
+            self.starts.insert(lo, start);
+            self.ends.insert(lo, end);
             return;
         }
-        let s = start.min(self.ivs[lo].0);
-        let e = end.max(self.ivs[hi - 1].1);
-        self.ivs.splice(lo..hi, std::iter::once((s, e)));
+        let s = start.min(self.starts[lo]);
+        let e = end.max(self.ends[hi - 1]);
+        self.starts.splice(lo..hi, std::iter::once(s));
+        self.ends.splice(lo..hi, std::iter::once(e));
     }
 
     /// Drop every interval that ends at or before `watermark`; an
     /// interval straddling the watermark stays whole. Returns how many
-    /// nodes were removed.
+    /// nodes were removed. The gap bound is left as is — gaps that fell
+    /// behind the watermark can no longer be probed, so a conservative
+    /// bound stays sound.
     pub fn prune_before(&mut self, watermark: u64) -> usize {
-        let k = self.ivs.partition_point(|&(_, b)| b <= watermark);
+        let k = self.ends.partition_point(|&b| b <= watermark);
         if k > 0 {
-            self.ivs.drain(..k);
+            self.starts.drain(..k);
+            self.ends.drain(..k);
         }
         k
     }
 
     /// Panic unless the canonical invariants hold: entries non-empty,
-    /// sorted, pairwise disjoint, and non-adjacent (used by the property
-    /// suite; `insert` maintains them by construction).
+    /// sorted, pairwise disjoint, non-adjacent, and the gap bound
+    /// dominating every internal gap (used by the property suite;
+    /// `insert` maintains them by construction).
     pub fn check_invariants(&self) {
-        for &(a, b) in &self.ivs {
-            assert!(a < b, "empty interval in {:?}", self.ivs);
+        assert_eq!(self.starts.len(), self.ends.len(), "SoA arrays must stay parallel");
+        for (a, b) in self.iter() {
+            assert!(a < b, "empty interval in {:?}", self.to_vec());
         }
-        for w in self.ivs.windows(2) {
+        for i in 1..self.starts.len() {
             assert!(
-                w[0].1 < w[1].0,
+                self.ends[i - 1] < self.starts[i],
                 "intervals must stay sorted, disjoint and non-adjacent: {:?}",
-                self.ivs
+                self.to_vec()
+            );
+            assert!(
+                self.starts[i] - self.ends[i - 1] <= self.max_gap,
+                "gap bound {} underestimates gap [{}, {})",
+                self.max_gap,
+                self.ends[i - 1],
+                self.starts[i]
             );
         }
     }
@@ -325,7 +420,7 @@ impl ProfileBuilder {
                     first_use: set.start(),
                     last_release: set.end(),
                     busy,
-                    intervals: set.ivs,
+                    intervals: set.to_vec(),
                 })
                 .collect(),
             len,
@@ -418,6 +513,9 @@ fn search_steps(n: usize) -> u64 {
 #[derive(Clone, Debug)]
 pub struct ResourceTimeline {
     backfill: bool,
+    /// Gap-search fast paths (append-at-tail and no-usable-gap) — on by
+    /// default; `--no-gap-skip` reproduces the PR 5 probe accounting.
+    gap_skip: bool,
     /// Committed busy intervals per pool-absolute resource id.
     busy_iv: Vec<IntervalSet>,
     /// Scalar next-free time per resource (max committed release).
@@ -445,6 +543,7 @@ impl ResourceTimeline {
     pub fn with_resources(backfill: bool, n_res: usize) -> ResourceTimeline {
         ResourceTimeline {
             backfill,
+            gap_skip: true,
             busy_iv: vec![IntervalSet::new(); n_res],
             free: vec![0; n_res],
             busy: vec![0; n_res],
@@ -478,6 +577,17 @@ impl ResourceTimeline {
         self.backfill
     }
 
+    /// Enable or disable the gap-search fast paths. Dispatch decisions
+    /// are identical either way — only the `probes` counter moves — so
+    /// this is a pure perf off-switch (`--no-gap-skip`).
+    pub fn set_gap_skip(&mut self, on: bool) {
+        self.gap_skip = on;
+    }
+
+    pub fn is_gap_skipping(&self) -> bool {
+        self.gap_skip
+    }
+
     /// When `res` (pool-absolute) next becomes free of *all* committed
     /// work — the envelope frontier, maintained in both modes and never
     /// affected by pruning.
@@ -499,8 +609,8 @@ impl ResourceTimeline {
 
     /// Committed busy intervals of `res` (pool-absolute), canonical form
     /// (intervals older than the watermark may have been pruned away).
-    pub fn intervals(&self, res: usize) -> &[(u64, u64)] {
-        self.busy_iv.get(res).map_or(&[], |s| s.as_slice())
+    pub fn intervals(&self, res: usize) -> Vec<(u64, u64)> {
+        self.busy_iv.get(res).map_or_else(Vec::new, |s| s.to_vec())
     }
 
     /// Does `[start, end)` intersect committed (unpruned) work on `res`?
@@ -594,7 +704,29 @@ impl ResourceTimeline {
                         continue;
                     }
                     let cost = search_steps(set.len());
+                    let (set_start, set_end) = (set.start(), set.end());
+                    let gap = set.max_internal_gap();
                     for &(a, b) in &s.intervals {
+                        if self.gap_skip {
+                            if t + a >= set_end {
+                                // append-at-tail: the probe begins at or
+                                // past the last committed release — no
+                                // stored interval can conflict
+                                steps += 1;
+                                continue;
+                            }
+                            if b - a > gap && t + b > set_start {
+                                // no usable gap: the probe overhangs the
+                                // committed window yet is wider than any
+                                // internal gap, so a conflict is certain
+                                // and the only feasible placement is the
+                                // tail — jump there in one step
+                                steps += 1;
+                                t = set_end - a;
+                                blocker = Some(res);
+                                continue 'search;
+                            }
+                        }
                         steps += cost;
                         if let Some(end) = set.first_conflict_end(t + a, t + b) {
                             // the conflicting interval ends past t + a, so
@@ -617,12 +749,8 @@ impl ResourceTimeline {
     /// id, skipping never-touched resources — the final-occupancy snapshot
     /// the serve tracer captures at drain for its span-conservation
     /// invariant.
-    pub fn committed_intervals(&self) -> impl Iterator<Item = (usize, &[(u64, u64)])> + '_ {
-        self.busy_iv
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| !s.is_empty())
-            .map(|(r, s)| (r, s.as_slice()))
+    pub fn committed_intervals(&self) -> impl Iterator<Item = (usize, &IntervalSet)> + '_ {
+        self.busy_iv.iter().enumerate().filter(|(_, s)| !s.is_empty())
     }
 
     /// Commit a batch dispatched at `t`. Backfill mode records each busy
@@ -684,15 +812,15 @@ mod tests {
         let mut s = IntervalSet::new();
         s.insert(10, 20);
         s.insert(30, 40);
-        assert_eq!(s.as_slice(), &[(10, 20), (30, 40)]);
+        assert_eq!(s.to_vec(), &[(10, 20), (30, 40)]);
         s.insert(20, 25); // adjacent to [10, 20)
-        assert_eq!(s.as_slice(), &[(10, 25), (30, 40)]);
+        assert_eq!(s.to_vec(), &[(10, 25), (30, 40)]);
         s.insert(24, 31); // bridges both
-        assert_eq!(s.as_slice(), &[(10, 40)]);
+        assert_eq!(s.to_vec(), &[(10, 40)]);
         s.insert(5, 5); // empty: ignored
-        assert_eq!(s.as_slice(), &[(10, 40)]);
+        assert_eq!(s.to_vec(), &[(10, 40)]);
         s.insert(0, 2);
-        assert_eq!(s.as_slice(), &[(0, 2), (10, 40)]);
+        assert_eq!(s.to_vec(), &[(0, 2), (10, 40)]);
         s.check_invariants();
         assert_eq!(s.total(), 32);
         assert_eq!((s.start(), s.end()), (0, 40));
@@ -872,10 +1000,10 @@ mod tests {
         t.insert(5, 9); // adjacent: fuses with the tail
         t.insert(7, 12); // overlapping: extends the tail
         t.insert(3, 4); // nested in the tail: bounds unchanged
-        assert_eq!(t.as_slice(), &[(0, 12)]);
+        assert_eq!(t.to_vec(), &[(0, 12)]);
         t.insert(20, 30); // strictly past the tail: appended
         t.insert(1, 2); // before the tail: general path, still nested
-        assert_eq!(t.as_slice(), &[(0, 12), (20, 30)]);
+        assert_eq!(t.to_vec(), &[(0, 12), (20, 30)]);
         t.check_invariants();
         let mut s = IntervalSet::new();
         for i in 0..100u64 {
@@ -893,10 +1021,10 @@ mod tests {
         s.insert(40, 50);
         assert_eq!(s.prune_before(25), 1, "only [0, 10) is fully dead");
         // [20, 30) straddles the watermark and stays whole
-        assert_eq!(s.as_slice(), &[(20, 30), (40, 50)]);
+        assert_eq!(s.to_vec(), &[(20, 30), (40, 50)]);
         assert_eq!(s.prune_before(30), 1);
         assert_eq!(s.prune_before(30), 0, "idempotent at the same watermark");
-        assert_eq!(s.as_slice(), &[(40, 50)]);
+        assert_eq!(s.to_vec(), &[(40, 50)]);
         s.check_invariants();
     }
 
@@ -1006,7 +1134,7 @@ mod tests {
                 replay.entry(res).or_default().insert(100 + a, 100 + b);
             }
             for (res, ivs) in tl.committed_intervals() {
-                assert_eq!(replay[&res].as_slice(), ivs, "res {res}, backfill {backfill}");
+                assert_eq!(&replay[&res], ivs, "res {res}, backfill {backfill}");
             }
             assert_eq!(replay.len(), tl.committed_intervals().count());
         }
@@ -1019,5 +1147,111 @@ mod tests {
         tl.commit(0, &p, ResMap::default());
         let got: Vec<(usize, u64)> = tl.busy_per_resource().collect();
         assert_eq!(got, vec![(RES_DWACC, 4), (RES_ARRAY0 + 2, 10)]);
+    }
+
+    #[test]
+    fn max_internal_gap_is_a_monotone_upper_bound() {
+        let mut s = IntervalSet::new();
+        assert_eq!(s.max_internal_gap(), 0);
+        s.insert(0, 10);
+        assert_eq!(s.max_internal_gap(), 0, "one interval has no internal gap");
+        s.insert(30, 40); // opens gap [10, 30)
+        assert_eq!(s.max_internal_gap(), 20);
+        s.insert(15, 18); // splits the gap: bound stays conservative
+        assert_eq!(s.max_internal_gap(), 20);
+        s.check_invariants();
+        s.insert(10, 30); // fills everything: a stale bound stays sound
+        assert_eq!(s.to_vec(), vec![(0, 40)]);
+        s.check_invariants();
+        // pruning keeps the bound (conservative is sound)
+        let mut t = IntervalSet::new();
+        t.insert(0, 5);
+        t.insert(100, 110);
+        t.insert(120, 130);
+        assert_eq!(t.max_internal_gap(), 95);
+        t.prune_before(110);
+        assert_eq!(t.max_internal_gap(), 95, "prune never lowers the bound");
+        t.check_invariants();
+        // a backfill landing *before* the first interval turns open space
+        // into a brand-new internal gap the bound must absorb
+        let mut u = IntervalSet::new();
+        u.insert(100, 200);
+        assert_eq!(u.max_internal_gap(), 0);
+        u.insert(0, 10);
+        assert_eq!(u.max_internal_gap(), 90, "front insert opens gap [10, 100)");
+        u.check_invariants();
+        // ...while a front insert that fuses with the head opens none
+        let mut v = IntervalSet::new();
+        v.insert(100, 200);
+        v.insert(50, 100);
+        assert_eq!(v.to_vec(), vec![(50, 200)]);
+        assert_eq!(v.max_internal_gap(), 0);
+        v.check_invariants();
+    }
+
+    #[test]
+    fn gap_skip_never_changes_the_dispatch_answer() {
+        // a committed landscape with tail appends, a wide dead gap, and a
+        // narrow usable gap; probes of every width must agree fast/slow
+        let committed = prof(
+            &[
+                (RES_DWACC, &[(0, 10), (12, 30), (35, 60)]),
+                (RES_DMA, &[(5, 50)]),
+                (RES_CORE0, &[(0, 3), (90, 100)]),
+            ],
+            100,
+        );
+        let probes = [
+            prof(&[(RES_DWACC, &[(0, 2)])], 2),
+            prof(&[(RES_DWACC, &[(0, 5)])], 5),
+            prof(&[(RES_DWACC, &[(0, 40)])], 40),
+            prof(&[(RES_DWACC, &[(0, 4)]), (RES_DMA, &[(1, 3)])], 4),
+            prof(&[(RES_CORE0, &[(0, 50)]), (RES_DMA, &[(10, 20)])], 50),
+        ];
+        let mut fast = ResourceTimeline::backfilling();
+        let mut slow = ResourceTimeline::backfilling();
+        slow.set_gap_skip(false);
+        fast.commit(0, &committed, ResMap::default());
+        slow.commit(0, &committed, ResMap::default());
+        for p in &probes {
+            for nb in [0u64, 7, 31, 61, 200] {
+                let (tf, bf) = fast.earliest_start_blocked(p, ResMap::default(), nb);
+                let (ts, bs) = slow.earliest_start_blocked(p, ResMap::default(), nb);
+                assert_eq!(tf, ts, "start diverged at not_before {nb}");
+                assert_eq!(bf, bs, "blocker diverged at not_before {nb}");
+            }
+        }
+        assert!(
+            fast.stats().probes <= slow.stats().probes,
+            "fast paths must never add probe work: {} > {}",
+            fast.stats().probes,
+            slow.stats().probes
+        );
+    }
+
+    #[test]
+    fn gap_skip_cuts_probe_work_on_append_heavy_timelines() {
+        // the serving common case: monotone tail appends, probes past the
+        // frontier — the O(1) path must beat the binary-search accounting
+        let mut fast = ResourceTimeline::backfilling();
+        let mut slow = ResourceTimeline::backfilling();
+        slow.set_gap_skip(false);
+        let job = prof(&[(RES_DWACC, &[(0, 8)])], 10);
+        let mut t = 0;
+        for _ in 0..64 {
+            for tl in [&mut fast, &mut slow] {
+                let got = tl.earliest_start(&job, ResMap::default(), t);
+                assert_eq!(got, t, "appends at the frontier are conflict-free");
+                tl.commit(got, &job, ResMap::default());
+            }
+            t += 10;
+        }
+        assert_eq!(fast.intervals(RES_DWACC), slow.intervals(RES_DWACC));
+        assert!(
+            fast.stats().probes < slow.stats().probes,
+            "append fast path must strictly cut probes: {} !< {}",
+            fast.stats().probes,
+            slow.stats().probes
+        );
     }
 }

@@ -65,6 +65,17 @@ options:
                           (dispatch tables are bit-identical either way;
                           only counters move; `bench-timeline` always runs
                           both modes and rejects the flag)
+  --event-queue Q         `serve`: next-event structure, calendar|heap
+                          (default calendar; heap is the pre-calendar
+                          behavior — dispatch tables, serve JSON, and
+                          trace bytes are bit-identical either way;
+                          `bench-timeline` always runs both and rejects
+                          the flag)
+  --no-gap-skip           `serve`: disable the timeline's gap-search fast
+                          paths (append-at-tail, no-usable-gap); dispatch
+                          decisions are identical either way — only the
+                          `probes` counter moves. `bench-timeline` runs
+                          both modes and rejects the flag
   --stream-weights        `serve`/`scaleup`: stream staged PCM reprogramming
                           under the previous pass's compute tail
   --slo-p95 CY            `serve`: p95 latency budget in cycles; arrivals
@@ -265,6 +276,14 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
     if args.flag("autoscale") && args.flag("no-autoscale") {
         return Err("--autoscale and --no-autoscale are mutually exclusive".into());
     }
+    if args.flag("gap-skip") && args.flag("no-gap-skip") {
+        return Err("--gap-skip and --no-gap-skip are mutually exclusive".into());
+    }
+    let event_queue = match args.opt("event-queue") {
+        None => imcc::serve::EventQueueKind::default(),
+        Some(s) => imcc::serve::EventQueueKind::parse(s)
+            .ok_or_else(|| format!("unknown event queue `{s}` (calendar|heap)"))?,
+    };
     let scfg = ServeConfig {
         n_arrays: arrays,
         policy,
@@ -277,6 +296,8 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
         backfill: !args.flag("no-backfill"),
         stream_weights: args.flag("stream-weights"),
         prune: !args.flag("no-prune"),
+        event_queue,
+        gap_skip: !args.flag("no-gap-skip"),
         seed,
         duration_s,
         deadline_cy: (deadline_ms * 1e6 / cycle_ns) as u64,
@@ -316,13 +337,15 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
     let c = rep.counters;
     println!(
         "counters: {} steps, {} validations, {} probe steps, {} live / {} peak / {} pruned \
-         interval nodes",
+         interval nodes, {} evq pushes ({} stale pops)",
         c.steps,
         c.validations,
         c.probes,
         c.live_intervals,
         c.peak_live_intervals,
-        c.pruned_intervals
+        c.pruned_intervals,
+        c.evq_pushes,
+        c.evq_stale
     );
     if let Some(path) = trace_path {
         let tr = rec.finish().expect("recorder was on");
@@ -346,6 +369,20 @@ fn run_bench_timeline(args: &Args, pm: &PowerModel) -> Result<(), String> {
         return Err(
             "bench-timeline always runs pruned and unpruned side by side; drop \
              --prune/--no-prune (use `serve --no-prune` for a single mode)"
+                .into(),
+        );
+    }
+    if args.opt("event-queue").is_some() || args.flag("event-queue") {
+        return Err(
+            "bench-timeline always runs the calendar and heap queues side by side; drop \
+             --event-queue (use `serve --event-queue heap` for a single mode)"
+                .into(),
+        );
+    }
+    if args.flag("gap-skip") || args.flag("no-gap-skip") {
+        return Err(
+            "bench-timeline always runs the gap-skip fast paths on and off side by side; \
+             drop --gap-skip/--no-gap-skip (use `serve --no-gap-skip` for a single mode)"
                 .into(),
         );
     }

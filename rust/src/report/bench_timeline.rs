@@ -1,28 +1,42 @@
 //! `imcc bench-timeline` — the long-horizon timeline performance harness.
 //!
 //! Serves a multi-tenant bottleneck fleet at several arrival horizons
-//! (the largest is 10× the base — the long-horizon acceptance point),
-//! once with watermark pruning and once with `--no-prune`, and reports
-//! *both* measurements the perf trajectory needs:
+//! (the largest is 10× the base — the long-horizon acceptance point)
+//! and reports *both* measurements the perf trajectory needs:
 //!
 //! * **deterministic counters** (`ServeCounters`: event-loop steps,
 //!   candidate validations, gap-search probe steps, live/pruned interval
-//!   nodes) — reproducible under the fixed seed, so CI can gate on them
-//!   without flaking;
+//!   nodes, event-queue pushes/pops/stale revalidations) — reproducible
+//!   under the fixed seed, so CI can gate on them without flaking;
 //! * **wall clock** per simulation — the human-facing number, recorded in
 //!   `BENCH_timeline.json` but never gated on.
 //!
-//! The harness hard-fails (the CLI exits non-zero) if the pruned and
-//! unpruned dispatch tables diverge anywhere, or if, at the longest
-//! horizon, pruning does not strictly reduce both the probe work and the
-//! live-interval footprint — the two regressions this PR's tentpole
-//! exists to prevent.
+//! Three side-by-side comparisons run per sweep, every one gated on
+//! counters and bit-identity, never on wall clock:
+//!
+//! * **pruned vs `--no-prune`** at every horizon — dispatch tables must
+//!   be bit-identical, and at the longest horizon pruning must strictly
+//!   cut both probe work and the live-interval footprint;
+//! * **calendar vs heap event queue** at every horizon — the full serve
+//!   JSON (counters included) must be bit-identical, since both queues
+//!   realize the same total order; the per-mode structural step counts
+//!   (`evq_steps` — the only mode-dependent tally, deliberately absent
+//!   from serve JSON) are recorded here for the trajectory;
+//! * **gap-skip fast paths on vs off** at the longest horizon —
+//!   dispatch tables and makespan must be bit-identical, and the fast
+//!   paths must strictly cut `probes`.
+//!
+//! The harness hard-fails (the CLI exits non-zero) on any divergence or
+//! on either strict-cut gate, so `imcc bench-timeline` in CI is the
+//! regression tripwire for all three mechanisms.
 
 use std::time::Instant;
 
 use crate::arch::PowerModel;
 use crate::coordinator::PlanCache;
-use crate::serve::{bottleneck_fleet, simulate_with_cache, ServeConfig, ServeReport};
+use crate::serve::{
+    bottleneck_fleet, simulate_with_cache, EventQueueKind, ServeConfig, ServeReport,
+};
 use crate::util::json::{obj, Json};
 use crate::util::table::{f, Table};
 
@@ -33,31 +47,32 @@ use super::Report;
 pub const DEFAULT_MULTIPLIERS: &[u64] = &[1, 4, 10];
 
 /// The dispatch table and every aggregate derived from it must be
-/// bit-identical between the pruned and unpruned runs.
-fn check_identical(pruned: &ServeReport, unpruned: &ServeReport) -> Result<(), String> {
-    if pruned.render_table() != unpruned.render_table() {
-        return Err("pruned and unpruned dispatch tables diverge".into());
+/// bit-identical between two runs of one workload.
+fn check_identical(a: &ServeReport, b: &ServeReport, what: &str) -> Result<(), String> {
+    if a.render_table() != b.render_table() {
+        return Err(format!("{what}: dispatch tables diverge"));
     }
-    if pruned.makespan_cycles != unpruned.makespan_cycles
-        || pruned.busy_cycles != unpruned.busy_cycles
-        || pruned.peak_backlog != unpruned.peak_backlog
+    if a.makespan_cycles != b.makespan_cycles
+        || a.busy_cycles != b.busy_cycles
+        || a.peak_backlog != b.peak_backlog
     {
         return Err(format!(
-            "pruned/unpruned aggregates diverge: makespan {} vs {}, busy {} vs {}, \
+            "{what}: aggregates diverge: makespan {} vs {}, busy {} vs {}, \
              peak backlog {} vs {}",
-            pruned.makespan_cycles,
-            unpruned.makespan_cycles,
-            pruned.busy_cycles,
-            unpruned.busy_cycles,
-            pruned.peak_backlog,
-            unpruned.peak_backlog
+            a.makespan_cycles,
+            b.makespan_cycles,
+            a.busy_cycles,
+            b.busy_cycles,
+            a.peak_backlog,
+            b.peak_backlog
         ));
     }
     Ok(())
 }
 
 /// Run the sweep: `n_tenants` bottleneck tenants at `rate` req/s each,
-/// horizons `base_duration_s × DEFAULT_MULTIPLIERS`, pruned vs unpruned.
+/// horizons `base_duration_s × DEFAULT_MULTIPLIERS`; pruned vs unpruned,
+/// calendar vs heap, and (at the longest horizon) gap-skip on vs off.
 pub fn generate(
     pm: &PowerModel,
     n_tenants: usize,
@@ -69,7 +84,7 @@ pub fn generate(
     let n_arrays = 6 * n_tenants.max(1);
     let title = format!(
         "Timeline perf — {n_tenants} tenants, {rate} req/s each, {n_arrays} arrays, \
-         seed {seed:#x}, pruned vs --no-prune"
+         seed {seed:#x}; pruned vs --no-prune, calendar vs heap, gap-skip on/off"
     );
     let mut t = Table::new(
         &title,
@@ -84,69 +99,111 @@ pub fn generate(
             "live iv",
             "peak iv",
             "pruned iv",
+            "evq push",
+            "evq stale",
+            "evq steps",
         ],
     );
     let mut points = Vec::new();
+    let mut evq_points = Vec::new();
+    let mut gap_skip_point = None;
     // one cache for the whole sweep: placement runs once, batch profiles
     // intern across every (duration, mode) point
     let mut cache = PlanCache::with_capacity(32);
 
+    let run = |scfg: &ServeConfig, cache: &mut PlanCache| -> Result<(ServeReport, f64), String> {
+        let t0 = Instant::now();
+        let rep = simulate_with_cache(&models, scfg, pm, cache)?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok((rep, wall_ms))
+    };
+    let emit_row = |t: &mut Table, duration_s: f64, mode: &str, rep: &ServeReport, wall: f64| {
+        let c = rep.counters;
+        t.row([
+            f(duration_s, 2),
+            mode.into(),
+            f(wall, 2),
+            rep.makespan_cycles.to_string(),
+            rep.total_served().to_string(),
+            c.steps.to_string(),
+            c.probes.to_string(),
+            c.live_intervals.to_string(),
+            c.peak_live_intervals.to_string(),
+            c.pruned_intervals.to_string(),
+            c.evq_pushes.to_string(),
+            c.evq_stale.to_string(),
+            rep.evq_steps.to_string(),
+        ]);
+    };
+
+    let last_mult = *DEFAULT_MULTIPLIERS.last().unwrap();
     for &mult in DEFAULT_MULTIPLIERS {
         let duration_s = base_duration_s * mult as f64;
-        let mut reports: Vec<(bool, ServeReport, f64)> = Vec::new();
-        for prune in [true, false] {
-            let scfg = ServeConfig {
-                n_arrays,
-                prune,
-                seed,
-                duration_s,
-                ..ServeConfig::default()
-            };
-            let t0 = Instant::now();
-            let rep = simulate_with_cache(&models, &scfg, pm, &mut cache)?;
-            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-            reports.push((prune, rep, wall_ms));
-        }
-        let (_, pruned_rep, _) = &reports[0];
-        let (_, unpruned_rep, _) = &reports[1];
-        check_identical(pruned_rep, unpruned_rep)
+        let base = ServeConfig { n_arrays, seed, duration_s, ..ServeConfig::default() };
+
+        let (pruned_rep, pruned_wall) = run(&base, &mut cache)?;
+        let (unpruned_rep, unpruned_wall) =
+            run(&ServeConfig { prune: false, ..base.clone() }, &mut cache)?;
+        check_identical(&pruned_rep, &unpruned_rep, "pruned vs unpruned")
             .map_err(|e| format!("horizon {duration_s} s: {e}"))?;
-        if mult == *DEFAULT_MULTIPLIERS.last().unwrap() {
+
+        // calendar vs heap: same order realized by a different structure,
+        // so the *entire* serve JSON — counters included — must match
+        let (heap_rep, heap_wall) =
+            run(&ServeConfig { event_queue: EventQueueKind::Heap, ..base.clone() }, &mut cache)?;
+        check_identical(&pruned_rep, &heap_rep, "calendar vs heap")
+            .map_err(|e| format!("horizon {duration_s} s: {e}"))?;
+        if pruned_rep.to_json() != heap_rep.to_json() {
+            return Err(format!(
+                "horizon {duration_s} s: serve JSON diverges between --event-queue \
+                 calendar and heap"
+            ));
+        }
+
+        if mult == last_mult {
             let (p, u) = (pruned_rep.counters, unpruned_rep.counters);
             if p.probes >= u.probes {
                 return Err(format!(
                     "long horizon: pruned probe work {} is not below unpruned {}",
-                    p.probes,
-                    u.probes
+                    p.probes, u.probes
                 ));
             }
             if p.live_intervals >= u.live_intervals {
                 return Err(format!(
                     "long horizon: pruned live intervals {} not below unpruned {}",
-                    p.live_intervals,
-                    u.live_intervals
+                    p.live_intervals, u.live_intervals
                 ));
             }
+
+            // gap-skip off: identical dispatch, strictly more probe work
+            let (slow_rep, slow_wall) =
+                run(&ServeConfig { gap_skip: false, ..base.clone() }, &mut cache)?;
+            check_identical(&pruned_rep, &slow_rep, "gap-skip on vs off")
+                .map_err(|e| format!("horizon {duration_s} s: {e}"))?;
+            if pruned_rep.counters.probes >= slow_rep.counters.probes {
+                return Err(format!(
+                    "long horizon: gap-skip probes {} not strictly below --no-gap-skip {}",
+                    pruned_rep.counters.probes, slow_rep.counters.probes
+                ));
+            }
+            emit_row(&mut t, duration_s, "no-gap-skip", &slow_rep, slow_wall);
+            gap_skip_point = Some(obj([
+                ("duration_s", duration_s.into()),
+                ("makespan_cycles", (slow_rep.makespan_cycles as f64).into()),
+                ("probes_on", (pruned_rep.counters.probes as f64).into()),
+                ("probes_off", (slow_rep.counters.probes as f64).into()),
+            ]));
         }
-        for (prune, rep, wall_ms) in &reports {
+
+        for (mode, rep, wall) in
+            [("pruned", &pruned_rep, pruned_wall), ("no-prune", &unpruned_rep, unpruned_wall)]
+        {
             let c = rep.counters;
-            let mode = if *prune { "pruned" } else { "no-prune" };
-            t.row([
-                f(duration_s, 2),
-                mode.into(),
-                f(*wall_ms, 2),
-                rep.makespan_cycles.to_string(),
-                rep.total_served().to_string(),
-                c.steps.to_string(),
-                c.probes.to_string(),
-                c.live_intervals.to_string(),
-                c.peak_live_intervals.to_string(),
-                c.pruned_intervals.to_string(),
-            ]);
+            emit_row(&mut t, duration_s, mode, rep, wall);
             points.push(obj([
                 ("duration_s", duration_s.into()),
-                ("prune", (*prune).into()),
-                ("wall_ms", (*wall_ms).into()),
+                ("prune", (mode == "pruned").into()),
+                ("wall_ms", wall.into()),
                 ("makespan_cycles", (rep.makespan_cycles as f64).into()),
                 ("served", (rep.total_served() as f64).into()),
                 ("steps", (c.steps as f64).into()),
@@ -156,16 +213,34 @@ pub fn generate(
                 ("peak_live_intervals", (c.peak_live_intervals as f64).into()),
                 ("pruned_intervals", (c.pruned_intervals as f64).into()),
                 ("watermark", (c.watermark as f64).into()),
+                ("evq_pushes", (c.evq_pushes as f64).into()),
+                ("evq_pops", (c.evq_pops as f64).into()),
+                ("evq_stale", (c.evq_stale as f64).into()),
             ]));
         }
+        emit_row(&mut t, duration_s, "heap", &heap_rep, heap_wall);
+        let c = pruned_rep.counters;
+        evq_points.push(obj([
+            ("duration_s", duration_s.into()),
+            // mode-independent traffic (hard-checked identical above)
+            ("pushes", (c.evq_pushes as f64).into()),
+            ("pops", (c.evq_pops as f64).into()),
+            ("stale", (c.evq_stale as f64).into()),
+            // per-mode structural work + informative wall clock
+            ("calendar_steps", (pruned_rep.evq_steps as f64).into()),
+            ("heap_steps", (heap_rep.evq_steps as f64).into()),
+            ("calendar_wall_ms", pruned_wall.into()),
+            ("heap_wall_ms", heap_wall.into()),
+        ]));
     }
 
     let mut text = t.render();
     text.push_str(
-        "identical dispatch tables pruned vs unpruned at every horizon (hard-checked); \
-         probe work and live-interval footprint strictly smaller pruned at the longest \
-         horizon. Counters are deterministic under the seed; wall clock is informative \
-         only.\n",
+        "hard-checked at every horizon: dispatch tables identical pruned vs unpruned, \
+         and full serve JSON identical calendar vs heap event queue. At the longest \
+         horizon pruning strictly cuts probe work and live intervals, and the gap-skip \
+         fast paths strictly cut probes at identical dispatch. Counters are \
+         deterministic under the seed; wall clock is informative only.\n",
     );
 
     Ok(Report {
@@ -179,6 +254,8 @@ pub fn generate(
             ("seed", format!("{seed:#x}").into()),
             ("base_duration_s", base_duration_s.into()),
             ("points", Json::Arr(points)),
+            ("event_queue", Json::Arr(evq_points)),
+            ("gap_skip", gap_skip_point.expect("the longest horizon always runs")),
         ]),
     })
 }
@@ -200,7 +277,27 @@ mod tests {
             assert!(p.req("wall_ms").as_f64().unwrap() >= 0.0);
             assert!(p.req("steps").as_f64().unwrap() > 0.0);
             assert!(p.req("makespan_cycles").as_f64().unwrap() > 0.0);
+            assert!(p.req("evq_pushes").as_f64().unwrap() > 0.0);
+            assert!(
+                p.req("evq_pops").as_f64().unwrap() <= p.req("evq_pushes").as_f64().unwrap(),
+                "every pop extracts something previously pushed"
+            );
         }
+        // one heap-vs-calendar record per horizon, with the
+        // mode-independent traffic and both modes' structural steps
+        let evq = rep.data.req("event_queue").as_arr().unwrap();
+        assert_eq!(evq.len(), DEFAULT_MULTIPLIERS.len());
+        for e in evq {
+            assert!(e.req("pushes").as_f64().unwrap() > 0.0);
+            assert!(e.req("calendar_steps").as_f64().unwrap() > 0.0);
+            assert!(e.req("heap_steps").as_f64().unwrap() > 0.0);
+        }
+        // the gap-skip gate ran at the longest horizon and cut probes
+        let gs = rep.data.req("gap_skip");
+        assert!(
+            gs.req("probes_on").as_f64().unwrap() < gs.req("probes_off").as_f64().unwrap(),
+            "generate() must have hard-failed instead"
+        );
         // the JSON payload round-trips through the writer
         let text = rep.data.to_string_pretty();
         assert_eq!(Json::parse(&text).unwrap(), rep.data);

@@ -1,0 +1,432 @@
+//! Next-event queue for the serving event loop.
+//!
+//! The loop keys pending tenants by `(dispatch instant, tenant id)` and
+//! repeatedly extracts the minimum; stored instants are *lower bounds*
+//! (queues only fill, resources only get busier) revalidated lazily on
+//! pop, so the structure sees heavy churn: most pops immediately push
+//! the same tenant back at a later instant. Two interchangeable
+//! implementations realize the same total order:
+//!
+//! - [`EventQueueKind::Heap`] — the PR 3 `BinaryHeap<Reverse<..>>`,
+//!   kept as the pinned off-switch (`--event-queue heap`);
+//! - [`EventQueueKind::Calendar`] — a Brown-style calendar queue:
+//!   events hash into `buckets` of width `2^wbits` cycles by their day
+//!   `(t >> wbits) & mask`, and extraction scans at most one "year"
+//!   (every bucket, one day each) forward from the last extracted
+//!   minimum before falling back to a direct scan. Under the lazy
+//!   revalidation churn above, pushes land at or just past the cursor,
+//!   so the scan almost always terminates in its first occupied bucket.
+//!
+//! Both implementations order events by the full `(t, tenant)` tuple —
+//! ties break toward the lower tenant id — so their pop sequences are
+//! identical event by event, and everything downstream (dispatch
+//! tables, serve JSON, trace bytes) is bit-identical across
+//! `--event-queue heap|calendar`; `tests/prop_evq.rs` pins this. The
+//! [`EvqCounters`] work tallies `pushes`/`pops`/`stale` are pure
+//! functions of that shared pop sequence (mode-independent, exported in
+//! serve JSON); only `steps` — the structural work each implementation
+//! performs — differs by mode, and it is reported solely in
+//! `bench-timeline`'s heap-vs-calendar section, never in serve JSON.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Which next-event structure the serving loop runs on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EventQueueKind {
+    /// Bucketed calendar queue (the default).
+    #[default]
+    Calendar,
+    /// Binary heap — the pre-calendar behavior, pinned bit-identical.
+    Heap,
+}
+
+impl EventQueueKind {
+    /// Parse a `--event-queue` value.
+    pub fn parse(s: &str) -> Option<EventQueueKind> {
+        match s {
+            "calendar" => Some(EventQueueKind::Calendar),
+            "heap" => Some(EventQueueKind::Heap),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            EventQueueKind::Calendar => "calendar",
+            EventQueueKind::Heap => "heap",
+        }
+    }
+}
+
+/// Deterministic event-queue work tallies. `pushes`, `pops`, and
+/// `stale` (pops whose lower-bound instant had drifted behind the
+/// revalidated dispatch instant) are functions of the pop sequence and
+/// therefore identical across queue kinds; `steps` counts structural
+/// work (heap: sift-depth proxy, calendar: buckets and entries
+/// examined) and is the only mode-dependent field.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EvqCounters {
+    pub pushes: u64,
+    pub pops: u64,
+    pub stale: u64,
+    pub steps: u64,
+}
+
+/// `ceil(log2(n)) + 1` — the deterministic sift-depth proxy the heap
+/// mode charges per push/pop (mirrors the timeline's probe unit: a pure
+/// function of the occupancy, never of layout or allocation).
+fn sift_steps(n: usize) -> u64 {
+    (usize::BITS - n.leading_zeros()) as u64
+}
+
+const MIN_BUCKETS: usize = 16;
+const DEFAULT_WBITS: u32 = 12;
+
+/// Brown-style calendar queue over `(t, id)` events; see the module doc
+/// for the ordering contract it shares with the heap.
+#[derive(Clone, Debug)]
+struct CalendarQueue {
+    /// `buckets[(t >> wbits) & mask]` holds the events of day
+    /// `t >> wbits`, unordered (extraction selects the min).
+    buckets: Vec<Vec<(u64, usize)>>,
+    /// Bucket width is `2^wbits` cycles.
+    wbits: u32,
+    len: usize,
+    /// Lower bound on every stored key — the scan cursor. Monotone in
+    /// steady state (pops raise it to each extracted minimum); a push
+    /// below it lowers it again, so correctness never rests on the
+    /// caller's push discipline.
+    last_min: u64,
+    /// Cached peek result, invalidated by push/pop.
+    cached: Option<(u64, usize)>,
+    steps: u64,
+}
+
+impl CalendarQueue {
+    fn new() -> CalendarQueue {
+        CalendarQueue {
+            buckets: vec![Vec::new(); MIN_BUCKETS],
+            wbits: DEFAULT_WBITS,
+            len: 0,
+            last_min: 0,
+            cached: None,
+            steps: 0,
+        }
+    }
+
+    fn bucket_of(&self, t: u64) -> usize {
+        ((t >> self.wbits) as usize) & (self.buckets.len() - 1)
+    }
+
+    fn push(&mut self, t: u64, id: usize) {
+        if t < self.last_min {
+            self.last_min = t;
+        }
+        let b = self.bucket_of(t);
+        self.buckets[b].push((t, id));
+        self.len += 1;
+        self.steps += 1;
+        // keep the cache only if the newcomer cannot beat it
+        if self.cached.is_some_and(|m| (t, id) < m) {
+            self.cached = Some((t, id));
+        }
+        if self.len > 2 * self.buckets.len() {
+            self.resize(self.buckets.len() * 2);
+        }
+    }
+
+    /// Locate the current minimum `(t, id)` without removing it.
+    fn peek(&mut self) -> Option<(u64, usize)> {
+        if self.len == 0 {
+            return None;
+        }
+        if let Some(m) = self.cached {
+            return Some(m);
+        }
+        let n = self.buckets.len();
+        let start_day = self.last_min >> self.wbits;
+        // one year forward from the cursor: day k lives in bucket
+        // (start_day + k) & mask, and only entries of exactly that day
+        // belong to this lap (later laps of the same bucket wait)
+        for k in 0..n as u64 {
+            let day = start_day + k;
+            let b = (day as usize) & (n - 1);
+            self.steps += 1;
+            let mut best: Option<(u64, usize)> = None;
+            for &(t, id) in &self.buckets[b] {
+                self.steps += 1;
+                if t >> self.wbits == day && best.is_none_or(|m| (t, id) < m) {
+                    best = Some((t, id));
+                }
+            }
+            if best.is_some() {
+                self.cached = best;
+                return best;
+            }
+        }
+        // nothing within a year of the cursor: direct scan (rare — only
+        // after a drain leaves one far-future event)
+        let mut best: Option<(u64, usize)> = None;
+        for bucket in &self.buckets {
+            for &(t, id) in bucket {
+                self.steps += 1;
+                if best.is_none_or(|m| (t, id) < m) {
+                    best = Some((t, id));
+                }
+            }
+        }
+        self.cached = best;
+        best
+    }
+
+    fn pop(&mut self) -> Option<(u64, usize)> {
+        let m = self.peek()?;
+        let b = self.bucket_of(m.0);
+        // swap_remove is order-safe: the minimum is selected by value,
+        // never by position
+        let ix = self.buckets[b].iter().position(|&e| e == m).unwrap();
+        self.buckets[b].swap_remove(ix);
+        self.len -= 1;
+        self.steps += 1;
+        self.last_min = m.0;
+        self.cached = None;
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 4 {
+            self.resize(self.buckets.len() / 2);
+        }
+        Some(m)
+    }
+
+    /// Deterministic rebuild at `n` buckets (a power of two), re-deriving
+    /// the bucket width from the live key span so each bucket holds ~1
+    /// event — a pure function of the stored multiset.
+    fn resize(&mut self, n: usize) {
+        let events: Vec<(u64, usize)> = self.buckets.iter().flatten().copied().collect();
+        self.steps += events.len() as u64;
+        if let (Some(lo), Some(hi)) =
+            (events.iter().map(|e| e.0).min(), events.iter().map(|e| e.0).max())
+        {
+            let spacing = (hi - lo) / (events.len() as u64) + 1;
+            self.wbits = 64 - spacing.leading_zeros();
+        }
+        self.buckets = vec![Vec::new(); n];
+        for (t, id) in events {
+            let b = self.bucket_of(t);
+            self.buckets[b].push((t, id));
+        }
+        self.cached = None;
+    }
+}
+
+/// The serving loop's next-event queue; see [`EventQueueKind`] for the
+/// two interchangeable implementations.
+#[derive(Clone, Debug)]
+pub struct EventQueue {
+    imp: Impl,
+    counters: EvqCounters,
+}
+
+#[derive(Clone, Debug)]
+enum Impl {
+    Heap(BinaryHeap<Reverse<(u64, usize)>>),
+    Calendar(CalendarQueue),
+}
+
+impl EventQueue {
+    pub fn new(kind: EventQueueKind) -> EventQueue {
+        let imp = match kind {
+            EventQueueKind::Heap => Impl::Heap(BinaryHeap::new()),
+            EventQueueKind::Calendar => Impl::Calendar(CalendarQueue::new()),
+        };
+        EventQueue { imp, counters: EvqCounters::default() }
+    }
+
+    pub fn kind(&self) -> EventQueueKind {
+        match &self.imp {
+            Impl::Heap(_) => EventQueueKind::Heap,
+            Impl::Calendar(_) => EventQueueKind::Calendar,
+        }
+    }
+
+    pub fn push(&mut self, t: u64, id: usize) {
+        self.counters.pushes += 1;
+        match &mut self.imp {
+            Impl::Heap(heap) => {
+                heap.push(Reverse((t, id)));
+                self.counters.steps += sift_steps(heap.len());
+            }
+            Impl::Calendar(cal) => cal.push(t, id),
+        }
+    }
+
+    pub fn peek(&mut self) -> Option<(u64, usize)> {
+        match &mut self.imp {
+            Impl::Heap(heap) => heap.peek().map(|&Reverse(e)| e),
+            Impl::Calendar(cal) => cal.peek(),
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<(u64, usize)> {
+        let e = match &mut self.imp {
+            Impl::Heap(heap) => {
+                let e = heap.pop().map(|Reverse(e)| e);
+                if e.is_some() {
+                    self.counters.steps += sift_steps(heap.len() + 1);
+                }
+                e
+            }
+            Impl::Calendar(cal) => cal.pop(),
+        };
+        if e.is_some() {
+            self.counters.pops += 1;
+        }
+        e
+    }
+
+    /// Record that the event just popped carried a stale lower bound
+    /// (revalidation moved its dispatch instant later). Mode-independent:
+    /// staleness is a property of the pop sequence, not the structure.
+    pub fn mark_stale(&mut self) {
+        self.counters.stale += 1;
+    }
+
+    pub fn counters(&self) -> EvqCounters {
+        let mut c = self.counters;
+        if let Impl::Calendar(cal) = &self.imp {
+            c.steps = cal.steps;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random stream (splitmix-style) — no
+    /// dependence on process state, so the sequences are reproducible.
+    struct Rng(u64);
+    impl Rng {
+        fn next(&mut self) -> u64 {
+            self.0 = self.0.wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = self.0;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            z ^ (z >> 31)
+        }
+    }
+
+    fn drain(q: &mut EventQueue) -> Vec<(u64, usize)> {
+        let mut out = Vec::new();
+        while let Some(e) = q.pop() {
+            out.push(e);
+        }
+        out
+    }
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        for k in [EventQueueKind::Calendar, EventQueueKind::Heap] {
+            assert_eq!(EventQueueKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(EventQueueKind::parse("fifo"), None);
+        assert_eq!(EventQueueKind::default(), EventQueueKind::Calendar);
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_random_churn() {
+        // the serving access pattern: pop the min, re-push the same id a
+        // (pseudo-random) bit later, occasionally push fresh ids — the
+        // two structures must agree on every pop
+        let mut rng = Rng(42);
+        let mut cal = EventQueue::new(EventQueueKind::Calendar);
+        let mut heap = EventQueue::new(EventQueueKind::Heap);
+        for id in 0..8usize {
+            let t = rng.next() % 10_000;
+            cal.push(t, id);
+            heap.push(t, id);
+        }
+        for round in 0..5_000u64 {
+            let a = cal.pop();
+            let b = heap.pop();
+            assert_eq!(a, b, "pop diverged at round {round}");
+            let (t, id) = a.unwrap();
+            // lazy revalidation: usually later, sometimes much later
+            // (drains the year window), sometimes at the same instant
+            let bump = match rng.next() % 10 {
+                0 => 0,
+                9 => 1 << 20,
+                _ => rng.next() % 5_000,
+            };
+            cal.push(t + bump, id);
+            heap.push(t + bump, id);
+        }
+        // mode-independent tallies agree; structural steps differ freely
+        let (cc, hc) = (cal.counters(), heap.counters());
+        assert_eq!((cc.pushes, cc.pops, cc.stale), (hc.pushes, hc.pops, hc.stale));
+        let mut a = drain(&mut cal);
+        let b = drain(&mut heap);
+        assert_eq!(a, b, "drain order diverged");
+        a.sort();
+        assert_eq!(a, b, "drain must come out fully sorted");
+    }
+
+    #[test]
+    fn ties_break_toward_the_lower_id() {
+        for kind in [EventQueueKind::Calendar, EventQueueKind::Heap] {
+            let mut q = EventQueue::new(kind);
+            q.push(100, 3);
+            q.push(100, 1);
+            q.push(100, 2);
+            q.push(50, 7);
+            assert_eq!(q.peek(), Some((50, 7)));
+            assert_eq!(
+                drain(&mut q),
+                vec![(50, 7), (100, 1), (100, 2), (100, 3)],
+                "{}",
+                kind.label()
+            );
+        }
+    }
+
+    #[test]
+    fn far_future_events_survive_the_year_fallback() {
+        // one event far beyond a year of empty buckets exercises the
+        // direct-scan fallback; interleaved near events keep the cursor
+        // honest
+        let mut q = EventQueue::new(EventQueueKind::Calendar);
+        q.push(u64::MAX / 2, 0);
+        assert_eq!(q.peek(), Some((u64::MAX / 2, 0)));
+        q.push(10, 1);
+        assert_eq!(q.pop(), Some((10, 1)));
+        assert_eq!(q.pop(), Some((u64::MAX / 2, 0)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn resize_preserves_content_and_order() {
+        let mut rng = Rng(7);
+        let mut q = EventQueue::new(EventQueueKind::Calendar);
+        let mut expect: Vec<(u64, usize)> = (0..200usize)
+            .map(|id| {
+                let t = rng.next() % 1_000_000;
+                q.push(t, id);
+                (t, id)
+            })
+            .collect();
+        expect.sort();
+        assert_eq!(drain(&mut q), expect, "growth + shrink resizes must not lose events");
+    }
+
+    #[test]
+    fn counters_track_pushes_pops_and_stale() {
+        let mut q = EventQueue::new(EventQueueKind::Calendar);
+        q.push(1, 0);
+        q.push(2, 1);
+        let _ = q.pop();
+        q.mark_stale();
+        let c = q.counters();
+        assert_eq!((c.pushes, c.pops, c.stale), (2, 1, 1));
+        assert!(c.steps > 0);
+    }
+}

@@ -289,6 +289,19 @@ pub struct ServeCounters {
     pub pruned_intervals: u64,
     /// Final pruning watermark (0 when pruning is off).
     pub watermark: u64,
+    /// Next-event queue insertions. Like the two counters below, a pure
+    /// function of the pop sequence — which both queue kinds realize
+    /// identically — so the value is the same under
+    /// `--event-queue heap|calendar` (pinned by `tests/prop_evq.rs`).
+    pub evq_pushes: u64,
+    /// Next-event queue extractions (equals `validations`' pops plus
+    /// the final drain; kept separately so the queue can be gated
+    /// without reference to the validation path).
+    pub evq_pops: u64,
+    /// Pops whose stored lower-bound instant had gone stale (lazy
+    /// revalidation moved the dispatch later) — the churn measure the
+    /// calendar queue is designed to tolerate.
+    pub evq_stale: u64,
 }
 
 /// Per-model serving outcome, accumulated by the event loop.

@@ -60,15 +60,28 @@
 //! the whole pool is one opaque server and batches serialize on it,
 //! bit-identical to the serialized baseline the regression tests pin.
 //!
-//! The event loop is exact, not ticked: a binary-heap next-event queue
-//! keyed by (dispatch instant, tenant id) jumps the clock from one
-//! dispatch to the next. Stored instants are lower bounds, revalidated
-//! lazily on pop, so a dispatch costs O(log n_tenants) instead of a
-//! linear scan per event. With one model, a 1-wide window, and overlap
-//! off, the whole apparatus collapses to back-to-back sequential serving,
-//! bit-identical to the scheduler's sequential baseline — the regression
-//! tests pin that, and the seeded-trace determinism of the percentile
-//! tables.
+//! The event loop is exact, not ticked: a next-event queue keyed by
+//! (dispatch instant, tenant id) jumps the clock from one dispatch to
+//! the next. Stored instants are lower bounds (queues only fill,
+//! resources only get busier), revalidated lazily on pop — so the queue
+//! sees heavy churn: most pops push the same tenant straight back at a
+//! later instant. The structure behind that contract is the [`evq`]
+//! module's [`evq::EventQueue`]: a bucketed **calendar queue** by
+//! default (extraction scans forward from the last extracted minimum,
+//! which under the churn above almost always terminates in its first
+//! occupied bucket), or the PR 3 binary heap under `--event-queue heap`
+//! ([`ServeConfig::event_queue`]). Both realize the identical total
+//! order on (instant, tenant), so dispatch tables, serve JSON, and
+//! trace bytes are bit-identical across the two — `tests/prop_evq.rs`
+//! and the CI event-queue smoke pin that — and the queue's own work
+//! rides in [`ServeCounters`] as `evq_pushes`/`evq_pops`/`evq_stale`
+//! (all mode-independent functions of the shared pop sequence; the
+//! mode-*dependent* structural step counts appear only in `imcc
+//! bench-timeline`'s heap-vs-calendar section). With one model, a
+//! 1-wide window, and overlap off, the whole apparatus collapses to
+//! back-to-back sequential serving, bit-identical to the scheduler's
+//! sequential baseline — the regression tests pin that, and the
+//! seeded-trace determinism of the percentile tables.
 //!
 //! Long horizons stay flat: before each event the loop threads the
 //! minimum over its tenants' next admission instants into
@@ -77,14 +90,20 @@
 //! search walks the live window, not the whole serving history.
 //! `--no-prune` ([`ServeConfig::prune`]` = false`) keeps everything, and
 //! the dispatch table is bit-identical either way (pinned by
-//! `tests/prop_prune.rs` and the CI pruning smoke). The hot path is
-//! allocation-lean: batch costs and their reservation profiles are
-//! interned in the shared plan cache (`PlanCache::get_or_batch`), claim
-//! scratch is reused across events, and the run's work is counted
-//! deterministically in [`ServeCounters`] (event-loop steps, candidate
-//! validations, gap-search probe steps, live/pruned interval nodes) so
-//! perf regressions pin on counters instead of wall clock — `imcc
-//! bench-timeline` writes both as the machine-readable baseline.
+//! `tests/prop_prune.rs` and the CI pruning smoke). Within that live
+//! window the gap search additionally takes the timeline's **gap-skip
+//! fast paths** (append-at-tail and no-usable-gap — see
+//! `coordinator/timeline.rs`; `--no-gap-skip` /
+//! [`ServeConfig::gap_skip`]` = false` disables them): dispatch
+//! decisions are identical either way, only the `probes` counter drops.
+//! The hot path is allocation-lean: batch costs and their reservation
+//! profiles are interned in the shared plan cache
+//! (`PlanCache::get_or_batch`), claim scratch is reused across events,
+//! and the run's work is counted deterministically in [`ServeCounters`]
+//! (event-loop steps, candidate validations, gap-search probe steps,
+//! live/pruned interval nodes, event-queue traffic) so perf regressions
+//! pin on counters instead of wall clock — `imcc bench-timeline` writes
+//! both as the machine-readable baseline.
 //!
 //! Both controllers are strictly additive: with the budget unset (or
 //! `--no-admission`) and `--no-autoscale` the loop takes exactly the
@@ -120,13 +139,13 @@
 pub mod admission;
 pub mod autoscale;
 pub mod batcher;
+pub mod evq;
 pub mod metrics;
 pub mod tenancy;
 pub mod trace;
 pub mod traffic;
 
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, HashMap};
+use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 
 use crate::arch::{PowerModel, SystemConfig};
@@ -145,6 +164,7 @@ use crate::util::table::{f, Table};
 pub use admission::AdmissionControl;
 pub use autoscale::{AutoscaleConfig, Autoscaler, Pressure, ScaleDecision, ScaleEvent, ScaleKind};
 pub use batcher::{BatchWindow, TenantQueue};
+pub use evq::{EventQueue, EventQueueKind, EvqCounters};
 pub use metrics::{
     LatencyBreakdown, LogHistogram, ResourceUtil, ServeCounters, StallShare, TenantStats,
 };
@@ -211,6 +231,14 @@ pub struct ServeConfig {
     /// live-interval footprint shrink (both counted in
     /// [`ServeCounters`]).
     pub prune: bool,
+    /// Next-event queue structure (`--event-queue heap|calendar`).
+    /// Both realize the same total order — dispatch tables, serve JSON,
+    /// and trace bytes are bit-identical either way.
+    pub event_queue: EventQueueKind,
+    /// Gap-search fast paths in the timeline (`--no-gap-skip`
+    /// disables). Dispatch decisions are identical either way — only
+    /// the `probes` counter drops with them on.
+    pub gap_skip: bool,
     /// Master seed; per-model arrival seeds derive from it.
     pub seed: u64,
     /// Open-loop arrival horizon in seconds (the sim then drains).
@@ -252,6 +280,8 @@ impl Default for ServeConfig {
             backfill: true,
             stream_weights: false,
             prune: true,
+            event_queue: EventQueueKind::default(),
+            gap_skip: true,
             seed: DEFAULT_SEED,
             duration_s: 0.25,
             deadline_cy: 0,
@@ -283,6 +313,19 @@ pub struct ServeReport {
     /// dispatch table — [`render_table`](Self::render_table) is
     /// bit-identical with it on or off.
     pub prune: bool,
+    /// Gap-skip fast paths were enabled (config echo). Like `prune`,
+    /// never affects the dispatch table — only `counters.probes`.
+    pub gap_skip: bool,
+    /// Which next-event structure ran the loop. Deliberately *not* in
+    /// [`to_json`](Self::to_json): serve JSON is pinned bit-identical
+    /// across `--event-queue heap|calendar`, so a mode echo would be
+    /// the one field breaking the equality the CI smoke asserts.
+    pub event_queue: EventQueueKind,
+    /// Structural work the queue performed (heap: sift-depth proxy;
+    /// calendar: bucket/entry scan steps). The only mode-*dependent*
+    /// tally, so it stays out of serve JSON too — `imcc bench-timeline`
+    /// reports it per mode in the heap-vs-calendar section.
+    pub evq_steps: u64,
     /// p95 latency budget handed to admission control (cycles; config
     /// echo, 0 = no budget).
     pub slo_p95_cy: u64,
@@ -592,6 +635,9 @@ impl ServeReport {
             ("peak_live_intervals", (c.peak_live_intervals as f64).into()),
             ("pruned_intervals", (c.pruned_intervals as f64).into()),
             ("watermark", (c.watermark as f64).into()),
+            ("evq_pushes", (c.evq_pushes as f64).into()),
+            ("evq_pops", (c.evq_pops as f64).into()),
+            ("evq_stale", (c.evq_stale as f64).into()),
         ]);
         obj([
             ("policy", self.policy.label().into()),
@@ -601,6 +647,7 @@ impl ServeReport {
             ("backfill", self.backfill.into()),
             ("stream_weights", self.stream_weights.into()),
             ("prune", self.prune.into()),
+            ("gap_skip", self.gap_skip.into()),
             ("slo_p95_cy", (self.slo_p95_cy as f64).into()),
             ("admission", self.admission.into()),
             ("autoscale", self.autoscale.into()),
@@ -1107,6 +1154,7 @@ pub fn simulate_traced(
         None
     };
     let mut timeline = ResourceTimeline::with_resources(scfg.backfill, RES_ARRAY0 + scfg.n_arrays);
+    timeline.set_gap_skip(scfg.gap_skip);
     let mut pool_free: u64 = 0; // serialized-mode single-server clock
     // union of batch spans — an interval set, because a backfilled batch
     // validated later may legitimately start in an idle gap *before* an
@@ -1120,11 +1168,12 @@ pub fn simulate_traced(
     // next-event queue keyed by (dispatch instant, tenant id); stored
     // instants are lower bounds (queues only fill, resources only get
     // busier), revalidated lazily on pop — ties break deterministically
-    // toward the lower tenant id via the arbiter below
-    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    // toward the lower tenant id via the arbiter below. Calendar and
+    // heap realize the same order; see `evq`.
+    let mut evq = EventQueue::new(scfg.event_queue);
     for (i, q) in queues.iter().enumerate() {
         if let Some(r) = q.ready_at(&scfg.window) {
-            heap.push(Reverse((r, i)));
+            evq.push(r, i);
         }
     }
 
@@ -1154,11 +1203,11 @@ pub fn simulate_traced(
         claim_batches.clear();
         claim_blockers.clear();
         let mut t_min: Option<u64> = None;
-        while let Some(&Reverse((t_est, i))) = heap.peek() {
+        while let Some((t_est, i)) = evq.peek() {
             if t_min.is_some_and(|tm| t_est > tm) {
                 break;
             }
-            heap.pop();
+            evq.pop();
             validations += 1;
             let Some((td, b, cycles, blocker)) = validate_candidate(
                 &mut queues[i],
@@ -1174,13 +1223,18 @@ pub fn simulate_traced(
             ) else {
                 continue; // queue drained (e.g. emptied by drops)
             };
+            if td > t_est {
+                // the stored lower bound had gone stale — the churn
+                // tally the calendar queue is built to absorb
+                evq.mark_stale();
+            }
             let claim = Claim {
                 tenant: i,
                 head_arrival: queues[i].head_arrival().unwrap_or(u64::MAX),
                 planned_cycles: cycles,
             };
             match t_min {
-                Some(tm) if td > tm => heap.push(Reverse((td, i))),
+                Some(tm) if td > tm => evq.push(td, i),
                 Some(tm) if td == tm => {
                     claims.push(claim);
                     claim_batches.push(b);
@@ -1191,7 +1245,7 @@ pub fn simulate_traced(
                     // back at its (still valid) validated instant
                     if let Some(tm_old) = t_min {
                         for c in claims.drain(..) {
-                            heap.push(Reverse((tm_old, c.tenant)));
+                            evq.push(tm_old, c.tenant);
                         }
                         claim_batches.clear();
                         claim_blockers.clear();
@@ -1227,7 +1281,7 @@ pub fn simulate_traced(
         // losers stay candidates at the same instant (still lower bounds)
         for c in &claims {
             if c.tenant != pick_tenant {
-                heap.push(Reverse((t, c.tenant)));
+                evq.push(t, c.tenant);
             }
         }
         let pick_ix = claims.iter().position(|c| c.tenant == pick_tenant).unwrap();
@@ -1295,7 +1349,7 @@ pub fn simulate_traced(
             }
         }
         if let Some(r) = queues[pick_tenant].ready_at(&scfg.window) {
-            heap.push(Reverse((r.max(t), pick_tenant)));
+            evq.push(r.max(t), pick_tenant);
         }
 
         // controller pass, tenant-id order (deterministic): stored heap
@@ -1371,6 +1425,7 @@ pub fn simulate_traced(
         .collect();
 
     let tl_stats = timeline.stats();
+    let eq = evq.counters();
     let counters = ServeCounters {
         steps,
         validations,
@@ -1379,6 +1434,9 @@ pub fn simulate_traced(
         peak_live_intervals: tl_stats.peak_live_nodes,
         pruned_intervals: tl_stats.pruned_nodes,
         watermark: tl_stats.watermark,
+        evq_pushes: eq.pushes,
+        evq_pops: eq.pops,
+        evq_stale: eq.stale,
     };
 
     Ok(ServeReport {
@@ -1389,6 +1447,9 @@ pub fn simulate_traced(
         backfill: scfg.backfill,
         stream_weights: scfg.stream_weights,
         prune: scfg.prune,
+        gap_skip: scfg.gap_skip,
+        event_queue: evq.kind(),
+        evq_steps: eq.steps,
         slo_p95_cy: scfg.slo_p95_cy,
         admission: admission_on,
         autoscale: scfg.autoscale,

@@ -689,6 +689,6 @@ mod tests {
         }
         let tr = rec.finish().unwrap();
         let merged = tr.merged_occupancy();
-        assert_eq!(merged[&3].as_slice(), &[(0, 9), (12, 14)]);
+        assert_eq!(merged[&3].to_vec(), &[(0, 9), (12, 14)]);
     }
 }

@@ -70,6 +70,8 @@ impl Args {
                 | "autoscale"
                 | "no-autoscale"
                 | "no-admission"
+                | "gap-skip"
+                | "no-gap-skip"
         )
     }
 
@@ -195,5 +197,20 @@ mod tests {
         assert!(b.flag("no-admission"));
         assert!(b.flag("no-autoscale"));
         assert_eq!(b.opt("json"), Some("out.json"));
+    }
+
+    #[test]
+    fn event_queue_takes_a_value_and_gap_skip_does_not() {
+        // --event-queue is a valued option (not on the boolean list), so
+        // it must consume the mode word, not leave it as a positional
+        let a = argv("serve --event-queue heap --no-gap-skip --rate 100");
+        assert_eq!(a.opt("event-queue"), Some("heap"));
+        assert!(a.flag("no-gap-skip"));
+        assert!(a.positional.is_empty());
+        assert_eq!(a.opt("rate"), Some("100"));
+        // the boolean gap-skip switches never swallow a following word
+        let b = argv("serve --gap-skip positional --no-gap-skip");
+        assert!(b.flag("gap-skip") && b.flag("no-gap-skip"));
+        assert_eq!(b.positional, vec!["positional".to_string()]);
     }
 }

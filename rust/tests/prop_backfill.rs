@@ -102,7 +102,7 @@ fn commits_never_overlap_and_backfill_dominates_envelope_per_state() {
             for s in &p.spans {
                 // committed sets stay canonical
                 let ivs = bf.intervals(s.res);
-                for &(x, y) in ivs {
+                for &(x, y) in &ivs {
                     assert!(x < y);
                 }
                 for w in ivs.windows(2) {

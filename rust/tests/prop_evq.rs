@@ -1,0 +1,196 @@
+//! Property and regression tests for the next-event queue and the
+//! gap-skip timeline fast paths (no artifacts needed).
+//!
+//! Contract one — **queue-structure transparency**: the calendar queue
+//! and the binary heap realize the identical total order on (dispatch
+//! instant, tenant id), so a serving run is bit-identical between
+//! `--event-queue calendar` and `--event-queue heap` on *everything*:
+//! dispatch tables, full serve JSON (work counters included — pushes,
+//! pops, and stale revalidations are functions of the shared pop
+//! sequence), and exported Chrome-trace bytes. Checked across random
+//! Poisson/MMPP-2 fleets, every arbitration policy, and
+//! admission+autoscale runs.
+//!
+//! Contract two — **gap-skip neutrality and profit**: the timeline's
+//! append-at-tail / no-usable-gap fast paths never change a dispatch
+//! decision (tables and makespans identical with `--no-gap-skip`), and
+//! on a long horizon they strictly cut the deterministic `probes`
+//! counter — the win the perf gates pin.
+
+use imcc::arch::PowerModel;
+use imcc::coordinator::PlanCache;
+use imcc::serve::trace::chrome_trace;
+use imcc::serve::{
+    simulate, simulate_traced, EventQueueKind, ModelTraffic, Policy, ServeConfig, ServeReport,
+    TraceRecorder, TrafficModel,
+};
+use imcc::util::prop;
+use imcc::util::rng::SplitMix64;
+
+/// `n` bottleneck tenants with one random traffic model each.
+fn random_fleet(rng: &mut SplitMix64, n: usize) -> Vec<ModelTraffic> {
+    (0..n)
+        .map(|i| {
+            let mut net = imcc::net::bottleneck::bottleneck();
+            net.name = format!("bn-{i}");
+            let rate_per_s = 50.0 + rng.next_f64() * 350.0;
+            let traffic = if rng.below(2) == 1 {
+                TrafficModel::Bursty {
+                    rate_per_s,
+                    burst: 2.0 + rng.next_f64() * 4.0,
+                    dwell_s: 0.002 + rng.next_f64() * 0.01,
+                }
+            } else {
+                TrafficModel::Poisson { rate_per_s }
+            };
+            ModelTraffic { net, traffic, weight: 1 + rng.below(3) }
+        })
+        .collect()
+}
+
+/// The full cross-mode pin: dispatch table, serve JSON (bytes), and the
+/// deterministic counters must agree between queue kinds.
+fn assert_modes_identical(cal: &ServeReport, heap: &ServeReport, ctx: &str) {
+    assert_eq!(cal.render_table(), heap.render_table(), "{ctx}: dispatch tables");
+    assert_eq!(
+        cal.to_json().to_string_pretty(),
+        heap.to_json().to_string_pretty(),
+        "{ctx}: serve JSON bytes"
+    );
+    // spelled out again so a failure names the counter, not a JSON diff
+    assert_eq!(cal.counters, heap.counters, "{ctx}: counters");
+    assert_eq!(cal.makespan_cycles, heap.makespan_cycles, "{ctx}: makespan");
+    assert!(cal.counters.evq_pops <= cal.counters.evq_pushes, "{ctx}: pop/push conservation");
+}
+
+fn run(models: &[ModelTraffic], scfg: &ServeConfig) -> ServeReport {
+    let pm = PowerModel::paper();
+    simulate(models, scfg, &pm).expect("serve run")
+}
+
+#[test]
+fn calendar_and_heap_are_bit_identical_on_random_fleets() {
+    prop::check("evq_bit_identity", 10, |rng: &mut SplitMix64| {
+        let n = rng.range_i64(1, 4) as usize;
+        let models = random_fleet(rng, n);
+        let policy = [Policy::Fifo, Policy::Wrr, Policy::Sjf][rng.below(3) as usize];
+        let base = ServeConfig {
+            n_arrays: 6 * n,
+            policy,
+            backfill: rng.below(2) == 1,
+            prune: rng.below(2) == 1,
+            seed: rng.next_u64(),
+            duration_s: 0.02 + rng.next_f64() * 0.03,
+            deadline_cy: [0u64, 2_000_000][rng.below(2) as usize],
+            ..ServeConfig::default()
+        };
+        assert_eq!(base.event_queue, EventQueueKind::Calendar, "calendar is the default");
+        let cal = run(&models, &base);
+        let heap = run(
+            &models,
+            &ServeConfig { event_queue: EventQueueKind::Heap, ..base.clone() },
+        );
+        let ctx = format!(
+            "{} tenants, {:?}, backfill {}, prune {}, seed {:#x}",
+            n, policy, base.backfill, base.prune, base.seed
+        );
+        assert_modes_identical(&cal, &heap, &ctx);
+        assert!(cal.counters.evq_pushes > 0, "{ctx}: the loop never used the queue");
+    });
+}
+
+#[test]
+fn calendar_and_heap_agree_under_admission_and_autoscale() {
+    // the control plane re-plans mid-run and floors dispatches — the
+    // heaviest revalidation churn the queue sees; both structures must
+    // still realize the same order
+    let models = random_fleet(&mut SplitMix64::new(0xE7_07), 3);
+    for policy in [Policy::Fifo, Policy::Wrr, Policy::Sjf] {
+        let base = ServeConfig {
+            n_arrays: 20,
+            policy,
+            headroom: 2,
+            slo_p95_cy: 150_000_000,
+            autoscale: true,
+            duration_s: 0.04,
+            ..ServeConfig::default()
+        };
+        let cal = run(&models, &base);
+        let heap =
+            run(&models, &ServeConfig { event_queue: EventQueueKind::Heap, ..base.clone() });
+        assert_modes_identical(&cal, &heap, &format!("controlled, {policy:?}"));
+        assert_eq!(
+            cal.scale_events.len(),
+            heap.scale_events.len(),
+            "controlled, {policy:?}: scale-event traces"
+        );
+    }
+}
+
+#[test]
+fn trace_bytes_are_identical_across_queue_modes() {
+    let models = random_fleet(&mut SplitMix64::new(0xBEEF), 2);
+    let pm = PowerModel::paper();
+    let mut bytes = Vec::new();
+    for kind in [EventQueueKind::Calendar, EventQueueKind::Heap] {
+        let scfg = ServeConfig {
+            n_arrays: 12,
+            event_queue: kind,
+            duration_s: 0.02,
+            ..ServeConfig::default()
+        };
+        let mut cache = PlanCache::with_capacity(scfg.plan_cache_cap);
+        let mut rec = TraceRecorder::on(1 << 22);
+        let rep = simulate_traced(&models, &scfg, &pm, &mut cache, &mut rec).expect("traced run");
+        let tr = rec.finish().expect("recorder was on");
+        bytes.push(chrome_trace(&rep, &tr).to_string_pretty());
+    }
+    assert_eq!(bytes[0], bytes[1], "chrome-trace export must not see the queue structure");
+}
+
+#[test]
+fn gap_skip_is_dispatch_invisible_and_cuts_probes_long_horizon() {
+    // neutrality on random fleets at short horizons...
+    prop::check("gap_skip_neutrality", 8, |rng: &mut SplitMix64| {
+        let n = rng.range_i64(1, 4) as usize;
+        let models = random_fleet(rng, n);
+        let base = ServeConfig {
+            n_arrays: 6 * n,
+            backfill: rng.below(2) == 1,
+            seed: rng.next_u64(),
+            duration_s: 0.02 + rng.next_f64() * 0.02,
+            ..ServeConfig::default()
+        };
+        let fast = run(&models, &base);
+        let slow = run(&models, &ServeConfig { gap_skip: false, ..base.clone() });
+        let ctx = format!("seed {:#x}, backfill {}", base.seed, base.backfill);
+        assert_eq!(fast.render_table(), slow.render_table(), "{ctx}: dispatch tables");
+        assert_eq!(fast.makespan_cycles, slow.makespan_cycles, "{ctx}: makespan");
+        assert_eq!(fast.busy_cycles, slow.busy_cycles, "{ctx}: busy union");
+        assert_eq!(fast.counters.steps, slow.counters.steps, "{ctx}: event-loop steps");
+        assert_eq!(fast.counters.validations, slow.counters.validations, "{ctx}: validations");
+        // the queue sees the identical pop sequence either way
+        assert_eq!(fast.counters.evq_pushes, slow.counters.evq_pushes, "{ctx}: evq pushes");
+        assert_eq!(fast.counters.evq_stale, slow.counters.evq_stale, "{ctx}: evq stale");
+        assert!(
+            fast.counters.probes <= slow.counters.probes,
+            "{ctx}: fast paths added probe work ({} > {})",
+            fast.counters.probes,
+            slow.counters.probes
+        );
+    });
+    // ...and strict profit on a long backfilled horizon (the acceptance
+    // gate `imcc bench-timeline` also enforces at its 10× point)
+    let models = random_fleet(&mut SplitMix64::new(0x6A9), 3);
+    let base = ServeConfig { n_arrays: 18, duration_s: 0.2, ..ServeConfig::default() };
+    let fast = run(&models, &base);
+    let slow = run(&models, &ServeConfig { gap_skip: false, ..base.clone() });
+    assert_eq!(fast.render_table(), slow.render_table(), "long horizon: dispatch tables");
+    assert_eq!(fast.makespan_cycles, slow.makespan_cycles, "long horizon: makespan");
+    assert!(
+        fast.counters.probes < slow.counters.probes,
+        "long horizon: gap-skip must strictly cut probes ({} !< {})",
+        fast.counters.probes,
+        slow.counters.probes
+    );
+}
