@@ -1029,6 +1029,76 @@ mod tests {
     }
 
     #[test]
+    fn gap_bound_survives_prune_then_front_insert_then_fuse() {
+        // the composed sequence the PR 8 review flagged: pruning drops
+        // the prefix (bound untouched), a front insert then lands
+        // *before* the new first interval (opening a brand-new internal
+        // gap the bound must absorb), and a later fuse closes it again —
+        // the bound must dominate every live gap at every step
+        let mut s = IntervalSet::new();
+        s.insert(0, 10);
+        s.insert(12, 20); // gap 2 — the pre-prune bound stays tiny
+        s.check_invariants();
+        assert_eq!(s.max_internal_gap(), 2);
+        assert_eq!(s.prune_before(20), 2, "the whole prefix is dead");
+        // append into the emptied set: no internal gap yet, bound untouched
+        s.insert(200, 210);
+        s.check_invariants();
+        // front insert before [200,210): opens internal gap [60, 200) —
+        // 140 wide, far above the stale bound of 2; without the lo == 0
+        // record the fast path would skip it
+        s.insert(50, 60);
+        s.check_invariants();
+        assert!(s.max_internal_gap() >= 140, "front-insert gap must be absorbed");
+        // fuse across the gap: the bound stays conservative, never under
+        s.insert(60, 200);
+        s.check_invariants();
+        assert_eq!(s.to_vec(), &[(50, 210)]);
+        // a fresh append re-records its own gap on top
+        s.insert(215, 220);
+        s.check_invariants();
+    }
+
+    #[test]
+    fn gap_bound_survives_repeated_prune_front_insert_cycles() {
+        // iterate the prune → front-insert cycle with shrinking offsets:
+        // each round's front insert opens a different gap width and
+        // check_invariants asserts the bound dominates after every step
+        let mut s = IntervalSet::new();
+        for round in 1..=8u64 {
+            let base = round * 1_000;
+            s.insert(base + 500, base + 510);
+            s.check_invariants();
+            s.prune_before(base);
+            // front insert with a round-dependent gap to the survivor
+            s.insert(base + 100, base + 100 + round);
+            s.check_invariants();
+            // fuse the two into one, then append the next round's seed
+            s.insert(base + 100 + round, base + 500);
+            s.check_invariants();
+        }
+    }
+
+    #[test]
+    fn front_insert_gap_is_never_skipped_by_the_fast_path() {
+        // end-to-end: a timeline whose only usable gap was created by the
+        // prune → front-insert sequence must still be found by
+        // earliest_start (the no-usable-gap fast path consults the bound;
+        // an underestimate would skip the real gap)
+        let mut tl = ResourceTimeline::backfilling();
+        tl.commit(0, &prof(&[(RES_DMA, &[(0, 10), (200, 210)])], 210), ResMap::default());
+        tl.prune_before(10);
+        // front-insert ahead of [200, 210): internal gap [40, 200)
+        tl.commit(0, &prof(&[(RES_DMA, &[(30, 40)])], 40), ResMap::default());
+        let probe = prof(&[(RES_DMA, &[(0, 100)])], 100);
+        assert_eq!(
+            tl.earliest_start(&probe, ResMap::default(), 40),
+            40,
+            "the gap opened by the front insert must be usable"
+        );
+    }
+
+    #[test]
     fn pruning_is_invisible_to_future_probes() {
         // two identical timelines, one pruned at the oldest future probe:
         // every earliest_start at or past the watermark must agree, and

@@ -26,7 +26,8 @@ commands (one per paper exhibit):
                           point with --arrays N --batch B
   serve                   event-driven multi-model serving: open-loop traffic
                           into one pool, dynamic batching, latency percentiles
-                          (--sweep for the rate × policy table)
+                          (--sweep for the rate × policy table; --nodes N
+                          for a routed fleet of independent clusters)
   bench-timeline          long-horizon timeline perf harness: multi-tenant
                           serve at several horizons, pruned vs --no-prune,
                           wall-clock + deterministic counters; exits non-zero
@@ -94,6 +95,18 @@ options:
                           controlled-vs-uncontrolled baseline switch)
   --headroom N            `serve`: hold N arrays back from the initial
                           carve for the autoscaler to hand out (default 0)
+  --nodes N               `serve`: shard across N independent nodes behind
+                          a routing front-end (default 1 = the single-
+                          cluster path, bit-identical to omitting the
+                          flag; --router is accepted and ignored at N=1)
+  --router P              `serve`: fleet routing with --nodes N > 1,
+                          hash|least-loaded|replica (default hash);
+                          least-loaded also arms the cross-node tenant
+                          migration controller
+  --node-arrays A,B,..    `serve`: per-node pool sizes for a heterogeneous
+                          fleet (comma list of length N; default --arrays
+                          everywhere). Traces export per node as
+                          FILE-node<i>.json
   --tenants N             `bench-timeline`: fleet size          (default 4)
   --trace [FILE]          `serve`: record a deterministic execution trace
                           and export it as Chrome trace_event JSON (open
@@ -316,6 +329,19 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
     };
     let trace_limit: usize =
         args.opt_parse("trace-limit", imcc::serve::trace::DEFAULT_TRACE_LIMIT);
+    let nodes: usize = args.opt_parse("nodes", 1usize);
+    if nodes == 0 {
+        return Err("--nodes needs at least one node".into());
+    }
+    if nodes > 1 {
+        return run_serve_fleet(args, pm, &models, &scfg, nodes, trace_path, trace_limit);
+    }
+    // `--nodes 1` (with any --router) is the pinned single-cluster path
+    // below, bit-identical to omitting the flag; per-node sizing only
+    // makes sense for a fleet
+    if args.opt("node-arrays").is_some() {
+        return Err("--node-arrays needs --nodes N > 1 (use --arrays for one node)".into());
+    }
     let mut rec = if trace_path.is_some() {
         serve::TraceRecorder::on(trace_limit)
     } else {
@@ -356,6 +382,68 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
         write_json(&path, &rep.to_json())?;
     }
     Ok(())
+}
+
+/// `imcc serve --nodes N` with N > 1: the fleet path — route the global
+/// arrival streams across N independent nodes, run them under one
+/// deterministic event loop, and print the fleet summary table above
+/// every node's single-cluster table.
+fn run_serve_fleet(
+    args: &Args,
+    pm: &PowerModel,
+    models: &[imcc::serve::ModelTraffic],
+    scfg: &imcc::serve::ServeConfig,
+    nodes: usize,
+    trace_path: Option<String>,
+    trace_limit: usize,
+) -> Result<(), String> {
+    use imcc::serve::{self, FleetConfig, RouterPolicy};
+
+    let router = RouterPolicy::parse(args.opt("router").unwrap_or("hash"))?;
+    let mut fcfg = FleetConfig::new(nodes, router);
+    if let Some(s) = args.opt("node-arrays") {
+        fcfg.node_arrays = s
+            .split(',')
+            .map(|x| match x.trim().parse::<usize>() {
+                Ok(0) | Err(_) => Err(format!("bad --node-arrays entry `{x}` (integer ≥ 1)")),
+                Ok(v) => Ok(v),
+            })
+            .collect::<Result<_, _>>()?;
+    }
+    let mut recs: Vec<serve::TraceRecorder> = (0..nodes)
+        .map(|_| {
+            if trace_path.is_some() {
+                serve::TraceRecorder::on(trace_limit)
+            } else {
+                serve::TraceRecorder::Off
+            }
+        })
+        .collect();
+    let rep = serve::simulate_fleet_traced(models, scfg, &fcfg, pm, &mut recs)?;
+    print!("{}", rep.render_table());
+    for nr in &rep.nodes {
+        print!("{}", nr.report.render_table());
+    }
+    if let Some(path) = trace_path {
+        for (nr, rec) in rep.nodes.iter().zip(recs.into_iter()) {
+            let tr = rec.finish().expect("recorder was on");
+            let node_path = node_trace_path(&path, nr.node);
+            write_json(&node_path, &imcc::serve::trace::chrome_trace(&nr.report, &tr))?;
+        }
+    }
+    if let Some(path) = json_out(args, "BENCH_serve.json") {
+        write_json(&path, &rep.to_json())?;
+    }
+    Ok(())
+}
+
+/// Per-node trace filenames: `trace.json` → `trace-node2.json` (the
+/// suffix lands before the extension so the files sort as a family).
+fn node_trace_path(path: &str, ix: usize) -> String {
+    match path.rfind('.') {
+        Some(dot) if dot > 0 => format!("{}-node{}{}", &path[..dot], ix, &path[dot..]),
+        _ => format!("{path}-node{ix}"),
+    }
 }
 
 /// `imcc bench-timeline`: the long-horizon timeline perf harness —
@@ -563,6 +651,7 @@ fn main() {
                 report::scaleup::generate(&pm),
                 report::serving::generate(&pm),
                 report::serving::generate_controlled(&pm),
+                report::serving::generate_fleet(&pm),
             ];
             let mut all = Vec::new();
             for r in &reports {

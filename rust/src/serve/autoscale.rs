@@ -34,6 +34,15 @@
 //! Everything here is a pure function of seeded simulator state — no wall
 //! clock — so a decision trace replays bit-identically under its seed and
 //! moves only when the seed does.
+//!
+//! The fleet's cross-node migration controller ([`super::fleet`]) reuses
+//! two pieces of this module verbatim: [`Pressure`] windows drive its
+//! hot-spot detector (sampling per-node backlogs instead of per-tenant
+//! ones), and a migration's price is the same apply-scale model —
+//! `ImaArrayPool::program_cycles_by_array` of the destination placement's
+//! first pass, charged on the destination node's timeline. In-node
+//! autoscaling and cross-node migration both rewrite array ownership, so
+//! `--autoscale` is restricted to single-node (`--nodes 1`) runs.
 
 use std::collections::VecDeque;
 

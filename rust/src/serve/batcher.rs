@@ -162,6 +162,17 @@ impl TenantQueue {
         }
         dropped
     }
+
+    /// Remove and return every not-yet-served arrival — the pending
+    /// backlog and the still-future stream alike — for the fleet's
+    /// cross-node migration hand-off. The served/dropped history stays
+    /// behind (so this queue's ledger remains auditable) and the screen
+    /// cursor is clamped, keeping every remaining index in bounds.
+    pub fn take_pending(&mut self) -> Vec<u64> {
+        let out = self.arrivals.split_off(self.next);
+        self.screened = self.screened.min(self.arrivals.len());
+        out
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +184,24 @@ mod tests {
             max_batch,
             max_wait_cy,
         }
+    }
+
+    #[test]
+    fn take_pending_hands_off_everything_unserved() {
+        let mut q = TenantQueue::new(vec![100, 150, 200, 900, 1500]);
+        // serve the first two, then hand the rest to another node
+        assert_eq!(q.admit(300, 2), vec![100, 150]);
+        assert_eq!(q.take_pending(), vec![200, 900, 1500]);
+        assert_eq!(q.outstanding(), 0);
+        assert_eq!(q.head_arrival(), None);
+        assert_eq!(q.ready_at(&window(1, 0)), None);
+        // the served history stays behind for the ledger
+        assert_eq!(q.total_arrivals(), 2);
+        // the emptied queue still screens and admits safely
+        assert_eq!(q.screen_arrivals(5000, |_, _| true), 0);
+        assert_eq!(q.admit(5000, 4), Vec::<u64>::new());
+        // a second take is empty, not a panic
+        assert_eq!(q.take_pending(), Vec::<u64>::new());
     }
 
     #[test]

@@ -206,8 +206,15 @@ impl CalendarQueue {
         if let (Some(lo), Some(hi)) =
             (events.iter().map(|e| e.0).min(), events.iter().map(|e| e.0).max())
         {
-            let spacing = (hi - lo) / (events.len() as u64) + 1;
-            self.wbits = 64 - spacing.leading_zeros();
+            // a zero key span (single event, or every event at one
+            // instant) carries no spacing information: re-deriving from
+            // it would collapse the bucket width to 2 cycles and every
+            // later push would pile into a handful of buckets. Keep the
+            // current width instead — any live span re-derives normally.
+            if hi > lo {
+                let spacing = (hi - lo) / (events.len() as u64) + 1;
+                self.wbits = 64 - spacing.leading_zeros();
+            }
         }
         self.buckets = vec![Vec::new(); n];
         for (t, id) in events {
@@ -416,6 +423,126 @@ mod tests {
             .collect();
         expect.sort();
         assert_eq!(drain(&mut q), expect, "growth + shrink resizes must not lose events");
+    }
+
+    #[test]
+    fn resize_with_all_events_at_one_instant_keeps_a_sane_width() {
+        // push enough same-instant events to force a growth resize
+        // (len > 2 * buckets): the zero key span must not collapse the
+        // bucket width, and later spread-out pushes must still pop in
+        // order without degenerate bucket behavior
+        let mut q = EventQueue::new(EventQueueKind::Calendar);
+        let n = 2 * MIN_BUCKETS + 1; // crosses the growth threshold
+        for id in 0..n {
+            q.push(5_000, id);
+        }
+        let mut expect: Vec<(u64, usize)> = (0..n).map(|id| (5_000, id)).collect();
+        // events pushed after the degenerate resize land in sane buckets
+        for id in n..n + 64 {
+            let t = 10_000 + (id as u64) * 4_096;
+            q.push(t, id);
+            expect.push((t, id));
+        }
+        expect.sort();
+        assert_eq!(drain(&mut q), expect);
+    }
+
+    #[test]
+    fn resize_with_a_single_live_event_keeps_a_sane_width() {
+        // grow past the threshold, then drain to one event so the next
+        // shrink resize sees a single-key (zero-span) population
+        let mut q = EventQueue::new(EventQueueKind::Calendar);
+        let n = 2 * MIN_BUCKETS + 1;
+        for id in 0..n {
+            q.push(id as u64 * 100, id);
+        }
+        for _ in 0..n - 1 {
+            let _ = q.pop();
+        }
+        // the shrink resize has fired by now; the surviving far event
+        // and fresh pushes must still come out fully ordered
+        let survivor = ((n - 1) as u64 * 100, n - 1);
+        q.push(1 << 30, n);
+        q.push(survivor.0 + 1, n + 1);
+        assert_eq!(
+            drain(&mut q),
+            vec![survivor, (survivor.0 + 1, n + 1), (1 << 30, n)]
+        );
+    }
+
+    #[test]
+    fn wbits_survive_a_zero_span_resize() {
+        // white-box: a resize over a zero key span must keep the prior
+        // width rather than re-deriving a degenerate one
+        let mut cal = CalendarQueue::new();
+        let before = cal.wbits;
+        for id in 0..64 {
+            cal.push(1 << 20, id);
+        }
+        assert_eq!(cal.wbits, before, "zero span must not touch wbits");
+        // a live span still re-derives: spread the keys and force a rebuild
+        for id in 64..256 {
+            cal.push((id as u64) << 24, id);
+        }
+        assert_ne!(cal.wbits, 1, "live span re-derivation must not degenerate");
+    }
+
+    #[test]
+    fn push_below_the_cursor_interleaved_with_stale_pops_matches_heap() {
+        // adversarial churn for the last_min cursor: pops raise it, then
+        // a push strictly below it (an "earlier than any lower bound"
+        // event, which the serving loop produces when a strictly-earlier
+        // claim re-pushes prior claims) must still pop first, in both
+        // modes, with stale marks sprinkled in
+        let mut rng = Rng(0xDEAD_BEEF);
+        let mut cal = EventQueue::new(EventQueueKind::Calendar);
+        let mut heap = EventQueue::new(EventQueueKind::Heap);
+        let mut next_id = 0usize;
+        for _ in 0..16 {
+            let t = 1_000_000 + rng.next() % 1_000_000;
+            cal.push(t, next_id);
+            heap.push(t, next_id);
+            next_id += 1;
+        }
+        for round in 0..4_000u64 {
+            match rng.next() % 8 {
+                // push far below the cursor
+                0 => {
+                    let t = rng.next() % 1_000;
+                    cal.push(t, next_id);
+                    heap.push(t, next_id);
+                    next_id += 1;
+                }
+                // stale pop: re-push the same id later
+                1 | 2 => {
+                    let a = cal.pop();
+                    assert_eq!(a, heap.pop(), "stale-pop diverged at round {round}");
+                    if let Some((t, id)) = a {
+                        cal.mark_stale();
+                        heap.mark_stale();
+                        let t2 = t + 1 + rng.next() % 100_000;
+                        cal.push(t2, id);
+                        heap.push(t2, id);
+                    }
+                }
+                // plain pop
+                3 | 4 => {
+                    assert_eq!(cal.pop(), heap.pop(), "pop diverged at round {round}");
+                }
+                // push near the cursor
+                _ => {
+                    let base = cal.peek().map_or(0, |(t, _)| t);
+                    let t = base + rng.next() % 50_000;
+                    cal.push(t, next_id);
+                    heap.push(t, next_id);
+                    next_id += 1;
+                }
+            }
+            assert_eq!(cal.peek(), heap.peek(), "peek diverged at round {round}");
+        }
+        let (cc, hc) = (cal.counters(), heap.counters());
+        assert_eq!((cc.pushes, cc.pops, cc.stale), (hc.pushes, hc.pops, hc.stale));
+        assert_eq!(drain(&mut cal), drain(&mut heap), "drain order diverged");
     }
 
     #[test]

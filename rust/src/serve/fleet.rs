@@ -1,0 +1,925 @@
+//! Fleet-scale sharding: N heterogeneous IMC clusters behind a routing
+//! front-end, under one deterministic event loop.
+//!
+//! Each node is a complete single-cluster simulator — its own array
+//! count ([`FleetConfig::node_arrays`]), `ResourceTimeline` pool, plan
+//! cache, and `EventQueue` — embodied by `serve::NodeSim`, the factored
+//! setup/step/report of `serve::simulate_traced`. The fleet loop holds N
+//! of them and repeatedly steps **the node whose earliest stored event
+//! instant is globally smallest, ties toward the lower node id**. That
+//! is the whole ordering contract, and it is weaker than it looks:
+//! stored instants are lower bounds, so a node may dispatch *later* than
+//! another node's pending event. This is harmless — nodes share no
+//! resources, so each node's dispatch table is a function of its own
+//! routed arrival stream alone and is invariant under interleaving. The
+//! global order only pins *when* the migration controller samples
+//! backlogs, which makes migrations (and therefore everything) a pure
+//! function of the seed: two runs with the same seed and flags produce
+//! byte-identical fleet reports, per-node tables, and traces.
+//!
+//! ## Router policies
+//!
+//! Routing is per *tenant* (a model and its arrival stream), decided up
+//! front from the globally generated seeded streams — the same
+//! `seed + (i+1)·φ` per-tenant seeds as a single-cluster run, so the
+//! offered load is identical no matter how it is sharded:
+//!
+//! - **`hash`** — consistent hashing: FNV-1a over 32 virtual points per
+//!   node; a tenant lives on the first ring point at or after its name's
+//!   hash. Stateless and minimally disruptive as nodes come and go, but
+//!   load-blind: a hot tenant pins its whole stream to one node.
+//! - **`least-loaded`** — offered-load-aware placement (heaviest tenant
+//!   first, each to the node minimizing projected load per array), plus
+//!   an *online* migration controller: the heaviest tenant holds standby
+//!   replicas on every node, and when its owner's backlog sustains above
+//!   `hot_factor × coldest + hot_margin` over a pressure window
+//!   (`serve::autoscale::Pressure`, the PR 6 hysteresis machinery), its
+//!   pending stream migrates to the coldest node for the migration price
+//!   below.
+//! - **`replica`** — the heaviest tenant is resident on *every* node and
+//!   its stream is split per-arrival to the node with the earliest
+//!   projected finish (a virtual-finish-time water-fill over probed
+//!   single-request service cycles); all other tenants route by the hash
+//!   ring.
+//!
+//! ## Migration cost accounting
+//!
+//! A cross-node move charges exactly what the PR 6 autoscaler's
+//! `apply_scale` charges an in-pool slice move — PCM reprogramming of
+//! every array the tenant's resident plan (first pass) touches,
+//! serialized on the *destination's* `RES_PROG` port and chained after
+//! whatever already occupies the destination arrays — **plus** a trace
+//! hand-off charge on the destination's DMA port
+//! ([`FleetMigrationConfig::handoff_cy_per_req`] per moved request),
+//! since the pending stream's state has to cross nodes. Programming
+//! energy lands on the tenant's destination-node ledger. With
+//! `--stream-weights` the whole tail rides the overlap path and the
+//! tenant's dispatch floor stays put; otherwise the floor moves past it
+//! (`blocked_cycles`). Every migration is reported in
+//! [`FleetReport::migrations`] with its independently recomputable
+//! price — `tests/fleet_regression.rs` re-derives `program_cycles` from
+//! the placement and `ImaArrayPool::program_cycles_by_array`.
+//!
+//! `--nodes 1` (any router) degenerates to a single node owning every
+//! tenant in global order with its original streams, no standby copies
+//! and no migration controller — pinned bit-identical to the pre-fleet
+//! single-cluster path on dispatch tables, serve JSON, and trace bytes.
+
+use crate::arch::{PowerModel, SystemConfig};
+use crate::coordinator::{BatchConfig, PlanCache};
+use crate::net::Network;
+use crate::util::json::{obj, Json};
+use crate::util::table::{f, Table};
+
+use super::autoscale::Pressure;
+use super::metrics::LogHistogram;
+use super::tenancy::place_tenants;
+use super::trace::TraceRecorder;
+use super::{traffic, ModelTraffic, NodeSim, ServeConfig, ServeReport};
+
+/// Virtual ring points per node — enough that a 4-node ring's arcs are
+/// reasonably even without making ring construction measurable.
+const VNODES: usize = 32;
+
+/// How the front-end assigns tenants (and their arrival streams) to
+/// nodes. See the module docs for the semantics of each policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Consistent hashing by tenant name over a virtual-node ring.
+    Hash,
+    /// Offered-load-aware placement plus online hot-spot migration.
+    LeastLoaded,
+    /// Heaviest tenant replicated on all nodes, stream split
+    /// per-arrival; everything else hash-routed.
+    Replica,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Result<RouterPolicy, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "hash" | "consistent-hash" => Ok(RouterPolicy::Hash),
+            "least-loaded" | "ll" => Ok(RouterPolicy::LeastLoaded),
+            "replica" => Ok(RouterPolicy::Replica),
+            other => Err(format!(
+                "unknown router `{other}` (hash|least-loaded|replica)"
+            )),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RouterPolicy::Hash => "hash",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::Replica => "replica",
+        }
+    }
+}
+
+/// Knobs of the least-loaded router's online migration controller. The
+/// pressure window/cooldown defaults mirror `AutoscaleConfig` so the
+/// two controllers breathe at the same rate.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetMigrationConfig {
+    /// Migrate when `owner backlog ≥ hot_factor × coldest + hot_margin`…
+    pub hot_factor: u64,
+    /// …with the additive margin keeping tiny backlogs from thrashing.
+    pub hot_margin: u64,
+    /// The imbalance must sustain for a full window (cycles).
+    pub window_cy: u64,
+    /// Minimum spacing between migrations (cycles).
+    pub cooldown_cy: u64,
+    /// Hand-off DMA charge per moved pending request (cycles).
+    pub handoff_cy_per_req: u64,
+}
+
+impl Default for FleetMigrationConfig {
+    fn default() -> Self {
+        FleetMigrationConfig {
+            hot_factor: 2,
+            hot_margin: 8,
+            window_cy: 1_000_000,
+            cooldown_cy: 3_000_000,
+            handoff_cy_per_req: 512,
+        }
+    }
+}
+
+/// Fleet topology and routing configuration; per-node serving knobs
+/// (policy, window, seed, …) come from the shared [`ServeConfig`].
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Number of nodes (≥ 1).
+    pub nodes: usize,
+    pub router: RouterPolicy,
+    /// Per-node array counts (heterogeneous fleet). Empty = every node
+    /// gets the shared `ServeConfig::n_arrays`.
+    pub node_arrays: Vec<usize>,
+    pub migration: FleetMigrationConfig,
+}
+
+impl FleetConfig {
+    pub fn new(nodes: usize, router: RouterPolicy) -> FleetConfig {
+        FleetConfig {
+            nodes,
+            router,
+            node_arrays: Vec::new(),
+            migration: FleetMigrationConfig::default(),
+        }
+    }
+}
+
+/// One executed cross-node migration, with its independently
+/// recomputable price (see the module docs).
+#[derive(Clone, Debug)]
+pub struct FleetMigration {
+    pub tenant: String,
+    pub from_node: usize,
+    pub to_node: usize,
+    /// Fleet-clock instant the move was decided and charged (cycles).
+    pub t: u64,
+    /// Pending requests handed off.
+    pub moved: usize,
+    /// PCM reprogramming on the destination (sum over touched arrays).
+    pub program_cycles: u64,
+    /// DMA hand-off charge (`moved × handoff_cy_per_req`).
+    pub handoff_cycles: u64,
+    /// How far past `t` the tenant's dispatch floor moved (0 when the
+    /// price streamed under compute).
+    pub blocked_cycles: u64,
+    pub streamed: bool,
+}
+
+/// One node's slice of the fleet: its id, pool size, and complete
+/// single-cluster [`ServeReport`].
+#[derive(Clone, Debug)]
+pub struct NodeReport {
+    pub node: usize,
+    pub arrays: usize,
+    pub report: ServeReport,
+}
+
+/// The fleet run's outcome: per-node reports plus the migration log.
+/// Aggregates (arrival conservation, merged latency percentiles) are
+/// derived, never stored, so they cannot drift from the per-node truth.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub router: RouterPolicy,
+    pub nodes_n: usize,
+    pub seed: u64,
+    pub cycle_ns: f64,
+    pub nodes: Vec<NodeReport>,
+    pub migrations: Vec<FleetMigration>,
+}
+
+impl FleetReport {
+    /// Offered load summed over every node's tenant ledger. Migration
+    /// moves a request's ledger entry with it, so this equals the
+    /// globally generated arrival count exactly.
+    pub fn total_arrivals(&self) -> u64 {
+        self.nodes
+            .iter()
+            .flat_map(|n| n.report.tenants.iter())
+            .map(|t| t.arrivals)
+            .sum()
+    }
+
+    pub fn total_served(&self) -> u64 {
+        self.nodes.iter().map(|n| n.report.total_served()).sum()
+    }
+
+    pub fn total_dropped(&self) -> u64 {
+        self.nodes.iter().map(|n| n.report.total_dropped()).sum()
+    }
+
+    pub fn total_rejected(&self) -> u64 {
+        self.nodes.iter().map(|n| n.report.total_rejected()).sum()
+    }
+
+    /// Fleet makespan: the last node to drain.
+    pub fn makespan_cycles(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| n.report.makespan_cycles)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// End-to-end latency over *all* served requests fleet-wide: the
+    /// per-tenant histograms merged bin-wise ([`LogHistogram::merge`]),
+    /// exactly what one histogram over the union would report.
+    pub fn merged_latency(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for n in &self.nodes {
+            for t in &n.report.tenants {
+                h.merge(&t.latency);
+            }
+        }
+        h
+    }
+
+    /// Fleet throughput over the fleet makespan, inferences/s.
+    pub fn inferences_per_s(&self) -> f64 {
+        let makespan_s = self.makespan_cycles() as f64 * self.cycle_ns * 1e-9;
+        if makespan_s > 0.0 {
+            self.total_served() as f64 / makespan_s
+        } else {
+            0.0
+        }
+    }
+
+    fn ms(&self, cy: u64) -> f64 {
+        cy as f64 * self.cycle_ns * 1e-6
+    }
+
+    /// The fleet summary table the CLI prints above the per-node
+    /// tables: one row per node plus the fleet totals and the migration
+    /// log. Byte-identical across runs with the same seed.
+    pub fn render_table(&self) -> String {
+        let merged = self.merged_latency();
+        let (p50, p95, p99) = merged.percentiles();
+        let title = format!(
+            "fleet — {} nodes, {} router, seed {:#x}, p50/p95/p99 {}/{}/{} ms",
+            self.nodes_n,
+            self.router.label(),
+            self.seed,
+            f(self.ms(p50), 3),
+            f(self.ms(p95), 3),
+            f(self.ms(p99), 3),
+        );
+        let mut t = Table::new(
+            &title,
+            &[
+                "node", "arrays", "tenants", "arrivals", "served", "dropped", "rejected",
+                "p95 ms", "util",
+            ],
+        );
+        for nr in &self.nodes {
+            let mut h = LogHistogram::new();
+            for ten in &nr.report.tenants {
+                h.merge(&ten.latency);
+            }
+            let node_arrivals: u64 = nr.report.tenants.iter().map(|s| s.arrivals).sum();
+            t.row([
+                nr.node.to_string(),
+                nr.arrays.to_string(),
+                nr.report.tenants.len().to_string(),
+                node_arrivals.to_string(),
+                nr.report.total_served().to_string(),
+                nr.report.total_dropped().to_string(),
+                nr.report.total_rejected().to_string(),
+                f(self.ms(h.quantile(0.95)), 3),
+                format!("{:.0}%", nr.report.utilization() * 100.0),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "fleet totals: {} arrivals, {} served, {} dropped, {} rejected, {:.1} inf/s\n",
+            self.total_arrivals(),
+            self.total_served(),
+            self.total_dropped(),
+            self.total_rejected(),
+            self.inferences_per_s(),
+        ));
+        if !self.migrations.is_empty() {
+            out.push_str(&format!("migrations: {}\n", self.migrations.len()));
+            for m in &self.migrations {
+                out.push_str(&format!(
+                    "  {} node{} -> node{} @{}: {} reqs, {} prog cy, {} handoff cy, {} blocked{}\n",
+                    m.tenant,
+                    m.from_node,
+                    m.to_node,
+                    m.t,
+                    m.moved,
+                    m.program_cycles,
+                    m.handoff_cycles,
+                    m.blocked_cycles,
+                    if m.streamed { " (streamed)" } else { "" },
+                ));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable fleet report: the aggregates, the migration
+    /// log, and every node's full single-cluster JSON under `nodes[]`.
+    pub fn to_json(&self) -> Json {
+        let merged = self.merged_latency();
+        let (p50, p95, p99) = merged.percentiles();
+        let migrations: Vec<Json> = self
+            .migrations
+            .iter()
+            .map(|m| {
+                obj([
+                    ("tenant", m.tenant.as_str().into()),
+                    ("from_node", m.from_node.into()),
+                    ("to_node", m.to_node.into()),
+                    ("t_cycles", (m.t as f64).into()),
+                    ("moved", m.moved.into()),
+                    ("program_cycles", (m.program_cycles as f64).into()),
+                    ("handoff_cycles", (m.handoff_cycles as f64).into()),
+                    ("blocked_cycles", (m.blocked_cycles as f64).into()),
+                    ("streamed", m.streamed.into()),
+                ])
+            })
+            .collect();
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|nr| {
+                obj([
+                    ("node", nr.node.into()),
+                    ("arrays", nr.arrays.into()),
+                    ("report", nr.report.to_json()),
+                ])
+            })
+            .collect();
+        obj([
+            ("router", self.router.label().into()),
+            ("nodes_n", self.nodes_n.into()),
+            ("seed", format!("{:#x}", self.seed).into()),
+            (
+                "fleet",
+                obj([
+                    ("arrivals", (self.total_arrivals() as f64).into()),
+                    ("served", (self.total_served() as f64).into()),
+                    ("dropped", (self.total_dropped() as f64).into()),
+                    ("rejected", (self.total_rejected() as f64).into()),
+                    ("p50_ms", self.ms(p50).into()),
+                    ("p95_ms", self.ms(p95).into()),
+                    ("p99_ms", self.ms(p99).into()),
+                    ("makespan_cycles", (self.makespan_cycles() as f64).into()),
+                    ("inf_per_s", self.inferences_per_s().into()),
+                    ("migrations", Json::Arr(migrations)),
+                ]),
+            ),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+}
+
+/// FNV-1a 64-bit — the same hash `Network::fingerprint` uses, hand
+/// rolled here over a string key.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0001_b3);
+    }
+    h
+}
+
+/// The consistent-hash ring: `VNODES` points per node keyed
+/// `node{ix}#{v}`, sorted by (hash, node) so collisions (astronomically
+/// unlikely) still order deterministically.
+fn hash_ring(n: usize) -> Vec<(u64, usize)> {
+    let mut pts: Vec<(u64, usize)> = (0..n)
+        .flat_map(|ix| (0..VNODES).map(move |v| (fnv1a(&format!("node{ix}#{v}")), ix)))
+        .collect();
+    pts.sort_unstable();
+    pts
+}
+
+/// Ring lookup: the first point at or clockwise of the name's hash
+/// (wrapping to the ring's first point).
+fn ring_assign(pts: &[(u64, usize)], name: &str) -> usize {
+    let h = fnv1a(name);
+    let ix = pts.partition_point(|&(ph, _)| ph < h);
+    if ix == pts.len() {
+        pts[0].1
+    } else {
+        pts[ix].1
+    }
+}
+
+/// Offered-load-aware placement: tenants in descending arrival count
+/// (ties toward the lower tenant index), each to the node minimizing
+/// projected load per array — `(load + w) / cap` compared by
+/// cross-multiplication so the decision is exact integer arithmetic
+/// (strict inequality keeps the lower node id on ties).
+fn least_loaded_assign(arrival_counts: &[usize], caps: &[usize]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..arrival_counts.len()).collect();
+    order.sort_by(|&a, &b| {
+        arrival_counts[b]
+            .cmp(&arrival_counts[a])
+            .then(a.cmp(&b))
+    });
+    let mut load = vec![0u64; caps.len()];
+    let mut owner = vec![0usize; arrival_counts.len()];
+    for ti in order {
+        let w = arrival_counts[ti] as u64;
+        let mut best = 0usize;
+        for cand in 1..caps.len() {
+            if (load[cand] + w) as u128 * caps[best] as u128
+                < (load[best] + w) as u128 * caps[cand] as u128
+            {
+                best = cand;
+            }
+        }
+        load[best] += w;
+        owner[ti] = best;
+    }
+    owner
+}
+
+/// [`simulate_fleet_traced`] with tracing off on every node.
+pub fn simulate_fleet(
+    models: &[ModelTraffic],
+    scfg: &ServeConfig,
+    fcfg: &FleetConfig,
+    pm: &PowerModel,
+) -> Result<FleetReport, String> {
+    let mut recs: Vec<TraceRecorder> = (0..fcfg.nodes).map(|_| TraceRecorder::Off).collect();
+    simulate_fleet_traced(models, scfg, fcfg, pm, &mut recs)
+}
+
+/// Run the fleet to completion: route the globally generated arrival
+/// streams to nodes, step the per-node simulators under the global
+/// min-event order (see the module docs), and run the migration
+/// controller for the least-loaded router. `recs` holds one trace
+/// recorder per node ([`TraceRecorder::Off`] for no trace); per-node
+/// traces are as bit-identical to untraced runs as single-cluster ones.
+pub fn simulate_fleet_traced(
+    models: &[ModelTraffic],
+    scfg: &ServeConfig,
+    fcfg: &FleetConfig,
+    pm: &PowerModel,
+    recs: &mut [TraceRecorder],
+) -> Result<FleetReport, String> {
+    let n = fcfg.nodes;
+    if n == 0 {
+        return Err("a fleet needs at least one node".into());
+    }
+    if models.is_empty() {
+        return Err("no models to serve".into());
+    }
+    if recs.len() != n {
+        return Err(format!("{} trace recorders for {n} nodes", recs.len()));
+    }
+    if n > 1 && scfg.autoscale {
+        return Err(
+            "in-node autoscaling and cross-node migration both own the arrays; \
+             --autoscale is limited to --nodes 1"
+                .into(),
+        );
+    }
+    if !fcfg.node_arrays.is_empty() && fcfg.node_arrays.len() != n {
+        return Err(format!(
+            "--node-arrays lists {} nodes, --nodes says {n}",
+            fcfg.node_arrays.len()
+        ));
+    }
+    let node_arrays: Vec<usize> = if fcfg.node_arrays.is_empty() {
+        vec![scfg.n_arrays; n]
+    } else {
+        fcfg.node_arrays.clone()
+    };
+    for (ix, &na) in node_arrays.iter().enumerate() {
+        if na == 0 {
+            return Err(format!("node {ix} has no arrays"));
+        }
+        if scfg.headroom >= na {
+            return Err(format!(
+                "headroom {} leaves node {ix} no arrays to carve (node has {na})",
+                scfg.headroom
+            ));
+        }
+    }
+
+    // the globally generated seeded streams — identical offered load to
+    // a single-cluster run, however it is sharded (the per-tenant seed
+    // depends only on the global tenant index; cycle_ns is frequency-
+    // derived and frequency does not vary with the array count)
+    let cfg_global = SystemConfig::scaled_up(scfg.n_arrays);
+    let cycle_ns = cfg_global.freq.cycle_ns();
+    let duration_cy = (scfg.duration_s * 1e9 / cycle_ns) as u64;
+    let arrivals: Vec<Vec<u64>> = models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let seed_i = scfg
+                .seed
+                .wrapping_add((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            traffic::arrivals(&m.traffic, seed_i, duration_cy, cycle_ns)
+        })
+        .collect();
+    // the heaviest tenant by offered load (first on ties) — the one the
+    // replica and migration machinery revolves around
+    let mut heavy = 0usize;
+    for (i, a) in arrivals.iter().enumerate() {
+        if a.len() > arrivals[heavy].len() {
+            heavy = i;
+        }
+    }
+
+    // --- route: one owner per tenant ---------------------------------
+    let ring = hash_ring(n);
+    let owner_of: Vec<usize> = match fcfg.router {
+        RouterPolicy::Hash | RouterPolicy::Replica => models
+            .iter()
+            .map(|m| ring_assign(&ring, &m.net.name))
+            .collect(),
+        RouterPolicy::LeastLoaded => {
+            let counts: Vec<usize> = arrivals.iter().map(|a| a.len()).collect();
+            least_loaded_assign(&counts, &node_arrays)
+        }
+    };
+
+    // per-node rosters, ascending global tenant index; the heavy tenant
+    // gets standby copies wherever the migration controller (least-
+    // loaded) or the per-arrival splitter (replica) may need it, and a
+    // node with no resident tenant gets a standby copy so its pool is
+    // still a valid (if idle) placement
+    let mut rosters: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (gi, &ow) in owner_of.iter().enumerate() {
+        rosters[ow].push(gi);
+    }
+    let everywhere = n > 1
+        && (fcfg.router == RouterPolicy::LeastLoaded || fcfg.router == RouterPolicy::Replica);
+    for r in rosters.iter_mut() {
+        if everywhere && !r.contains(&heavy) {
+            r.push(heavy);
+            r.sort_unstable();
+        }
+        if r.is_empty() {
+            r.push(heavy);
+        }
+    }
+
+    // --- per-node configs ---------------------------------------------
+    let scfgs: Vec<ServeConfig> = node_arrays
+        .iter()
+        .map(|&na| ServeConfig {
+            n_arrays: na,
+            ..scfg.clone()
+        })
+        .collect();
+    let cfgs: Vec<SystemConfig> = node_arrays
+        .iter()
+        .map(|&na| SystemConfig::scaled_up(na))
+        .collect();
+    let mut caches: Vec<PlanCache> = (0..n)
+        .map(|_| PlanCache::with_capacity(scfg.plan_cache_cap))
+        .collect();
+
+    // --- replica split of the heavy stream ----------------------------
+    // probe each node's single-request service cycles for the heavy
+    // tenant; placement and batch cost are interned in the node's plan
+    // cache, so the probe warms exactly what NodeSim::new recomputes and
+    // never perturbs the node's own run
+    let mut split: Vec<Vec<u64>> = vec![Vec::new(); n];
+    if fcfg.router == RouterPolicy::Replica && n > 1 {
+        let mut svc = vec![0u64; n];
+        for ix in 0..n {
+            let nets: Vec<&Network> = rosters[ix].iter().map(|&gi| &models[gi].net).collect();
+            let tenancy = place_tenants(
+                &nets,
+                cfgs[ix].xbar_rows,
+                node_arrays[ix] - scfg.headroom,
+                scfg.rotate,
+                &mut caches[ix],
+            )?;
+            let local = rosters[ix].iter().position(|&gi| gi == heavy).unwrap();
+            let rep = caches[ix].get_or_batch(
+                &models[heavy].net,
+                scfg.strategy,
+                &cfgs[ix],
+                pm,
+                &tenancy.tenants[local].plan,
+                BatchConfig {
+                    batch: 1,
+                    pipeline: scfg.pipeline,
+                    charge_dma: scfg.charge_dma,
+                    stream_weights: scfg.stream_weights,
+                },
+            );
+            svc[ix] = rep.cycles;
+        }
+        // earliest-projected-finish water-fill, arrival order, ties to
+        // the lower node id
+        let mut busy = vec![0u64; n];
+        for &a in &arrivals[heavy] {
+            let mut best = 0usize;
+            for cand in 1..n {
+                if busy[cand].max(a) + svc[cand] < busy[best].max(a) + svc[best] {
+                    best = cand;
+                }
+            }
+            busy[best] = busy[best].max(a) + svc[best];
+            split[best].push(a);
+        }
+    }
+
+    // --- per-node model lists: routed streams as replayable traces ----
+    let replica_split = fcfg.router == RouterPolicy::Replica && n > 1;
+    let node_models: Vec<Vec<ModelTraffic>> = rosters
+        .iter()
+        .enumerate()
+        .map(|(ix, roster)| {
+            roster
+                .iter()
+                .map(|&gi| {
+                    let stream = if gi == heavy && replica_split {
+                        split[ix].clone()
+                    } else if owner_of[gi] == ix {
+                        arrivals[gi].clone()
+                    } else {
+                        Vec::new() // standby copy: resident, no stream
+                    };
+                    ModelTraffic {
+                        net: models[gi].net.clone(),
+                        traffic: traffic::TrafficModel::Trace {
+                            arrivals_cy: stream,
+                        },
+                        weight: models[gi].weight,
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    // --- build the node simulators ------------------------------------
+    let mut sims: Vec<NodeSim> = Vec::with_capacity(n);
+    for (((m, sc), cf), ca) in node_models
+        .iter()
+        .zip(scfgs.iter())
+        .zip(cfgs.iter())
+        .zip(caches.iter_mut())
+    {
+        sims.push(NodeSim::new(m, sc, pm, cf, ca)?);
+    }
+
+    // --- the global event loop ----------------------------------------
+    let mig = &fcfg.migration;
+    let migrate_on = n > 1 && fcfg.router == RouterPolicy::LeastLoaded;
+    let mut pressure = Pressure::new(1, mig.window_cy);
+    let mut owner = owner_of[heavy];
+    let mut cooldown_until = 0u64;
+    let mut migrations: Vec<FleetMigration> = Vec::new();
+    loop {
+        let mut next: Option<(u64, usize)> = None;
+        for (j, s) in sims.iter_mut().enumerate() {
+            if let Some(t) = s.next_event() {
+                if next.map_or(true, |(bt, _)| t < bt) {
+                    next = Some((t, j));
+                }
+            }
+        }
+        let Some((_, j)) = next else { break };
+        let stepped = sims[j].step(&mut recs[j]);
+        if !migrate_on {
+            continue;
+        }
+        let Some(t) = stepped else { continue };
+        // hot-spot detector: the heavy tenant's owner vs the coldest
+        // other node, sampled at every fleet dispatch
+        let hot = sims[owner].backlog_at(t) as u64;
+        let mut cold = (u64::MAX, usize::MAX);
+        for (k, s) in sims.iter().enumerate() {
+            if k != owner {
+                let b = s.backlog_at(t) as u64;
+                if (b, k) < cold {
+                    cold = (b, k);
+                }
+            }
+        }
+        let (cold_b, cold_n) = cold;
+        if hot >= mig.hot_factor.saturating_mul(cold_b).saturating_add(mig.hot_margin) {
+            pressure.record(0, t, 1);
+        } else {
+            pressure.clear(0);
+        }
+        pressure.age_out(0, t);
+        if t >= cooldown_until && pressure.sustained_hi(0, t, 1) {
+            pressure.clear(0);
+            cooldown_until = t + mig.cooldown_cy;
+            let local_from = rosters[owner].iter().position(|&g| g == heavy).unwrap();
+            let moved = sims[owner].migrate_out(local_from);
+            if moved.is_empty() {
+                continue; // backlog was all in flight — nothing to move
+            }
+            let n_moved = moved.len();
+            let local_to = rosters[cold_n].iter().position(|&g| g == heavy).unwrap();
+            let (program_cycles, handoff_cycles, blocked_cycles) = sims[cold_n].migrate_in(
+                local_to,
+                moved,
+                t,
+                mig.handoff_cy_per_req,
+                &mut recs[cold_n],
+            );
+            migrations.push(FleetMigration {
+                tenant: models[heavy].net.name.clone(),
+                from_node: owner,
+                to_node: cold_n,
+                t,
+                moved: n_moved,
+                program_cycles,
+                handoff_cycles,
+                blocked_cycles,
+                streamed: scfg.stream_weights,
+            });
+            owner = cold_n;
+        }
+    }
+
+    // --- fold ----------------------------------------------------------
+    let mut nodes: Vec<NodeReport> = Vec::with_capacity(n);
+    for ((ix, sim), rec) in sims.into_iter().enumerate().zip(recs.iter_mut()) {
+        nodes.push(NodeReport {
+            node: ix,
+            arrays: node_arrays[ix],
+            report: sim.into_report(rec),
+        });
+    }
+    Ok(FleetReport {
+        router: fcfg.router,
+        nodes_n: n,
+        seed: scfg.seed,
+        cycle_ns,
+        nodes,
+        migrations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{bottleneck_fleet, mnv2_bottleneck_pair, simulate};
+    use super::*;
+
+    #[test]
+    fn ring_assignment_is_pinned() {
+        // the ring is part of the routing contract: these assignments are
+        // frozen (recomputed independently from the FNV-1a definition)
+        let r4 = hash_ring(4);
+        assert_eq!(ring_assign(&r4, "mobilenetv2"), 2);
+        assert_eq!(ring_assign(&r4, "bottleneck"), 3);
+        for i in 0..8 {
+            assert_eq!(ring_assign(&r4, &format!("bn-{i}")), 3, "bn-{i}");
+        }
+        let r1 = hash_ring(1);
+        for name in ["mobilenetv2", "bottleneck", "bn-0"] {
+            assert_eq!(ring_assign(&r1, name), 0);
+        }
+        let r2 = hash_ring(2);
+        assert_eq!(ring_assign(&r2, "mobilenetv2"), 1);
+        assert_eq!(ring_assign(&r2, "bottleneck"), 1);
+        // ring size and determinism
+        assert_eq!(r4.len(), 4 * VNODES);
+        assert_eq!(hash_ring(4), r4);
+    }
+
+    #[test]
+    fn least_loaded_assign_is_capacity_aware() {
+        // heaviest first to the big node; the rest water-fill the small
+        // node once the big one carries the hot tenant
+        assert_eq!(least_loaded_assign(&[100, 10, 10], &[64, 12]), vec![0, 1, 1]);
+        // equal caps, equal loads: ties break to the lower node id in
+        // descending-load order
+        assert_eq!(least_loaded_assign(&[5, 5], &[32, 32]), vec![0, 1]);
+        // one node takes everything
+        assert_eq!(least_loaded_assign(&[7, 3], &[64]), vec![0, 0]);
+    }
+
+    #[test]
+    fn two_node_fleet_conserves_arrivals_under_every_router() {
+        let pm = PowerModel::paper();
+        let models = bottleneck_fleet(3, 200.0);
+        let scfg = ServeConfig {
+            duration_s: 0.02,
+            ..ServeConfig::default()
+        };
+        let solo = simulate(&models, &scfg, &pm).unwrap();
+        let offered: u64 = solo.tenants.iter().map(|t| t.arrivals).sum();
+        assert!(offered > 0);
+        for router in [
+            RouterPolicy::Hash,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::Replica,
+        ] {
+            let fcfg = FleetConfig::new(2, router);
+            let rep = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
+            assert_eq!(rep.nodes.len(), 2, "{}", router.label());
+            // sharding loses no offered load…
+            assert_eq!(rep.total_arrivals(), offered, "{}", router.label());
+            // …and every arrival is accounted for
+            assert_eq!(
+                rep.total_served() + rep.total_dropped() + rep.total_rejected(),
+                rep.total_arrivals(),
+                "{}",
+                router.label()
+            );
+            // byte-determinism of the rendered artifacts
+            let again = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
+            assert_eq!(
+                rep.render_table(),
+                again.render_table(),
+                "{}",
+                router.label()
+            );
+            assert_eq!(
+                rep.to_json().to_string_pretty(),
+                again.to_json().to_string_pretty(),
+                "{}",
+                router.label()
+            );
+        }
+    }
+
+    #[test]
+    fn single_node_fleet_matches_the_single_cluster_path() {
+        let pm = PowerModel::paper();
+        let models = mnv2_bottleneck_pair(120.0);
+        let scfg = ServeConfig {
+            duration_s: 0.02,
+            ..ServeConfig::default()
+        };
+        let solo = simulate(&models, &scfg, &pm).unwrap();
+        for router in [
+            RouterPolicy::Hash,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::Replica,
+        ] {
+            let rep = simulate_fleet(&models, &scfg, &FleetConfig::new(1, router), &pm).unwrap();
+            assert!(rep.migrations.is_empty());
+            assert_eq!(
+                rep.nodes[0].report.render_table(),
+                solo.render_table(),
+                "{}",
+                router.label()
+            );
+            assert_eq!(
+                rep.nodes[0].report.to_json().to_string_pretty(),
+                solo.to_json().to_string_pretty(),
+                "{}",
+                router.label()
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_rejects_bad_configs() {
+        let pm = PowerModel::paper();
+        let models = bottleneck_fleet(2, 50.0);
+        let scfg = ServeConfig {
+            duration_s: 0.005,
+            ..ServeConfig::default()
+        };
+        assert!(simulate_fleet(&models, &scfg, &FleetConfig::new(0, RouterPolicy::Hash), &pm)
+            .is_err());
+        let mut fc = FleetConfig::new(2, RouterPolicy::Hash);
+        fc.node_arrays = vec![64]; // wrong length
+        assert!(simulate_fleet(&models, &scfg, &fc, &pm).is_err());
+        fc.node_arrays = vec![64, 0]; // empty node
+        assert!(simulate_fleet(&models, &scfg, &fc, &pm).is_err());
+        let auto_cfg = ServeConfig {
+            autoscale: true,
+            ..scfg.clone()
+        };
+        assert!(simulate_fleet(
+            &models,
+            &auto_cfg,
+            &FleetConfig::new(2, RouterPolicy::Hash),
+            &pm
+        )
+        .is_err());
+    }
+}

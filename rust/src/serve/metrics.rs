@@ -86,6 +86,22 @@ impl LogHistogram {
         self.max = self.max.max(v);
     }
 
+    /// Fold another histogram into this one, bin-wise — the fleet's
+    /// aggregate percentiles merge per-node histograms without
+    /// re-binning. Bins are globally fixed, so the merge reports exactly
+    /// what one histogram over the union of samples would.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (c, &o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        if other.n > 0 {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -208,6 +224,17 @@ impl LatencyBreakdown {
         self.migration_stall.record(ph.migration_stall);
         self.resource_stall.record(ph.resource_stall);
         self.service.record(ph.service);
+    }
+
+    /// Bin-wise merge of another breakdown (fleet aggregation) —
+    /// phase-wise [`LogHistogram::merge`], so conservation against the
+    /// merged latency histogram survives the fold.
+    pub fn merge(&mut self, other: &LatencyBreakdown) {
+        self.queue_wait.merge(&other.queue_wait);
+        self.batch_wait.merge(&other.batch_wait);
+        self.migration_stall.merge(&other.migration_stall);
+        self.resource_stall.merge(&other.resource_stall);
+        self.service.merge(&other.service);
     }
 
     /// Phase name → histogram, in decomposition order.
@@ -472,6 +499,32 @@ mod tests {
         }
         assert_eq!(bd.components_sum(), lat.sum());
         assert_eq!(bd.phases().len(), 5);
+    }
+
+    #[test]
+    fn merge_matches_recording_the_union() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut u = LogHistogram::new();
+        for v in [3u64, 9, 100, 6_000] {
+            a.record(v);
+            u.record(v);
+        }
+        for v in [0u64, 17, 950, 1 << 30] {
+            b.record(v);
+            u.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.percentiles(), u.percentiles());
+        assert_eq!(a.count(), u.count());
+        assert_eq!(a.sum(), u.sum());
+        assert_eq!(a.min(), u.min());
+        assert_eq!(a.max(), u.max());
+        // merging an empty histogram is a no-op — min must not regress
+        // toward the empty histogram's u64::MAX sentinel
+        a.merge(&LogHistogram::new());
+        assert_eq!(a.min(), u.min());
+        assert_eq!(a.percentiles(), u.percentiles());
     }
 
     #[test]

@@ -135,11 +135,23 @@
 //! opt-in: [`TraceRecorder::Off`] is a no-op on the hot path, and
 //! `tests/trace_regression.rs` pins traced and untraced runs
 //! bit-identical on dispatch tables and counters.
+//!
+//! **Fleet sharding** ([`fleet`]) lifts all of the above from one cluster
+//! to N: the single-cluster setup / event-loop body / report tail are
+//! factored into [`NodeSim`] (pure code motion — `imcc serve --nodes 1`
+//! is pinned bit-identical to the pre-fleet output on dispatch tables,
+//! serve JSON, and trace bytes by `tests/fleet_regression.rs`), and the
+//! fleet front-end routes tenants to heterogeneous nodes (per-node array
+//! counts, timelines, and event queues) under one deterministic global
+//! loop with consistent-hash, least-loaded, and replica router policies,
+//! plus cross-node migration priced by the same PCM-reprogramming model
+//! as [`apply_scale`].
 
 pub mod admission;
 pub mod autoscale;
 pub mod batcher;
 pub mod evq;
+pub mod fleet;
 pub mod metrics;
 pub mod tenancy;
 pub mod trace;
@@ -165,6 +177,10 @@ pub use admission::AdmissionControl;
 pub use autoscale::{AutoscaleConfig, Autoscaler, Pressure, ScaleDecision, ScaleEvent, ScaleKind};
 pub use batcher::{BatchWindow, TenantQueue};
 pub use evq::{EventQueue, EventQueueKind, EvqCounters};
+pub use fleet::{
+    simulate_fleet, simulate_fleet_traced, FleetConfig, FleetMigration, FleetMigrationConfig,
+    FleetReport, NodeReport, RouterPolicy,
+};
 pub use metrics::{
     LatencyBreakdown, LogHistogram, ResourceUtil, ServeCounters, StallShare, TenantStats,
 };
@@ -1047,178 +1063,359 @@ pub fn simulate_traced(
     cache: &mut PlanCache,
     rec: &mut TraceRecorder,
 ) -> Result<ServeReport, String> {
-    if models.is_empty() {
-        return Err("no models to serve".into());
-    }
-    if scfg.window.max_batch == 0 {
-        return Err("admission window must admit ≥ 1 request (max_batch ≥ 1)".into());
-    }
     let cfg = SystemConfig::scaled_up(scfg.n_arrays);
-    let cycle_ns = cfg.freq.cycle_ns();
-    let duration_cy = (scfg.duration_s * 1e9 / cycle_ns) as u64;
+    let mut node = NodeSim::new(models, scfg, pm, &cfg, cache)?;
+    while node.step(rec).is_some() {}
+    Ok(node.into_report(rec))
+}
 
-    if scfg.headroom >= scfg.n_arrays {
-        return Err(format!(
-            "headroom {} leaves no arrays to carve (pool has {})",
-            scfg.headroom, scfg.n_arrays
-        ));
-    }
-    let admission_on = scfg.slo_p95_cy > 0 && scfg.admission;
+/// One cluster's complete in-flight simulation state: the setup, the
+/// event-loop body, and the report tail of [`simulate_traced`], factored
+/// apart so the [`fleet`] front-end can hold N of them and interleave
+/// their steps under one global clock. A single-cluster run is exactly
+/// [`new`](Self::new) + [`step`](Self::step) to exhaustion +
+/// [`into_report`](Self::into_report) — the factoring is pure code
+/// motion, and `--nodes 1` stays bit-identical to the pre-fleet output
+/// on dispatch tables, serve JSON, and trace bytes (pinned by
+/// `tests/fleet_regression.rs`).
+pub(crate) struct NodeSim<'a> {
+    ctx: SimCtx<'a>,
+    queues: Vec<TenantQueue>,
+    stats: Vec<TenantStats>,
+    arbiter: Arbiter,
+    rmaps: Vec<ResMap>,
+    auto: Option<Autoscaler>,
+    not_before: Vec<u64>,
+    prev_dispatch: Vec<u64>,
+    stall_by_res: BTreeMap<usize, u64>,
+    admission: Option<AdmissionControl>,
+    admission_on: bool,
+    timeline: ResourceTimeline,
+    pool_free: u64,
+    inflight: IntervalSet,
+    makespan: u64,
+    peak_backlog: u64,
+    evq: EventQueue,
+    steps: u64,
+    validations: u64,
+    claims: Vec<Claim>,
+    claim_batches: Vec<usize>,
+    claim_blockers: Vec<Option<usize>>,
+    duration_cy: u64,
+    cycle_ns: f64,
+}
 
-    // borrow the networks — placement only reads them, no clones; held-
-    // back headroom arrays stay free for the resizing controller
-    let nets: Vec<&Network> = models.iter().map(|m| &m.net).collect();
-    let tenancy = place_tenants(
-        &nets,
-        cfg.xbar_rows,
-        scfg.n_arrays - scfg.headroom,
-        scfg.rotate,
-        cache,
-    )?;
-
-    // seeded, per-model arrival streams
-    let mut queues: Vec<TenantQueue> = Vec::with_capacity(models.len());
-    let mut stats: Vec<TenantStats> = Vec::with_capacity(models.len());
-    for (i, (m, ten)) in models.iter().zip(tenancy.tenants.iter()).enumerate() {
-        let seed_i = scfg
-            .seed
-            .wrapping_add((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let arr = traffic::arrivals(&m.traffic, seed_i, duration_cy, cycle_ns);
-        let mut st = TenantStats::new(&ten.name, ten.arrays, ten.n_passes(), ten.occupancy);
-        st.arrivals = arr.len() as u64;
-        if admission_on {
-            st.slo_p95_cy = scfg.slo_p95_cy;
+impl<'a> NodeSim<'a> {
+    /// Place the tenants, seed the arrival streams, and arm the event
+    /// queue — everything up to (but not including) the first event-loop
+    /// step. `cfg` must be the system config for `scfg.n_arrays` arrays
+    /// (the fleet passes per-node heterogeneous configs).
+    pub(crate) fn new(
+        models: &'a [ModelTraffic],
+        scfg: &'a ServeConfig,
+        pm: &'a PowerModel,
+        cfg: &'a SystemConfig,
+        cache: &'a mut PlanCache,
+    ) -> Result<NodeSim<'a>, String> {
+        if models.is_empty() {
+            return Err("no models to serve".into());
         }
-        queues.push(TenantQueue::new(arr));
-        stats.push(st);
-    }
-    let weights: Vec<u64> = models.iter().map(|m| m.weight).collect();
-    let mut arbiter = Arbiter::new(scfg.policy, &weights);
+        if scfg.window.max_batch == 0 {
+            return Err("admission window must admit ≥ 1 request (max_batch ≥ 1)".into());
+        }
+        let cycle_ns = cfg.freq.cycle_ns();
+        let duration_cy = (scfg.duration_s * 1e9 / cycle_ns) as u64;
 
-    // core-affinity rotation is a backfill refinement: the envelope
-    // arbiter keeps affinity 0 so `--no-backfill` reproduces the PR 3
-    // fused-complex dispatch bit-identically; the autoscaler rewrites a
-    // tenant's array base when it relocates a slice
-    let mut rmaps: Vec<ResMap> = tenancy
-        .tenants
-        .iter()
-        .map(|ten| ResMap {
-            array_base: ten.array_base,
-            core_base: if scfg.backfill && scfg.overlap {
-                ten.core_base
-            } else {
-                0
-            },
-        })
-        .collect();
-    // the resizing controller and the per-tenant migration floors — both
-    // inert (and the floors all 0) with autoscale off
-    let mut auto: Option<Autoscaler> = if scfg.autoscale {
-        let slices: Vec<(usize, usize)> = tenancy
+        if scfg.headroom >= scfg.n_arrays {
+            return Err(format!(
+                "headroom {} leaves no arrays to carve (pool has {})",
+                scfg.headroom, scfg.n_arrays
+            ));
+        }
+        let admission_on = scfg.slo_p95_cy > 0 && scfg.admission;
+
+        // borrow the networks — placement only reads them, no clones; held-
+        // back headroom arrays stay free for the resizing controller
+        let nets: Vec<&Network> = models.iter().map(|m| &m.net).collect();
+        let tenancy = place_tenants(
+            &nets,
+            cfg.xbar_rows,
+            scfg.n_arrays - scfg.headroom,
+            scfg.rotate,
+            cache,
+        )?;
+
+        // seeded, per-model arrival streams
+        let mut queues: Vec<TenantQueue> = Vec::with_capacity(models.len());
+        let mut stats: Vec<TenantStats> = Vec::with_capacity(models.len());
+        for (i, (m, ten)) in models.iter().zip(tenancy.tenants.iter()).enumerate() {
+            let seed_i = scfg
+                .seed
+                .wrapping_add((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let arr = traffic::arrivals(&m.traffic, seed_i, duration_cy, cycle_ns);
+            let mut st = TenantStats::new(&ten.name, ten.arrays, ten.n_passes(), ten.occupancy);
+            st.arrivals = arr.len() as u64;
+            if admission_on {
+                st.slo_p95_cy = scfg.slo_p95_cy;
+            }
+            queues.push(TenantQueue::new(arr));
+            stats.push(st);
+        }
+        let weights: Vec<u64> = models.iter().map(|m| m.weight).collect();
+        let arbiter = Arbiter::new(scfg.policy, &weights);
+
+        // core-affinity rotation is a backfill refinement: the envelope
+        // arbiter keeps affinity 0 so `--no-backfill` reproduces the PR 3
+        // fused-complex dispatch bit-identically; the autoscaler rewrites a
+        // tenant's array base when it relocates a slice
+        let rmaps: Vec<ResMap> = tenancy
             .tenants
             .iter()
-            .map(|ten| (ten.array_base, ten.arrays))
-            .collect();
-        Some(Autoscaler::new(scfg.autoscale_cfg, scfg.n_arrays, &slices))
-    } else {
-        None
-    };
-    let mut not_before: Vec<u64> = vec![0; models.len()];
-    // per-tenant previous dispatch instant and the pool-wide stall
-    // attribution — the always-on halves of the decomposition state
-    let mut prev_dispatch: Vec<u64> = vec![0; models.len()];
-    let mut stall_by_res: BTreeMap<usize, u64> = BTreeMap::new();
-
-    let mut ctx = SimCtx {
-        models,
-        tenancy,
-        cfg: &cfg,
-        pm,
-        scfg,
-        cache,
-        memo: HashMap::new(),
-    };
-    // the admission gate prices every tenant's service ceiling up front
-    // (warming the cost memo changes nothing the dispatcher observes)
-    let mut admission: Option<AdmissionControl> = if admission_on {
-        let svc_max: Vec<u64> = (0..models.len())
-            .map(|ti| {
-                (1..=scfg.window.max_batch)
-                    .map(|b| ctx.batch_cost(ti, b).cycles)
-                    .max()
-                    .unwrap_or(0)
+            .map(|ten| ResMap {
+                array_base: ten.array_base,
+                core_base: if scfg.backfill && scfg.overlap {
+                    ten.core_base
+                } else {
+                    0
+                },
             })
             .collect();
-        Some(AdmissionControl::new(scfg.slo_p95_cy, &scfg.window, svc_max))
-    } else {
-        None
-    };
-    let mut timeline = ResourceTimeline::with_resources(scfg.backfill, RES_ARRAY0 + scfg.n_arrays);
-    timeline.set_gap_skip(scfg.gap_skip);
-    let mut pool_free: u64 = 0; // serialized-mode single-server clock
-    // union of batch spans — an interval set, because a backfilled batch
-    // validated later may legitimately start in an idle gap *before* an
-    // earlier-dispatched batch (that is the point of backfilling; every
-    // start still respects its requests' arrivals and the resource
-    // timeline)
-    let mut inflight = IntervalSet::new();
-    let mut makespan: u64 = 0;
-    let mut peak_backlog: u64 = 0;
+        // the resizing controller and the per-tenant migration floors — both
+        // inert (and the floors all 0) with autoscale off
+        let auto: Option<Autoscaler> = if scfg.autoscale {
+            let slices: Vec<(usize, usize)> = tenancy
+                .tenants
+                .iter()
+                .map(|ten| (ten.array_base, ten.arrays))
+                .collect();
+            Some(Autoscaler::new(scfg.autoscale_cfg, scfg.n_arrays, &slices))
+        } else {
+            None
+        };
+        let not_before: Vec<u64> = vec![0; models.len()];
+        // per-tenant previous dispatch instant and the pool-wide stall
+        // attribution — the always-on halves of the decomposition state
+        let prev_dispatch: Vec<u64> = vec![0; models.len()];
+        let stall_by_res: BTreeMap<usize, u64> = BTreeMap::new();
 
-    // next-event queue keyed by (dispatch instant, tenant id); stored
-    // instants are lower bounds (queues only fill, resources only get
-    // busier), revalidated lazily on pop — ties break deterministically
-    // toward the lower tenant id via the arbiter below. Calendar and
-    // heap realize the same order; see `evq`.
-    let mut evq = EventQueue::new(scfg.event_queue);
-    for (i, q) in queues.iter().enumerate() {
-        if let Some(r) = q.ready_at(&scfg.window) {
-            evq.push(r, i);
+        let mut ctx = SimCtx {
+            models,
+            tenancy,
+            cfg,
+            pm,
+            scfg,
+            cache,
+            memo: HashMap::new(),
+        };
+        // the admission gate prices every tenant's service ceiling up front
+        // (warming the cost memo changes nothing the dispatcher observes)
+        let admission: Option<AdmissionControl> = if admission_on {
+            let svc_max: Vec<u64> = (0..models.len())
+                .map(|ti| {
+                    (1..=scfg.window.max_batch)
+                        .map(|b| ctx.batch_cost(ti, b).cycles)
+                        .max()
+                        .unwrap_or(0)
+                })
+                .collect();
+            Some(AdmissionControl::new(scfg.slo_p95_cy, &scfg.window, svc_max))
+        } else {
+            None
+        };
+        let mut timeline =
+            ResourceTimeline::with_resources(scfg.backfill, RES_ARRAY0 + scfg.n_arrays);
+        timeline.set_gap_skip(scfg.gap_skip);
+
+        // next-event queue keyed by (dispatch instant, tenant id); stored
+        // instants are lower bounds (queues only fill, resources only get
+        // busier), revalidated lazily on pop — ties break deterministically
+        // toward the lower tenant id via the arbiter in `step`. Calendar
+        // and heap realize the same order; see `evq`.
+        let mut evq = EventQueue::new(scfg.event_queue);
+        for (i, q) in queues.iter().enumerate() {
+            if let Some(r) = q.ready_at(&scfg.window) {
+                evq.push(r, i);
+            }
         }
+
+        Ok(NodeSim {
+            ctx,
+            queues,
+            stats,
+            arbiter,
+            rmaps,
+            auto,
+            not_before,
+            prev_dispatch,
+            stall_by_res,
+            admission,
+            admission_on,
+            timeline,
+            pool_free: 0, // serialized-mode single-server clock
+            // union of batch spans — an interval set, because a backfilled
+            // batch validated later may legitimately start in an idle gap
+            // *before* an earlier-dispatched batch (that is the point of
+            // backfilling; every start still respects its requests'
+            // arrivals and the resource timeline)
+            inflight: IntervalSet::new(),
+            makespan: 0,
+            peak_backlog: 0,
+            evq,
+            // event-loop work counters (deterministic under a fixed seed)
+            steps: 0,
+            validations: 0,
+            // claim scratch, reused across events — the loop allocates
+            // nothing once the memoized batch costs are warm
+            claims: Vec::new(),
+            claim_batches: Vec::new(),
+            claim_blockers: Vec::new(),
+            duration_cy,
+            cycle_ns,
+        })
     }
 
-    // event-loop work counters (deterministic under a fixed seed)
-    let mut steps: u64 = 0;
-    let mut validations: u64 = 0;
-    // claim scratch, reused across events — the loop allocates nothing
-    // once the memoized batch costs are warm
-    let mut claims: Vec<Claim> = Vec::new();
-    let mut claim_batches: Vec<usize> = Vec::new();
-    let mut claim_blockers: Vec<Option<usize>> = Vec::new();
+    /// The earliest stored event instant, or `None` once the node has
+    /// drained. Stored instants are lower bounds, so this bounds the
+    /// node's next dispatch from below — the fleet loop always steps
+    /// whichever node holds the globally smallest one (ties toward the
+    /// lower node id). Peeking only perturbs the calendar's
+    /// mode-dependent structural `steps` tally, which deliberately stays
+    /// out of serve JSON.
+    pub(crate) fn next_event(&mut self) -> Option<u64> {
+        self.evq.peek().map(|(t, _)| t)
+    }
 
-    loop {
+    /// Pool-wide pending backlog at instant `t` (arrived, not yet
+    /// served or dropped) — the fleet's online load signal for
+    /// least-loaded migration decisions.
+    pub(crate) fn backlog_at(&self, t: u64) -> usize {
+        self.queues.iter().map(|q| q.depth_at(t)).sum()
+    }
+
+    /// Hand tenant `ix`'s entire pending arrival stream to the fleet for
+    /// re-routing; the offered-load ledger follows the requests, so
+    /// arrival conservation holds per node, not just fleet-wide.
+    pub(crate) fn migrate_out(&mut self, ix: usize) -> Vec<u64> {
+        let moved = self.queues[ix].take_pending();
+        self.stats[ix].arrivals -= moved.len() as u64;
+        moved
+    }
+
+    /// Splice a migrated arrival stream into tenant `ix` at instant `t`,
+    /// charging the same migration price [`apply_scale`] charges an
+    /// in-pool slice move: PCM reprogramming of every array the tenant's
+    /// resident plan (first pass) touches, serialized on this node's
+    /// programming port and chained after whatever already holds the
+    /// destination arrays — plus the trace hand-off, charged on the DMA
+    /// port after the reprogramming tail. With `--stream-weights` the
+    /// price rides the overlap path and the tenant's dispatch floor
+    /// stays at `t`; otherwise the floor moves past the full tail.
+    /// Returns `(program_cycles, handoff_cycles, blocked_cycles)`.
+    pub(crate) fn migrate_in(
+        &mut self,
+        ix: usize,
+        mut arrivals: Vec<u64>,
+        t: u64,
+        handoff_cy_per_req: u64,
+        rec: &mut TraceRecorder,
+    ) -> (u64, u64, u64) {
+        let scfg = self.ctx.scfg;
+        let (plan, array_base) = {
+            let ten = &self.ctx.tenancy.tenants[ix];
+            (Rc::clone(&ten.plan), ten.array_base)
+        };
+        let pool = ImaArrayPool::new(self.ctx.cfg, self.ctx.pm);
+        let by_array = pool.program_cycles_by_array(&plan.passes[0]);
+        let program_cycles: u64 = by_array.values().sum();
+        let mut pb = ProfileBuilder::new();
+        let mut prog_free = self.timeline.free_at(RES_PROG).saturating_sub(t);
+        let mut end_max = 0u64;
+        for (&a, &cy) in &by_array {
+            let res = RES_ARRAY0 + array_base + a;
+            let start = prog_free.max(self.timeline.free_at(res).saturating_sub(t));
+            let fin = start + cy;
+            pb.occupy(RES_PROG, start, fin);
+            pb.occupy(res, start, fin);
+            prog_free = fin;
+            end_max = end_max.max(fin);
+        }
+        let handoff_cycles = arrivals.len() as u64 * handoff_cy_per_req;
+        let mut total = end_max;
+        if handoff_cycles > 0 {
+            let dma = end_max.max(self.timeline.free_at(RES_DMA).saturating_sub(t));
+            pb.occupy(RES_DMA, dma, dma + handoff_cycles);
+            total = dma + handoff_cycles;
+        }
+        let prog_profile = pb.build(total);
+        let identity = ResMap {
+            array_base: 0,
+            core_base: 0,
+        };
+        self.timeline.commit(t, &prog_profile, identity);
+        // migration occupancy rides the trace under batch id 0, exactly
+        // like an autoscale move, so traced occupancy still merges to the
+        // committed timeline
+        rec.occupancy(ix, 0, t, &prog_profile, identity, scfg.backfill);
+        let blocked_cycles = if scfg.stream_weights { 0 } else { total };
+        self.not_before[ix] = self.not_before[ix].max(t + blocked_cycles);
+        self.stats[ix].energy_j += pool.program_energy_j(&plan.passes[0]);
+        self.stats[ix].arrivals += arrivals.len() as u64;
+        // splice: whatever this copy still had pending (normally nothing —
+        // migration targets hold standby copies) merges with the handed-off
+        // stream, sorted so the queue invariant holds
+        let mut merged = self.queues[ix].take_pending();
+        merged.append(&mut arrivals);
+        merged.sort_unstable();
+        self.queues[ix] = TenantQueue::new(merged);
+        if let Some(r) = self.queues[ix].ready_at(&scfg.window) {
+            self.evq.push(r.max(t), ix);
+        }
+        (program_cycles, handoff_cycles, blocked_cycles)
+    }
+
+    /// One event-loop iteration: prune, pop-and-validate the claim set,
+    /// arbitrate, dispatch one batch, and run the autoscale pass.
+    /// Returns the dispatch instant, or `None` when the node has drained
+    /// and nothing was dispatched.
+    pub(crate) fn step(&mut self, rec: &mut TraceRecorder) -> Option<u64> {
+        let scfg = self.ctx.scfg;
         // watermark pruning: no future dispatch can probe before the
         // earliest next admission instant across tenants (`ready_at` is
         // nondecreasing per queue), so committed intervals wholly before
         // it can never conflict again — fold them away
         if scfg.prune {
-            if let Some(w) = queues.iter().filter_map(|q| q.ready_at(&scfg.window)).min() {
-                timeline.prune_before(w);
+            if let Some(w) = self
+                .queues
+                .iter()
+                .filter_map(|q| q.ready_at(&scfg.window))
+                .min()
+            {
+                self.timeline.prune_before(w);
             }
         }
         // pop-and-validate until every remaining stored key exceeds the
         // best validated instant: `claims` then holds exactly the tenants
         // dispatchable at `t_min`
-        claims.clear();
-        claim_batches.clear();
-        claim_blockers.clear();
+        self.claims.clear();
+        self.claim_batches.clear();
+        self.claim_blockers.clear();
         let mut t_min: Option<u64> = None;
-        while let Some((t_est, i)) = evq.peek() {
+        while let Some((t_est, i)) = self.evq.peek() {
             if t_min.is_some_and(|tm| t_est > tm) {
                 break;
             }
-            evq.pop();
-            validations += 1;
+            self.evq.pop();
+            self.validations += 1;
             let Some((td, b, cycles, blocker)) = validate_candidate(
-                &mut queues[i],
-                &mut stats[i],
+                &mut self.queues[i],
+                &mut self.stats[i],
                 i,
-                &mut ctx,
-                &timeline,
-                pool_free,
-                rmaps[i],
-                not_before[i],
-                admission.as_mut(),
+                &mut self.ctx,
+                &self.timeline,
+                self.pool_free,
+                self.rmaps[i],
+                self.not_before[i],
+                self.admission.as_mut(),
                 rec,
             ) else {
                 continue; // queue drained (e.g. emptied by drops)
@@ -1226,91 +1423,95 @@ pub fn simulate_traced(
             if td > t_est {
                 // the stored lower bound had gone stale — the churn
                 // tally the calendar queue is built to absorb
-                evq.mark_stale();
+                self.evq.mark_stale();
             }
             let claim = Claim {
                 tenant: i,
-                head_arrival: queues[i].head_arrival().unwrap_or(u64::MAX),
+                head_arrival: self.queues[i].head_arrival().unwrap_or(u64::MAX),
                 planned_cycles: cycles,
             };
             match t_min {
-                Some(tm) if td > tm => evq.push(td, i),
+                Some(tm) if td > tm => self.evq.push(td, i),
                 Some(tm) if td == tm => {
-                    claims.push(claim);
-                    claim_batches.push(b);
-                    claim_blockers.push(blocker);
+                    self.claims.push(claim);
+                    self.claim_batches.push(b);
+                    self.claim_blockers.push(blocker);
                 }
                 _ => {
                     // strictly earlier: everything validated so far goes
                     // back at its (still valid) validated instant
                     if let Some(tm_old) = t_min {
-                        for c in claims.drain(..) {
-                            evq.push(tm_old, c.tenant);
+                        for c in self.claims.drain(..) {
+                            self.evq.push(tm_old, c.tenant);
                         }
-                        claim_batches.clear();
-                        claim_blockers.clear();
+                        self.claim_batches.clear();
+                        self.claim_blockers.clear();
                     }
                     t_min = Some(td);
-                    claims.push(claim);
-                    claim_batches.push(b);
-                    claim_blockers.push(blocker);
+                    self.claims.push(claim);
+                    self.claim_batches.push(b);
+                    self.claim_blockers.push(blocker);
                 }
             }
         }
-        let Some(t) = t_min else { break };
-        debug_assert!(!claims.is_empty());
-        steps += 1;
+        let t = t_min?;
+        debug_assert!(!self.claims.is_empty());
+        self.steps += 1;
 
         // every-event backlog sampling (pre-admission): each tenant's
         // pending depth at this dispatch instant, and the pool-wide
         // simultaneous backlog no per-tenant instrument can reconstruct
         let mut backlog: usize = 0;
-        for (i, q) in queues.iter().enumerate() {
+        for (i, q) in self.queues.iter().enumerate() {
             let d = q.depth_at(t);
-            stats[i].peak_queue = stats[i].peak_queue.max(d);
+            self.stats[i].peak_queue = self.stats[i].peak_queue.max(d);
             backlog += d;
             // the same samples feed the resizing controller's pressure
             // windows (aged out at the horizon before any decision)
-            if let Some(a) = auto.as_mut() {
+            if let Some(a) = self.auto.as_mut() {
                 a.record(i, t, d);
             }
         }
-        peak_backlog = peak_backlog.max(backlog as u64);
+        self.peak_backlog = self.peak_backlog.max(backlog as u64);
 
-        let pick_tenant = arbiter.pick(&claims);
+        let pick_tenant = self.arbiter.pick(&self.claims);
         // losers stay candidates at the same instant (still lower bounds)
-        for c in &claims {
+        for c in &self.claims {
             if c.tenant != pick_tenant {
-                evq.push(t, c.tenant);
+                self.evq.push(t, c.tenant);
             }
         }
-        let pick_ix = claims.iter().position(|c| c.tenant == pick_tenant).unwrap();
-        let b_claim = claim_batches[pick_ix];
-        let blocker = claim_blockers[pick_ix];
+        let pick_ix = self
+            .claims
+            .iter()
+            .position(|c| c.tenant == pick_tenant)
+            .unwrap();
+        let b_claim = self.claim_batches[pick_ix];
+        let blocker = self.claim_blockers[pick_ix];
 
         // decomposition boundaries, snapshotted before `admit` advances
         // the queue: the window close, the migration floor, and this
         // tenant's previous dispatch
-        let close = queues[pick_tenant].window_close_at(&scfg.window, t);
-        let nb = not_before[pick_tenant];
-        let prev = prev_dispatch[pick_tenant];
+        let close = self.queues[pick_tenant].window_close_at(&scfg.window, t);
+        let nb = self.not_before[pick_tenant];
+        let prev = self.prev_dispatch[pick_tenant];
 
         // admit exactly the validated batch: the timeline was checked
         // against profile(b_claim), and validation guarantees at least
         // b_claim arrivals are pending at `t`
-        let admitted = queues[pick_tenant].admit(t, b_claim);
+        let admitted = self.queues[pick_tenant].admit(t, b_claim);
         let bsz = admitted.len();
         debug_assert!(bsz >= 1);
         debug_assert_eq!(bsz, b_claim);
-        let cost = ctx.batch_cost(pick_tenant, bsz);
+        let cost = self.ctx.batch_cost(pick_tenant, bsz);
         let end = t + cost.cycles;
-        timeline.commit(t, &cost.profile, rmaps[pick_tenant]);
-        pool_free = pool_free.max(end);
-        makespan = makespan.max(end);
+        self.timeline.commit(t, &cost.profile, self.rmaps[pick_tenant]);
+        self.pool_free = self.pool_free.max(end);
+        self.makespan = self.makespan.max(end);
         // pool-busy union: overlapped spans do not double-count
-        inflight.insert(t, end);
+        self.inflight.insert(t, end);
 
-        let st = &mut stats[pick_tenant];
+        let st = &mut self.stats[pick_tenant];
         st.batches += 1;
         st.served += bsz as u64;
         st.busy_cycles += cost.cycles;
@@ -1320,15 +1521,17 @@ pub fn simulate_traced(
             let ph = trace::decompose(*a, prev, close, nb, t, end);
             st.breakdown.record(&ph);
             if ph.resource_stall > 0 {
-                *stall_by_res.entry(blocker.unwrap_or(trace::RES_POOL)).or_insert(0) +=
-                    ph.resource_stall;
+                *self
+                    .stall_by_res
+                    .entry(blocker.unwrap_or(trace::RES_POOL))
+                    .or_insert(0) += ph.resource_stall;
             }
         }
-        prev_dispatch[pick_tenant] = t;
+        self.prev_dispatch[pick_tenant] = t;
         if rec.is_on() {
             rec.batch(trace::BatchSpan {
                 tenant: pick_tenant,
-                batch: steps,
+                batch: self.steps,
                 size: bsz,
                 head_arrival: admitted[0],
                 prev_dispatch: prev,
@@ -1339,131 +1542,148 @@ pub fn simulate_traced(
                 blocker,
                 staged: cost.staged(),
             });
-            rec.occupancy(pick_tenant, steps, t, &cost.profile, rmaps[pick_tenant], scfg.backfill);
+            rec.occupancy(
+                pick_tenant,
+                self.steps,
+                t,
+                &cost.profile,
+                self.rmaps[pick_tenant],
+                scfg.backfill,
+            );
         }
         // close the admission predictor's loop with the same latencies
         // the percentile table is built from
-        if let Some(ac) = admission.as_mut() {
+        if let Some(ac) = self.admission.as_mut() {
             for a in &admitted {
                 ac.observe(pick_tenant, end - a);
             }
         }
-        if let Some(r) = queues[pick_tenant].ready_at(&scfg.window) {
-            evq.push(r.max(t), pick_tenant);
+        if let Some(r) = self.queues[pick_tenant].ready_at(&scfg.window) {
+            self.evq.push(r.max(t), pick_tenant);
         }
 
         // controller pass, tenant-id order (deterministic): stored heap
         // instants stay safe — a re-plan only changes future validations,
         // which recompute from scratch on pop, and the migration floor
         // only moves dispatches later
-        if let Some(auto_ref) = auto.as_mut() {
-            for ti in 0..queues.len() {
-                let cur = ctx.tenancy.tenants[ti].arrays;
+        if let Some(auto_ref) = self.auto.as_mut() {
+            for ti in 0..self.queues.len() {
+                let cur = self.ctx.tenancy.tenants[ti].arrays;
                 if let Some(d) = auto_ref.decide(ti, t, cur) {
                     apply_scale(
                         d,
                         ti,
                         t,
-                        &mut ctx,
+                        &mut self.ctx,
                         auto_ref,
-                        &mut timeline,
-                        &mut rmaps,
-                        &mut stats,
-                        &mut not_before,
-                        admission.as_mut(),
+                        &mut self.timeline,
+                        &mut self.rmaps,
+                        &mut self.stats,
+                        &mut self.not_before,
+                        self.admission.as_mut(),
                         rec,
                     );
                 }
             }
         }
+        Some(t)
     }
 
-    // the conservation ground truth for the trace: the committed
-    // interval sets as they stand at end of run
-    rec.capture_timeline(&timeline);
+    /// Fold the drained state into a [`ServeReport`]: the per-resource
+    /// utilization breakdown, the stall attribution, and the
+    /// deterministic counters.
+    pub(crate) fn into_report(self, rec: &mut TraceRecorder) -> ServeReport {
+        let scfg = self.ctx.scfg;
+        // the conservation ground truth for the trace: the committed
+        // interval sets as they stand at end of run
+        rec.capture_timeline(&self.timeline);
 
-    // per-resource utilization breakdown from the committed timelines:
-    // the core-complex aggregate (8 units), each core's own row, then the
-    // shared engines
-    let cores_busy: u64 = (0..N_CORES).map(|c| timeline.busy_cycles(RES_CORE0 + c)).sum();
-    let mut resource_busy = vec![ResourceUtil::new("cores", cores_busy, N_CORES as u64)];
-    for c in 0..N_CORES {
-        resource_busy.push(ResourceUtil::new(
-            &res_label(RES_CORE0 + c),
-            timeline.busy_cycles(RES_CORE0 + c),
-            1,
-        ));
-    }
-    resource_busy.extend([
-        ResourceUtil::new("dw_acc", timeline.busy_cycles(RES_DWACC), 1),
-        ResourceUtil::new("ima_mux", timeline.busy_cycles(RES_IMA_MUX), 1),
-        ResourceUtil::new("dma", timeline.busy_cycles(RES_DMA), 1),
-        ResourceUtil::new("pcm_prog", timeline.busy_cycles(RES_PROG), 1),
-    ]);
-    let mut arrays_total = 0u64;
-    let mut array_peak = (0u64, RES_ARRAY0);
-    for (res, busy) in timeline.busy_per_resource() {
-        if res >= RES_ARRAY0 {
-            arrays_total += busy;
-            if busy > array_peak.0 {
-                array_peak = (busy, res);
+        // per-resource utilization breakdown from the committed timelines:
+        // the core-complex aggregate (8 units), each core's own row, then
+        // the shared engines
+        let cores_busy: u64 = (0..N_CORES)
+            .map(|c| self.timeline.busy_cycles(RES_CORE0 + c))
+            .sum();
+        let mut resource_busy = vec![ResourceUtil::new("cores", cores_busy, N_CORES as u64)];
+        for c in 0..N_CORES {
+            resource_busy.push(ResourceUtil::new(
+                &res_label(RES_CORE0 + c),
+                self.timeline.busy_cycles(RES_CORE0 + c),
+                1,
+            ));
+        }
+        resource_busy.extend([
+            ResourceUtil::new("dw_acc", self.timeline.busy_cycles(RES_DWACC), 1),
+            ResourceUtil::new("ima_mux", self.timeline.busy_cycles(RES_IMA_MUX), 1),
+            ResourceUtil::new("dma", self.timeline.busy_cycles(RES_DMA), 1),
+            ResourceUtil::new("pcm_prog", self.timeline.busy_cycles(RES_PROG), 1),
+        ]);
+        let mut arrays_total = 0u64;
+        let mut array_peak = (0u64, RES_ARRAY0);
+        for (res, busy) in self.timeline.busy_per_resource() {
+            if res >= RES_ARRAY0 {
+                arrays_total += busy;
+                if busy > array_peak.0 {
+                    array_peak = (busy, res);
+                }
             }
         }
+        resource_busy.push(ResourceUtil::new("arrays", arrays_total, scfg.n_arrays as u64));
+        resource_busy.push(ResourceUtil::new(&res_label(array_peak.1), array_peak.0, 1));
+
+        // ascending resource id; the serialized-pool sentinel (usize::MAX)
+        // sorts last by construction
+        let stall_by_resource: Vec<StallShare> = self
+            .stall_by_res
+            .iter()
+            .map(|(&res, &cy)| StallShare {
+                name: Rc::from(trace::stall_label(res).as_str()),
+                res,
+                stalled_cycles: cy,
+            })
+            .collect();
+
+        let tl_stats = self.timeline.stats();
+        let eq = self.evq.counters();
+        let counters = ServeCounters {
+            steps: self.steps,
+            validations: self.validations,
+            probes: tl_stats.probes,
+            live_intervals: tl_stats.live_nodes,
+            peak_live_intervals: tl_stats.peak_live_nodes,
+            pruned_intervals: tl_stats.pruned_nodes,
+            watermark: tl_stats.watermark,
+            evq_pushes: eq.pushes,
+            evq_pops: eq.pops,
+            evq_stale: eq.stale,
+        };
+
+        ServeReport {
+            policy: scfg.policy,
+            seed: scfg.seed,
+            n_arrays: scfg.n_arrays,
+            overlap: scfg.overlap,
+            backfill: scfg.backfill,
+            stream_weights: scfg.stream_weights,
+            prune: scfg.prune,
+            gap_skip: scfg.gap_skip,
+            event_queue: self.evq.kind(),
+            evq_steps: eq.steps,
+            slo_p95_cy: scfg.slo_p95_cy,
+            admission: self.admission_on,
+            autoscale: scfg.autoscale,
+            duration_cycles: self.duration_cy,
+            makespan_cycles: self.makespan,
+            busy_cycles: self.inflight.total(),
+            cycle_ns: self.cycle_ns,
+            peak_backlog: self.peak_backlog,
+            tenants: self.stats,
+            scale_events: self.auto.map(|a| a.events).unwrap_or_default(),
+            resource_busy,
+            stall_by_resource,
+            counters,
+        }
     }
-    resource_busy.push(ResourceUtil::new("arrays", arrays_total, scfg.n_arrays as u64));
-    resource_busy.push(ResourceUtil::new(&res_label(array_peak.1), array_peak.0, 1));
-
-    // ascending resource id; the serialized-pool sentinel (usize::MAX)
-    // sorts last by construction
-    let stall_by_resource: Vec<StallShare> = stall_by_res
-        .iter()
-        .map(|(&res, &cy)| StallShare {
-            name: Rc::from(trace::stall_label(res).as_str()),
-            res,
-            stalled_cycles: cy,
-        })
-        .collect();
-
-    let tl_stats = timeline.stats();
-    let eq = evq.counters();
-    let counters = ServeCounters {
-        steps,
-        validations,
-        probes: tl_stats.probes,
-        live_intervals: tl_stats.live_nodes,
-        peak_live_intervals: tl_stats.peak_live_nodes,
-        pruned_intervals: tl_stats.pruned_nodes,
-        watermark: tl_stats.watermark,
-        evq_pushes: eq.pushes,
-        evq_pops: eq.pops,
-        evq_stale: eq.stale,
-    };
-
-    Ok(ServeReport {
-        policy: scfg.policy,
-        seed: scfg.seed,
-        n_arrays: scfg.n_arrays,
-        overlap: scfg.overlap,
-        backfill: scfg.backfill,
-        stream_weights: scfg.stream_weights,
-        prune: scfg.prune,
-        gap_skip: scfg.gap_skip,
-        event_queue: evq.kind(),
-        evq_steps: eq.steps,
-        slo_p95_cy: scfg.slo_p95_cy,
-        admission: admission_on,
-        autoscale: scfg.autoscale,
-        duration_cycles: duration_cy,
-        makespan_cycles: makespan,
-        busy_cycles: inflight.total(),
-        cycle_ns,
-        peak_backlog,
-        tenants: stats,
-        scale_events: auto.map(|a| a.events).unwrap_or_default(),
-        resource_busy,
-        stall_by_resource,
-        counters,
-    })
 }
 
 #[cfg(test)]

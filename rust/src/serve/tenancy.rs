@@ -19,6 +19,13 @@
 //! of the moved arrays charged on the pool timeline. Slices stay disjoint
 //! at every instant; only their boundaries move.
 //!
+//! Under fleet sharding ([`super::fleet`]) every node runs its own
+//! independent carve of its own pool: [`place_tenants`] is called once
+//! per node over that node's roster (owned tenants plus any standby
+//! replica of the fleet's heaviest tenant), so a tenant resident on a
+//! big node can legitimately be staged on a small one — that asymmetry
+//! is exactly what load-aware routing exploits.
+//!
 //! Cross-tenant timing: dispatch is per-resource and interval-precise.
 //! Every batch carries a reservation profile of merged busy `[start, end)`
 //! intervals over the pool's explicit resources — each array of the

@@ -200,6 +200,24 @@ mod tests {
     }
 
     #[test]
+    fn fleet_flags_parse() {
+        // the fleet trio are all valued options: --nodes and --router
+        // must consume their tokens, and --node-arrays keeps its comma
+        // list intact for the caller to split
+        let a = argv("serve --nodes 4 --router least-loaded --node-arrays 64,32,12,64 --json out.json");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt_parse("nodes", 1usize), 4);
+        assert_eq!(a.opt("router"), Some("least-loaded"));
+        assert_eq!(a.opt("node-arrays"), Some("64,32,12,64"));
+        assert_eq!(a.opt("json"), Some("out.json"));
+        assert!(a.positional.is_empty());
+        // omitted --nodes falls back to the single-cluster default
+        let b = argv("serve --rate 100");
+        assert_eq!(b.opt_parse("nodes", 1usize), 1);
+        assert_eq!(b.opt("router"), None);
+    }
+
+    #[test]
     fn event_queue_takes_a_value_and_gap_skip_does_not() {
         // --event-queue is a valued option (not on the boolean list), so
         // it must consume the mode word, not leave it as a positional

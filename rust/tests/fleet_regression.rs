@@ -1,0 +1,247 @@
+//! Regression tests for fleet-scale sharding (`serve::fleet`).
+//!
+//! Four contracts:
+//! 1. **Single-node degeneration** — `--nodes 1` under *any* router is
+//!    bit-identical to the single-cluster path: dispatch tables, serve
+//!    JSON, and exported Chrome-trace bytes.
+//! 2. **Router determinism** — every router policy is a pure function
+//!    of the seed: two identical runs produce byte-identical reports,
+//!    and routing conserves arrivals (served + dropped + rejected ==
+//!    offered, summed over nodes).
+//! 3. **Load-aware routing pays** — on a skewed hot spot (one heavy
+//!    tenant, heterogeneous pools, the hash ring pinning it to the
+//!    smallest node) least-loaded routing strictly beats hash routing
+//!    on the merged p95.
+//! 4. **Migration price accountability** — a cross-node migration's
+//!    PCM reprogramming charge is independently recomputable from the
+//!    destination's placement, and the hand-off charge is exactly
+//!    `moved × handoff_cy_per_req`.
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::coordinator::PlanCache;
+use imcc::ima::pool::ImaArrayPool;
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::serve::trace::chrome_trace;
+use imcc::serve::{
+    bottleneck_fleet, mnv2_bottleneck_pair, place_tenants, simulate_fleet, simulate_fleet_traced,
+    simulate_traced, FleetConfig, FleetMigrationConfig, ModelTraffic, RouterPolicy, ServeConfig,
+    TraceRecorder, TrafficModel,
+};
+
+const ROUTERS: [RouterPolicy; 3] = [
+    RouterPolicy::Hash,
+    RouterPolicy::LeastLoaded,
+    RouterPolicy::Replica,
+];
+
+/// One hot MobileNetV2 tenant — the skewed-fleet workload: its resident
+/// footprint fits a big node but forces staging on a small one, so where
+/// the router puts it decides the tail.
+fn hot_mnv2(rate_per_s: f64) -> Vec<ModelTraffic> {
+    vec![ModelTraffic {
+        net: mobilenet_v2(224),
+        traffic: TrafficModel::Poisson { rate_per_s },
+        weight: 1,
+    }]
+}
+
+#[test]
+fn single_node_fleet_is_bit_identical_to_the_single_cluster_path() {
+    let pm = PowerModel::paper();
+    let models = mnv2_bottleneck_pair(120.0);
+    let scfg = ServeConfig {
+        n_arrays: 64,
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    // the pinned baseline: the exact call `imcc serve --trace` makes
+    let mut cache = PlanCache::with_capacity(scfg.plan_cache_cap);
+    let mut rec = TraceRecorder::on(1 << 20);
+    let base = simulate_traced(&models, &scfg, &pm, &mut cache, &mut rec).expect("baseline");
+    let base_trace = chrome_trace(&base, &rec.finish().expect("recorder was on"))
+        .to_string_pretty();
+
+    for router in ROUTERS {
+        let fcfg = FleetConfig::new(1, router);
+        let mut recs = vec![TraceRecorder::on(1 << 20)];
+        let rep = simulate_fleet_traced(&models, &scfg, &fcfg, &pm, &mut recs)
+            .expect("single-node fleet");
+        assert_eq!(rep.nodes.len(), 1);
+        assert!(
+            rep.migrations.is_empty(),
+            "{router:?}: one node has nowhere to migrate"
+        );
+        let nr = &rep.nodes[0].report;
+        assert_eq!(
+            nr.render_table(),
+            base.render_table(),
+            "{router:?}: dispatch table"
+        );
+        assert_eq!(
+            nr.to_json().to_string_pretty(),
+            base.to_json().to_string_pretty(),
+            "{router:?}: serve JSON bytes"
+        );
+        let tr = recs.remove(0).finish().expect("recorder was on");
+        assert_eq!(
+            chrome_trace(nr, &tr).to_string_pretty(),
+            base_trace,
+            "{router:?}: chrome-trace bytes"
+        );
+    }
+}
+
+#[test]
+fn every_router_is_deterministic_and_conserves_arrivals() {
+    let pm = PowerModel::paper();
+    let models = bottleneck_fleet(5, 250.0);
+    let scfg = ServeConfig {
+        n_arrays: 32,
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    for router in ROUTERS {
+        let mut fcfg = FleetConfig::new(4, router);
+        // heterogeneous, but every pool fits its worst-case roster (the
+        // hash ring sends all five tenants to one node)
+        fcfg.node_arrays = vec![32, 24, 24, 32];
+        let a = simulate_fleet(&models, &scfg, &fcfg, &pm).expect("run a");
+        let b = simulate_fleet(&models, &scfg, &fcfg, &pm).expect("run b");
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "{router:?}: fleet JSON must be a pure function of the seed"
+        );
+        assert_eq!(a.render_table(), b.render_table(), "{router:?}: fleet table");
+        // conservation over the whole fleet
+        assert!(a.total_arrivals() > 0, "{router:?}: traffic generated");
+        assert_eq!(
+            a.total_arrivals(),
+            a.total_served() + a.total_dropped() + a.total_rejected(),
+            "{router:?}: routing must conserve arrivals"
+        );
+        // …and per node: the ledger travels with the requests
+        for nr in &a.nodes {
+            let arrivals: u64 = nr.report.tenants.iter().map(|t| t.arrivals).sum();
+            let accounted = nr.report.total_served()
+                + nr.report.total_dropped()
+                + nr.report.total_rejected();
+            assert_eq!(arrivals, accounted, "{router:?}: node {}", nr.node);
+        }
+    }
+}
+
+#[test]
+fn least_loaded_routing_beats_hash_on_a_skewed_hot_spot() {
+    let pm = PowerModel::paper();
+    let models = hot_mnv2(400.0);
+    let scfg = ServeConfig {
+        n_arrays: 64,
+        duration_s: 0.03,
+        ..ServeConfig::default()
+    };
+    let node_arrays = vec![64, 32, 12, 64];
+    let mut run = |router: RouterPolicy| {
+        let mut fcfg = FleetConfig::new(4, router);
+        fcfg.node_arrays = node_arrays.clone();
+        simulate_fleet(&models, &scfg, &fcfg, &pm).expect("fleet run")
+    };
+
+    let hash = run(RouterPolicy::Hash);
+    let ll = run(RouterPolicy::LeastLoaded);
+
+    // the consistent-hash ring pins the tenant to node 2 — the 12-array
+    // pool where MobileNetV2 cannot sit resident and every request pays
+    // staged reprogramming
+    let served_on = |rep: &imcc::serve::FleetReport, node: usize| -> u64 {
+        rep.nodes[node].report.total_served()
+    };
+    assert_eq!(
+        served_on(&hash, 2),
+        hash.total_served(),
+        "hash must pin the hot tenant to the ring's node 2"
+    );
+    // least-loaded weighs load against capacity and lands on a 64-array
+    // node, where the tenant is resident
+    assert_eq!(
+        served_on(&ll, 0),
+        ll.total_served(),
+        "least-loaded must place the hot tenant on the big node 0"
+    );
+    assert_eq!(hash.total_arrivals(), ll.total_arrivals(), "same offered load");
+
+    let p95_hash = hash.merged_latency().quantile(0.95);
+    let p95_ll = ll.merged_latency().quantile(0.95);
+    assert!(
+        p95_ll < p95_hash,
+        "load-aware routing must strictly beat the skewed hash pin \
+         (p95 {p95_ll} !< {p95_hash} cycles)"
+    );
+}
+
+#[test]
+fn migration_price_is_independently_recomputable() {
+    let pm = PowerModel::paper();
+    let models = hot_mnv2(400.0);
+    let scfg = ServeConfig {
+        n_arrays: 12,
+        duration_s: 0.04,
+        ..ServeConfig::default()
+    };
+    let mut fcfg = FleetConfig::new(2, RouterPolicy::LeastLoaded);
+    fcfg.node_arrays = vec![12, 12];
+    // aggressive trip point, one-shot cooldown: the overloaded staged
+    // tenant must migrate exactly once
+    fcfg.migration = FleetMigrationConfig {
+        hot_factor: 1,
+        hot_margin: 2,
+        window_cy: 100_000,
+        cooldown_cy: 1_000_000_000_000,
+        handoff_cy_per_req: 512,
+    };
+    let rep = simulate_fleet(&models, &scfg, &fcfg, &pm).expect("fleet run");
+
+    assert_eq!(rep.migrations.len(), 1, "exactly one migration fires");
+    let m = &rep.migrations[0];
+    assert_eq!(m.tenant, "mobilenetv2");
+    assert_eq!(m.from_node, 0, "ties in the load assignment keep node 0");
+    assert_eq!(m.to_node, 1);
+    assert!(m.moved > 0, "pending requests travelled");
+    assert_eq!(
+        m.handoff_cycles,
+        m.moved as u64 * 512,
+        "hand-off is priced per moved request"
+    );
+    assert!(!m.streamed, "no --stream-weights, the price blocks");
+    assert!(
+        m.blocked_cycles >= m.handoff_cycles,
+        "the dispatch floor covers at least the hand-off tail"
+    );
+
+    // recompute the PCM reprogramming price from scratch: the
+    // destination's standby placement of the tenant, first pass, summed
+    // over the arrays it touches — the same model `apply_scale` charges
+    let cfg = SystemConfig::scaled_up(12);
+    let mut cache = PlanCache::with_capacity(scfg.plan_cache_cap);
+    let nets = [mobilenet_v2(224)];
+    let tenancy =
+        place_tenants(&nets, cfg.xbar_rows, 12, scfg.rotate, &mut cache).expect("placement");
+    let pool = ImaArrayPool::new(&cfg, &pm);
+    let expect: u64 = pool
+        .program_cycles_by_array(&tenancy.tenants[0].plan.passes[0])
+        .values()
+        .sum();
+    assert!(expect > 0, "a staged tenant always reprograms");
+    assert_eq!(m.program_cycles, expect, "PCM price recomputed from scratch");
+
+    // the ledger moved with the requests: conservation holds fleet-wide
+    // and the destination really served the handed-off stream
+    assert_eq!(
+        rep.total_arrivals(),
+        rep.total_served() + rep.total_dropped() + rep.total_rejected()
+    );
+    assert!(
+        rep.nodes[1].report.total_served() > 0,
+        "the destination served the moved requests"
+    );
+}

@@ -21,8 +21,8 @@ use imcc::arch::PowerModel;
 use imcc::coordinator::PlanCache;
 use imcc::serve::trace::chrome_trace;
 use imcc::serve::{
-    simulate, simulate_traced, EventQueueKind, ModelTraffic, Policy, ServeConfig, ServeReport,
-    TraceRecorder, TrafficModel,
+    simulate, simulate_traced, EventQueue, EventQueueKind, ModelTraffic, Policy, ServeConfig,
+    ServeReport, TraceRecorder, TrafficModel,
 };
 use imcc::util::prop;
 use imcc::util::rng::SplitMix64;
@@ -96,6 +96,84 @@ fn calendar_and_heap_are_bit_identical_on_random_fleets() {
         );
         assert_modes_identical(&cal, &heap, &ctx);
         assert!(cal.counters.evq_pushes > 0, "{ctx}: the loop never used the queue");
+    });
+}
+
+#[test]
+fn adversarial_interleaving_pops_in_identical_order() {
+    // the structure-level half of contract one: drive both queues with
+    // one adversarial op sequence — same-instant bursts (the hi == lo
+    // resize degenerate), pushes *below* the last popped instant mixed
+    // with stale marks (the calendar-extraction interleaving the bugfix
+    // pins), and wide-spread pushes that force re-bucketing — and demand
+    // entry-for-entry pop identity plus matching push/pop/stale counters
+    prop::check("evq_adversarial_interleaving", 20, |rng: &mut SplitMix64| {
+        let mut cal = EventQueue::new(EventQueueKind::Calendar);
+        let mut heap = EventQueue::new(EventQueueKind::Heap);
+        let mut last_pop: u64 = 0;
+        let mut id: usize = 0;
+        let mut live: usize = 0;
+        for _ in 0..rng.range_i64(100, 400) {
+            match rng.below(8) {
+                // burst of same-instant events
+                0 => {
+                    let t = last_pop + rng.below(4);
+                    for _ in 0..rng.range_i64(2, 6) {
+                        cal.push(t, id);
+                        heap.push(t, id);
+                        id += 1;
+                        live += 1;
+                    }
+                }
+                // push below the last popped instant
+                1 | 2 => {
+                    let t = last_pop.saturating_sub(rng.below(1000));
+                    cal.push(t, id);
+                    heap.push(t, id);
+                    id += 1;
+                    live += 1;
+                }
+                // push ahead, spread wide enough to trigger re-bucketing
+                3 | 4 => {
+                    let t = last_pop + 1 + rng.below(100_000);
+                    cal.push(t, id);
+                    heap.push(t, id);
+                    id += 1;
+                    live += 1;
+                }
+                // pop, sometimes marking the popped entry stale (a pure
+                // counter — must stay mode-independent)
+                _ => {
+                    assert_eq!(cal.peek(), heap.peek(), "peek before pop");
+                    let (c, h) = (cal.pop(), heap.pop());
+                    assert_eq!(c, h, "pop order");
+                    if let Some((t, _)) = c {
+                        last_pop = t;
+                        live -= 1;
+                        if rng.below(3) == 0 {
+                            cal.mark_stale();
+                            heap.mark_stale();
+                        }
+                    }
+                }
+            }
+        }
+        // drain: the remaining order must be identical entry for entry
+        loop {
+            assert_eq!(cal.peek(), heap.peek(), "peek during drain");
+            let (c, h) = (cal.pop(), heap.pop());
+            assert_eq!(c, h, "drain pop order");
+            if c.is_none() {
+                break;
+            }
+            live -= 1;
+        }
+        assert_eq!(live, 0, "every push popped exactly once");
+        let (cc, hc) = (cal.counters(), heap.counters());
+        assert_eq!(cc.pushes, hc.pushes, "push counters");
+        assert_eq!(cc.pops, hc.pops, "pop counters");
+        assert_eq!(cc.stale, hc.stale, "stale counters");
+        assert_eq!(cc.pushes, cc.pops, "conservation after drain");
     });
 }
 
