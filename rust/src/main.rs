@@ -107,6 +107,16 @@ options:
                           fleet (comma list of length N; default --arrays
                           everywhere). Traces export per node as
                           FILE-node<i>.json
+  --faults SPEC           `serve`: deterministic fault plan for a fleet
+                          (--nodes N > 1) — comma list of
+                          crash@nodeN:T[..T2] | drain@nodeN:T[..T2] |
+                          update@nodeN:T..T2 | degrade@nodeN:T..T2xF |
+                          arrayfail@nodeN:TxK, instants in cycles (5e6
+                          ok). Queued work fails over to survivors;
+                          crashes lose in-flight batches (lost_in_crash)
+  --fault-seed S          `serve`: draw a seeded random crash/recover
+                          plan instead (MTBF = half the horizon); the
+                          drawn plan is echoed for replay via --faults
   --tenants N             `bench-timeline`: fleet size          (default 4)
   --trace [FILE]          `serve`: record a deterministic execution trace
                           and export it as Chrome trace_event JSON (open
@@ -342,6 +352,12 @@ fn run_serve(args: &Args, pm: &PowerModel) -> Result<(), String> {
     if args.opt("node-arrays").is_some() {
         return Err("--node-arrays needs --nodes N > 1 (use --arrays for one node)".into());
     }
+    if args.opt("faults").is_some() || args.opt("fault-seed").is_some() {
+        return Err(
+            "--faults/--fault-seed inject node failures into a fleet; they need --nodes N > 1"
+                .into(),
+        );
+    }
     let mut rec = if trace_path.is_some() {
         serve::TraceRecorder::on(trace_limit)
     } else {
@@ -402,13 +418,28 @@ fn run_serve_fleet(
     let router = RouterPolicy::parse(args.opt("router").unwrap_or("hash"))?;
     let mut fcfg = FleetConfig::new(nodes, router);
     if let Some(s) = args.opt("node-arrays") {
-        fcfg.node_arrays = s
-            .split(',')
-            .map(|x| match x.trim().parse::<usize>() {
-                Ok(0) | Err(_) => Err(format!("bad --node-arrays entry `{x}` (integer ≥ 1)")),
-                Ok(v) => Ok(v),
-            })
-            .collect::<Result<_, _>>()?;
+        fcfg.node_arrays = serve::parse_node_arrays(s, nodes)?;
+    }
+    match (args.opt("faults"), args.opt("fault-seed")) {
+        (Some(_), Some(_)) => {
+            return Err(
+                "--faults and --fault-seed are mutually exclusive: one names the plan, \
+                 the other draws it"
+                    .into(),
+            );
+        }
+        (Some(spec), None) => fcfg.faults = serve::FaultPlan::parse(spec)?,
+        (None, Some(s)) => {
+            // a seeded crash/recover plan over the arrival horizon with
+            // MTBF = horizon/2 — roughly one crash per node; echo the
+            // drawn plan so the run can be replayed with --faults
+            let fseed = parse_seed(s)?;
+            let cycle_ns = SystemConfig::scaled_up(scfg.n_arrays).freq.cycle_ns();
+            let horizon_cy = (scfg.duration_s * 1e9 / cycle_ns) as u64;
+            fcfg.faults = serve::FaultPlan::seeded(fseed, nodes, horizon_cy, horizon_cy / 2);
+            println!("fault plan (seed {fseed:#x}): {}", fcfg.faults.describe());
+        }
+        (None, None) => {}
     }
     let mut recs: Vec<serve::TraceRecorder> = (0..nodes)
         .map(|_| {
@@ -652,6 +683,7 @@ fn main() {
                 report::serving::generate(&pm),
                 report::serving::generate_controlled(&pm),
                 report::serving::generate_fleet(&pm),
+                report::serving::generate_faults(&pm),
             ];
             let mut all = Vec::new();
             for r in &reports {

@@ -12,13 +12,13 @@
 //! paper's §VI argument predicts (SJF keeps the small model fast by
 //! starving the big one; WRR shares; FIFO lets the heavy model drag both).
 
-use crate::arch::PowerModel;
+use crate::arch::{PowerModel, SystemConfig};
 use crate::coordinator::PlanCache;
 use crate::net::mobilenetv2::mobilenet_v2;
 use crate::serve::{
     dispatch_label, mnv2_bottleneck_pair, simulate_fleet, simulate_traced, simulate_with_cache,
-    FleetConfig, ModelTraffic, Policy, RouterPolicy, ServeConfig, TraceRecorder, TrafficModel,
-    DEFAULT_SEED,
+    FaultPlan, FleetConfig, ModelTraffic, Policy, RouterPolicy, ServeConfig, TraceRecorder,
+    TrafficModel, DEFAULT_SEED,
 };
 use crate::util::json::{obj, Json};
 use crate::util::table::{f, Table};
@@ -467,6 +467,146 @@ pub fn generate_fleet_sweep(
     }
 }
 
+/// Availability vs MTBF: the same heterogeneous fleet under seeded
+/// crash/recover plans of decreasing mean-time-between-failures, next
+/// to its healthy baseline. Each row is one full fleet run; the sweep
+/// quantifies what the self-healing layer costs — availability falls
+/// with MTBF while the extended conservation law
+/// (`served + dropped + rejected + lost_in_crash == offered`) pins
+/// every request, and the degraded p95 sits next to the healthy one.
+pub fn generate_faults(pm: &PowerModel) -> Report {
+    generate_faults_sweep(pm, 3, &[32, 24, 16], 300.0, 0.03, DEFAULT_SEED, &[1.0, 0.5, 0.25])
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn generate_faults_sweep(
+    pm: &PowerModel,
+    nodes: usize,
+    node_arrays: &[usize],
+    hot_rate: f64,
+    duration_s: f64,
+    seed: u64,
+    mtbf_fracs: &[f64],
+) -> Report {
+    let title = format!(
+        "Fleet under faults — availability vs MTBF (MobileNetV2 {hot_rate}/s over \
+         {nodes} nodes {node_arrays:?}, {duration_s} s horizon, seed {seed:#x})"
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "mtbf/horizon", "events", "failovers", "retried", "lost", "served", "avail",
+            "p95 ms",
+        ],
+    );
+    let mut points = Vec::new();
+
+    let models = vec![ModelTraffic {
+        net: mobilenet_v2(224),
+        traffic: TrafficModel::Poisson {
+            rate_per_s: hot_rate,
+        },
+        weight: 1,
+    }];
+    let scfg = ServeConfig {
+        n_arrays: node_arrays.iter().copied().max().unwrap_or(64),
+        seed,
+        duration_s,
+        ..ServeConfig::default()
+    };
+    let cycle_ns = SystemConfig::scaled_up(scfg.n_arrays).freq.cycle_ns();
+    let horizon_cy = (duration_s * 1e9 / cycle_ns) as u64;
+
+    // the healthy baseline first (label ∞), then MTBF = frac × horizon
+    let mut arms: Vec<(String, FaultPlan)> = vec![("inf".to_string(), FaultPlan::none())];
+    for &frac in mtbf_fracs {
+        let mtbf_cy = ((horizon_cy as f64 * frac) as u64).max(1);
+        arms.push((
+            format!("{frac}"),
+            FaultPlan::seeded(seed, nodes, horizon_cy, mtbf_cy),
+        ));
+    }
+    let mut healthy_p95_ms = 0.0;
+    for (label, plan) in arms {
+        let mut fcfg = FleetConfig::new(nodes, RouterPolicy::Hash);
+        fcfg.node_arrays = node_arrays.to_vec();
+        fcfg.faults = plan;
+        let rep = match simulate_fleet(&models, &scfg, &fcfg, pm) {
+            Ok(r) => r,
+            Err(e) => {
+                t.row([
+                    label,
+                    e,
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+        };
+        let merged = rep.merged_latency();
+        let (_, p95, _) = merged.percentiles();
+        let p95_ms = p95 as f64 * rep.cycle_ns * 1e-6;
+        if label == "inf" {
+            healthy_p95_ms = p95_ms;
+        }
+        // a drawn plan can come up empty at a long MTBF: that run IS the
+        // healthy fleet and reports no chaos ledger
+        let (events, failovers, retried, lost, avail) = match &rep.faults {
+            Some(fo) => (
+                fo.events.len(),
+                fo.failovers.len(),
+                fo.retried,
+                fo.lost_in_crash,
+                fo.availability(),
+            ),
+            None => (0, 0, 0, 0, 1.0),
+        };
+        t.row([
+            label.clone(),
+            events.to_string(),
+            failovers.to_string(),
+            retried.to_string(),
+            lost.to_string(),
+            rep.total_served().to_string(),
+            f(avail, 4),
+            f(p95_ms, 2),
+        ]);
+        points.push(obj([
+            ("mtbf_over_horizon", label.as_str().into()),
+            ("fault_events", events.into()),
+            ("failovers", failovers.into()),
+            ("retried", (retried as f64).into()),
+            ("lost_in_crash", (lost as f64).into()),
+            ("arrivals", (rep.total_arrivals() as f64).into()),
+            ("served", (rep.total_served() as f64).into()),
+            ("dropped", (rep.total_dropped() as f64).into()),
+            ("rejected", (rep.total_rejected() as f64).into()),
+            ("availability", avail.into()),
+            ("p95_ms", p95_ms.into()),
+            ("p95_healthy_ms", healthy_p95_ms.into()),
+        ]));
+    }
+
+    let mut text = t.render();
+    text.push_str(
+        "seeded crash/recover plans (node 0 spared as the survivor anchor); \
+         queued work fails over to ring survivors at the migration price and \
+         parks for the home node when recovery is near, in-flight batches \
+         are lost at the crash instant. Conservation extends to \
+         served + dropped + rejected + lost == offered on every row.\n",
+    );
+
+    Report {
+        title: "serving-faults".into(),
+        text,
+        data: Json::Arr(points),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -562,6 +702,38 @@ mod tests {
         // all three policies route the same offered load
         let a0 = pts[0].req("arrivals").as_f64().unwrap();
         assert!(pts.iter().all(|p| p.req("arrivals").as_f64().unwrap() == a0));
+    }
+
+    #[test]
+    fn fault_sweep_extends_conservation_and_prices_downtime() {
+        let pm = PowerModel::paper();
+        let r = generate_faults_sweep(&pm, 3, &[16, 12, 8], 200.0, 0.02, 0xAB, &[0.25]);
+        let pts = r.data.as_arr().unwrap();
+        assert_eq!(pts.len(), 2, "healthy baseline + one MTBF arm");
+        let offered = pts[0].req("arrivals").as_f64().unwrap();
+        assert!(offered > 0.0);
+        for p in pts {
+            // the extended law: every request served, shed, or lost
+            let accounted = p.req("served").as_f64().unwrap()
+                + p.req("dropped").as_f64().unwrap()
+                + p.req("rejected").as_f64().unwrap()
+                + p.req("lost_in_crash").as_f64().unwrap();
+            let lost = p.req("lost_in_crash").as_f64().unwrap();
+            assert_eq!(p.req("arrivals").as_f64().unwrap(), accounted - lost);
+            assert_eq!(accounted, offered, "offered load is router-invariant");
+            let avail = p.req("availability").as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&avail), "{avail}");
+            if p.req("fault_events").as_f64().unwrap() > 0.0 {
+                assert!(avail < 1.0, "a fired crash must cost availability");
+            }
+        }
+        // the healthy baseline is clean
+        assert_eq!(pts[0].req("fault_events").as_f64().unwrap(), 0.0);
+        assert_eq!(pts[0].req("availability").as_f64().unwrap(), 1.0);
+        assert_eq!(pts[0].req("lost_in_crash").as_f64().unwrap(), 0.0);
+        // determinism: the sweep is a pure function of its arguments
+        let again = generate_faults_sweep(&pm, 3, &[16, 12, 8], 200.0, 0.02, 0xAB, &[0.25]);
+        assert_eq!(r.text, again.text);
     }
 
     #[test]

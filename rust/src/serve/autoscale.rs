@@ -42,7 +42,12 @@
 //! `ImaArrayPool::program_cycles_by_array` of the destination placement's
 //! first pass, charged on the destination node's timeline. In-node
 //! autoscaling and cross-node migration both rewrite array ownership, so
-//! `--autoscale` is restricted to single-node (`--nodes 1`) runs.
+//! in-node `--autoscale` is restricted to single-node (`--nodes 1`)
+//! runs. On a multi-node `--router replica` fleet the same flag (and
+//! this module's `Pressure` hysteresis) instead drives *fleet-level*
+//! replica scaling: `serve::fleet` grows and shrinks the heavy tenant's
+//! active replica set on sustained backlog pressure, re-water-filling
+//! the pending stream at the migration price on every resize.
 
 use std::collections::VecDeque;
 

@@ -1,0 +1,518 @@
+//! Deterministic fault plans for the serving fleet: a seeded schedule
+//! of node-level fault events the fleet loop injects at exact cycle
+//! instants, so chaos runs are as bit-reproducible as healthy ones.
+//!
+//! ## Grammar (`imcc serve --faults SPEC`)
+//!
+//! A plan is a comma-separated list of events, each
+//! `kind@nodeN:T[..T2][xF]` with instants in cycles (integers or
+//! scientific notation, `5e6`):
+//!
+//! - `crash@node1:5e6..8e6` — hard crash at `T`: in-flight batches are
+//!   **lost** (their ledger entries revoked exactly), the queued stream
+//!   fails over to survivors, and the node rejoins at `T2` after PCM
+//!   reprogramming (omit `..T2` and it never comes back).
+//! - `drain@node2:1e7[..T2]` — graceful drain at `T`: in-flight work
+//!   completes, the queued stream hands off, the node rejoins at `T2`
+//!   (reprogrammed) or stays out.
+//! - `update@node0:5e6..9e6` — a rolling **model update** step: drain
+//!   semantics with the rejoin mandatory (the node reprograms its PCM
+//!   arrays with the new weights before taking traffic again).
+//! - `degrade@node1:2e6..6e6x1.5` — service on the node is stretched by
+//!   factor `F ≥ 1` while `T ≤ t < T2` (a thermally or drift-degraded
+//!   node that still answers, just slower).
+//! - `arrayfail@node2:3e6[xK]` — `K` PCM arrays (default 1) fail
+//!   permanently at `T`: every resident tenant reprograms around the
+//!   dead arrays and service stretches by `n/(n-K)` from then on (the
+//!   first-order cost of losing `K`-way parallel capacity).
+//!
+//! [`FaultPlan::seeded`] generates randomized crash/recover plans from
+//! `--fault-seed` (node 0 is the survivor anchor and is never faulted,
+//! so failover always has a live target), and
+//! [`FaultPlan::rolling_update`] composes drain→reprogram→rejoin into a
+//! staggered rolling update across the whole fleet.
+//!
+//! Down-spans of one node must not overlap (a crash cannot hit a node
+//! that is already down); [`FaultPlan::validate`] rejects such plans
+//! up front, along with out-of-range node ids and array-fail counts
+//! that would leave a node with no arrays.
+
+use crate::util::rng::SplitMix64;
+
+/// What happens to a node at its fault instant. See the module docs
+/// for the exact semantics of each kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Hard crash: in-flight lost, queue fails over, optional staged
+    /// rejoin (PCM reprogramming first) at `recover_at`.
+    Crash { recover_at: Option<u64> },
+    /// Graceful drain: in-flight completes, queue fails over. With
+    /// `rejoin_at` the node reprograms and rejoins; `update` marks the
+    /// drain as a rolling-model-update step (rejoin mandatory).
+    Drain { rejoin_at: Option<u64>, update: bool },
+    /// Service stretched by `percent`/100 (> 100) while `t ≤ now < until`.
+    Degrade { until: u64, percent: u64 },
+    /// `arrays` PCM arrays fail permanently: resident tenants reprogram
+    /// and service stretches by `n/(n-arrays)` from `t` on.
+    ArrayFail { arrays: usize },
+}
+
+/// One scheduled fault: `kind` strikes `node` at cycle `t`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub node: usize,
+    pub t: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule. Empty plans are the no-fault path:
+/// the fleet loop takes exactly the healthy code paths and its output
+/// is bit-identical to a run with no plan at all.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan — the healthy fleet.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub(crate) fn sorted(mut self) -> FaultPlan {
+        // stable schedule order: instant, then node, then kind order as
+        // written (sort_by_key is stable, so same-(t, node) events keep
+        // their spec order)
+        self.events.sort_by_key(|e| (e.t, e.node));
+        self
+    }
+
+    /// Parse the `--faults` grammar (see the module docs). Events come
+    /// back sorted by (instant, node).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for (i, raw) in spec.split(',').enumerate() {
+            let ev = raw.trim();
+            if ev.is_empty() {
+                return Err(format!("fault event {} is empty in `{spec}`", i + 1));
+            }
+            events.push(parse_event(ev)?);
+        }
+        Ok(FaultPlan { events }.sorted())
+    }
+
+    /// A seeded random crash/recover plan: each node other than node 0
+    /// (the survivor anchor — failover always has a live target) draws
+    /// exponentially spaced crashes with mean `mtbf_cy` over
+    /// `[0, horizon_cy)`, each down for `mtbf_cy/8 .. 3·mtbf_cy/8`
+    /// cycles. A pure function of `(seed, nodes, horizon_cy, mtbf_cy)`.
+    pub fn seeded(seed: u64, nodes: usize, horizon_cy: u64, mtbf_cy: u64) -> FaultPlan {
+        let mtbf = mtbf_cy.max(1);
+        let mut events = Vec::new();
+        for node in 1..nodes {
+            let mut rng = SplitMix64::new(
+                seed ^ (node as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            let mut t = exp_draw(&mut rng, mtbf);
+            while t < horizon_cy {
+                let down = mtbf / 8 + rng.below((mtbf / 4).max(1));
+                let recover = t + down.max(1);
+                events.push(FaultEvent {
+                    node,
+                    t,
+                    kind: FaultKind::Crash {
+                        recover_at: Some(recover),
+                    },
+                });
+                t = recover + exp_draw(&mut rng, mtbf).max(1);
+            }
+        }
+        FaultPlan { events }.sorted()
+    }
+
+    /// A rolling model update across the whole fleet: node by node,
+    /// drain → reprogram → rejoin, staggered so at most one node is
+    /// ever out. Node `i` drains at `start_cy + i·(down_cy + down_cy/4
+    /// + 1)` and rejoins `down_cy` later.
+    pub fn rolling_update(nodes: usize, start_cy: u64, down_cy: u64) -> FaultPlan {
+        let down = down_cy.max(1);
+        let stride = down + down / 4 + 1;
+        let events = (0..nodes)
+            .map(|node| {
+                let t = start_cy + node as u64 * stride;
+                FaultEvent {
+                    node,
+                    t,
+                    kind: FaultKind::Drain {
+                        rejoin_at: Some(t + down),
+                        update: true,
+                    },
+                }
+            })
+            .collect();
+        FaultPlan { events }.sorted()
+    }
+
+    /// Static plan checks against a concrete fleet: node ids in range,
+    /// recover/rejoin strictly after the fault, no overlapping
+    /// down-spans on one node, and array failures that leave every node
+    /// at least one array.
+    pub fn validate(&self, nodes: usize, node_arrays: &[usize]) -> Result<(), String> {
+        let mut down_spans: Vec<Vec<(u64, u64)>> = vec![Vec::new(); nodes];
+        let mut lost_arrays: Vec<usize> = vec![0; nodes];
+        for e in &self.events {
+            if e.node >= nodes {
+                return Err(format!(
+                    "fault targets node{} but the fleet has {nodes} nodes (node0..node{})",
+                    e.node,
+                    nodes - 1
+                ));
+            }
+            match e.kind {
+                FaultKind::Crash { recover_at } => {
+                    let until = match recover_at {
+                        Some(r) if r <= e.t => {
+                            return Err(format!(
+                                "crash@node{}: recovery {r} is not after the crash at {}",
+                                e.node, e.t
+                            ));
+                        }
+                        Some(r) => r,
+                        None => u64::MAX,
+                    };
+                    down_spans[e.node].push((e.t, until));
+                }
+                FaultKind::Drain { rejoin_at, update } => {
+                    let label = if update { "update" } else { "drain" };
+                    let until = match rejoin_at {
+                        Some(r) if r <= e.t => {
+                            return Err(format!(
+                                "{label}@node{}: rejoin {r} is not after the drain at {}",
+                                e.node, e.t
+                            ));
+                        }
+                        Some(r) => r,
+                        None => u64::MAX,
+                    };
+                    down_spans[e.node].push((e.t, until));
+                }
+                FaultKind::Degrade { until, percent } => {
+                    if until <= e.t {
+                        return Err(format!(
+                            "degrade@node{}: window end {until} is not after {}",
+                            e.node, e.t
+                        ));
+                    }
+                    if percent <= 100 {
+                        return Err(format!(
+                            "degrade@node{}: factor must exceed 1.0",
+                            e.node
+                        ));
+                    }
+                }
+                FaultKind::ArrayFail { arrays } => {
+                    if arrays == 0 {
+                        return Err(format!("arrayfail@node{}: 0 arrays failed", e.node));
+                    }
+                    lost_arrays[e.node] += arrays;
+                }
+            }
+        }
+        for (node, spans) in down_spans.iter_mut().enumerate() {
+            spans.sort_unstable();
+            for w in spans.windows(2) {
+                if w[1].0 < w[0].1 {
+                    return Err(format!(
+                        "node{node} goes down at {} while already down since {} \
+                         (down-spans must not overlap)",
+                        w[1].0, w[0].0
+                    ));
+                }
+            }
+        }
+        for (node, &lost) in lost_arrays.iter().enumerate() {
+            if lost > 0 {
+                let na = node_arrays.get(node).copied().unwrap_or(0);
+                if lost >= na {
+                    return Err(format!(
+                        "arrayfail leaves node{node} {lost} arrays short of its {na}",
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Compact human echo of the plan, schedule order.
+    pub fn describe(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::Crash { recover_at: Some(r) } => {
+                    format!("crash@node{}:{}..{r}", e.node, e.t)
+                }
+                FaultKind::Crash { recover_at: None } => format!("crash@node{}:{}", e.node, e.t),
+                FaultKind::Drain { rejoin_at, update } => {
+                    let k = if update { "update" } else { "drain" };
+                    match rejoin_at {
+                        Some(r) => format!("{k}@node{}:{}..{r}", e.node, e.t),
+                        None => format!("{k}@node{}:{}", e.node, e.t),
+                    }
+                }
+                FaultKind::Degrade { until, percent } => format!(
+                    "degrade@node{}:{}..{until}x{}",
+                    e.node,
+                    e.t,
+                    percent as f64 / 100.0
+                ),
+                FaultKind::ArrayFail { arrays } => {
+                    format!("arrayfail@node{}:{}x{arrays}", e.node, e.t)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Mean-`mtbf` exponential gap, drawn deterministically.
+fn exp_draw(rng: &mut SplitMix64, mtbf: u64) -> u64 {
+    let u = rng.next_f64();
+    (-(1.0 - u).ln() * mtbf as f64) as u64
+}
+
+/// A cycle instant: plain integer or scientific notation (`5e6`).
+fn parse_cy(s: &str, ev: &str) -> Result<u64, String> {
+    if let Ok(v) = s.parse::<u64>() {
+        return Ok(v);
+    }
+    match s.parse::<f64>() {
+        Ok(v) if v.is_finite() && v >= 0.0 && v <= u64::MAX as f64 => Ok(v as u64),
+        _ => Err(format!("bad cycle instant `{s}` in fault event `{ev}`")),
+    }
+}
+
+fn parse_event(ev: &str) -> Result<FaultEvent, String> {
+    let (kind, rest) = ev
+        .split_once('@')
+        .ok_or_else(|| format!("fault event `{ev}` has no `@` (kind@nodeN:T)"))?;
+    let (node_s, time_s) = rest
+        .split_once(':')
+        .ok_or_else(|| format!("fault event `{ev}` has no `:` (kind@nodeN:T)"))?;
+    let node: usize = node_s
+        .strip_prefix("node")
+        .and_then(|d| d.parse().ok())
+        .ok_or_else(|| format!("bad node `{node_s}` in fault event `{ev}` (nodeN)"))?;
+
+    // split off an `xF` suffix, then an optional `..T2` range
+    let (times, factor) = match time_s.split_once('x') {
+        Some((ts, fs)) => (ts, Some(fs)),
+        None => (time_s, None),
+    };
+    let (t, until) = match times.split_once("..") {
+        Some((a, b)) => (parse_cy(a, ev)?, Some(parse_cy(b, ev)?)),
+        None => (parse_cy(times, ev)?, None),
+    };
+
+    let no_factor = |k: &str| -> Result<(), String> {
+        match factor {
+            Some(_) => Err(format!("`{k}` takes no xF factor in fault event `{ev}`")),
+            None => Ok(()),
+        }
+    };
+    let kind = match kind.trim() {
+        "crash" => {
+            no_factor("crash")?;
+            FaultKind::Crash { recover_at: until }
+        }
+        "drain" => {
+            no_factor("drain")?;
+            FaultKind::Drain {
+                rejoin_at: until,
+                update: false,
+            }
+        }
+        "update" => {
+            no_factor("update")?;
+            let rejoin = until.ok_or_else(|| {
+                format!("`update` needs a rejoin instant (update@nodeN:T..T2) in `{ev}`")
+            })?;
+            FaultKind::Drain {
+                rejoin_at: Some(rejoin),
+                update: true,
+            }
+        }
+        "degrade" => {
+            let until = until.ok_or_else(|| {
+                format!("`degrade` needs a window (degrade@nodeN:T..T2xF) in `{ev}`")
+            })?;
+            let fs = factor.ok_or_else(|| {
+                format!("`degrade` needs a factor (degrade@nodeN:T..T2xF) in `{ev}`")
+            })?;
+            let f: f64 = fs
+                .parse()
+                .ok()
+                .filter(|f: &f64| f.is_finite() && *f > 1.0 && *f <= 1000.0)
+                .ok_or_else(|| {
+                    format!("bad degrade factor `{fs}` in `{ev}` (1.0 < F ≤ 1000)")
+                })?;
+            FaultKind::Degrade {
+                until,
+                percent: (f * 100.0).round() as u64,
+            }
+        }
+        "arrayfail" => {
+            if until.is_some() {
+                return Err(format!(
+                    "`arrayfail` takes one instant (arrayfail@nodeN:T[xK]) in `{ev}`"
+                ));
+            }
+            let arrays = match factor {
+                Some(fs) => fs
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&k| k >= 1)
+                    .ok_or_else(|| {
+                        format!("bad array-fail count `{fs}` in `{ev}` (integer ≥ 1)")
+                    })?,
+                None => 1,
+            };
+            FaultKind::ArrayFail { arrays }
+        }
+        other => {
+            return Err(format!(
+                "unknown fault kind `{other}` in `{ev}` (crash|drain|update|degrade|arrayfail)"
+            ));
+        }
+    };
+    Ok(FaultEvent { node, t, kind })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips() {
+        let plan = FaultPlan::parse(
+            "crash@node1:5e6..8e6,drain@node2:1e7,update@node0:2e6..3e6,\
+             degrade@node1:9e6..12e6x1.5,arrayfail@node2:4e6x4",
+        )
+        .unwrap();
+        assert_eq!(plan.events.len(), 5);
+        // sorted by (t, node)
+        assert!(plan.events.windows(2).all(|w| (w[0].t, w[0].node) <= (w[1].t, w[1].node)));
+        assert!(plan.events.contains(&FaultEvent {
+            node: 1,
+            t: 5_000_000,
+            kind: FaultKind::Crash {
+                recover_at: Some(8_000_000)
+            },
+        }));
+        assert!(plan.events.contains(&FaultEvent {
+            node: 0,
+            t: 2_000_000,
+            kind: FaultKind::Drain {
+                rejoin_at: Some(3_000_000),
+                update: true
+            },
+        }));
+        assert!(plan.events.contains(&FaultEvent {
+            node: 1,
+            t: 9_000_000,
+            kind: FaultKind::Degrade {
+                until: 12_000_000,
+                percent: 150
+            },
+        }));
+        assert!(plan.events.contains(&FaultEvent {
+            node: 2,
+            t: 4_000_000,
+            kind: FaultKind::ArrayFail { arrays: 4 },
+        }));
+        // parse(describe(plan)) is the identity on the sorted plan
+        assert_eq!(FaultPlan::parse(&plan.describe()).unwrap(), plan);
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_events() {
+        for bad in [
+            "",                             // empty event
+            "crash@node1",                  // no instant
+            "crashnode1:5e6",               // no @
+            "crash@n1:5e6",                 // bad node
+            "crash@node1:abc",              // bad instant
+            "crash@node1:5e6x2",            // crash takes no factor
+            "explode@node1:5e6",            // unknown kind
+            "update@node1:5e6",             // update needs a rejoin
+            "degrade@node1:5e6..6e6",       // degrade needs a factor
+            "degrade@node1:5e6x1.5",        // degrade needs a window
+            "degrade@node1:5e6..6e6x0.5",   // factor must exceed 1
+            "arrayfail@node1:5e6..6e6",     // arrayfail takes one instant
+            "arrayfail@node1:5e6x0",        // zero arrays
+            "crash@node1:5e6,,drain@node2:6e6", // empty middle event
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_impossible_plans() {
+        let nodes = 3;
+        let arrays = [64usize, 32, 12];
+        let ok = FaultPlan::parse("crash@node1:5e6..8e6,crash@node1:9e6").unwrap();
+        assert!(ok.validate(nodes, &arrays).is_ok());
+        for (spec, why) in [
+            ("crash@node7:5e6", "node out of range"),
+            ("crash@node1:5e6..5e6", "recovery not after crash"),
+            ("drain@node1:5e6..4e6", "rejoin before drain"),
+            ("crash@node1:5e6..9e6,crash@node1:7e6", "overlapping down-spans"),
+            ("crash@node1:5e6,crash@node1:9e6", "second crash while down forever"),
+            ("arrayfail@node2:5e6x12", "node2 loses all 12 arrays"),
+            ("arrayfail@node2:5e6x6,arrayfail@node2:7e6x6", "cumulative array loss"),
+        ] {
+            let plan = FaultPlan::parse(spec).unwrap();
+            assert!(plan.validate(nodes, &arrays).is_err(), "{why}: `{spec}`");
+        }
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_spare_node_zero() {
+        let a = FaultPlan::seeded(7, 4, 50_000_000, 10_000_000);
+        let b = FaultPlan::seeded(7, 4, 50_000_000, 10_000_000);
+        assert_eq!(a, b, "a pure function of the seed");
+        assert!(!a.is_empty(), "a 5×MTBF horizon should draw some crashes");
+        assert!(a.events.iter().all(|e| e.node != 0), "node 0 is the anchor");
+        assert!(a
+            .events
+            .iter()
+            .all(|e| matches!(e.kind, FaultKind::Crash { recover_at: Some(_) })));
+        assert!(a.validate(4, &[64, 64, 64, 64]).is_ok());
+        let c = FaultPlan::seeded(8, 4, 50_000_000, 10_000_000);
+        assert_ne!(a, c, "different seeds draw different plans");
+    }
+
+    #[test]
+    fn rolling_update_staggers_without_overlap() {
+        let plan = FaultPlan::rolling_update(4, 1_000_000, 2_000_000);
+        assert_eq!(plan.events.len(), 4);
+        assert!(plan.validate(4, &[64, 64, 64, 64]).is_ok());
+        // one node out at a time: each rejoin lands before the next drain
+        for w in plan.events.windows(2) {
+            let FaultKind::Drain {
+                rejoin_at: Some(r), update: true,
+            } = w[0].kind
+            else {
+                panic!("rolling update is made of update steps");
+            };
+            assert!(r < w[1].t, "node {} rejoins before node {} drains", w[0].node, w[1].node);
+        }
+        // every node is updated exactly once
+        let mut nodes: Vec<usize> = plan.events.iter().map(|e| e.node).collect();
+        nodes.sort_unstable();
+        assert_eq!(nodes, vec![0, 1, 2, 3]);
+    }
+}

@@ -40,7 +40,54 @@
 //!   its stream is split per-arrival to the node with the earliest
 //!   projected finish (a virtual-finish-time water-fill over probed
 //!   single-request service cycles); all other tenants route by the hash
-//!   ring.
+//!   ring. With `--autoscale` the split is *online* instead: the stream
+//!   starts on the ring owner alone and the fleet controller grows or
+//!   shrinks the **active replica set** on sustained heavy-tenant
+//!   backlog pressure (the same `Pressure` hysteresis, thresholds from
+//!   `ServeConfig::autoscale_cfg`), re-water-filling the pending stream
+//!   over the new active set at the migration price on every resize
+//!   ([`FleetReport::replica_scales`]).
+//!
+//! ## Fault injection and self-healing
+//!
+//! [`FleetConfig::faults`] carries a [`FaultPlan`](super::faults) — a
+//! seeded, deterministic schedule of crash / drain / degrade /
+//! array-failure events (`imcc serve --faults SPEC`, grammar in
+//! `serve::faults`). The fleet loop interleaves the plan with node
+//! events: a fault due at or before the globally smallest stored node
+//! instant applies first (ties: the fault wins), so the whole chaos
+//! timeline stays a pure function of the seed. Self-healing is layered
+//! at the loop:
+//!
+//! - **crash** — the node's in-flight batches are revoked exactly and
+//!   counted `lost_in_crash`; its queued streams fail over to survivors
+//!   through the router re-resolution below, each re-spliced at the full
+//!   migration price. With a scheduled recovery, arrivals past the
+//!   recovery instant are *parked* at the fleet and returned to the home
+//!   node when it rejoins (PCM reprogramming before traffic — a staged
+//!   rejoin).
+//! - **drain / update** — graceful: in-flight completes, queued streams
+//!   fail over, the node stops. An `update` rejoin additionally
+//!   reprograms every resident tenant (the rolling-model-update step);
+//!   [`FaultPlan::rolling_update`](super::faults::FaultPlan::rolling_update)
+//!   staggers one per node so at most one node is ever out.
+//! - **router re-resolution** — hash fleets rebuild the ring over
+//!   survivors only, keyed by the *original* node ids, so a recovered
+//!   node slots back into exactly its old arcs; least-loaded fleets
+//!   re-assign by capacity-weighted backlog argmin; replica fleets
+//!   re-water-fill the heavy stream over surviving replicas. When a
+//!   plan is armed, every node holds a standby copy of every tenant so
+//!   any survivor is a valid failover target (this changes placement,
+//!   so bit-identity to the healthy fleet is only promised for an
+//!   *empty* plan, not a never-firing one).
+//! - **accounting** — failed-over and parked-returned requests are
+//!   `retried` (each exactly once); crash-revoked requests leave the
+//!   dead node's ledger and land in `lost_in_crash`, so per-node
+//!   conservation (`served + dropped + rejected == arrivals`) still
+//!   holds verbatim and fleet-wide the law extends to
+//!   `served + dropped + rejected + lost_in_crash == offered`.
+//!   Per-node downtime (clamped to the arrival horizon) folds into
+//!   [`FleetFaultOutcome::availability`].
 //!
 //! ## Migration cost accounting
 //!
@@ -58,12 +105,17 @@
 //! (`blocked_cycles`). Every migration is reported in
 //! [`FleetReport::migrations`] with its independently recomputable
 //! price — `tests/fleet_regression.rs` re-derives `program_cycles` from
-//! the placement and `ImaArrayPool::program_cycles_by_array`.
+//! the placement and `ImaArrayPool::program_cycles_by_array`. Failover
+//! and rejoin hand-offs are priced identically (a migration the tenant
+//! did not ask for); a rejoin's hand-off charge is zero, since the
+//! parked stream never left the fleet controller.
 //!
 //! `--nodes 1` (any router) degenerates to a single node owning every
 //! tenant in global order with its original streams, no standby copies
 //! and no migration controller — pinned bit-identical to the pre-fleet
 //! single-cluster path on dispatch tables, serve JSON, and trace bytes.
+
+use std::collections::BTreeMap;
 
 use crate::arch::{PowerModel, SystemConfig};
 use crate::coordinator::{BatchConfig, PlanCache};
@@ -72,6 +124,7 @@ use crate::util::json::{obj, Json};
 use crate::util::table::{f, Table};
 
 use super::autoscale::Pressure;
+use super::faults::{FaultKind, FaultPlan};
 use super::metrics::LogHistogram;
 use super::tenancy::place_tenants;
 use super::trace::TraceRecorder;
@@ -155,6 +208,9 @@ pub struct FleetConfig {
     /// gets the shared `ServeConfig::n_arrays`.
     pub node_arrays: Vec<usize>,
     pub migration: FleetMigrationConfig,
+    /// Deterministic fault schedule (`--faults` / `--fault-seed`).
+    /// Empty = the healthy fleet, bit-identical to a run with no plan.
+    pub faults: FaultPlan,
 }
 
 impl FleetConfig {
@@ -164,8 +220,36 @@ impl FleetConfig {
             router,
             node_arrays: Vec::new(),
             migration: FleetMigrationConfig::default(),
+            faults: FaultPlan::none(),
         }
     }
+}
+
+/// Parse a `--node-arrays A,B,..` list against the `--nodes` count,
+/// naming the offending entry (1-based) or the disagreeing lengths.
+pub fn parse_node_arrays(s: &str, nodes: usize) -> Result<Vec<usize>, String> {
+    let entries: Vec<&str> = s.split(',').collect();
+    if entries.len() != nodes {
+        return Err(format!(
+            "--node-arrays lists {} array counts but --nodes says {nodes} — the lists disagree",
+            entries.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(entries.len());
+    for (ix, e) in entries.iter().enumerate() {
+        match e.trim().parse::<usize>() {
+            Ok(v) if v >= 1 => out.push(v),
+            _ => {
+                return Err(format!(
+                    "--node-arrays entry {} of {} (`{}`) is not an array count (integer ≥ 1)",
+                    ix + 1,
+                    entries.len(),
+                    e.trim()
+                ))
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// One executed cross-node migration, with its independently
@@ -189,6 +273,128 @@ pub struct FleetMigration {
     pub streamed: bool,
 }
 
+/// One fault-plan event as it fired (fleet clock, node, kind label).
+#[derive(Clone, Debug)]
+pub struct FaultRecord {
+    pub t: u64,
+    pub node: usize,
+    pub label: &'static str,
+}
+
+/// One failover hand-off (or parked-stream rejoin) with its migration
+/// price — the chaos counterpart of [`FleetMigration`].
+#[derive(Clone, Debug)]
+pub struct FailoverRecord {
+    pub tenant: String,
+    pub from_node: usize,
+    pub to_node: usize,
+    pub t: u64,
+    /// Requests re-spliced (each counts once toward `retried`).
+    pub moved: usize,
+    pub program_cycles: u64,
+    pub handoff_cycles: u64,
+    pub blocked_cycles: u64,
+    /// `true` for a parked stream returning to its recovered home node
+    /// (`from_node == to_node`), `false` for a survivor hand-off.
+    pub rejoin: bool,
+}
+
+/// One fleet-level replica-set resize (the `--autoscale` + `--router
+/// replica` controller): the active set grew onto / shrank off `node`,
+/// re-water-filling `moved` pending heavy requests.
+#[derive(Clone, Debug)]
+pub struct ReplicaScale {
+    pub t: u64,
+    pub grow: bool,
+    pub node: usize,
+    /// Pending heavy requests re-spliced across the new active set.
+    pub moved: usize,
+    /// Active replicas after the resize.
+    pub active_after: usize,
+}
+
+/// The chaos ledger of a faulted run: every fault as it fired, every
+/// failover with its price, the conservation tallies, and per-node
+/// downtime. Present in [`FleetReport`] only when a plan was armed, so
+/// healthy runs stay byte-identical.
+#[derive(Clone, Debug)]
+pub struct FleetFaultOutcome {
+    pub events: Vec<FaultRecord>,
+    pub failovers: Vec<FailoverRecord>,
+    /// Requests re-spliced by failover or rejoin, each exactly once.
+    pub retried: u64,
+    /// Requests revoked in-flight by crashes, plus queued requests with
+    /// no surviving node to fail over to.
+    pub lost_in_crash: u64,
+    /// Per-node down cycles, clamped to `[0, horizon_cy]`.
+    pub downtime_cy: Vec<u64>,
+    /// Per-node PCM arrays permanently failed (`arrayfail` events).
+    pub arrays_lost: Vec<usize>,
+    /// The arrival horizon the availability ratio is taken over.
+    pub horizon_cy: u64,
+}
+
+impl FleetFaultOutcome {
+    /// `1 − Σ downtime / (nodes × horizon)`: the fraction of node-time
+    /// the fleet had live. Strictly below 1.0 whenever any node spent
+    /// down-time inside the horizon.
+    pub fn availability(&self) -> f64 {
+        let n = self.downtime_cy.len();
+        if n == 0 || self.horizon_cy == 0 {
+            return 1.0;
+        }
+        let down: u64 = self.downtime_cy.iter().sum();
+        1.0 - down as f64 / (n as f64 * self.horizon_cy as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                obj([
+                    ("t_cycles", (e.t as f64).into()),
+                    ("node", e.node.into()),
+                    ("label", e.label.into()),
+                ])
+            })
+            .collect();
+        let failovers: Vec<Json> = self
+            .failovers
+            .iter()
+            .map(|m| {
+                obj([
+                    ("tenant", m.tenant.as_str().into()),
+                    ("from_node", m.from_node.into()),
+                    ("to_node", m.to_node.into()),
+                    ("t_cycles", (m.t as f64).into()),
+                    ("moved", m.moved.into()),
+                    ("program_cycles", (m.program_cycles as f64).into()),
+                    ("handoff_cycles", (m.handoff_cycles as f64).into()),
+                    ("blocked_cycles", (m.blocked_cycles as f64).into()),
+                    ("rejoin", m.rejoin.into()),
+                ])
+            })
+            .collect();
+        obj([
+            ("events", Json::Arr(events)),
+            ("failovers", Json::Arr(failovers)),
+            ("retried", (self.retried as f64).into()),
+            ("lost_in_crash", (self.lost_in_crash as f64).into()),
+            (
+                "downtime_cy",
+                Json::Arr(self.downtime_cy.iter().map(|&d| (d as f64).into()).collect()),
+            ),
+            (
+                "arrays_lost",
+                Json::Arr(self.arrays_lost.iter().map(|&d| d.into()).collect()),
+            ),
+            ("availability", self.availability().into()),
+            ("horizon_cy", (self.horizon_cy as f64).into()),
+        ])
+    }
+}
+
 /// One node's slice of the fleet: its id, pool size, and complete
 /// single-cluster [`ServeReport`].
 #[derive(Clone, Debug)]
@@ -209,12 +415,19 @@ pub struct FleetReport {
     pub cycle_ns: f64,
     pub nodes: Vec<NodeReport>,
     pub migrations: Vec<FleetMigration>,
+    /// Fleet-level replica resizes (`--autoscale --router replica`);
+    /// empty (and absent from JSON) otherwise.
+    pub replica_scales: Vec<ReplicaScale>,
+    /// The chaos ledger — `Some` exactly when a fault plan was armed,
+    /// so healthy tables and JSON stay byte-identical.
+    pub faults: Option<FleetFaultOutcome>,
 }
 
 impl FleetReport {
     /// Offered load summed over every node's tenant ledger. Migration
     /// moves a request's ledger entry with it, so this equals the
-    /// globally generated arrival count exactly.
+    /// globally generated arrival count exactly — less
+    /// `lost_in_crash` when faults revoked or stranded requests.
     pub fn total_arrivals(&self) -> u64 {
         self.nodes
             .iter()
@@ -337,11 +550,65 @@ impl FleetReport {
                 ));
             }
         }
+        if !self.replica_scales.is_empty() {
+            out.push_str(&format!(
+                "replica scale events: {}\n",
+                self.replica_scales.len()
+            ));
+            for s in &self.replica_scales {
+                out.push_str(&format!(
+                    "  {} node{} @{}: {} pending re-filled, {} active\n",
+                    if s.grow { "grow" } else { "shrink" },
+                    s.node,
+                    s.t,
+                    s.moved,
+                    s.active_after,
+                ));
+            }
+        }
+        if let Some(fo) = &self.faults {
+            out.push_str(&format!(
+                "faults: {} events, {} failovers, {} retried, {} lost in crash, \
+                 availability {:.4}\n",
+                fo.events.len(),
+                fo.failovers.len(),
+                fo.retried,
+                fo.lost_in_crash,
+                fo.availability(),
+            ));
+            for e in &fo.events {
+                out.push_str(&format!("  {} node{} @{}\n", e.label, e.node, e.t));
+            }
+            for fv in &fo.failovers {
+                out.push_str(&format!(
+                    "  {} {} node{} -> node{} @{}: {} reqs, {} prog cy, {} handoff cy, \
+                     {} blocked\n",
+                    if fv.rejoin { "rejoin" } else { "failover" },
+                    fv.tenant,
+                    fv.from_node,
+                    fv.to_node,
+                    fv.t,
+                    fv.moved,
+                    fv.program_cycles,
+                    fv.handoff_cycles,
+                    fv.blocked_cycles,
+                ));
+            }
+            let down: Vec<String> = fo
+                .downtime_cy
+                .iter()
+                .enumerate()
+                .map(|(ix, &d)| format!("node{ix} {d}"))
+                .collect();
+            out.push_str(&format!("downtime cy: {}\n", down.join(", ")));
+        }
         out
     }
 
     /// Machine-readable fleet report: the aggregates, the migration
     /// log, and every node's full single-cluster JSON under `nodes[]`.
+    /// The `faults` and `replica_scales` keys appear only when their
+    /// machinery ran, keeping healthy output byte-identical.
     pub fn to_json(&self) -> Json {
         let merged = self.merged_latency();
         let (p50, p95, p99) = merged.percentiles();
@@ -373,7 +640,7 @@ impl FleetReport {
                 ])
             })
             .collect();
-        obj([
+        let mut root = obj([
             ("router", self.router.label().into()),
             ("nodes_n", self.nodes_n.into()),
             ("seed", format!("{:#x}", self.seed).into()),
@@ -393,7 +660,29 @@ impl FleetReport {
                 ]),
             ),
             ("nodes", Json::Arr(nodes)),
-        ])
+        ]);
+        if let Json::Obj(m) = &mut root {
+            if !self.replica_scales.is_empty() {
+                let scales: Vec<Json> = self
+                    .replica_scales
+                    .iter()
+                    .map(|s| {
+                        obj([
+                            ("t_cycles", (s.t as f64).into()),
+                            ("kind", if s.grow { "grow" } else { "shrink" }.into()),
+                            ("node", s.node.into()),
+                            ("moved", s.moved.into()),
+                            ("active_after", s.active_after.into()),
+                        ])
+                    })
+                    .collect();
+                m.insert("replica_scales".to_string(), Json::Arr(scales));
+            }
+            if let Some(fo) = &self.faults {
+                m.insert("faults".to_string(), fo.to_json());
+            }
+        }
+        root
     }
 }
 
@@ -408,15 +697,25 @@ fn fnv1a(s: &str) -> u64 {
     h
 }
 
-/// The consistent-hash ring: `VNODES` points per node keyed
-/// `node{ix}#{v}`, sorted by (hash, node) so collisions (astronomically
-/// unlikely) still order deterministically.
-fn hash_ring(n: usize) -> Vec<(u64, usize)> {
-    let mut pts: Vec<(u64, usize)> = (0..n)
-        .flat_map(|ix| (0..VNODES).map(move |v| (fnv1a(&format!("node{ix}#{v}")), ix)))
+/// The consistent-hash ring over an explicit node-id set: `VNODES`
+/// points per node keyed `node{id}#{v}` — by the *original* id, so a
+/// survivor ring after a failure holds exactly the full ring's points
+/// minus the dead node's, and re-adding the node restores the original
+/// assignment bit-for-bit. Sorted by (hash, node) so collisions
+/// (astronomically unlikely) still order deterministically.
+fn hash_ring_of(ids: &[usize]) -> Vec<(u64, usize)> {
+    let mut pts: Vec<(u64, usize)> = ids
+        .iter()
+        .flat_map(|&ix| (0..VNODES).map(move |v| (fnv1a(&format!("node{ix}#{v}")), ix)))
         .collect();
     pts.sort_unstable();
     pts
+}
+
+/// The full-fleet ring: every node id in `0..n`.
+fn hash_ring(n: usize) -> Vec<(u64, usize)> {
+    let ids: Vec<usize> = (0..n).collect();
+    hash_ring_of(&ids)
 }
 
 /// Ring lookup: the first point at or clockwise of the name's hash
@@ -461,6 +760,220 @@ fn least_loaded_assign(arrival_counts: &[usize], caps: &[usize]) -> Vec<usize> {
     owner
 }
 
+/// What the fleet loop does when a compiled fault fires.
+enum FaultAction {
+    Crash { recover_at: Option<u64> },
+    Drain { rejoin_at: Option<u64>, update: bool },
+    Rejoin { label: &'static str, reprogram_all: bool },
+    Degrade,
+    ArrayFail { arrays: usize },
+}
+
+/// One loop-ready fault instant (rejoins split out of their
+/// crash/drain events so the schedule is a flat sorted list).
+struct CompiledFault {
+    t: u64,
+    node: usize,
+    action: FaultAction,
+}
+
+/// Lower a validated [`FaultPlan`] into the flat schedule the loop
+/// consumes, plus the per-node arming data: which nodes need in-flight
+/// tracking (a crash can strike them) and the service-stretch spans
+/// (degrade windows; array failures as permanent spans whose factor
+/// composes multiplicatively to `original/remaining`).
+#[allow(clippy::type_complexity)]
+fn compile_faults(
+    plan: &FaultPlan,
+    node_arrays: &[usize],
+) -> Result<(Vec<CompiledFault>, Vec<bool>, Vec<Vec<(u64, u64, u64)>>), String> {
+    let n = node_arrays.len();
+    plan.validate(n, node_arrays)?;
+    let mut events: Vec<CompiledFault> = Vec::new();
+    let mut track = vec![false; n];
+    let mut spans: Vec<Vec<(u64, u64, u64)>> = vec![Vec::new(); n];
+    let mut remaining: Vec<u64> = node_arrays.iter().map(|&a| a as u64).collect();
+    for ev in &plan.clone().sorted().events {
+        match ev.kind {
+            FaultKind::Crash { recover_at } => {
+                track[ev.node] = true;
+                events.push(CompiledFault {
+                    t: ev.t,
+                    node: ev.node,
+                    action: FaultAction::Crash { recover_at },
+                });
+                if let Some(tr) = recover_at {
+                    events.push(CompiledFault {
+                        t: tr,
+                        node: ev.node,
+                        action: FaultAction::Rejoin {
+                            label: "recover",
+                            reprogram_all: false,
+                        },
+                    });
+                }
+            }
+            FaultKind::Drain { rejoin_at, update } => {
+                events.push(CompiledFault {
+                    t: ev.t,
+                    node: ev.node,
+                    action: FaultAction::Drain { rejoin_at, update },
+                });
+                if let Some(tr) = rejoin_at {
+                    events.push(CompiledFault {
+                        t: tr,
+                        node: ev.node,
+                        action: FaultAction::Rejoin {
+                            label: "rejoin",
+                            reprogram_all: update,
+                        },
+                    });
+                }
+            }
+            FaultKind::Degrade { until, percent } => {
+                spans[ev.node].push((ev.t, until, percent));
+                events.push(CompiledFault {
+                    t: ev.t,
+                    node: ev.node,
+                    action: FaultAction::Degrade,
+                });
+            }
+            FaultKind::ArrayFail { arrays } => {
+                let left = remaining[ev.node] - arrays as u64; // validate: ≥ 1
+                // compose with any earlier arrayfail span so the product
+                // of active factors is original/remaining (rounded up)
+                let percent = (remaining[ev.node] * 100).div_ceil(left);
+                spans[ev.node].push((ev.t, u64::MAX, percent));
+                remaining[ev.node] = left;
+                events.push(CompiledFault {
+                    t: ev.t,
+                    node: ev.node,
+                    action: FaultAction::ArrayFail { arrays },
+                });
+            }
+        }
+    }
+    // a recover at `tr` and another fault at the same (t, node) must
+    // apply in down-span order; the stable sort keeps the push order,
+    // which emitted the earlier event's rejoin first
+    events.sort_by_key(|e| (e.t, e.node));
+    Ok((events, track, spans))
+}
+
+/// Pick the failover targets for one taken stream and re-splice it at
+/// the migration price. Returns the primary (first) target so the
+/// least-loaded migration controller can follow its heavy tenant.
+#[allow(clippy::too_many_arguments)]
+fn failover_stream(
+    gi: usize,
+    from: usize,
+    t: u64,
+    stream: Vec<u64>,
+    router: RouterPolicy,
+    heavy: usize,
+    svc: &[u64],
+    models: &[ModelTraffic],
+    node_arrays: &[usize],
+    rosters: &[Vec<usize>],
+    alive: &[bool],
+    active: &mut [bool],
+    fleet_auto: bool,
+    handoff_cy_per_req: u64,
+    sims: &mut [NodeSim],
+    recs: &mut [TraceRecorder],
+    retried: &mut u64,
+    lost: &mut u64,
+    failovers: &mut Vec<FailoverRecord>,
+) -> Option<usize> {
+    let n = sims.len();
+    let alive_ids: Vec<usize> = (0..n).filter(|&k| alive[k]).collect();
+    if alive_ids.is_empty() {
+        // nowhere to go: the stream already left the dead node's ledger
+        *lost += stream.len() as u64;
+        return None;
+    }
+    let mut shares: Vec<(usize, Vec<u64>)> = Vec::new();
+    if router == RouterPolicy::Replica && gi == heavy && n > 1 {
+        // water-fill over surviving replicas (the active set when the
+        // fleet autoscaler runs; activate the fastest survivor if the
+        // whole active set died)
+        let pool: Vec<usize> = if fleet_auto {
+            let act: Vec<usize> = alive_ids.iter().copied().filter(|&k| active[k]).collect();
+            if act.is_empty() {
+                let k = *alive_ids.iter().min_by_key(|&&k| (svc[k], k)).unwrap();
+                active[k] = true;
+                vec![k]
+            } else {
+                act
+            }
+        } else {
+            alive_ids.clone()
+        };
+        let mut busy = vec![t; n];
+        let mut per: Vec<Vec<u64>> = vec![Vec::new(); n];
+        for &a in &stream {
+            let mut best = pool[0];
+            for &cand in &pool[1..] {
+                if busy[cand].max(a) + svc[cand] < busy[best].max(a) + svc[best] {
+                    best = cand;
+                }
+            }
+            busy[best] = busy[best].max(a) + svc[best];
+            per[best].push(a);
+        }
+        for (k, share) in per.iter_mut().enumerate() {
+            if !share.is_empty() {
+                shares.push((k, std::mem::take(share)));
+            }
+        }
+    } else if router == RouterPolicy::LeastLoaded {
+        // capacity-weighted argmin over survivors, exact integer compare
+        let w = stream.len() as u64;
+        let mut best = alive_ids[0];
+        let mut best_b = sims[best].backlog_at(t) as u64;
+        for &cand in &alive_ids[1..] {
+            let cb = sims[cand].backlog_at(t) as u64;
+            if (cb + w) as u128 * node_arrays[best] as u128
+                < (best_b + w) as u128 * node_arrays[cand] as u128
+            {
+                best = cand;
+                best_b = cb;
+            }
+        }
+        shares.push((best, stream));
+    } else {
+        // hash router, and the replica router's ring-routed tenants:
+        // rebuild the ring over survivors only (original ids — see
+        // `hash_ring_of`)
+        let ring = hash_ring_of(&alive_ids);
+        let k = ring_assign(&ring, &models[gi].net.name);
+        shares.push((k, stream));
+    }
+    let primary = shares.first().map(|&(k, _)| k);
+    for (k, share) in shares {
+        let local = rosters[k]
+            .iter()
+            .position(|&g| g == gi)
+            .expect("chaos rosters hold every tenant on every node");
+        let moved_n = share.len();
+        let (pc, hc, bc) = sims[k].migrate_in(local, share, t, handoff_cy_per_req, &mut recs[k]);
+        *retried += moved_n as u64;
+        recs[k].failover(local, t, from, moved_n, false);
+        failovers.push(FailoverRecord {
+            tenant: models[gi].net.name.clone(),
+            from_node: from,
+            to_node: k,
+            t,
+            moved: moved_n,
+            program_cycles: pc,
+            handoff_cycles: hc,
+            blocked_cycles: bc,
+            rejoin: false,
+        });
+    }
+    primary
+}
+
 /// [`simulate_fleet_traced`] with tracing off on every node.
 pub fn simulate_fleet(
     models: &[ModelTraffic],
@@ -474,10 +987,12 @@ pub fn simulate_fleet(
 
 /// Run the fleet to completion: route the globally generated arrival
 /// streams to nodes, step the per-node simulators under the global
-/// min-event order (see the module docs), and run the migration
-/// controller for the least-loaded router. `recs` holds one trace
-/// recorder per node ([`TraceRecorder::Off`] for no trace); per-node
-/// traces are as bit-identical to untraced runs as single-cluster ones.
+/// min-event order (see the module docs), interleave the fault plan
+/// with its self-healing control plane, and run the migration (least-
+/// loaded) or replica-autoscale (replica + `--autoscale`) controller.
+/// `recs` holds one trace recorder per node ([`TraceRecorder::Off`] for
+/// no trace); per-node traces are as bit-identical to untraced runs as
+/// single-cluster ones.
 pub fn simulate_fleet_traced(
     models: &[ModelTraffic],
     scfg: &ServeConfig,
@@ -495,10 +1010,12 @@ pub fn simulate_fleet_traced(
     if recs.len() != n {
         return Err(format!("{} trace recorders for {n} nodes", recs.len()));
     }
-    if n > 1 && scfg.autoscale {
+    let fleet_auto = scfg.autoscale && n > 1;
+    if fleet_auto && fcfg.router != RouterPolicy::Replica {
         return Err(
-            "in-node autoscaling and cross-node migration both own the arrays; \
-             --autoscale is limited to --nodes 1"
+            "fleet-wide autoscaling grows and shrinks replicas of the heavy tenant, \
+             so --autoscale with --nodes N needs --router replica; in-node autoscaling \
+             (hash/least-loaded fleets) is limited to --nodes 1"
                 .into(),
         );
     }
@@ -524,6 +1041,12 @@ pub fn simulate_fleet_traced(
             ));
         }
     }
+    let chaos = !fcfg.faults.is_empty();
+    let (fault_events, track_inflight, degrade_spans) = if chaos {
+        compile_faults(&fcfg.faults, &node_arrays)?
+    } else {
+        (Vec::new(), vec![false; n], vec![Vec::new(); n])
+    };
 
     // the globally generated seeded streams — identical offered load to
     // a single-cluster run, however it is sharded (the per-tenant seed
@@ -584,12 +1107,28 @@ pub fn simulate_fleet_traced(
             r.push(heavy);
         }
     }
+    // an armed fault plan replicates every tenant everywhere (full
+    // standby) so any survivor is a valid failover target; this changes
+    // placement, which is why bit-identity is only promised for an
+    // *empty* plan
+    if chaos && n > 1 {
+        for r in rosters.iter_mut() {
+            for gi in 0..models.len() {
+                if !r.contains(&gi) {
+                    r.push(gi);
+                }
+            }
+            r.sort_unstable();
+        }
+    }
 
     // --- per-node configs ---------------------------------------------
+    // fleet-level replica autoscaling supersedes the in-node resizer
     let scfgs: Vec<ServeConfig> = node_arrays
         .iter()
         .map(|&na| ServeConfig {
             n_arrays: na,
+            autoscale: scfg.autoscale && !fleet_auto,
             ..scfg.clone()
         })
         .collect();
@@ -606,9 +1145,9 @@ pub fn simulate_fleet_traced(
     // tenant; placement and batch cost are interned in the node's plan
     // cache, so the probe warms exactly what NodeSim::new recomputes and
     // never perturbs the node's own run
+    let mut svc = vec![0u64; n];
     let mut split: Vec<Vec<u64>> = vec![Vec::new(); n];
     if fcfg.router == RouterPolicy::Replica && n > 1 {
-        let mut svc = vec![0u64; n];
         for ix in 0..n {
             let nets: Vec<&Network> = rosters[ix].iter().map(|&gi| &models[gi].net).collect();
             let tenancy = place_tenants(
@@ -634,18 +1173,24 @@ pub fn simulate_fleet_traced(
             );
             svc[ix] = rep.cycles;
         }
-        // earliest-projected-finish water-fill, arrival order, ties to
-        // the lower node id
-        let mut busy = vec![0u64; n];
-        for &a in &arrivals[heavy] {
-            let mut best = 0usize;
-            for cand in 1..n {
-                if busy[cand].max(a) + svc[cand] < busy[best].max(a) + svc[best] {
-                    best = cand;
+        if fleet_auto {
+            // online split: everything starts on the ring owner and the
+            // fleet controller grows the active set from there
+            split[owner_of[heavy]] = arrivals[heavy].clone();
+        } else {
+            // earliest-projected-finish water-fill, arrival order, ties
+            // to the lower node id
+            let mut busy = vec![0u64; n];
+            for &a in &arrivals[heavy] {
+                let mut best = 0usize;
+                for cand in 1..n {
+                    if busy[cand].max(a) + svc[cand] < busy[best].max(a) + svc[best] {
+                        best = cand;
+                    }
                 }
+                busy[best] = busy[best].max(a) + svc[best];
+                split[best].push(a);
             }
-            busy[best] = busy[best].max(a) + svc[best];
-            split[best].push(a);
         }
     }
 
@@ -687,6 +1232,11 @@ pub fn simulate_fleet_traced(
     {
         sims.push(NodeSim::new(m, sc, pm, cf, ca)?);
     }
+    if chaos {
+        for (ix, sim) in sims.iter_mut().enumerate() {
+            sim.set_fault_mode(track_inflight[ix], degrade_spans[ix].clone());
+        }
+    }
 
     // --- the global event loop ----------------------------------------
     let mig = &fcfg.migration;
@@ -695,6 +1245,30 @@ pub fn simulate_fleet_traced(
     let mut owner = owner_of[heavy];
     let mut cooldown_until = 0u64;
     let mut migrations: Vec<FleetMigration> = Vec::new();
+    // fleet replica-autoscale state (replica router + --autoscale)
+    let acfg = scfg.autoscale_cfg;
+    let mut active = vec![false; n];
+    if fleet_auto {
+        active[owner_of[heavy]] = true;
+    }
+    let mut apressure = Pressure::new(1, acfg.window_cy);
+    let mut acooldown = 0u64;
+    let mut replica_scales: Vec<ReplicaScale> = Vec::new();
+    let heavy_local: Vec<Option<usize>> = rosters
+        .iter()
+        .map(|r| r.iter().position(|&g| g == heavy))
+        .collect();
+    // chaos state
+    let mut alive = vec![true; n];
+    let mut down_since: Vec<Option<u64>> = vec![None; n];
+    let mut downtime = vec![0u64; n];
+    let mut arrays_lost = vec![0usize; n];
+    let mut parked: BTreeMap<(usize, usize), Vec<u64>> = BTreeMap::new();
+    let mut lost = 0u64;
+    let mut retried = 0u64;
+    let mut fault_log: Vec<FaultRecord> = Vec::new();
+    let mut failovers: Vec<FailoverRecord> = Vec::new();
+    let mut fi = 0usize;
     loop {
         let mut next: Option<(u64, usize)> = None;
         for (j, s) in sims.iter_mut().enumerate() {
@@ -704,60 +1278,372 @@ pub fn simulate_fleet_traced(
                 }
             }
         }
-        let Some((_, j)) = next else { break };
-        let stepped = sims[j].step(&mut recs[j]);
-        if !migrate_on {
+        // a fault due at or before the earliest stored node instant
+        // applies first (ties: the fault wins); stored instants are
+        // lower bounds, so a node may already have dispatched past the
+        // fault instant — crash revocation covers exactly that window
+        if fi < fault_events.len() && next.map_or(true, |(bt, _)| fault_events[fi].t <= bt) {
+            let ft = fault_events[fi].t;
+            let d = fault_events[fi].node;
+            match fault_events[fi].action {
+                FaultAction::Crash { recover_at } => {
+                    recs[d].fault(ft, "crash");
+                    fault_log.push(FaultRecord {
+                        t: ft,
+                        node: d,
+                        label: "crash",
+                    });
+                    let (lost_d, pending) = sims[d].crash(ft);
+                    lost += lost_d;
+                    alive[d] = false;
+                    down_since[d] = Some(ft);
+                    if fleet_auto {
+                        active[d] = false;
+                    }
+                    let mut heavy_target: Option<usize> = None;
+                    for (local_ix, stream) in pending {
+                        let gi = rosters[d][local_ix];
+                        let (go, park): (Vec<u64>, Vec<u64>) = match recover_at {
+                            // arrivals past the recovery instant wait for
+                            // the staged rejoin instead of failing over
+                            Some(tr) => stream.into_iter().partition(|&a| a < tr),
+                            None => (stream, Vec::new()),
+                        };
+                        if !park.is_empty() {
+                            parked.entry((d, gi)).or_default().extend(park);
+                        }
+                        if !go.is_empty() {
+                            let target = failover_stream(
+                                gi,
+                                d,
+                                ft,
+                                go,
+                                fcfg.router,
+                                heavy,
+                                &svc,
+                                models,
+                                &node_arrays,
+                                &rosters,
+                                &alive,
+                                &mut active,
+                                fleet_auto,
+                                mig.handoff_cy_per_req,
+                                &mut sims,
+                                recs,
+                                &mut retried,
+                                &mut lost,
+                                &mut failovers,
+                            );
+                            if gi == heavy {
+                                heavy_target = target;
+                            }
+                        }
+                    }
+                    if migrate_on && !alive[owner] {
+                        owner = heavy_target
+                            .or_else(|| least_loaded_survivor(&alive, &node_arrays, &sims, ft))
+                            .unwrap_or(owner);
+                    }
+                }
+                FaultAction::Drain { rejoin_at, update } => {
+                    let label = if update { "update" } else { "drain" };
+                    recs[d].fault(ft, label);
+                    fault_log.push(FaultRecord {
+                        t: ft,
+                        node: d,
+                        label,
+                    });
+                    let pending = sims[d].drain_now();
+                    alive[d] = false;
+                    down_since[d] = Some(ft);
+                    if fleet_auto {
+                        active[d] = false;
+                    }
+                    let mut heavy_target: Option<usize> = None;
+                    for (local_ix, stream) in pending {
+                        let gi = rosters[d][local_ix];
+                        let (go, park): (Vec<u64>, Vec<u64>) = match rejoin_at {
+                            Some(tr) => stream.into_iter().partition(|&a| a < tr),
+                            None => (stream, Vec::new()),
+                        };
+                        if !park.is_empty() {
+                            parked.entry((d, gi)).or_default().extend(park);
+                        }
+                        if !go.is_empty() {
+                            let target = failover_stream(
+                                gi,
+                                d,
+                                ft,
+                                go,
+                                fcfg.router,
+                                heavy,
+                                &svc,
+                                models,
+                                &node_arrays,
+                                &rosters,
+                                &alive,
+                                &mut active,
+                                fleet_auto,
+                                mig.handoff_cy_per_req,
+                                &mut sims,
+                                recs,
+                                &mut retried,
+                                &mut lost,
+                                &mut failovers,
+                            );
+                            if gi == heavy {
+                                heavy_target = target;
+                            }
+                        }
+                    }
+                    if migrate_on && !alive[owner] {
+                        owner = heavy_target
+                            .or_else(|| least_loaded_survivor(&alive, &node_arrays, &sims, ft))
+                            .unwrap_or(owner);
+                    }
+                }
+                FaultAction::Rejoin {
+                    label,
+                    reprogram_all,
+                } => {
+                    if let Some(s) = down_since[d].take() {
+                        downtime[d] += ft.min(duration_cy).saturating_sub(s.min(duration_cy));
+                    }
+                    alive[d] = true;
+                    sims[d].revive(ft);
+                    recs[d].fault(ft, label);
+                    fault_log.push(FaultRecord {
+                        t: ft,
+                        node: d,
+                        label,
+                    });
+                    // staged rejoin: every returning stream reprograms
+                    // (priced through migrate_in, hand-off free — the
+                    // parked stream never left the fleet controller)
+                    // before the node takes traffic
+                    let mut returned = vec![false; rosters[d].len()];
+                    for (local_ix, &gi) in rosters[d].iter().enumerate() {
+                        if let Some(stream) = parked.remove(&(d, gi)) {
+                            let moved_n = stream.len();
+                            let (pc, _hc, bc) =
+                                sims[d].migrate_in(local_ix, stream, ft, 0, &mut recs[d]);
+                            retried += moved_n as u64;
+                            recs[d].failover(local_ix, ft, d, moved_n, true);
+                            failovers.push(FailoverRecord {
+                                tenant: models[gi].net.name.clone(),
+                                from_node: d,
+                                to_node: d,
+                                t: ft,
+                                moved: moved_n,
+                                program_cycles: pc,
+                                handoff_cycles: 0,
+                                blocked_cycles: bc,
+                                rejoin: true,
+                            });
+                            returned[local_ix] = true;
+                            if migrate_on && gi == heavy {
+                                owner = d;
+                            }
+                        }
+                    }
+                    if reprogram_all {
+                        // rolling model update: the new weights land on
+                        // every resident tenant, traffic or not
+                        for (local_ix, &ret) in returned.iter().enumerate() {
+                            if !ret {
+                                sims[d].reprogram(local_ix, ft, &mut recs[d]);
+                            }
+                        }
+                    }
+                }
+                FaultAction::Degrade => {
+                    // the span itself was pre-armed on the node; this
+                    // just drops the mark at its timeline position
+                    recs[d].fault(ft, "degrade");
+                    fault_log.push(FaultRecord {
+                        t: ft,
+                        node: d,
+                        label: "degrade",
+                    });
+                }
+                FaultAction::ArrayFail { arrays } => {
+                    recs[d].fault(ft, "arrayfail");
+                    fault_log.push(FaultRecord {
+                        t: ft,
+                        node: d,
+                        label: "arrayfail",
+                    });
+                    // every resident tenant remaps onto the surviving
+                    // arrays: the full PCM price, no hand-off; the
+                    // permanent service stretch was pre-armed
+                    for local_ix in 0..rosters[d].len() {
+                        sims[d].reprogram(local_ix, ft, &mut recs[d]);
+                    }
+                    arrays_lost[d] += arrays;
+                }
+            }
+            fi += 1;
             continue;
         }
+        let Some((_, j)) = next else { break };
+        let stepped = sims[j].step(&mut recs[j]);
         let Some(t) = stepped else { continue };
-        // hot-spot detector: the heavy tenant's owner vs the coldest
-        // other node, sampled at every fleet dispatch
-        let hot = sims[owner].backlog_at(t) as u64;
-        let mut cold = (u64::MAX, usize::MAX);
-        for (k, s) in sims.iter().enumerate() {
-            if k != owner {
-                let b = s.backlog_at(t) as u64;
-                if (b, k) < cold {
-                    cold = (b, k);
+        if migrate_on && alive[owner] {
+            // hot-spot detector: the heavy tenant's owner vs the coldest
+            // other live node, sampled at every fleet dispatch
+            let hot = sims[owner].backlog_at(t) as u64;
+            let mut cold = (u64::MAX, usize::MAX);
+            for (k, s) in sims.iter().enumerate() {
+                if k != owner && alive[k] {
+                    let b = s.backlog_at(t) as u64;
+                    if (b, k) < cold {
+                        cold = (b, k);
+                    }
+                }
+            }
+            let (cold_b, cold_n) = cold;
+            if cold_n < n
+                && hot >= mig.hot_factor.saturating_mul(cold_b).saturating_add(mig.hot_margin)
+            {
+                pressure.record(0, t, 1);
+            } else {
+                pressure.clear(0);
+            }
+            pressure.age_out(0, t);
+            if cold_n < n && t >= cooldown_until && pressure.sustained_hi(0, t, 1) {
+                pressure.clear(0);
+                cooldown_until = t + mig.cooldown_cy;
+                let local_from = rosters[owner].iter().position(|&g| g == heavy).unwrap();
+                let moved = sims[owner].migrate_out(local_from);
+                if moved.is_empty() {
+                    continue; // backlog was all in flight — nothing to move
+                }
+                let n_moved = moved.len();
+                let local_to = rosters[cold_n].iter().position(|&g| g == heavy).unwrap();
+                let (program_cycles, handoff_cycles, blocked_cycles) = sims[cold_n].migrate_in(
+                    local_to,
+                    moved,
+                    t,
+                    mig.handoff_cy_per_req,
+                    &mut recs[cold_n],
+                );
+                migrations.push(FleetMigration {
+                    tenant: models[heavy].net.name.clone(),
+                    from_node: owner,
+                    to_node: cold_n,
+                    t,
+                    moved: n_moved,
+                    program_cycles,
+                    handoff_cycles,
+                    blocked_cycles,
+                    streamed: scfg.stream_weights,
+                });
+                owner = cold_n;
+            }
+        }
+        if fleet_auto {
+            // fleet replica autoscaler: total heavy backlog over the
+            // active set, PR 6 Pressure hysteresis, grow toward the
+            // fastest inactive replica / shrink off the slowest active
+            let depth: usize = (0..n)
+                .filter(|&k| alive[k] && active[k])
+                .map(|k| sims[k].tenant_backlog_at(heavy_local[k].unwrap(), t))
+                .sum();
+            apressure.record(0, t, depth);
+            apressure.age_out(0, t);
+            if t >= acooldown && apressure.sustained_hi(0, t, acfg.hi_depth) {
+                let cand = (0..n)
+                    .filter(|&k| alive[k] && !active[k])
+                    .min_by_key(|&k| (svc[k], k));
+                if let Some(k) = cand {
+                    active[k] = true;
+                    apressure.clear(0);
+                    acooldown = t + acfg.cooldown_cy;
+                    // re-water-fill every pending heavy request over the
+                    // grown active set; each re-splice pays the full
+                    // migration price, including shares landing back
+                    // where they were (a conservative rebalance barrier)
+                    let mut moved_all: Vec<u64> = Vec::new();
+                    for src in 0..n {
+                        if alive[src] && active[src] && src != k {
+                            moved_all.append(&mut sims[src].migrate_out(heavy_local[src].unwrap()));
+                        }
+                    }
+                    moved_all.sort_unstable();
+                    let moved_n = moved_all.len();
+                    let pool: Vec<usize> = (0..n).filter(|&q| alive[q] && active[q]).collect();
+                    let mut busy = vec![t; n];
+                    let mut per: Vec<Vec<u64>> = vec![Vec::new(); n];
+                    for &a in &moved_all {
+                        let mut best = pool[0];
+                        for &c in &pool[1..] {
+                            if busy[c].max(a) + svc[c] < busy[best].max(a) + svc[best] {
+                                best = c;
+                            }
+                        }
+                        busy[best] = busy[best].max(a) + svc[best];
+                        per[best].push(a);
+                    }
+                    for (q, share) in per.iter_mut().enumerate() {
+                        if !share.is_empty() {
+                            let share = std::mem::take(share);
+                            sims[q].migrate_in(
+                                heavy_local[q].unwrap(),
+                                share,
+                                t,
+                                mig.handoff_cy_per_req,
+                                &mut recs[q],
+                            );
+                        }
+                    }
+                    replica_scales.push(ReplicaScale {
+                        t,
+                        grow: true,
+                        node: k,
+                        moved: moved_n,
+                        active_after: pool.len(),
+                    });
+                }
+            } else if t >= acooldown && apressure.sustained_lo(0, t, acfg.lo_depth) {
+                let act: Vec<usize> = (0..n).filter(|&k| alive[k] && active[k]).collect();
+                if act.len() > 1 {
+                    // retire the slowest active replica (ties: higher id)
+                    let k = *act.iter().max_by_key(|&&k| (svc[k], k)).unwrap();
+                    active[k] = false;
+                    apressure.clear(0);
+                    acooldown = t + acfg.cooldown_cy;
+                    let moved = sims[k].migrate_out(heavy_local[k].unwrap());
+                    let moved_n = moved.len();
+                    if moved_n > 0 {
+                        // the retiree's pending lands on the fastest
+                        // remaining replica
+                        let rest: Vec<usize> =
+                            act.iter().copied().filter(|&q| q != k).collect();
+                        let dst = *rest.iter().min_by_key(|&&q| (svc[q], q)).unwrap();
+                        sims[dst].migrate_in(
+                            heavy_local[dst].unwrap(),
+                            moved,
+                            t,
+                            mig.handoff_cy_per_req,
+                            &mut recs[dst],
+                        );
+                    }
+                    replica_scales.push(ReplicaScale {
+                        t,
+                        grow: false,
+                        node: k,
+                        moved: moved_n,
+                        active_after: act.len() - 1,
+                    });
                 }
             }
         }
-        let (cold_b, cold_n) = cold;
-        if hot >= mig.hot_factor.saturating_mul(cold_b).saturating_add(mig.hot_margin) {
-            pressure.record(0, t, 1);
-        } else {
-            pressure.clear(0);
-        }
-        pressure.age_out(0, t);
-        if t >= cooldown_until && pressure.sustained_hi(0, t, 1) {
-            pressure.clear(0);
-            cooldown_until = t + mig.cooldown_cy;
-            let local_from = rosters[owner].iter().position(|&g| g == heavy).unwrap();
-            let moved = sims[owner].migrate_out(local_from);
-            if moved.is_empty() {
-                continue; // backlog was all in flight — nothing to move
-            }
-            let n_moved = moved.len();
-            let local_to = rosters[cold_n].iter().position(|&g| g == heavy).unwrap();
-            let (program_cycles, handoff_cycles, blocked_cycles) = sims[cold_n].migrate_in(
-                local_to,
-                moved,
-                t,
-                mig.handoff_cy_per_req,
-                &mut recs[cold_n],
-            );
-            migrations.push(FleetMigration {
-                tenant: models[heavy].net.name.clone(),
-                from_node: owner,
-                to_node: cold_n,
-                t,
-                moved: n_moved,
-                program_cycles,
-                handoff_cycles,
-                blocked_cycles,
-                streamed: scfg.stream_weights,
-            });
-            owner = cold_n;
+    }
+
+    // a node still down at the end of the run is down to the horizon
+    for d in 0..n {
+        if let Some(s) = down_since[d] {
+            downtime[d] += duration_cy.saturating_sub(s.min(duration_cy));
         }
     }
 
@@ -777,7 +1663,49 @@ pub fn simulate_fleet_traced(
         cycle_ns,
         nodes,
         migrations,
+        replica_scales,
+        faults: if chaos {
+            Some(FleetFaultOutcome {
+                events: fault_log,
+                failovers,
+                retried,
+                lost_in_crash: lost,
+                downtime_cy: downtime,
+                arrays_lost,
+                horizon_cy: duration_cy,
+            })
+        } else {
+            None
+        },
     })
+}
+
+/// The capacity-weighted least-loaded survivor (w = 0): where the
+/// migration controller re-homes its heavy-tenant tracking when the
+/// owner dies without a pending stream to follow.
+fn least_loaded_survivor(
+    alive: &[bool],
+    node_arrays: &[usize],
+    sims: &[NodeSim],
+    t: u64,
+) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (k, &a) in alive.iter().enumerate() {
+        if !a {
+            continue;
+        }
+        let b = sims[k].backlog_at(t) as u64;
+        let better = match best {
+            None => true,
+            Some((bk, bb)) => {
+                (b as u128) * node_arrays[bk] as u128 < (bb as u128) * node_arrays[k] as u128
+            }
+        };
+        if better {
+            best = Some((k, b));
+        }
+    }
+    best.map(|(k, _)| k)
 }
 
 #[cfg(test)]
@@ -805,6 +1733,49 @@ mod tests {
         // ring size and determinism
         assert_eq!(r4.len(), 4 * VNODES);
         assert_eq!(hash_ring(4), r4);
+    }
+
+    #[test]
+    fn survivor_rings_rebuild_deterministically() {
+        // removing a node leaves exactly the full ring minus its points
+        // (original-id keys), so re-adding it restores the original
+        // assignment bit-for-bit
+        let full = hash_ring(4);
+        let survivors = hash_ring_of(&[0, 1, 3]);
+        let expect: Vec<(u64, usize)> =
+            full.iter().copied().filter(|&(_, ix)| ix != 2).collect();
+        assert_eq!(survivors, expect);
+        assert_eq!(hash_ring_of(&[0, 1, 2, 3]), full);
+        // seed-stable across rebuilds
+        assert_eq!(hash_ring_of(&[0, 1, 3]), survivors);
+        // a tenant on a survivor keeps its owner; one on the dead node
+        // fails over deterministically and returns home on re-add
+        assert_eq!(ring_assign(&full, "bottleneck"), 3);
+        assert_eq!(ring_assign(&survivors, "bottleneck"), 3);
+        assert_eq!(ring_assign(&full, "mobilenetv2"), 2);
+        let failover = ring_assign(&survivors, "mobilenetv2");
+        assert_ne!(failover, 2);
+        assert_eq!(ring_assign(&survivors, "mobilenetv2"), failover);
+        assert_eq!(ring_assign(&hash_ring_of(&[0, 1, 2, 3]), "mobilenetv2"), 2);
+        // order of the id list never matters
+        assert_eq!(hash_ring_of(&[3, 0, 1]), survivors);
+    }
+
+    #[test]
+    fn node_arrays_parser_names_the_offending_entry() {
+        assert_eq!(parse_node_arrays("32,24,16", 3).unwrap(), vec![32, 24, 16]);
+        assert_eq!(parse_node_arrays(" 8 , 8 ", 2).unwrap(), vec![8, 8]);
+        let e = parse_node_arrays("32,24", 3).unwrap_err();
+        assert!(
+            e.contains("2 array counts") && e.contains("--nodes says 3"),
+            "{e}"
+        );
+        let e = parse_node_arrays("32,x,16", 3).unwrap_err();
+        assert!(e.contains("entry 2 of 3") && e.contains("`x`"), "{e}");
+        let e = parse_node_arrays("32,0,16", 3).unwrap_err();
+        assert!(e.contains("entry 2 of 3") && e.contains("`0`"), "{e}");
+        let e = parse_node_arrays("32,,16", 3).unwrap_err();
+        assert!(e.contains("entry 2 of 3"), "{e}");
     }
 
     #[test]
@@ -847,6 +1818,9 @@ mod tests {
                 "{}",
                 router.label()
             );
+            // no fault plan: no chaos ledger, no replica resizes
+            assert!(rep.faults.is_none(), "{}", router.label());
+            assert!(rep.replica_scales.is_empty(), "{}", router.label());
             // byte-determinism of the rendered artifacts
             let again = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
             assert_eq!(
@@ -910,6 +1884,7 @@ mod tests {
         assert!(simulate_fleet(&models, &scfg, &fc, &pm).is_err());
         fc.node_arrays = vec![64, 0]; // empty node
         assert!(simulate_fleet(&models, &scfg, &fc, &pm).is_err());
+        // autoscaling a multi-node fleet needs the replica router
         let auto_cfg = ServeConfig {
             autoscale: true,
             ..scfg.clone()
@@ -921,5 +1896,16 @@ mod tests {
             &pm
         )
         .is_err());
+        assert!(simulate_fleet(
+            &models,
+            &auto_cfg,
+            &FleetConfig::new(2, RouterPolicy::LeastLoaded),
+            &pm
+        )
+        .is_err());
+        // an invalid fault plan is rejected up front
+        let mut fc = FleetConfig::new(2, RouterPolicy::Hash);
+        fc.faults = FaultPlan::parse("crash@node7:1e6").unwrap();
+        assert!(simulate_fleet(&models, &scfg, &fc, &pm).is_err());
     }
 }

@@ -86,6 +86,20 @@ impl LogHistogram {
         self.max = self.max.max(v);
     }
 
+    /// Exact revocation of one previously recorded value — the crash
+    /// path un-counts in-flight requests a dying node never finished.
+    /// Bins, count, and sum return to their prior state bit-exactly;
+    /// `min`/`max` stay high-water marks (a revoked extreme is not
+    /// forgotten), which can only widen the reported envelope — the
+    /// percentiles themselves are recomputed from the exact bins.
+    pub fn remove(&mut self, v: u64) {
+        let b = Self::bin_of(v);
+        debug_assert!(self.counts[b] > 0, "removing {v} that was never recorded");
+        self.counts[b] -= 1;
+        self.n -= 1;
+        self.sum -= v as u128;
+    }
+
     /// Fold another histogram into this one, bin-wise — the fleet's
     /// aggregate percentiles merge per-node histograms without
     /// re-binning. Bins are globally fixed, so the merge reports exactly
@@ -224,6 +238,17 @@ impl LatencyBreakdown {
         self.migration_stall.record(ph.migration_stall);
         self.resource_stall.record(ph.resource_stall);
         self.service.record(ph.service);
+    }
+
+    /// Exact revocation of one recorded decomposition (crash-revoked
+    /// in-flight work) — phase-wise [`LogHistogram::remove`], so the
+    /// components-sum-to-latency conservation law survives the crash.
+    pub fn remove(&mut self, ph: &RequestPhases) {
+        self.queue_wait.remove(ph.queue_wait);
+        self.batch_wait.remove(ph.batch_wait);
+        self.migration_stall.remove(ph.migration_stall);
+        self.resource_stall.remove(ph.resource_stall);
+        self.service.remove(ph.service);
     }
 
     /// Bin-wise merge of another breakdown (fleet aggregation) —
@@ -525,6 +550,38 @@ mod tests {
         a.merge(&LogHistogram::new());
         assert_eq!(a.min(), u.min());
         assert_eq!(a.percentiles(), u.percentiles());
+    }
+
+    #[test]
+    fn remove_is_an_exact_inverse_of_record() {
+        let mut h = LogHistogram::new();
+        let base = LogHistogram::new();
+        for v in [0u64, 7, 8, 100, 12_345, 1 << 30] {
+            h.record(v);
+        }
+        for v in [1 << 30, 12_345, 100, 8, 7, 0u64] {
+            h.remove(v);
+        }
+        assert_eq!(h.count(), base.count());
+        assert_eq!(h.sum(), base.sum());
+        assert_eq!(h.percentiles(), base.percentiles());
+        // interleaved: the survivors' percentiles are exactly what
+        // recording only the survivors would report
+        let mut mixed = LogHistogram::new();
+        let mut survivors = LogHistogram::new();
+        for v in [5u64, 50, 500, 5_000] {
+            mixed.record(v);
+            survivors.record(v);
+        }
+        for v in [9u64, 90, 900] {
+            mixed.record(v);
+        }
+        for v in [9u64, 90, 900] {
+            mixed.remove(v);
+        }
+        assert_eq!(mixed.percentiles(), survivors.percentiles());
+        assert_eq!(mixed.count(), survivors.count());
+        assert_eq!(mixed.sum(), survivors.sum());
     }
 
     #[test]

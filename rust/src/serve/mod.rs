@@ -146,11 +146,41 @@
 //! loop with consistent-hash, least-loaded, and replica router policies,
 //! plus cross-node migration priced by the same PCM-reprogramming model
 //! as [`apply_scale`].
+//!
+//! **Fault injection and self-healing** ([`faults`]) makes the fleet
+//! survivable: `imcc serve --nodes N --faults SPEC` injects a
+//! deterministic schedule of node faults — the grammar is
+//! `kind@nodeN:T[..T2][xF]` per event, comma-separated, e.g.
+//! `crash@node1:5e6..8e6,drain@node2:1e7` (kinds: `crash` with
+//! optional recovery, graceful `drain`, `update` = a rolling-model-
+//! update drain with mandatory rejoin, `degrade` slowdown windows,
+//! permanent `arrayfail` capacity loss) — and `--fault-seed S` draws a
+//! randomized crash/recover plan. The self-healing control plane lives
+//! in the fleet loop: when a node dies its queued streams fail over to
+//! survivors chosen by router re-resolution (a survivor-only hash ring
+//! keyed by the *original* node ids, least-loaded reassignment, or a
+//! replica water-fill over the live nodes), each hand-off re-priced
+//! with the same PR 6 migration model (PCM reprogramming on the
+//! destination's `RES_PROG` chained after its array timelines, plus
+//! the per-request DMA hand-off) — that is the **failover pricing
+//! model**: failover is a migration the tenant did not ask for.
+//! Recovery is a staged rejoin: the node's PCM arrays reprogram
+//! *before* it takes traffic (its parked post-recovery stream returns
+//! through the same priced `migrate_in`). A crash loses the batches in
+//! flight: their ledger entries are revoked exactly (histogram bins
+//! are exact, so revocation is too) and the requests counted in the
+//! fleet's `lost_in_crash`, extending arrival conservation to
+//! `served + dropped + rejected + lost_in_crash == offered arrivals`
+//! with every retried (failed-over) request accounted exactly once.
+//! With no fault plan the loop takes exactly the healthy code paths —
+//! tables, serve JSON, and trace bytes are pinned bit-identical to the
+//! pre-fault release by `tests/fault_regression.rs`.
 
 pub mod admission;
 pub mod autoscale;
 pub mod batcher;
 pub mod evq;
+pub mod faults;
 pub mod fleet;
 pub mod metrics;
 pub mod tenancy;
@@ -177,9 +207,11 @@ pub use admission::AdmissionControl;
 pub use autoscale::{AutoscaleConfig, Autoscaler, Pressure, ScaleDecision, ScaleEvent, ScaleKind};
 pub use batcher::{BatchWindow, TenantQueue};
 pub use evq::{EventQueue, EventQueueKind, EvqCounters};
+pub use faults::{FaultEvent, FaultKind, FaultPlan};
 pub use fleet::{
-    simulate_fleet, simulate_fleet_traced, FleetConfig, FleetMigration, FleetMigrationConfig,
-    FleetReport, NodeReport, RouterPolicy,
+    parse_node_arrays, simulate_fleet, simulate_fleet_traced, FailoverRecord, FaultRecord,
+    FleetConfig, FleetFaultOutcome, FleetMigration, FleetMigrationConfig, FleetReport, NodeReport,
+    ReplicaScale, RouterPolicy,
 };
 pub use metrics::{
     LatencyBreakdown, LogHistogram, ResourceUtil, ServeCounters, StallShare, TenantStats,
@@ -1103,6 +1135,32 @@ pub(crate) struct NodeSim<'a> {
     claim_blockers: Vec<Option<usize>>,
     duration_cy: u64,
     cycle_ns: f64,
+    /// False while the node is crashed or drained: the fleet loop sees
+    /// no events from a dead node. Always true outside fault mode.
+    alive: bool,
+    /// Service-stretch spans `(from, until, percent > 100)` from
+    /// `degrade`/`arrayfail` fault events; empty outside fault mode, and
+    /// the empty check is the only cost the healthy path pays.
+    degrade: Vec<(u64, u64, u64)>,
+    /// Record dispatched-but-unfinished batches so a crash can revoke
+    /// them exactly. Only armed (by the fleet) for nodes a fault plan
+    /// can crash — off, `step` allocates nothing for it.
+    track_inflight: bool,
+    open_batches: Vec<OpenBatch>,
+}
+
+/// One dispatched batch still in flight — everything `crash` needs to
+/// revoke its ledger entries bit-exactly (see [`NodeSim::crash`]).
+struct OpenBatch {
+    tenant: usize,
+    dispatch: u64,
+    end: u64,
+    window_close: u64,
+    not_before: u64,
+    prev_dispatch: u64,
+    blocker: Option<usize>,
+    svc_cycles: u64,
+    arrivals: Vec<u64>,
 }
 
 impl<'a> NodeSim<'a> {
@@ -1271,7 +1329,137 @@ impl<'a> NodeSim<'a> {
             claim_blockers: Vec::new(),
             duration_cy,
             cycle_ns,
+            alive: true,
+            degrade: Vec::new(),
+            track_inflight: false,
+            open_batches: Vec::new(),
         })
+    }
+
+    /// Arm the fault machinery for this node: in-flight tracking when a
+    /// crash can strike it, and the degrade/arrayfail service-stretch
+    /// spans. The fleet calls this once, before the first step; a node
+    /// left unarmed runs the exact healthy code paths.
+    pub(crate) fn set_fault_mode(&mut self, track_inflight: bool, degrade: Vec<(u64, u64, u64)>) {
+        self.track_inflight = track_inflight;
+        self.degrade = degrade;
+    }
+
+    /// Service cycles after the degrade spans covering dispatch instant
+    /// `t` stretch them (identity when no span covers `t`).
+    fn stretched(&self, t: u64, cycles: u64) -> u64 {
+        let mut cy = cycles;
+        for &(from, until, percent) in &self.degrade {
+            if t >= from && t < until {
+                cy = cy.saturating_mul(percent) / 100;
+            }
+        }
+        cy
+    }
+
+    /// Hard crash at instant `t`: every in-flight batch is lost — its
+    /// served/arrival/latency/breakdown/stall ledger entries are revoked
+    /// exactly (the histograms' bins are exact, so removal is too; the
+    /// busy-interval union and committed timeline keep the spans, since
+    /// the node genuinely burned them before dying) — and every queued
+    /// stream is taken for failover. Returns `(lost, pending)` where
+    /// `pending` is `(local tenant, taken stream)` for non-empty queues;
+    /// the lost requests leave this node's arrival ledger and land in
+    /// the fleet's `lost_in_crash`.
+    pub(crate) fn crash(&mut self, t: u64) -> (u64, Vec<(usize, Vec<u64>)>) {
+        let mut lost = 0u64;
+        let open = std::mem::take(&mut self.open_batches);
+        for ob in open {
+            if ob.end <= t {
+                continue; // completed before the crash
+            }
+            let st = &mut self.stats[ob.tenant];
+            let n = ob.arrivals.len() as u64;
+            st.served -= n;
+            st.arrivals -= n;
+            st.batches -= 1;
+            st.busy_cycles -= ob.svc_cycles;
+            for &a in &ob.arrivals {
+                st.latency.remove(ob.end - a);
+                let ph = trace::decompose(
+                    a,
+                    ob.prev_dispatch,
+                    ob.window_close,
+                    ob.not_before,
+                    ob.dispatch,
+                    ob.end,
+                );
+                st.breakdown.remove(&ph);
+                if ph.resource_stall > 0 {
+                    let key = ob.blocker.unwrap_or(trace::RES_POOL);
+                    let e = self
+                        .stall_by_res
+                        .get_mut(&key)
+                        .expect("revoking a stall never recorded");
+                    *e -= ph.resource_stall;
+                }
+            }
+            lost += n;
+        }
+        self.stall_by_res.retain(|_, v| *v > 0);
+        let pending = self.take_all_pending();
+        self.alive = false;
+        (lost, pending)
+    }
+
+    /// Graceful drain at a fault instant: in-flight batches complete
+    /// (nothing is revoked or lost), queued streams are taken for
+    /// failover, and the node stops producing events until revived.
+    pub(crate) fn drain_now(&mut self) -> Vec<(usize, Vec<u64>)> {
+        self.open_batches.clear();
+        let pending = self.take_all_pending();
+        self.alive = false;
+        pending
+    }
+
+    fn take_all_pending(&mut self) -> Vec<(usize, Vec<u64>)> {
+        let mut pending = Vec::new();
+        for ix in 0..self.queues.len() {
+            let moved = self.migrate_out(ix);
+            if !moved.is_empty() {
+                pending.push((ix, moved));
+            }
+        }
+        pending
+    }
+
+    /// Staged-rejoin step 1: the node is live again and produces events
+    /// (step 2 is the fleet pushing the parked streams back through the
+    /// priced `migrate_in`, which reprograms before traffic flows).
+    pub(crate) fn revive(&mut self, t: u64) {
+        self.alive = true;
+        for i in 0..self.queues.len() {
+            if let Some(r) = self.queues[i].ready_at(&self.ctx.scfg.window) {
+                self.evq.push(r.max(t), i);
+            }
+        }
+    }
+
+    /// Reprogram tenant `ix`'s resident arrays in place (an `arrayfail`
+    /// remap, or a rejoin with nothing parked): the full PCM price with
+    /// no hand-off and no queue splice. Returns
+    /// `(program_cycles, blocked_cycles)`.
+    pub(crate) fn reprogram(
+        &mut self,
+        ix: usize,
+        t: u64,
+        rec: &mut TraceRecorder,
+    ) -> (u64, u64) {
+        let (program_cycles, total) = self.charge_program(ix, t, 0, rec);
+        let blocked_cycles = if self.ctx.scfg.stream_weights { 0 } else { total };
+        self.not_before[ix] = self.not_before[ix].max(t + blocked_cycles);
+        (program_cycles, blocked_cycles)
+    }
+
+    /// This tenant's pending depth at `t` — the replica autoscaler's
+    /// per-node pressure signal for the heavy tenant.
+    pub(crate) fn tenant_backlog_at(&self, ix: usize, t: u64) -> usize {
+        self.queues[ix].depth_at(t)
     }
 
     /// The earliest stored event instant, or `None` once the node has
@@ -1282,6 +1470,9 @@ impl<'a> NodeSim<'a> {
     /// mode-dependent structural `steps` tally, which deliberately stays
     /// out of serve JSON.
     pub(crate) fn next_event(&mut self) -> Option<u64> {
+        if !self.alive {
+            return None; // crashed or drained: no events until revived
+        }
         self.evq.peek().map(|(t, _)| t)
     }
 
@@ -1320,6 +1511,40 @@ impl<'a> NodeSim<'a> {
         rec: &mut TraceRecorder,
     ) -> (u64, u64, u64) {
         let scfg = self.ctx.scfg;
+        let handoff_cycles = arrivals.len() as u64 * handoff_cy_per_req;
+        let (program_cycles, total) = self.charge_program(ix, t, handoff_cycles, rec);
+        let blocked_cycles = if scfg.stream_weights { 0 } else { total };
+        self.not_before[ix] = self.not_before[ix].max(t + blocked_cycles);
+        self.stats[ix].arrivals += arrivals.len() as u64;
+        // splice: whatever this copy still had pending (normally nothing —
+        // migration targets hold standby copies) merges with the handed-off
+        // stream, sorted so the queue invariant holds
+        let mut merged = self.queues[ix].take_pending();
+        merged.append(&mut arrivals);
+        merged.sort_unstable();
+        self.queues[ix] = TenantQueue::new(merged);
+        if let Some(r) = self.queues[ix].ready_at(&scfg.window) {
+            self.evq.push(r.max(t), ix);
+        }
+        (program_cycles, handoff_cycles, blocked_cycles)
+    }
+
+    /// The shared PCM-reprogramming price ([`migrate_in`](Self::migrate_in)
+    /// and [`reprogram`](Self::reprogram)): program every array the
+    /// tenant's resident plan (first pass) touches, serialized on this
+    /// node's programming port and chained after whatever already holds
+    /// the destination arrays, then the optional DMA hand-off after the
+    /// reprogramming tail. Commits the profile, records its trace
+    /// occupancy, and charges the programming energy. Returns
+    /// `(program_cycles, total_tail_cycles)`.
+    fn charge_program(
+        &mut self,
+        ix: usize,
+        t: u64,
+        handoff_cycles: u64,
+        rec: &mut TraceRecorder,
+    ) -> (u64, u64) {
+        let scfg = self.ctx.scfg;
         let (plan, array_base) = {
             let ten = &self.ctx.tenancy.tenants[ix];
             (Rc::clone(&ten.plan), ten.array_base)
@@ -1339,7 +1564,6 @@ impl<'a> NodeSim<'a> {
             prog_free = fin;
             end_max = end_max.max(fin);
         }
-        let handoff_cycles = arrivals.len() as u64 * handoff_cy_per_req;
         let mut total = end_max;
         if handoff_cycles > 0 {
             let dma = end_max.max(self.timeline.free_at(RES_DMA).saturating_sub(t));
@@ -1356,21 +1580,8 @@ impl<'a> NodeSim<'a> {
         // like an autoscale move, so traced occupancy still merges to the
         // committed timeline
         rec.occupancy(ix, 0, t, &prog_profile, identity, scfg.backfill);
-        let blocked_cycles = if scfg.stream_weights { 0 } else { total };
-        self.not_before[ix] = self.not_before[ix].max(t + blocked_cycles);
         self.stats[ix].energy_j += pool.program_energy_j(&plan.passes[0]);
-        self.stats[ix].arrivals += arrivals.len() as u64;
-        // splice: whatever this copy still had pending (normally nothing —
-        // migration targets hold standby copies) merges with the handed-off
-        // stream, sorted so the queue invariant holds
-        let mut merged = self.queues[ix].take_pending();
-        merged.append(&mut arrivals);
-        merged.sort_unstable();
-        self.queues[ix] = TenantQueue::new(merged);
-        if let Some(r) = self.queues[ix].ready_at(&scfg.window) {
-            self.evq.push(r.max(t), ix);
-        }
-        (program_cycles, handoff_cycles, blocked_cycles)
+        (program_cycles, total)
     }
 
     /// One event-loop iteration: prune, pop-and-validate the claim set,
@@ -1504,7 +1715,11 @@ impl<'a> NodeSim<'a> {
         debug_assert!(bsz >= 1);
         debug_assert_eq!(bsz, b_claim);
         let cost = self.ctx.batch_cost(pick_tenant, bsz);
-        let end = t + cost.cycles;
+        // degraded-node slowdown: the service tail stretches, the claim
+        // (and so SJF ordering and timeline shape) stays at base cost —
+        // a first-order model of a node running hot or short of arrays
+        let svc = self.stretched(t, cost.cycles);
+        let end = t + svc;
         self.timeline.commit(t, &cost.profile, self.rmaps[pick_tenant]);
         self.pool_free = self.pool_free.max(end);
         self.makespan = self.makespan.max(end);
@@ -1514,7 +1729,7 @@ impl<'a> NodeSim<'a> {
         let st = &mut self.stats[pick_tenant];
         st.batches += 1;
         st.served += bsz as u64;
-        st.busy_cycles += cost.cycles;
+        st.busy_cycles += svc;
         st.energy_j += cost.energy_j;
         for a in &admitted {
             st.latency.record(end - a);
@@ -1528,6 +1743,22 @@ impl<'a> NodeSim<'a> {
             }
         }
         self.prev_dispatch[pick_tenant] = t;
+        if self.track_inflight {
+            // keep only batches still open so a later crash revokes
+            // exactly the work that would finish after it
+            self.open_batches.retain(|ob| ob.end > t);
+            self.open_batches.push(OpenBatch {
+                tenant: pick_tenant,
+                dispatch: t,
+                end,
+                window_close: close,
+                not_before: nb,
+                prev_dispatch: prev,
+                blocker,
+                svc_cycles: svc,
+                arrivals: admitted.clone(),
+            });
+        }
         if rec.is_on() {
             rec.batch(trace::BatchSpan {
                 tenant: pick_tenant,

@@ -195,6 +195,20 @@ pub enum TraceEvent {
     Drops { tenant: usize, t: u64, count: u64 },
     /// The autoscaler applied a resize.
     Scale(ScaleEvent),
+    /// A node-level fault instant on this node (crash, drain, update,
+    /// recover, rejoin, arrayfail) — rendered on a node-scoped control
+    /// track (pid 0) since it belongs to no single tenant.
+    Fault { t: u64, label: &'static str },
+    /// A failover hand-off landing on this node (`rejoin` false: the
+    /// stream fled a dead/draining `peer`) or a parked stream returning
+    /// at a staged rejoin (`rejoin` true; `peer` is the node itself).
+    Failover {
+        tenant: usize,
+        t: u64,
+        peer: usize,
+        moved: usize,
+        rejoin: bool,
+    },
 }
 
 /// The live recording state behind [`TraceRecorder::On`]: a bounded ring
@@ -309,6 +323,26 @@ impl TraceRecorder {
         }
     }
 
+    #[inline]
+    pub fn fault(&mut self, t: u64, label: &'static str) {
+        if let TraceRecorder::On(b) = self {
+            b.push(TraceEvent::Fault { t, label });
+        }
+    }
+
+    #[inline]
+    pub fn failover(&mut self, tenant: usize, t: u64, peer: usize, moved: usize, rejoin: bool) {
+        if let TraceRecorder::On(b) = self {
+            b.push(TraceEvent::Failover {
+                tenant,
+                t,
+                peer,
+                moved,
+                rejoin,
+            });
+        }
+    }
+
     /// Snapshot the committed per-resource interval sets at end of run —
     /// the ground truth the traced occupancy events must merge to
     /// (`tests/trace_regression.rs` pins the conservation).
@@ -361,8 +395,10 @@ impl ServeTrace {
         merged
     }
 
-    fn counts(&self) -> (u64, u64, u64, u64, u64) {
+    #[allow(clippy::type_complexity)]
+    fn counts(&self) -> (u64, u64, u64, u64, u64, u64, u64) {
         let (mut batches, mut occ, mut rejects, mut drops, mut scales) = (0, 0, 0, 0, 0);
+        let (mut faults, mut failovers) = (0, 0);
         for ev in &self.events {
             match ev {
                 TraceEvent::Batch(_) => batches += 1,
@@ -370,23 +406,34 @@ impl ServeTrace {
                 TraceEvent::Reject { .. } => rejects += 1,
                 TraceEvent::Drops { .. } => drops += 1,
                 TraceEvent::Scale(_) => scales += 1,
+                TraceEvent::Fault { .. } => faults += 1,
+                TraceEvent::Failover { .. } => failovers += 1,
             }
         }
-        (batches, occ, rejects, drops, scales)
+        (batches, occ, rejects, drops, scales, faults, failovers)
     }
 
-    /// The compact summary the CLI prints next to the export path.
+    /// The compact summary the CLI prints next to the export path. The
+    /// fault/failover tallies only appear when a fault plan produced
+    /// some — a no-fault trace summary is byte-identical to earlier
+    /// releases.
     pub fn render_summary(&self) -> String {
-        let (batches, occ, rejects, drops, scales) = self.counts();
+        let (batches, occ, rejects, drops, scales, faults, failovers) = self.counts();
+        let chaos = if faults + failovers > 0 {
+            format!(", {faults} fault marks, {failovers} failovers")
+        } else {
+            String::new()
+        };
         format!(
             "trace: {} events ({} batch spans, {} occupancy intervals, {} rejects, \
-             {} drop batches, {} scale events), limit {}, truncated {}\n",
+             {} drop batches, {} scale events{}), limit {}, truncated {}\n",
             self.events.len(),
             batches,
             occ,
             rejects,
             drops,
             scales,
+            chaos,
             self.limit,
             self.truncated_events,
         )
@@ -402,6 +449,10 @@ fn us(cy: u64, cycle_ns: f64) -> f64 {
 fn pid_of(tenant: usize) -> i64 {
     tenant as i64 + 1
 }
+
+/// The node-scoped process fault instants render under (tenant pids
+/// start at 1, so 0 is free).
+const PID_NODE: i64 = 0;
 
 /// Batch-lifecycle track.
 const TID_LIFE: i64 = 1;
@@ -488,9 +539,21 @@ pub fn chrome_trace(rep: &ServeReport, tr: &ServeTrace) -> Json {
             TraceEvent::Scale(ev) => {
                 tids.insert((pid_of(ev.tenant), TID_CTRL), "control".into());
             }
+            TraceEvent::Fault { .. } => {
+                tids.insert((PID_NODE, TID_CTRL), "faults".into());
+            }
+            TraceEvent::Failover { tenant, .. } => {
+                tids.insert((pid_of(*tenant), TID_CTRL), "control".into());
+            }
         }
     }
     let mut events: Vec<Json> = Vec::with_capacity(tr.events.len() + tids.len() + rep.tenants.len());
+    // the node-scoped fault track gets its own process — only when a
+    // fault plan actually marked this node, so no-fault exports are
+    // byte-identical to earlier releases
+    if tids.contains_key(&(PID_NODE, TID_CTRL)) {
+        events.push(metadata_event("process_name", PID_NODE, None, "node".into()));
+    }
     for (i, s) in rep.tenants.iter().enumerate() {
         events.push(metadata_event(
             "process_name",
@@ -592,6 +655,28 @@ pub fn chrome_trace(rep: &ServeReport, tr: &ServeTrace) -> Json {
                         ("program_cycles", (ev.program_cycles as f64).into()),
                         ("blocked_cycles", (ev.blocked_cycles as f64).into()),
                         ("streamed", ev.streamed.into()),
+                    ]),
+                ));
+            }
+            TraceEvent::Fault { t, label } => {
+                events.push(instant_event(label, PID_NODE, TID_CTRL, *t, cyns, obj([])));
+            }
+            TraceEvent::Failover {
+                tenant,
+                t,
+                peer,
+                moved,
+                rejoin,
+            } => {
+                events.push(instant_event(
+                    if *rejoin { "rejoin" } else { "failover" },
+                    pid_of(*tenant),
+                    TID_CTRL,
+                    *t,
+                    cyns,
+                    obj([
+                        ("moved", (*moved).into()),
+                        ("peer_node", (*peer).into()),
                     ]),
                 ));
             }

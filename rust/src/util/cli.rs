@@ -186,6 +186,25 @@ mod tests {
     }
 
     #[test]
+    fn fleet_fault_flags_parse() {
+        // --faults and --fault-seed are valued options; the fault spec is
+        // one comma-joined token so the parser never splits it
+        let a = argv(
+            "serve --nodes 3 --faults crash@node1:5e6..8e6,drain@node2:1e7 --json out.json",
+        );
+        assert_eq!(a.opt_parse("nodes", 1usize), 3);
+        assert_eq!(a.opt("faults"), Some("crash@node1:5e6..8e6,drain@node2:1e7"));
+        assert_eq!(a.opt("json"), Some("out.json"));
+        let b = argv("serve --nodes 4 --fault-seed 0xfeed --router replica --autoscale");
+        assert_eq!(b.opt("fault-seed"), Some("0xfeed"));
+        assert_eq!(b.opt("router"), Some("replica"));
+        assert!(b.flag("autoscale"));
+        // `--faults=SPEC` keyed form works too
+        let c = argv("serve --nodes 2 --faults=update@node0:1e6..2e6");
+        assert_eq!(c.opt("faults"), Some("update@node0:1e6..2e6"));
+    }
+
+    #[test]
     fn admission_and_autoscale_flags_parse() {
         // --slo-p95 takes a value; the controller switches are boolean and
         // never swallow the token after them

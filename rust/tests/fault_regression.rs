@@ -1,0 +1,343 @@
+//! Regression tests for deterministic fault injection and self-healing
+//! (`serve::faults` + the chaos layer of `serve::fleet`).
+//!
+//! Five contracts:
+//! 1. **Empty-plan identity** — a fleet with no fault plan carries no
+//!    chaos ledger: no `faults` key in JSON, no fault lines in the
+//!    table, and byte-identical output to a default `FleetConfig`.
+//! 2. **Extended conservation** — under any fault plan, every offered
+//!    request is served, dropped, rejected, or `lost_in_crash`, and
+//!    every retried request is accounted exactly once
+//!    (`retried == Σ failover.moved`).
+//! 3. **Exact downtime** — crash/recover and drain spans price
+//!    downtime to the cycle, clamped to the arrival horizon, and
+//!    availability reflects it.
+//! 4. **Seed determinism** — seeded fault plans and the failover
+//!    cascade they trigger are pure functions of the seed: two runs
+//!    render byte-identical tables and JSON.
+//! 5. **Rolling updates lose nothing** — a staggered
+//!    drain → reprogram → rejoin wave over a replica fleet takes every
+//!    node down exactly once and loses zero requests.
+//!
+//! Plus the satellite: fleet-level replica autoscaling grows exactly
+//! once after a sustained burst on a two-node replica fleet.
+
+use imcc::arch::{PowerModel, SystemConfig};
+use imcc::net::mobilenetv2::mobilenet_v2;
+use imcc::serve::{
+    bottleneck_fleet, mnv2_bottleneck_pair, simulate_fleet, AutoscaleConfig, FaultPlan,
+    FleetConfig, ModelTraffic, RouterPolicy, ServeConfig, TrafficModel,
+};
+
+fn hot_mnv2(rate_per_s: f64) -> Vec<ModelTraffic> {
+    vec![ModelTraffic {
+        net: mobilenet_v2(224),
+        traffic: TrafficModel::Poisson { rate_per_s },
+        weight: 1,
+    }]
+}
+
+/// The arrival horizon in cycles, derived exactly the way the fleet
+/// derives it, so crafted fault instants land where the test intends.
+fn horizon_cy(scfg: &ServeConfig) -> u64 {
+    let cycle_ns = SystemConfig::scaled_up(scfg.n_arrays).freq.cycle_ns();
+    (scfg.duration_s * 1e9 / cycle_ns) as u64
+}
+
+#[test]
+fn empty_plan_runs_carry_no_chaos_ledger() {
+    let pm = PowerModel::paper();
+    let models = bottleneck_fleet(3, 200.0);
+    let scfg = ServeConfig {
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    let default_cfg = FleetConfig::new(3, RouterPolicy::Hash);
+    let mut explicit = FleetConfig::new(3, RouterPolicy::Hash);
+    explicit.faults = FaultPlan::none();
+    let a = simulate_fleet(&models, &scfg, &default_cfg, &pm).unwrap();
+    let b = simulate_fleet(&models, &scfg, &explicit, &pm).unwrap();
+    assert!(a.faults.is_none(), "no plan, no ledger");
+    let aj = a.to_json().to_string_pretty();
+    assert_eq!(aj, b.to_json().to_string_pretty());
+    assert_eq!(a.render_table(), b.render_table());
+    assert!(!aj.contains("\"faults\""), "healthy JSON has no faults key");
+    assert!(!aj.contains("\"replica_scales\""));
+    assert!(!a.render_table().contains("faults:"));
+}
+
+#[test]
+fn crafted_crash_and_drain_conserve_and_price_downtime_exactly() {
+    let pm = PowerModel::paper();
+    let models = bottleneck_fleet(3, 250.0);
+    let scfg = ServeConfig {
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    let h = horizon_cy(&scfg);
+
+    // healthy baseline pins the offered load and finds the busy node
+    let healthy = simulate_fleet(&models, &scfg, &FleetConfig::new(3, RouterPolicy::Hash), &pm)
+        .unwrap();
+    let offered = healthy.total_arrivals();
+    assert!(offered > 0);
+    let node_arr = |rep: &imcc::serve::FleetReport, k: usize| -> u64 {
+        rep.nodes[k]
+            .report
+            .tenants
+            .iter()
+            .map(|t| t.arrivals)
+            .sum()
+    };
+    let busy = (0..3).max_by_key(|&k| (node_arr(&healthy, k), k)).unwrap();
+    assert!(node_arr(&healthy, busy) > 0);
+    let other = (busy + 1) % 3;
+
+    // crash the busy node a quarter in, recover at the half; drain
+    // another node at 5/8 with no rejoin
+    let (t1, t2, t3) = (h / 4, h / 2, h * 5 / 8);
+    let spec = format!("crash@node{busy}:{t1}..{t2},drain@node{other}:{t3}");
+    let mut fcfg = FleetConfig::new(3, RouterPolicy::Hash);
+    fcfg.faults = FaultPlan::parse(&spec).unwrap();
+    let rep = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
+    let fo = rep.faults.as_ref().expect("armed plan reports a ledger");
+
+    // extended conservation: the ledger travels with every request
+    assert_eq!(rep.total_arrivals(), offered - fo.lost_in_crash);
+    assert_eq!(
+        rep.total_served() + rep.total_dropped() + rep.total_rejected(),
+        rep.total_arrivals()
+    );
+    // every retried request accounted exactly once
+    let moved: u64 = fo.failovers.iter().map(|f| f.moved as u64).sum();
+    assert_eq!(fo.retried, moved);
+    // survivor hand-offs pay the hand-off DMA price; rejoins don't
+    for f in &fo.failovers {
+        if f.rejoin {
+            assert_eq!(f.from_node, f.to_node);
+            assert_eq!(f.handoff_cycles, 0);
+        } else {
+            assert_ne!(f.from_node, f.to_node);
+            assert_eq!(
+                f.handoff_cycles,
+                f.moved as u64 * fcfg.migration.handoff_cy_per_req
+            );
+        }
+    }
+    // downtime to the cycle: the crash span closes at recovery, the
+    // drain span runs to the horizon
+    assert_eq!(fo.downtime_cy[busy], t2 - t1);
+    assert_eq!(fo.downtime_cy[other], h - t3);
+    let third = 3 - busy - other;
+    assert_eq!(fo.downtime_cy[third], 0);
+    assert!(fo.availability() < 1.0);
+    let expect_avail = 1.0 - ((t2 - t1) + (h - t3)) as f64 / (3.0 * h as f64);
+    assert!((fo.availability() - expect_avail).abs() < 1e-12);
+    // the rendered artifacts carry the chaos sections deterministically
+    let again = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
+    assert_eq!(rep.render_table(), again.render_table());
+    assert_eq!(
+        rep.to_json().to_string_pretty(),
+        again.to_json().to_string_pretty()
+    );
+    assert!(rep.render_table().contains("faults:"));
+    assert!(rep.to_json().to_string_pretty().contains("\"availability\""));
+}
+
+#[test]
+fn seeded_fault_plans_are_deterministic_and_conserve() {
+    let pm = PowerModel::paper();
+    let models = mnv2_bottleneck_pair(150.0);
+    let scfg = ServeConfig {
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    let h = horizon_cy(&scfg);
+    let offered = simulate_fleet(&models, &scfg, &FleetConfig::new(3, RouterPolicy::Hash), &pm)
+        .unwrap()
+        .total_arrivals();
+
+    // property over seeds: every drawn plan validates, runs, conserves,
+    // and reproduces byte-for-byte
+    let mut fired = 0;
+    for seed in [0x1u64, 0xBEEF, 0xC0FFEE, 77, 0xFEED_FACE] {
+        let plan = FaultPlan::seeded(seed, 3, h, h / 3);
+        plan.validate(3, &[64, 64, 64]).expect("seeded plans validate");
+        let mut fcfg = FleetConfig::new(3, RouterPolicy::Hash);
+        fcfg.faults = plan.clone();
+        if plan.is_empty() {
+            continue; // a long-MTBF draw can be fault-free
+        }
+        let rep = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
+        let fo = rep.faults.as_ref().unwrap();
+        assert_eq!(rep.total_arrivals(), offered - fo.lost_in_crash, "seed {seed:#x}");
+        assert_eq!(
+            rep.total_served() + rep.total_dropped() + rep.total_rejected(),
+            rep.total_arrivals(),
+            "seed {seed:#x}"
+        );
+        let moved: u64 = fo.failovers.iter().map(|f| f.moved as u64).sum();
+        assert_eq!(fo.retried, moved, "seed {seed:#x}");
+        assert!(fo.availability() <= 1.0);
+        if fo.events.iter().any(|e| e.label == "crash" && e.t < h) {
+            fired += 1;
+            assert!(
+                fo.availability() < 1.0,
+                "seed {seed:#x}: a crash inside the horizon must cost availability"
+            );
+        }
+        // node 0 is the seeded plan's survivor anchor
+        assert!(fo.events.iter().all(|e| e.node != 0), "seed {seed:#x}");
+        let again = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
+        assert_eq!(
+            rep.to_json().to_string_pretty(),
+            again.to_json().to_string_pretty(),
+            "seed {seed:#x}"
+        );
+    }
+    assert!(fired > 0, "an mtbf of a third of the horizon draws real crashes");
+}
+
+#[test]
+fn rolling_update_touches_every_node_and_loses_nothing() {
+    let pm = PowerModel::paper();
+    let models = mnv2_bottleneck_pair(150.0);
+    let scfg = ServeConfig {
+        duration_s: 0.02,
+        ..ServeConfig::default()
+    };
+    let h = horizon_cy(&scfg);
+    let offered = simulate_fleet(
+        &models,
+        &scfg,
+        &FleetConfig::new(3, RouterPolicy::Replica),
+        &pm,
+    )
+    .unwrap()
+    .total_arrivals();
+
+    let down = h / 16;
+    let plan = FaultPlan::rolling_update(3, h / 4, down);
+    plan.validate(3, &[64, 64, 64]).expect("staggered wave validates");
+    let mut fcfg = FleetConfig::new(3, RouterPolicy::Replica);
+    fcfg.faults = plan;
+    let rep = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
+    let fo = rep.faults.as_ref().unwrap();
+
+    // a drain completes in-flight work and fails over the queue: zero loss
+    assert_eq!(fo.lost_in_crash, 0);
+    assert_eq!(rep.total_arrivals(), offered);
+    assert_eq!(
+        rep.total_served() + rep.total_dropped() + rep.total_rejected(),
+        offered
+    );
+    // every node went down exactly once, for exactly the update window
+    assert_eq!(fo.events.len(), 6, "3 update drains + 3 rejoins");
+    assert_eq!(fo.events.iter().filter(|e| e.label == "update").count(), 3);
+    assert_eq!(fo.events.iter().filter(|e| e.label == "rejoin").count(), 3);
+    for node in 0..3 {
+        assert_eq!(fo.downtime_cy[node], down, "node{node}");
+    }
+    assert!(fo.availability() < 1.0);
+    let moved: u64 = fo.failovers.iter().map(|f| f.moved as u64).sum();
+    assert_eq!(fo.retried, moved);
+    // determinism of the whole wave
+    let again = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
+    assert_eq!(
+        rep.to_json().to_string_pretty(),
+        again.to_json().to_string_pretty()
+    );
+}
+
+#[test]
+fn fleet_autoscale_grows_exactly_once_after_a_sustained_burst() {
+    let pm = PowerModel::paper();
+    // two small nodes, one heavily overloaded tenant: backlog builds on
+    // the ring owner until the fleet controller activates the second
+    // replica; the huge cooldown pins the controller to one action
+    let models = hot_mnv2(10_000.0);
+    let scfg = ServeConfig {
+        n_arrays: 12,
+        duration_s: 0.02,
+        autoscale: true,
+        autoscale_cfg: AutoscaleConfig {
+            hi_depth: 2,
+            lo_depth: 0,
+            window_cy: 100_000,
+            cooldown_cy: 1_000_000_000_000,
+        },
+        ..ServeConfig::default()
+    };
+    let mut fcfg = FleetConfig::new(2, RouterPolicy::Replica);
+    fcfg.node_arrays = vec![12, 12];
+    let rep = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
+    assert_eq!(
+        rep.replica_scales.len(),
+        1,
+        "one grow, then the cooldown (and the exhausted pool) hold"
+    );
+    let s = &rep.replica_scales[0];
+    assert!(s.grow);
+    assert_eq!(s.active_after, 2, "both replicas active after the grow");
+    // the re-shard really moved pending work onto the second replica
+    assert!(s.moved > 0);
+    let per_node: Vec<u64> = rep
+        .nodes
+        .iter()
+        .map(|n| n.report.tenants.iter().map(|t| t.arrivals).sum())
+        .collect();
+    assert!(
+        per_node.iter().filter(|&&a| a > 0).count() == 2,
+        "both nodes ended up owning traffic: {per_node:?}"
+    );
+    // conservation and the gated JSON section
+    assert_eq!(
+        rep.total_served() + rep.total_dropped() + rep.total_rejected(),
+        rep.total_arrivals()
+    );
+    let js = rep.to_json().to_string_pretty();
+    assert!(js.contains("\"replica_scales\""));
+    assert!(rep.faults.is_none(), "autoscaling is not a fault");
+    // determinism
+    let again = simulate_fleet(&models, &scfg, &fcfg, &pm).unwrap();
+    assert_eq!(js, again.to_json().to_string_pretty());
+    assert_eq!(rep.render_table(), again.render_table());
+}
+
+#[test]
+fn fault_plan_grammar_round_trips_and_rejects_nonsense() {
+    // grammar → plan → describe echo parses back to the same plan
+    let spec =
+        "crash@node1:5e6..8e6,drain@node2:1e7,degrade@node1:2e6..9e6x1.5,arrayfail@node0:3e6x2";
+    let plan = FaultPlan::parse(spec).unwrap();
+    let echo = plan.describe();
+    let replay = FaultPlan::parse(&echo).unwrap();
+    assert_eq!(plan, replay, "describe() is a faithful replay spec");
+    // malformed specs name the problem
+    for bad in [
+        "crash@node1",            // no instant
+        "crash@1:5e6",            // node prefix missing
+        "explode@node1:5e6",      // unknown kind
+        "crash@node1:5e6x2",      // crash takes no factor
+        "update@node1:5e6",       // update needs a rejoin instant
+        "degrade@node1:5e6..6e6", // degrade needs a factor
+        "",                       // empty
+    ] {
+        assert!(FaultPlan::parse(bad).is_err(), "`{bad}` must not parse");
+    }
+    // validation catches fleet-shape mistakes the grammar can't
+    let p = FaultPlan::parse("crash@node3:1e6").unwrap();
+    assert!(p.validate(3, &[64, 64, 64]).is_err(), "node out of range");
+    let p = FaultPlan::parse("crash@node1:2e6..1e6");
+    assert!(p.is_err() || p.unwrap().validate(3, &[64, 64, 64]).is_err());
+    let p = FaultPlan::parse("arrayfail@node1:1e6x64").unwrap();
+    assert!(
+        p.validate(3, &[64, 64, 64]).is_err(),
+        "failing every array leaves no node"
+    );
+    let p = FaultPlan::parse("crash@node1:1e6..3e6,crash@node1:2e6..4e6").unwrap();
+    assert!(
+        p.validate(3, &[64, 64, 64]).is_err(),
+        "overlapping down-spans"
+    );
+}
